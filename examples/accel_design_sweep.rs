@@ -1,0 +1,72 @@
+//! Design-space exploration with the cycle-accurate simulator: sweep the
+//! MV-array width, ATAC tree parallelism, URAM chunk size and clock to
+//! see where the paper's chosen configs sit.  Runs without artifacts.
+//!
+//! ```bash
+//! cargo run --release --example accel_design_sweep
+//! ```
+
+use hfrwkv::config::{AccelConfig, HFRWKV_CONFIGS, PAPER_SHAPES};
+use hfrwkv::sim::{resource_usage, AccelSim};
+
+fn main() {
+    let base = HFRWKV_CONFIGS[3]; // HFRWKV*_1 (U280 streaming)
+    let shape = &PAPER_SHAPES[2]; // 1B5: between compute- and BW-bound
+
+    println!("== MV-array width (d) sweep @ {} on U280 ==", shape.name);
+    println!("{:<8} {:>12} {:>10} {:>8} {:>8}", "d", "tok/s", "BW util", "DSP", "fits?");
+    for d in [256usize, 512, 768, 1024, 1536, 2048, 4096] {
+        let cfg = AccelConfig { pmac_count: d, ..base };
+        let r = AccelSim::new(&cfg).evaluate(shape);
+        let usage = resource_usage(&cfg);
+        let fits = usage.fits_in(&cfg.platform.resources());
+        println!(
+            "{:<8} {:>12.1} {:>9.1}% {:>8} {:>8}",
+            d,
+            r.tokens_per_sec,
+            r.bandwidth_utilization * 100.0,
+            usage.dsp,
+            if fits { "yes" } else { "NO" }
+        );
+    }
+    println!("(paper picks d=1024: past ~1024 the stream is the bottleneck — more PMACs buy nothing)");
+
+    println!("\n== URAM chunk-size sweep @ 7B on U280 ==");
+    println!("{:<12} {:>12} {:>10} {:>8}", "chunk", "tok/s", "BW util", "URAM");
+    for banks in [16usize, 32, 64, 128, 256] {
+        let cfg = AccelConfig { chunk_bytes: banks * 36 * 1024, ..base };
+        let r = AccelSim::new(&cfg).evaluate(&PAPER_SHAPES[4]);
+        println!(
+            "{:<12} {:>12.1} {:>9.1}% {:>8}",
+            format!("{banks}x36KB"),
+            r.tokens_per_sec,
+            r.bandwidth_utilization * 100.0,
+            2 * banks
+        );
+    }
+    println!("(diminishing returns past 128 banks = the paper's 256-URAM ping-pong)");
+
+    println!("\n== clock scaling @ 169M on U50_0 ==");
+    println!("{:<10} {:>12} {:>10}", "freq", "tok/s", "power W");
+    for mhz in [200.0f64, 300.0, 350.0, 400.0, 500.0] {
+        let cfg = AccelConfig { freq_hz: mhz * 1e6, ..HFRWKV_CONFIGS[0] };
+        let r = AccelSim::new(&cfg).evaluate(&PAPER_SHAPES[0]);
+        println!("{:<10} {:>12.1} {:>10.1}", format!("{mhz:.0} MHz"), r.tokens_per_sec, r.power_watts);
+    }
+
+    println!("\n== deployment grid: which config would you pick per model? ==");
+    println!("{:<12} {:>14} {:>14} {:>14} {:>14}", "model", HFRWKV_CONFIGS[0].name,
+             HFRWKV_CONFIGS[1].name, HFRWKV_CONFIGS[2].name, HFRWKV_CONFIGS[3].name);
+    for shape in &PAPER_SHAPES {
+        print!("{:<12}", shape.name);
+        for cfg in &HFRWKV_CONFIGS {
+            let r = AccelSim::new(cfg).evaluate(shape);
+            if r.feasible {
+                print!(" {:>13.0} ", r.tokens_per_sec);
+            } else {
+                print!(" {:>13} ", "-");
+            }
+        }
+        println!();
+    }
+}

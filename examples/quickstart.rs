@@ -1,0 +1,42 @@
+//! Quickstart: load the AOT artifacts, generate a few tokens through the
+//! PJRT runtime, and show the simulator's estimate for the same model on
+//! the paper's hardware.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use hfrwkv::config::shapes::TINY_SHAPE;
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::model::Tokenizer;
+use hfrwkv::runtime::{Manifest, RwkvRuntime};
+use hfrwkv::sim::AccelSim;
+
+fn main() -> hfrwkv::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+
+    // --- serve one request through the full stack ---------------------------
+    let manifest = Manifest::load(dir)?;
+    let tokenizer = Tokenizer::from_json(manifest.load_eval_data()?.req("vocab")?)?;
+    let coord = Coordinator::spawn_with(
+        || RwkvRuntime::load(std::path::Path::new("artifacts")).expect("runtime"),
+        CoordinatorConfig::default(),
+    );
+    let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
+    prompt.extend(tokenizer.encode("alice has a red hat . the hat of alice is")?);
+    let resp = coord.generate(GenRequest::greedy(prompt, 8))?;
+    println!("generated: {}", tokenizer.decode(&resp.tokens));
+    println!(
+        "decode: {:.0} tok/s on this CPU (PJRT, batch 1)",
+        resp.decode_tokens_per_sec()
+    );
+
+    // --- what the accelerator would do with this model ----------------------
+    let sim = AccelSim::deployed_for(false, &TINY_SHAPE);
+    let r = sim.evaluate(&TINY_SHAPE);
+    println!(
+        "HFRWKV_0 (Alveo U50) estimate for {}: {:.0} tok/s at {:.1} W",
+        TINY_SHAPE.name, r.tokens_per_sec, r.power_watts
+    );
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! E7 — end-to-end validation (DESIGN.md §6): serve a batch of
+//! generation requests over the *trained* tiny RWKV through the full
+//! stack (coordinator → PJRT → HLO with Pallas kernels lowered in),
+//! reporting latency percentiles and aggregate throughput, then verify
+//! model quality on the held-out suites.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+
+use std::time::Instant;
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::eval;
+use hfrwkv::model::{RwkvModel, Tokenizer, WeightFile};
+use hfrwkv::runtime::{Manifest, RwkvRuntime};
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+}
+
+fn main() -> hfrwkv::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let manifest = Manifest::load(dir)?;
+    let eval_json = manifest.load_eval_data()?;
+    let tokenizer = Tokenizer::from_json(eval_json.req("vocab")?)?;
+
+    // ---- phase 1: batched serving through PJRT -----------------------------
+    println!("== serving (coordinator -> PJRT CPU, batch-1 model, 4-way continuous batching) ==");
+    let coord = Coordinator::spawn_with(
+        || RwkvRuntime::load(std::path::Path::new("artifacts")).expect("runtime"),
+        CoordinatorConfig { max_active: 4 },
+    );
+    // warm-up (compilation happens inside the worker)
+    let _ = coord.generate(GenRequest::greedy(vec![1], 1))?;
+
+    let prompts = [
+        "alice has a red hat . the hat of alice is",
+        "three plus four is",
+        "bob likes carol . so carol",
+        "two times three is",
+        "erin has a green bag . the bag of erin is",
+        "frank trusts grace . so grace",
+    ];
+    let n_requests = 24;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            // BOS-prefix: documents are BOS-led in the training corpus
+            let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
+            prompt.extend(tokenizer.encode(prompts[i % prompts.len()]).unwrap());
+            coord.submit(GenRequest::greedy(prompt, 24))
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut decode_rates = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap()?;
+        latencies.push(r.queue_seconds + r.prefill_seconds + r.decode_seconds);
+        decode_rates.push(r.decode_tokens_per_sec());
+        if i < 6 {
+            println!("  [{i}] {}", tokenizer.decode(&r.tokens));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = coord.metrics.lock().unwrap().clone();
+    println!("\n{}", m.report());
+    println!(
+        "latency  p50 {:.1} ms   p95 {:.1} ms   max {:.1} ms",
+        pct(&latencies, 0.50) * 1e3,
+        pct(&latencies, 0.95) * 1e3,
+        latencies.last().unwrap() * 1e3
+    );
+    println!(
+        "aggregate {:.0} tok/s over {:.2} s wall ({} requests x 24 tokens)",
+        m.tokens_generated as f64 / wall,
+        wall,
+        n_requests
+    );
+
+    // ---- phase 2: model quality on held-out data ---------------------------
+    println!("\n== held-out quality (native forward) ==");
+    let weights = WeightFile::load(&manifest.weights)?;
+    let mut model = RwkvModel::from_weights(&weights)?;
+    let (docs, suites) = eval::parse_eval_data(&eval_json)?;
+    if let Some(stream) = eval::parse_valid_stream(&eval_json) {
+        println!("  stream ppl     {:.3} (uniform = 128)", eval::stream_ppl(&mut model, &stream));
+    }
+    let (ppl, acc) = eval::eval_lambada(&mut model, &docs);
+    println!("  lambada ppl    {ppl:.3}   last-word acc {:.1}%", acc * 100.0);
+    for (name, items) in &suites {
+        println!(
+            "  {name:<14} acc {:.1}%",
+            eval::eval_suite(&mut model, items) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT pipeline: train (if needed) + lower the RWKV model to HLO text.
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids (see
+/opt/xla-example/README.md).  Lowering goes through stablehlo ->
+XlaComputation with ``return_tuple=True``; the Rust side unwraps the
+tuple.
+
+Artifacts written (all under ``artifacts/``):
+
+* ``rwkv_step.hlo.txt``     — token step, Pallas-kernel variant (L1 inside)
+* ``rwkv_step_hw.hlo.txt``  — token step, hardware-approximation variant
+* ``rwkv_seq.hlo.txt``      — SEQ_CHUNK-token chunked scorer
+* ``tiny.weights.bin``      — trained weights (HFWT container)
+* ``manifest.json``         — the ABI: parameter order/shapes, state shape
+* ``eval_data.json``        — held-out eval suites (DESIGN.md E1)
+* ``quant_codebooks.json``  — golden codebooks for the Rust parity test
+* ``paper_shapes.json``     — RWKV-4 169M..7B shape manifest for the sim
+* ``train_log.json``        — loss curve of the tiny-model training run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, quantize, serialize, train
+from .config import TINY, TrainConfig, dump_shapes_manifest
+
+SEQ_CHUNK = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(cfg, variant: str) -> str:
+    fn = model.make_step_fn(cfg, variant)
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32)
+             for _, shape in model.param_order(cfg)]
+    specs.append(jax.ShapeDtypeStruct((cfg.n_layer, 5, cfg.d_model), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((), jnp.int32))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_seq(cfg, seq_len: int, variant: str = "exact") -> str:
+    fn = model.make_seq_fn(cfg, seq_len, variant)
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32)
+             for _, shape in model.param_order(cfg)]
+    specs.append(jax.ShapeDtypeStruct((cfg.n_layer, 5, cfg.d_model), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((seq_len,), jnp.int32))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_manifest(path: str, cfg) -> None:
+    manifest = {
+        "config": cfg.to_dict(),
+        "n_params": cfg.n_params,
+        "param_order": [
+            {"name": name, "shape": list(shape)}
+            for name, shape in model.param_order(cfg)
+        ],
+        "state_shape": [cfg.n_layer, 5, cfg.d_model],
+        "pp_init": model.PP_INIT,
+        "seq_chunk": SEQ_CHUNK,
+        "artifacts": {
+            "step": "rwkv_step.hlo.txt",
+            "step_hw": "rwkv_step_hw.hlo.txt",
+            "seq": "rwkv_seq.hlo.txt",
+            "weights": "tiny.weights.bin",
+            "eval_data": "eval_data.json",
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=TrainConfig().steps)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse existing weights if present")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    cfg = TINY
+
+    wpath = os.path.join(out, "tiny.weights.bin")
+    if os.path.exists(wpath) and args.skip_train:
+        print(f"reusing {wpath}")
+    else:
+        tc = TrainConfig(steps=args.steps)
+        print(f"training {cfg.name} ({cfg.n_params/1e6:.2f}M params) "
+              f"for {tc.steps} steps ...", flush=True)
+        params, log = train.train(cfg, tc)
+        train.save_log(log, os.path.join(out, "train_log.json"))
+        tensors = {name: np.asarray(params[name], np.float32)
+                   for name, _ in model.param_order(cfg)}
+        serialize.save_tensors(wpath, tensors, meta=cfg.to_dict())
+        print(f"wrote {wpath} (final loss {log[-1]['loss']:.4f})")
+
+    for fname, variant in [("rwkv_step.hlo.txt", "pallas"),
+                           ("rwkv_step_hw.hlo.txt", "hwapprox")]:
+        path = os.path.join(out, fname)
+        text = lower_step(cfg, variant)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(out, "rwkv_seq.hlo.txt")
+    text = lower_seq(cfg, SEQ_CHUNK)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    write_manifest(os.path.join(out, "manifest.json"), cfg)
+    data.write_eval_data(os.path.join(out, "eval_data.json"))
+    quantize.dump_codebooks(os.path.join(out, "quant_codebooks.json"))
+    dump_shapes_manifest(os.path.join(out, "paper_shapes.json"))
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Model and run configurations shared across the Python build layer.
+
+The *tiny* config is the one we actually train and AOT-lower (the runtime
+model served by the Rust coordinator).  The paper-scale configs
+(RWKV-4 169M..7B) exist so the AOT layer and the Rust simulator agree on
+tensor shapes; the simulator only needs shapes, never weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class RwkvConfig:
+    """Architecture hyper-parameters of an RWKV-4 model."""
+
+    name: str
+    n_layer: int
+    d_model: int
+    d_ffn: int
+    vocab: int
+
+    @property
+    def n_params(self) -> int:
+        """Exact parameter count of our RWKV-4 parameterization."""
+        d, f, v, n = self.d_model, self.d_ffn, self.vocab, self.n_layer
+        per_layer = (
+            4 * d * d          # att: key/value/receptance/output
+            + 5 * d            # time_decay, time_first, time_mix_{k,v,r}
+            + 2 * d * f        # ffn key (f,d) + value (d,f)
+            + d * d            # ffn receptance
+            + 2 * d            # ffn time_mix_{k,r}
+            + 4 * d            # ln1/ln2 weight+bias
+        )
+        return v * d * 2 + n * per_layer + 2 * d + 2 * d  # emb+head, ln0, ln_out
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# The model we train + serve end to end.
+TINY = RwkvConfig(name="tiny-1m", n_layer=4, d_model=128, d_ffn=512, vocab=128)
+
+# Published RWKV-4 family shapes (used by the simulator / shape manifest).
+RWKV4_169M = RwkvConfig("rwkv4-169m", n_layer=12, d_model=768, d_ffn=3072, vocab=50277)
+RWKV4_430M = RwkvConfig("rwkv4-430m", n_layer=24, d_model=1024, d_ffn=4096, vocab=50277)
+RWKV4_1B5 = RwkvConfig("rwkv4-1b5", n_layer=24, d_model=2048, d_ffn=8192, vocab=50277)
+RWKV4_3B = RwkvConfig("rwkv4-3b", n_layer=32, d_model=2560, d_ffn=10240, vocab=50277)
+RWKV4_7B = RwkvConfig("rwkv4-7b", n_layer=32, d_model=4096, d_ffn=16384, vocab=50277)
+
+PAPER_SIZES = [RWKV4_169M, RWKV4_430M, RWKV4_1B5, RWKV4_3B, RWKV4_7B]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Training hyper-parameters for the tiny end-to-end model."""
+
+    seq_len: int = 128
+    batch: int = 8
+    steps: int = 1400
+    lr: float = 3e-3
+    lr_final: float = 3e-4
+    warmup: int = 20
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+    grad_clip: float = 1.0
+    seed: int = 0
+    log_every: int = 10
+
+
+def dump_shapes_manifest(path: str) -> None:
+    """Write the paper-size shape manifest consumed by the Rust simulator."""
+    data = {c.name: {**c.to_dict(), "n_params": c.n_params} for c in PAPER_SIZES}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)

@@ -1,0 +1,258 @@
+"""Synthetic corpus + evaluation-suite generator.
+
+Substitution for the paper's datasets (DESIGN.md section 2): the Pile-style
+pretraining data and the seven benchmark datasets (LAMBADA, HellaSwag,
+ARC-Easy/Challenge, SciQ, PIQA, Winogrande) are replaced by a seeded
+word-level grammar whose documents require *context-dependent* prediction
+(entity-attribute recall, relations, modular arithmetic).  Table 1's
+finding is a *relative ordering* of quantization schemes at equal bit
+budget, which any task that moves with model fidelity exposes.
+
+Each paper benchmark is mirrored by a suite with an analogous shape:
+
+* ``lambada``        — last-word prediction + ppl over full documents
+* ``hellaswag``      — 4-way continuation choice (plausible ending)
+* ``arc_easy``       — arithmetic QA, far distractors
+* ``arc_challenge``  — arithmetic QA, near (+-1) distractors
+* ``sciq``           — attribute-recall QA, random distractors
+* ``piqa``           — 2-way relation completion
+* ``winogrande``     — 2-way entity resolution
+
+Everything is deterministic given the seed, and the eval seed is disjoint
+from the training seed (held-out entity bindings).
+"""
+
+from __future__ import annotations
+
+import json
+import random
+
+NAMES = ["alice", "bob", "carol", "dave", "erin", "frank", "grace", "henry",
+         "iris", "jack", "kate", "liam"]
+COLORS = ["red", "blue", "green", "yellow", "black", "white", "purple",
+          "orange", "pink", "gray"]
+OBJECTS = ["hat", "cup", "book", "ball", "coat", "lamp", "key", "ring",
+           "bag", "box", "pen", "shoe"]
+DIGITS = ["zero", "one", "two", "three", "four", "five", "six", "seven",
+          "eight", "nine"]
+VERBS = ["likes", "trusts", "helps", "follows"]
+FUNC = ["the", "has", "a", "of", "is", "plus", "minus", "times", "and",
+        ".", ",", "?", "so", "then", "who", "what", "answer"]
+
+PAD, BOS = 0, 1
+
+
+def build_vocab(size: int = 128):
+    """Word-level vocabulary with stable ids; padded to ``size``."""
+    words = ["<pad>", "<bos>"] + NAMES + COLORS + OBJECTS + DIGITS + VERBS + FUNC
+    assert len(set(words)) == len(words)
+    assert len(words) <= size, len(words)
+    words = words + [f"<unk{i}>" for i in range(size - len(words))]
+    return words
+
+
+VOCAB = build_vocab()
+W2I = {w: i for i, w in enumerate(VOCAB)}
+
+
+def enc(text_words):
+    return [W2I[w] for w in text_words]
+
+
+# --------------------------------------------------------------------------
+# Document generators
+# --------------------------------------------------------------------------
+
+def _gen_fact_doc(rng: random.Random):
+    """Facts then recalls: the recalled color is determined by context."""
+    n = rng.randint(3, 6)
+    names = rng.sample(NAMES, n)
+    objs = rng.sample(OBJECTS, n)
+    cols = [rng.choice(COLORS) for _ in range(n)]
+    words = []
+    for nm, ob, co in zip(names, objs, cols):
+        words += [nm, "has", "a", co, ob, "."]
+    idx = list(range(n))
+    rng.shuffle(idx)
+    for i in idx[: rng.randint(2, n)]:
+        words += ["the", objs[i], "of", names[i], "is", cols[i], "."]
+    return words
+
+
+def _gen_relation_doc(rng: random.Random):
+    """Symmetric relation pattern: 'a V b . so b V a .'"""
+    words = []
+    for _ in range(rng.randint(2, 4)):
+        a, b = rng.sample(NAMES, 2)
+        v = rng.choice(VERBS)
+        words += [a, v, b, ".", "so", b, v, a, "."]
+    return words
+
+
+def _gen_arith_doc(rng: random.Random):
+    """Mod-10 arithmetic sentences: 'three plus four is seven .'"""
+    words = []
+    for _ in range(rng.randint(3, 6)):
+        a, b = rng.randrange(10), rng.randrange(10)
+        op = rng.choice(["plus", "minus", "times"])
+        c = {"plus": a + b, "minus": a - b, "times": a * b}[op] % 10
+        words += [DIGITS[a], op, DIGITS[b], "is", DIGITS[c], "."]
+    return words
+
+
+GENS = [_gen_fact_doc, _gen_relation_doc, _gen_arith_doc]
+
+
+def gen_stream(seed: int, n_tokens: int):
+    """Token stream of concatenated documents, BOS-separated."""
+    rng = random.Random(seed)
+    out = []
+    while len(out) < n_tokens:
+        gen = rng.choice(GENS)
+        out += [BOS] + enc(gen(rng))
+    return out[:n_tokens]
+
+
+# --------------------------------------------------------------------------
+# Evaluation suites
+# --------------------------------------------------------------------------
+
+def _mc(ctx, choices, gold):
+    return {"ctx": ctx, "choices": choices, "gold": gold}
+
+
+def _gen_lambada(rng, n):
+    """Documents whose final token (a color) is context-determined."""
+    items = []
+    for _ in range(n):
+        k = rng.randint(3, 5)
+        names = rng.sample(NAMES, k)
+        objs = rng.sample(OBJECTS, k)
+        cols = [rng.choice(COLORS) for _ in range(k)]
+        words = []
+        for nm, ob, co in zip(names, objs, cols):
+            words += [nm, "has", "a", co, ob, "."]
+        q = rng.randrange(k)
+        words += ["the", objs[q], "of", names[q], "is", cols[q]]
+        items.append({"tokens": [BOS] + enc(words)})
+    return items
+
+
+def _gen_hellaswag(rng, n):
+    """4-way ending choice over a recall sentence."""
+    items = []
+    for _ in range(n):
+        k = rng.randint(3, 5)
+        names = rng.sample(NAMES, k)
+        objs = rng.sample(OBJECTS, k)
+        cols = rng.sample(COLORS, k)  # distinct so distractors are wrong
+        words = []
+        for nm, ob, co in zip(names, objs, cols):
+            words += [nm, "has", "a", co, ob, "."]
+        q = rng.randrange(k)
+        ctx = [BOS] + enc(words + ["the", objs[q], "of", names[q], "is"])
+        wrong = [c for c in cols if c != cols[q]][:3]
+        if len(wrong) < 3:
+            wrong += rng.sample([c for c in COLORS if c != cols[q]], 3 - len(wrong))
+        choices = [enc([cols[q], "."])] + [enc([w, "."]) for w in wrong]
+        order = list(range(4))
+        rng.shuffle(order)
+        items.append(_mc(ctx, [choices[i] for i in order], order.index(0)))
+    return items
+
+
+def _gen_arith_mc(rng, n, near: bool):
+    """Arithmetic QA; near=True puts distractors at +-1/+-2 (mod 10)."""
+    items = []
+    for _ in range(n):
+        a, b = rng.randrange(10), rng.randrange(10)
+        op = rng.choice(["plus", "minus", "times"])
+        c = {"plus": a + b, "minus": a - b, "times": a * b}[op] % 10
+        ctx = [BOS] + enc([DIGITS[a], op, DIGITS[b], "is"])
+        if near:
+            ds = [(c + d) % 10 for d in (1, 9, 2)]
+        else:
+            ds = rng.sample([x for x in range(10) if x != c], 3)
+        choices = [enc([DIGITS[c]])] + [enc([DIGITS[d]]) for d in ds]
+        order = list(range(4))
+        rng.shuffle(order)
+        items.append(_mc(ctx, [choices[i] for i in order], order.index(0)))
+    return items
+
+
+def _gen_sciq(rng, n):
+    """Attribute recall with random object distractors."""
+    items = []
+    for _ in range(n):
+        k = rng.randint(3, 5)
+        names = rng.sample(NAMES, k)
+        objs = rng.sample(OBJECTS, k)
+        cols = [rng.choice(COLORS) for _ in range(k)]
+        words = []
+        for nm, ob, co in zip(names, objs, cols):
+            words += [nm, "has", "a", co, ob, "."]
+        q = rng.randrange(k)
+        ctx = [BOS] + enc(words + ["what", "of", names[q], "is", cols[q], "?",
+                                   "answer", "the"])
+        wrong = rng.sample([o for o in OBJECTS if o != objs[q]], 3)
+        choices = [enc([objs[q]])] + [enc([w]) for w in wrong]
+        order = list(range(4))
+        rng.shuffle(order)
+        items.append(_mc(ctx, [choices[i] for i in order], order.index(0)))
+    return items
+
+
+def _gen_piqa(rng, n):
+    """2-way relation completion: 'a V b . so b V' -> a."""
+    items = []
+    for _ in range(n):
+        a, b = rng.sample(NAMES, 2)
+        v = rng.choice(VERBS)
+        ctx = [BOS] + enc([a, v, b, ".", "so", b, v])
+        wrong = rng.choice([x for x in NAMES if x not in (a, b)])
+        choices = [enc([a, "."]), enc([wrong, "."])]
+        gold = 0
+        if rng.random() < 0.5:
+            choices = choices[::-1]
+            gold = 1
+        items.append(_mc(ctx, choices, gold))
+    return items
+
+
+def _gen_winogrande(rng, n):
+    """2-way entity resolution: which name has the attribute."""
+    items = []
+    for _ in range(n):
+        a, b = rng.sample(NAMES, 2)
+        oa, ob_ = rng.sample(OBJECTS, 2)
+        ca, cb = rng.sample(COLORS, 2)
+        words = [a, "has", "a", ca, oa, ".", b, "has", "a", cb, ob_, "."]
+        pick_a = rng.random() < 0.5
+        obj, col = (oa, ca) if pick_a else (ob_, cb)
+        ctx = [BOS] + enc(words + ["who", "has", "the", col, obj, "?", "answer"])
+        choices = [enc([a, "."]), enc([b, "."])]
+        items.append(_mc(ctx, choices, 0 if pick_a else 1))
+    return items
+
+
+def gen_eval_data(seed: int = 10_007, n_per_suite: int = 200):
+    rng = random.Random(seed)
+    return {
+        "vocab": VOCAB,
+        # held-out document stream for low-variance perplexity deltas
+        "valid_stream": gen_stream(seed + 1, 4000),
+        "lambada": _gen_lambada(rng, n_per_suite),
+        "suites": {
+            "hellaswag": _gen_hellaswag(rng, n_per_suite),
+            "arc_easy": _gen_arith_mc(rng, n_per_suite, near=False),
+            "arc_challenge": _gen_arith_mc(rng, n_per_suite, near=True),
+            "sciq": _gen_sciq(rng, n_per_suite),
+            "piqa": _gen_piqa(rng, n_per_suite),
+            "winogrande": _gen_winogrande(rng, n_per_suite),
+        },
+    }
+
+
+def write_eval_data(path: str, seed: int = 10_007, n_per_suite: int = 200):
+    with open(path, "w") as f:
+        json.dump(gen_eval_data(seed, n_per_suite), f)

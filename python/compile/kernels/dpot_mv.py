@@ -1,0 +1,73 @@
+"""Pallas matrix-vector kernel over Delta-PoT-encoded weights.
+
+Hardware adaptation (DESIGN.md section 3): on the FPGA the Delta-PoT format
+turns each multiply into two barrel shifts + one add inside a PMAC unit.
+On TPU the efficient multiplier *is* the MXU, so the kernel dequantizes the
+(sign, dq0, dq1) planes on the fly inside VMEM — exp2 on the VPU — and
+feeds an ordinary dot product.  Arithmetic value is identical to the
+shift-add datapath (the Rust ``arith::dpot`` module is the bit-exact
+model); only the execution strategy differs.
+
+The HBM->VMEM schedule the paper implements with ping-pong URAM buffers is
+expressed with a grid over row tiles: each grid step stages one
+(tile_out, d_in) slice of the three code planes plus the full input vector.
+
+Runs with ``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_OUT = 128
+
+
+def _dequant_tile(sign, dq0, dq1, two_gamma):
+    """Decode a tile of Delta-PoT codes to f32 (paper eq 5-6)."""
+    dq0f = dq0.astype(jnp.float32)
+    dq1f = dq1.astype(jnp.float32)
+    p0 = jnp.where(dq0 > 0, jnp.exp2(-dq0f), 0.0)
+    p1 = jnp.where((dq1 > 0) & (dq0 > 0), p0 * jnp.exp2(-dq1f), 0.0)
+    return sign.astype(jnp.float32) * two_gamma * (p0 + p1)
+
+
+def _mv_kernel(sign_ref, dq0_ref, dq1_ref, x_ref, gamma_ref, o_ref):
+    two_gamma = 2.0 * gamma_ref[0]
+    w = _dequant_tile(sign_ref[...], dq0_ref[...], dq1_ref[...], two_gamma)
+    # f32 accumulate (the FPGA uses 16-bit accumulators with overflow
+    # protection; the bit-exact model lives in rust arith::pmac).
+    o_ref[...] = w @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_out",))
+def dpot_matvec(sign, dq0, dq1, gamma, x, *, tile_out: int = DEFAULT_TILE_OUT):
+    """Compute ``dequant(sign,dq0,dq1,gamma) @ x`` tiled over output rows.
+
+    sign/dq0/dq1: int8 [d_out, d_in] code planes; gamma: f32 [1]; x: f32
+    [d_in].  Row tiles of ``tile_out`` keep the staged weight slice
+    VMEM-sized (tile_out * d_in * 3 bytes of codes + d_in * 4 of vector).
+    """
+    d_out, d_in = sign.shape
+    t = min(tile_out, d_out)
+    while d_out % t != 0:
+        t //= 2
+    grid = (d_out // t,)
+    plane = pl.BlockSpec((t, d_in), lambda i: (i, 0))
+    return pl.pallas_call(
+        _mv_kernel,
+        grid=grid,
+        in_specs=[
+            plane,
+            plane,
+            plane,
+            pl.BlockSpec((d_in,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_out,), jnp.float32),
+        interpret=True,
+    )(sign, dq0, dq1, x, gamma)

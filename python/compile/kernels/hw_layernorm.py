@@ -1,0 +1,55 @@
+"""Pallas LayerNorm kernel mirroring the paper's ATAC module (Fig 6).
+
+The FPGA module computes the mean and variance with two parallel
+addition-tree+accumulator (ATAC) reductions over 512-wide blocks, using the
+identity sigma^2 = E[x^2] - E[x]^2 (eq 12) so a single pass over the data
+suffices.  On TPU the analogous structure is a blocked single-pass
+reduction over (d/P, P) tiles held in VMEM; the block width P plays the
+role of the tree parallelism.
+
+Runs with ``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TREE_PARALLELISM = 512
+
+
+def _ln_kernel(x_ref, w_ref, b_ref, o_ref, *, block: int, eps: float):
+    x = x_ref[...]
+    d = x.shape[-1]
+    # ATAC analog: fold the vector into (d/block, block) lanes, reduce the
+    # lane axis with the "tree", accumulate partials along the other axis.
+    xb = x.reshape(d // block, block)
+    s1 = jnp.sum(jnp.sum(xb, axis=1))          # mean path ATAC
+    s2 = jnp.sum(jnp.sum(xb * xb, axis=1))     # variance path ATAC
+    mu = s1 / d
+    var = s2 / d - mu * mu                     # eq (12)
+    inv = jax.lax.rsqrt(var + eps)             # subtract-sqrt module
+    o_ref[...] = (x - mu) * inv * w_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "eps"))
+def layernorm(x, weight, bias, *, block: int | None = None, eps: float = 1e-5):
+    """LayerNorm over a 1-D vector using the blocked single-pass kernel.
+
+    ``block`` is the tree-parallelism analog; it must divide ``d`` (we clamp
+    it to ``d`` for short vectors, matching the paper's per-config
+    ``tree parallelism`` in [256, 512]).
+    """
+    d = x.shape[-1]
+    blk = min(block or DEFAULT_TREE_PARALLELISM, d)
+    while d % blk != 0:  # clamp to a divisor for ragged dims
+        blk //= 2
+    kernel = functools.partial(_ln_kernel, block=blk, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, weight, bias)

@@ -1,0 +1,72 @@
+"""Vectorized float models of the paper's hardware function units.
+
+These are the *usable* counterparts of the algorithmic references in
+``ref.py`` — the same LUT widths and PWL segments, packaged so the L2
+model can be lowered in an "hwapprox" variant where every nonlinearity
+goes through the paper's approximation instead of libm.  That artifact
+lets the Rust side measure the end-to-end accuracy impact of the
+approximations through the exact same PJRT path as the exact model.
+
+The bit-exact 9/16-bit integer datapaths live in ``rust/src/arith``;
+here the structure (truncation points, segment boundaries, LUT index
+widths) is identical but evaluated in f32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+
+# Domain clamp of the EXP unit: 16-bit internal fixed point with 8
+# fractional bits covers 2^u for u in roughly [-16, 15]; the model clamps
+# exponent inputs into a safe window, which also acts as the fixed-point
+# stabilizer for the WKV recurrence.
+EXP_IN_LO = -20.0
+EXP_IN_HI = 10.0
+
+
+def hw_sigmoid(x):
+    """Sigmoid via the 5-segment PWL of eq (9) (EXP-sigma unit, mode 1)."""
+    return ref.sigmoid_pwl_ref(x)
+
+
+def hw_exp(x):
+    """e^x via the shift-add x*log2e + 256-entry EXP-LUT (mode 0)."""
+    return ref.exp_lut_ref(jnp.clip(x, EXP_IN_LO, EXP_IN_HI))
+
+
+def hw_div(num, den):
+    """Signed division routed through the unsigned division unit.
+
+    Sign-bit separation happens before the DIVU (paper 4.3); zeros are
+    guarded the way the hardware guards them (minimum denominator ulp).
+    """
+    sign = jnp.sign(num) * jnp.sign(den)
+    sign = jnp.where(sign == 0.0, 1.0, sign)
+    n = jnp.maximum(jnp.abs(num), 2.0 ** -16)
+    d = jnp.maximum(jnp.abs(den), 2.0 ** -16)
+    return sign * ref.divu_ref(n, d)
+
+
+def hw_layernorm(x, weight, bias, eps=1e-5):
+    """LayerNorm in the ATAC single-pass identity form (eq 12), with the
+    final (x-mu)/sigma division routed through the DIVU model."""
+    d = x.shape[-1]
+    mu = jnp.sum(x, axis=-1, keepdims=True) / d
+    ex2 = jnp.sum(x * x, axis=-1, keepdims=True) / d
+    sigma = jnp.sqrt(ex2 - mu * mu + eps)
+    return hw_div(x - mu, sigma) * weight + bias
+
+
+def quant_sym(x, bits: int = 9, scale=None):
+    """Fake uniform symmetric quantization (RTN) at the given bit width.
+
+    Per-tensor scale defaults to max|x|; this is the W/A quantizer of
+    paper section 3.2 (9-bit activations, 16-bit internals).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    s = jnp.max(jnp.abs(x)) if scale is None else scale
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(x / s * qmax), -qmax, qmax)
+    return q * s / qmax

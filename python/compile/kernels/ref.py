@@ -1,0 +1,152 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+Two kinds of reference live here:
+
+* *exact* references (``layernorm_ref``, ``wkv_step_ref``, ``matvec_ref``)
+  — ordinary float math, the ground truth the kernels must match to
+  ``assert_allclose`` tolerance;
+* *algorithmic* references for the paper's hardware approximations
+  (``sigmoid_pwl_ref``, ``exp_lut_ref``, ``divu_ref``) — bit-faithful in
+  structure (segment boundaries, LUT indexing width) but evaluated in
+  float.  The Rust ``arith`` layer implements the same algorithms on 9/16
+  bit integers; pytest checks the *approximation error vs exact math* here,
+  and Rust property tests check the integer datapaths against these bounds.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Exact references
+# --------------------------------------------------------------------------
+
+def layernorm_ref(x, weight, bias, eps=1e-5):
+    """LayerNorm over the last axis, textbook two-pass formulation."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * weight + bias
+
+
+def layernorm_identity_ref(x, weight, bias, eps=1e-5):
+    """LayerNorm via the paper's sigma^2 = E[x^2] - E[x]^2 identity (eq 12)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    ex2 = jnp.mean(x * x, axis=-1, keepdims=True)
+    var = ex2 - mu * mu
+    return (x - mu) / jnp.sqrt(var + eps) * weight + bias
+
+
+def matvec_ref(w, x):
+    """w @ x for w [out, in], x [in]."""
+    return w @ x
+
+
+def token_shift_ref(x_t, x_prev, mix):
+    """RWKV token-shift interpolation (eq 1, pre-projection part)."""
+    return x_t * mix + x_prev * (1.0 - mix)
+
+
+def wkv_step_ref(k, v, aa, bb, pp, time_first, time_decay):
+    """One numerically-stabilized RWKV-4 WKV update (eq 2, running-max form).
+
+    ``time_decay`` is the *effective* decay w = -exp(decay_param) < 0.
+    Returns (wkv, aa', bb', pp').
+    """
+    ww = time_first + k
+    qq = jnp.maximum(pp, ww)
+    e1 = jnp.exp(pp - qq)
+    e2 = jnp.exp(ww - qq)
+    wkv = (e1 * aa + e2 * v) / (e1 * bb + e2)
+
+    ww = pp + time_decay
+    qq = jnp.maximum(ww, k)
+    e1 = jnp.exp(ww - qq)
+    e2 = jnp.exp(k - qq)
+    aa_new = e1 * aa + e2 * v
+    bb_new = e1 * bb + e2
+    return wkv, aa_new, bb_new, qq
+
+
+def channel_mix_ref(x, x_prev, mix_k, mix_r, wk, wv, wr):
+    """RWKV-4 channel-mixing sublayer (returns delta; new x_prev is x)."""
+    xk = token_shift_ref(x, x_prev, mix_k)
+    xr = token_shift_ref(x, x_prev, mix_r)
+    r = jnp.reciprocal(1.0 + jnp.exp(-(wr @ xr)))
+    k = jnp.square(jnp.maximum(wk @ xk, 0.0))
+    return r * (wv @ k)
+
+
+# --------------------------------------------------------------------------
+# Algorithmic references for the hardware approximations
+# --------------------------------------------------------------------------
+
+def sigmoid_pwl_ref(x):
+    """Paper eq (9): 5-segment piecewise-linear sigmoid, dyadic slopes."""
+    ax = jnp.abs(x)
+    pos = jnp.where(
+        ax >= 5.0,
+        1.0,
+        jnp.where(
+            ax >= 2.375,
+            0.03125 * ax + 0.84375,
+            jnp.where(ax >= 1.0, 0.125 * ax + 0.625, 0.25 * ax + 0.5),
+        ),
+    )
+    return jnp.where(x >= 0.0, pos, 1.0 - pos)
+
+
+LOG2E_Q4 = 1.0 + 0.25 + 0.125 + 0.0625  # 1.0111_2 = 1.4375, paper eq (8)
+EXP_LUT_BITS = 8                        # 256-entry EXP-LUT (paper 4.4)
+
+
+def exp_lut_ref(x):
+    """Paper eq (8): e^x = 2^(x*log2e), with log2e ~= 1.0111b and the
+    fractional 2^v looked up at 8-bit index resolution."""
+    y = x * LOG2E_Q4
+    u = jnp.floor(y)
+    v = y - u
+    # 8-bit LUT: the fractional index is truncated to 2^-8 resolution.
+    v_idx = jnp.floor(v * (1 << EXP_LUT_BITS)) / (1 << EXP_LUT_BITS)
+    return jnp.exp2(u) * jnp.exp2(v_idx)
+
+
+DIV_LUT_BITS = 4  # 4x4-bit indexing -> 256-entry 2D-LUT (paper 4.3)
+
+
+def divu_ref(x, y):
+    """Paper eq (7): X/Y = (x/y) << (k1-k2) with 4-bit-mantissa 2D-LUT.
+
+    Float model of the unsigned division unit: normalize both operands to
+    [1,2), truncate mantissas to 1+4 bits, look up x/y (here: compute it on
+    the truncated mantissas, which is exactly what the LUT stores at 8-bit
+    output precision), recombine exponents.
+    """
+    k1 = jnp.floor(jnp.log2(x))
+    k2 = jnp.floor(jnp.log2(y))
+    mx = x / jnp.exp2(k1)
+    my = y / jnp.exp2(k2)
+    step = 2.0 ** (-DIV_LUT_BITS)
+    mx_t = jnp.floor(mx / step) * step
+    my_t = jnp.floor(my / step) * step
+    frac = mx_t / my_t
+    # LUT output is stored at 8-bit fractional precision.
+    frac = jnp.floor(frac * 256.0) / 256.0
+    return frac * jnp.exp2(k1 - k2)
+
+
+# --------------------------------------------------------------------------
+# Delta-PoT dequantization reference
+# --------------------------------------------------------------------------
+
+def dpot_dequant_ref(sign, dq0, dq1, gamma):
+    """Decode Delta-PoT codes (paper eq 5-6): value = sign*2*gamma*(p0+p1),
+    p0 = 2^-dq0 (0 if dq0 == 0), p1 = p0 * 2^-dq1 (0 if dq1 == 0)."""
+    p0 = jnp.where(dq0 > 0, jnp.exp2(-dq0.astype(jnp.float32)), 0.0)
+    p1 = jnp.where((dq1 > 0) & (dq0 > 0), p0 * jnp.exp2(-dq1.astype(jnp.float32)), 0.0)
+    return sign.astype(jnp.float32) * 2.0 * gamma * (p0 + p1)
+
+
+def dpot_matvec_ref(sign, dq0, dq1, gamma, x):
+    """Matvec against Delta-PoT-encoded weights, decode-then-dot."""
+    return dpot_dequant_ref(sign, dq0, dq1, gamma) @ x

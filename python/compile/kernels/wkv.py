@@ -1,0 +1,60 @@
+"""Pallas kernel for the RWKV-4 WKV recurrent state update (paper eq 2).
+
+One call performs a single time-step update over the full channel dimension
+— exactly the element-wise workload the paper routes through the
+Matrix-Vector Processing Array in element-wise mode plus the Complex
+Computing Units (EXP-sigma for the exponentials, DIVU for the division).
+
+The numerically-stabilized running-max (``pp``) form is used, matching the
+official RWKV-4 inference code the paper benchmarks on CPU/GPU; the FPGA's
+EXP-LUT domain clamp plays the same stabilization role in fixed point.
+
+Runs with ``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(k_ref, v_ref, aa_ref, bb_ref, pp_ref, u_ref, w_ref,
+                wkv_ref, aa_o_ref, bb_o_ref, pp_o_ref):
+    k = k_ref[...]
+    v = v_ref[...]
+    aa = aa_ref[...]
+    bb = bb_ref[...]
+    pp = pp_ref[...]
+
+    # Output branch: bonus u applied to the current token.
+    ww = u_ref[...] + k
+    qq = jnp.maximum(pp, ww)
+    e1 = jnp.exp(pp - qq)          # EXP-sigma unit, mode 0
+    e2 = jnp.exp(ww - qq)
+    wkv_ref[...] = (e1 * aa + e2 * v) / (e1 * bb + e2)  # DIVU
+
+    # State branch: decay w folded into the running max.
+    ww = pp + w_ref[...]
+    qq = jnp.maximum(ww, k)
+    e1 = jnp.exp(ww - qq)
+    e2 = jnp.exp(k - qq)
+    aa_o_ref[...] = e1 * aa + e2 * v
+    bb_o_ref[...] = e1 * bb + e2
+    pp_o_ref[...] = qq
+
+
+@jax.jit
+def wkv_step(k, v, aa, bb, pp, time_first, time_decay):
+    """One WKV update over d channels; returns (wkv, aa', bb', pp').
+
+    ``time_decay`` must already be the effective decay -exp(decay_param).
+    All seven inputs are f32 [d] and fit VMEM comfortably for d <= 16k.
+    """
+    d = k.shape[-1]
+    out = jax.ShapeDtypeStruct((d,), jnp.float32)
+    return pl.pallas_call(
+        _wkv_kernel,
+        out_shape=(out, out, out, out),
+        interpret=True,
+    )(k, v, aa, bb, pp, time_first, time_decay)

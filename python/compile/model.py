@@ -1,0 +1,317 @@
+"""L2: RWKV-4 model in JAX — forward (token-step and sequence) + loss.
+
+Three execution variants of the same architecture:
+
+* ``variant="exact"``   — libm nonlinearities, jnp LayerNorm.  Ground truth.
+* ``variant="pallas"``  — the Pallas kernels from ``kernels/`` (LayerNorm
+  ATAC kernel, WKV kernel); this is what gets AOT-lowered to the runtime
+  artifact, so the L1 kernels land inside the served HLO.
+* ``variant="hwapprox"``— every nonlinearity routed through the paper's
+  hardware approximations (EXP-LUT, sigmoid PWL, DIVU, ATAC LayerNorm) in
+  f32.  AOT-lowered as a second artifact so the Rust harness can measure
+  the approximation impact end to end.
+
+The recurrent state is a single ``[n_layer, 5, d_model]`` array with rows
+(att_x_prev, ffn_x_prev, aa, bb, pp); ``pp`` starts at ``PP_INIT``.
+
+Weights are *function arguments* (never baked constants): the Rust side
+feeds arbitrary fake-quantized weight sets through the same executable —
+that is how the Table 1 ablation runs without Python on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import RwkvConfig
+from .kernels import hw_layernorm as ln_kernel
+from .kernels import hw_ops
+from .kernels import wkv as wkv_kernel
+
+PP_INIT = -1e30
+S_ATT_X, S_FFN_X, S_AA, S_BB, S_PP = range(5)
+
+# Canonical per-block parameter names, in flattening order.
+BLOCK_PARAMS = [
+    ("ln1.weight", "d"), ("ln1.bias", "d"),
+    ("att.time_decay", "d"), ("att.time_first", "d"),
+    ("att.time_mix_k", "d"), ("att.time_mix_v", "d"), ("att.time_mix_r", "d"),
+    ("att.key", "dd"), ("att.value", "dd"),
+    ("att.receptance", "dd"), ("att.output", "dd"),
+    ("ln2.weight", "d"), ("ln2.bias", "d"),
+    ("ffn.time_mix_k", "d"), ("ffn.time_mix_r", "d"),
+    ("ffn.key", "fd"), ("ffn.receptance", "dd"), ("ffn.value", "df"),
+]
+TOP_PARAMS = [
+    ("emb", "vd"),
+    ("ln0.weight", "d"), ("ln0.bias", "d"),
+    ("ln_out.weight", "d"), ("ln_out.bias", "d"),
+    ("head", "vd"),
+]
+
+
+def _shape_of(code: str, cfg: RwkvConfig):
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    return {"d": (d,), "dd": (d, d), "fd": (f, d), "df": (d, f), "vd": (v, d)}[code]
+
+
+def param_order(cfg: RwkvConfig):
+    """Deterministic flat ordering of all parameters: (name, shape) list.
+
+    This ordering IS the artifact ABI — the Rust runtime feeds buffers in
+    exactly this order.  It is recorded in the AOT manifest.
+    """
+    order = []
+    for name, code in TOP_PARAMS[:3]:  # emb, ln0.*
+        order.append((name, _shape_of(code, cfg)))
+    for i in range(cfg.n_layer):
+        for name, code in BLOCK_PARAMS:
+            order.append((f"blocks.{i}.{name}", _shape_of(code, cfg)))
+    for name, code in TOP_PARAMS[3:]:  # ln_out.*, head
+        order.append((name, _shape_of(code, cfg)))
+    return order
+
+
+def init_params(cfg: RwkvConfig, key) -> dict:
+    """Initialize RWKV-4 parameters (simplified variant of the official
+    init: scaled-normal projections, layer-ramped decays and mixes)."""
+    d, f, v, n = cfg.d_model, cfg.d_ffn, cfg.vocab, cfg.n_layer
+    keys = iter(jax.random.split(key, 8 + 8 * n))
+    p: dict = {}
+    p["emb"] = jax.random.normal(next(keys), (v, d)) * 0.02
+    p["ln0.weight"] = jnp.ones(d)
+    p["ln0.bias"] = jnp.zeros(d)
+    h = jnp.arange(d) / max(d - 1, 1)
+    for i in range(n):
+        ratio0 = i / max(n - 1, 1)            # 0 -> 1 across layers
+        ratio1 = 1.0 - i / n                  # 1 -> ~0 across layers
+        b = f"blocks.{i}."
+        p[b + "ln1.weight"] = jnp.ones(d)
+        p[b + "ln1.bias"] = jnp.zeros(d)
+        p[b + "ln2.weight"] = jnp.ones(d)
+        p[b + "ln2.bias"] = jnp.zeros(d)
+        # decay_raw in [-6, -1] ramped over channels; w = -exp(raw).
+        p[b + "att.time_decay"] = -5.0 + 8.0 * h ** (0.7 + 1.3 * ratio0)
+        p[b + "att.time_first"] = jnp.full((d,), jnp.log(0.3)) + (h * 0.5)
+        p[b + "att.time_mix_k"] = h ** ratio1
+        p[b + "att.time_mix_v"] = h ** ratio1 + 0.3 * ratio0
+        p[b + "att.time_mix_r"] = h ** (0.5 * ratio1)
+        sc = 0.8 / (d ** 0.5)
+        p[b + "att.key"] = jax.random.normal(next(keys), (d, d)) * sc
+        p[b + "att.value"] = jax.random.normal(next(keys), (d, d)) * sc
+        p[b + "att.receptance"] = jax.random.normal(next(keys), (d, d)) * sc
+        p[b + "att.output"] = jax.random.normal(next(keys), (d, d)) * (sc * 0.5)
+        p[b + "ffn.time_mix_k"] = h ** ratio1
+        p[b + "ffn.time_mix_r"] = h ** ratio1
+        p[b + "ffn.key"] = jax.random.normal(next(keys), (f, d)) * sc
+        p[b + "ffn.receptance"] = jax.random.normal(next(keys), (d, d)) * sc
+        p[b + "ffn.value"] = jax.random.normal(next(keys), (d, f)) * (0.8 / f ** 0.5)
+    p["ln_out.weight"] = jnp.ones(d)
+    p["ln_out.bias"] = jnp.zeros(d)
+    p["head"] = jax.random.normal(next(keys), (v, d)) * 0.02
+    return p
+
+
+def flatten_params(params: dict, cfg: RwkvConfig):
+    return [jnp.asarray(params[name], jnp.float32) for name, _ in param_order(cfg)]
+
+
+def unflatten_params(flat, cfg: RwkvConfig) -> dict:
+    names = [name for name, _ in param_order(cfg)]
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+def init_state(cfg: RwkvConfig):
+    s = jnp.zeros((cfg.n_layer, 5, cfg.d_model))
+    return s.at[:, S_PP, :].set(PP_INIT)
+
+
+# --------------------------------------------------------------------------
+# Variant-dispatched primitive ops
+# --------------------------------------------------------------------------
+
+def _ops(variant: str):
+    if variant == "exact":
+        return dict(
+            ln=lambda x, w, b: _ln_exact(x, w, b),
+            sigmoid=jax.nn.sigmoid,
+            exp=jnp.exp,
+            div=lambda a, b: a / b,
+            wkv=None,
+        )
+    if variant == "pallas":
+        return dict(
+            ln=lambda x, w, b: ln_kernel.layernorm(x, w, b),
+            sigmoid=jax.nn.sigmoid,
+            exp=jnp.exp,
+            div=lambda a, b: a / b,
+            wkv=wkv_kernel.wkv_step,
+        )
+    if variant == "hwapprox":
+        return dict(
+            ln=hw_ops.hw_layernorm,
+            sigmoid=hw_ops.hw_sigmoid,
+            exp=hw_ops.hw_exp,
+            div=hw_ops.hw_div,
+            wkv=None,
+        )
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def _ln_exact(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def _wkv_generic(ops, k, v, aa, bb, pp, u, w):
+    ww = u + k
+    qq = jnp.maximum(pp, ww)
+    e1 = ops["exp"](pp - qq)
+    e2 = ops["exp"](ww - qq)
+    wkv = ops["div"](e1 * aa + e2 * v, e1 * bb + e2)
+    ww = pp + w
+    qq = jnp.maximum(ww, k)
+    e1 = ops["exp"](ww - qq)
+    e2 = ops["exp"](k - qq)
+    return wkv, e1 * aa + e2 * v, e1 * bb + e2, qq
+
+
+# --------------------------------------------------------------------------
+# Token-step forward (inference / serving path)
+# --------------------------------------------------------------------------
+
+def _time_mixing(ops, p, b: str, x, st):
+    """x is the ln1 output; st is this layer's [5, d] state slice."""
+    xp = st[S_ATT_X]
+    xk = x * p[b + "att.time_mix_k"] + xp * (1.0 - p[b + "att.time_mix_k"])
+    xv = x * p[b + "att.time_mix_v"] + xp * (1.0 - p[b + "att.time_mix_v"])
+    xr = x * p[b + "att.time_mix_r"] + xp * (1.0 - p[b + "att.time_mix_r"])
+    r = ops["sigmoid"](p[b + "att.receptance"] @ xr)
+    k = p[b + "att.key"] @ xk
+    v = p[b + "att.value"] @ xv
+    w_eff = -jnp.exp(p[b + "att.time_decay"])
+    u = p[b + "att.time_first"]
+    if ops["wkv"] is not None:
+        wkv, aa, bb, pp = ops["wkv"](k, v, st[S_AA], st[S_BB], st[S_PP], u, w_eff)
+    else:
+        wkv, aa, bb, pp = _wkv_generic(ops, k, v, st[S_AA], st[S_BB], st[S_PP], u, w_eff)
+    out = p[b + "att.output"] @ (r * wkv)
+    st = st.at[S_ATT_X].set(x).at[S_AA].set(aa).at[S_BB].set(bb).at[S_PP].set(pp)
+    return out, st
+
+
+def _channel_mixing(ops, p, b: str, x, st):
+    xp = st[S_FFN_X]
+    xk = x * p[b + "ffn.time_mix_k"] + xp * (1.0 - p[b + "ffn.time_mix_k"])
+    xr = x * p[b + "ffn.time_mix_r"] + xp * (1.0 - p[b + "ffn.time_mix_r"])
+    r = ops["sigmoid"](p[b + "ffn.receptance"] @ xr)
+    k = jnp.square(jnp.maximum(p[b + "ffn.key"] @ xk, 0.0))
+    out = r * (p[b + "ffn.value"] @ k)
+    return out, st.at[S_FFN_X].set(x)
+
+
+def step(params: dict, state, token, cfg: RwkvConfig, variant: str = "exact"):
+    """One autoregressive step: token id -> (logits [V], new state)."""
+    ops = _ops(variant)
+    p = params
+    x = jnp.take(p["emb"], token, axis=0)
+    x = ops["ln"](x, p["ln0.weight"], p["ln0.bias"])
+    new_rows = []
+    for i in range(cfg.n_layer):
+        b = f"blocks.{i}."
+        st = state[i]
+        dx, st = _time_mixing(ops, p, b, ops["ln"](x, p[b + "ln1.weight"], p[b + "ln1.bias"]), st)
+        x = x + dx
+        dx, st = _channel_mixing(ops, p, b, ops["ln"](x, p[b + "ln2.weight"], p[b + "ln2.bias"]), st)
+        x = x + dx
+        new_rows.append(st)
+    x = ops["ln"](x, p["ln_out.weight"], p["ln_out.bias"])
+    logits = p["head"] @ x
+    return logits, jnp.stack(new_rows)
+
+
+# --------------------------------------------------------------------------
+# Sequence forward (training / bulk evaluation path)
+# --------------------------------------------------------------------------
+
+def forward_seq(params: dict, tokens, cfg: RwkvConfig):
+    """RNN-mode forward over a token sequence [T] -> logits [T, V].
+
+    Uses lax.scan over time with the exact variant (training never uses
+    Pallas: interpret-mode tracing is slow and gradients are cleaner
+    through plain jnp).
+    """
+    ops = _ops("exact")
+    p = params
+
+    def one(carry, token):
+        state = carry
+        logits, state = step(p, state, token, cfg, variant="exact")
+        return state, logits
+
+    del ops
+    state0 = init_state(cfg)
+    _, logits = jax.lax.scan(one, state0, tokens)
+    return logits
+
+
+def forward_seq_batched(params: dict, tokens, cfg: RwkvConfig):
+    """tokens [B, T] -> logits [B, T, V]."""
+    return jax.vmap(lambda t: forward_seq(params, t, cfg))(tokens)
+
+
+def loss_fn(params: dict, tokens, cfg: RwkvConfig):
+    """Next-token cross-entropy over a [B, T] batch (predict t+1 from t)."""
+    logits = forward_seq_batched(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (flat-argument ABI)
+# --------------------------------------------------------------------------
+
+def make_step_fn(cfg: RwkvConfig, variant: str):
+    """Return f(*flat_params, state, token) -> (logits, state') for AOT."""
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        flat, state, token = args[:n], args[n], args[n + 1]
+        params = unflatten_params(list(flat), cfg)
+        return step(params, state, token, cfg, variant=variant)
+
+    return fn
+
+
+def make_seq_fn(cfg: RwkvConfig, seq_len: int, variant: str = "exact"):
+    """Return f(*flat_params, state, tokens[T]) -> (logits [T,V], state').
+
+    Chunked-sequence evaluator: state threads across calls so the Rust
+    side can score arbitrarily long documents in fixed-T chunks.
+    """
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        flat, state, tokens = args[:n], args[n], args[n + 1]
+        params = unflatten_params(list(flat), cfg)
+
+        def one(carry, token):
+            logits, new_state = step(params, carry, token, cfg, variant=variant)
+            return new_state, logits
+
+        state_out, logits = jax.lax.scan(one, state, tokens)
+        return logits, state_out
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def jit_step(cfg: RwkvConfig, variant: str = "exact"):
+    return jax.jit(lambda p, s, t: step(p, s, t, cfg, variant=variant))

@@ -1,0 +1,136 @@
+"""Python mirrors of the quantizer family (codebook construction).
+
+The authoritative runtime implementation is Rust (``rust/src/quant``);
+these mirrors exist to (a) validate the codebook math in pytest, and
+(b) dump a golden ``quant_codebooks.json`` at AOT time that a Rust test
+compares bit-for-bit against its own codebooks — a cross-language
+consistency check on the format definitions.
+
+All codebooks are the *nonnegative magnitude levels* normalized so the
+largest level is 1.0 (the per-tensor scale gamma maps max|w| onto it).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+# Equal 9-bit storage budget for every scheme (paper Table 1 is "W9A9
+# equivalent"): RTN sign+8, PoT/LogQ sign+8-bit exponent, APoT/Delta-PoT
+# sign + two 4-bit terms.
+RTN_BITS = 9
+POT_EXP_BITS = 8
+APOT_K = 4
+DPOT_K0 = 4
+DPOT_K1 = 4
+
+
+def rtn_levels(bits: int = RTN_BITS) -> np.ndarray:
+    qmax = 2 ** (bits - 1) - 1
+    return np.arange(0, qmax + 1, dtype=np.float64) / qmax
+
+
+def pot_levels(exp_bits: int = POT_EXP_BITS) -> np.ndarray:
+    """{0} u {2^-e}: exponents 0 .. 2^exp_bits - 1 (deep underflow allowed)."""
+    e = np.arange(0, 2 ** exp_bits, dtype=np.float64)
+    return np.unique(np.concatenate([[0.0], np.exp2(-e)]))
+
+
+def logq_levels(exp_bits: int = POT_EXP_BITS) -> np.ndarray:
+    """Same level set as PoT; LogQ differs in *assignment* (log-domain
+    rounding), see ``quantize_logq``."""
+    return pot_levels(exp_bits)
+
+
+def apot_levels(k: int = APOT_K, n: int = 2) -> np.ndarray:
+    """Paper eq (4): p_i in {0, 2^-i, 2^-(i+n), ..., 2^-(i+(2^k-2)n)}."""
+    terms = []
+    for i in range(n):
+        vals = [0.0] + [2.0 ** -(i + j * n) for j in range(2 ** k - 1)]
+        terms.append(np.array(vals))
+    levels = (terms[0][:, None] + terms[1][None, :]).ravel()
+    levels = np.unique(levels)
+    return levels / levels.max()
+
+
+def dpot_levels(k0: int = DPOT_K0, k1: int = DPOT_K1) -> np.ndarray:
+    """Paper eq (5)-(6): p0 = 2^-dq0 (dq0 in 1..2^k0-1, 0 -> p0=0),
+    p1 = p0 * 2^-dq1 (dq1 in 1..2^k1-1, 0 -> p1=0); level = 2*(p0+p1)."""
+    levels = {0.0}
+    for dq0 in range(1, 2 ** k0):
+        p0 = 2.0 ** -dq0
+        levels.add(2.0 * p0)
+        for dq1 in range(1, 2 ** k1):
+            levels.add(2.0 * (p0 + p0 * 2.0 ** -dq1))
+    arr = np.unique(np.array(sorted(levels)))
+    return arr / arr.max()
+
+
+def _nearest(levels: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Map |w|/s values to the nearest codebook level (levels sorted asc)."""
+    idx = np.searchsorted(levels, y)
+    idx = np.clip(idx, 1, len(levels) - 1)
+    lo = levels[idx - 1]
+    hi = levels[idx]
+    return np.where(y - lo < hi - y, lo, hi)
+
+
+def fake_quant(w: np.ndarray, levels: np.ndarray) -> np.ndarray:
+    """Nearest-level fake quantization with per-tensor max scaling."""
+    s = np.abs(w).max()
+    if s == 0:
+        return w.copy()
+    y = np.abs(w) / s
+    return np.sign(w) * _nearest(np.asarray(levels, np.float64), y) * s
+
+
+def quantize_logq(w: np.ndarray, exp_bits: int = POT_EXP_BITS) -> np.ndarray:
+    """Log-domain rounding: e = round(-log2(|w|/s)), clamp, reconstruct."""
+    s = np.abs(w).max()
+    if s == 0:
+        return w.copy()
+    y = np.abs(w) / s
+    with np.errstate(divide="ignore"):
+        e = np.round(-np.log2(np.maximum(y, 1e-300)))
+    e = np.clip(e, 0, 2 ** exp_bits - 1)
+    out = np.exp2(-e)
+    out[y == 0] = 0.0
+    # deep underflow flushes to zero exactly like the PoT level set does
+    return np.sign(w) * out * s
+
+
+SCHEMES = ["rtn", "pot", "logq", "apot", "dpot"]
+
+
+def fake_quant_scheme(w: np.ndarray, scheme: str) -> np.ndarray:
+    if scheme == "rtn":
+        return fake_quant(w, rtn_levels())
+    if scheme == "pot":
+        return fake_quant(w, pot_levels())
+    if scheme == "logq":
+        return quantize_logq(w)
+    if scheme == "apot":
+        return fake_quant(w, apot_levels())
+    if scheme == "dpot":
+        return fake_quant(w, dpot_levels())
+    raise ValueError(scheme)
+
+
+def dump_codebooks(path: str) -> None:
+    """Golden codebook dump compared bit-for-bit by a Rust test."""
+    data = {
+        "rtn": rtn_levels().tolist(),
+        "pot": [lv for lv in pot_levels().tolist() if lv == 0.0 or lv >= 2.0 ** -64],
+        "apot": apot_levels().tolist(),
+        "dpot": dpot_levels().tolist(),
+        "params": {
+            "rtn_bits": RTN_BITS,
+            "pot_exp_bits": POT_EXP_BITS,
+            "apot_k": APOT_K,
+            "dpot_k0": DPOT_K0,
+            "dpot_k1": DPOT_K1,
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(data, f)

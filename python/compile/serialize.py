@@ -1,0 +1,67 @@
+"""HFWT: a tiny self-describing tensor container (writer side).
+
+Layout:  magic ``HFWT1\\n`` | u64-LE header length | JSON header | raw data.
+Header: ``{"tensors": [{"name", "dtype", "shape", "offset", "nbytes"}],
+"meta": {...}}`` with offsets relative to the start of the data section,
+each tensor 64-byte aligned.  The Rust reader lives in
+``rust/src/model/weights.rs``; keep the two in sync.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"HFWT1\n"
+ALIGN = 64
+
+
+def save_tensors(path: str, tensors: dict, meta: dict | None = None) -> None:
+    """Write ``{name: np.ndarray}`` (f32/i8/i32) to ``path``."""
+    entries = []
+    blobs = []
+    offset = 0
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        assert arr.dtype in (np.float32, np.int8, np.int32), (name, arr.dtype)
+        raw = arr.tobytes()
+        entries.append({
+            "name": name,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        })
+        blobs.append(raw)
+        offset += len(raw)
+        pad = (-offset) % ALIGN
+        if pad:
+            blobs.append(b"\0" * pad)
+            offset += pad
+    header = json.dumps({"tensors": entries, "meta": meta or {}}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def load_tensors(path: str):
+    """Read an HFWT file back (used by pytest round-trip checks)."""
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        assert magic == MAGIC, magic
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        data = f.read()
+    out = {}
+    for e in header["tensors"]:
+        buf = data[e["offset"]: e["offset"] + e["nbytes"]]
+        arr = np.frombuffer(buf, dtype=np.dtype(e["dtype"])).reshape(e["shape"])
+        out[e["name"]] = arr
+    return out, header["meta"]

@@ -1,0 +1,106 @@
+"""Train the tiny end-to-end RWKV-4 model on the synthetic corpus.
+
+Build-time only (invoked from ``aot.py`` / ``make artifacts``); the loss
+curve is logged to ``artifacts/train_log.json`` and summarized in
+EXPERIMENTS.md.  Hand-rolled AdamW (optax is not in the image) with cosine
+decay + warmup and global-norm gradient clipping.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+from .config import TINY, RwkvConfig, TrainConfig
+
+
+def _adamw_update(params, grads, m, v, step, tc: TrainConfig, lr):
+    """One AdamW step over the params dict; returns (params, m, v)."""
+    b1, b2, eps, wd = tc.beta1, tc.beta2, tc.eps, tc.weight_decay
+    new_p, new_m, new_v = {}, {}, {}
+    t = step + 1
+    for k in params:
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * jnp.square(g)
+        mhat = m_k / (1 - b1 ** t)
+        vhat = v_k / (1 - b2 ** t)
+        # no decay on gains/biases/1-d params (ln, time_*), like RWKV's init
+        decay = wd if params[k].ndim >= 2 else 0.0
+        new_p[k] = params[k] - lr * (mhat / (jnp.sqrt(vhat) + eps) + decay * params[k])
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_p, new_m, new_v
+
+
+def _clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def _lr_at(step: int, tc: TrainConfig) -> float:
+    if step < tc.warmup:
+        return tc.lr * (step + 1) / tc.warmup
+    frac = (step - tc.warmup) / max(tc.steps - tc.warmup, 1)
+    cos = 0.5 * (1.0 + np.cos(np.pi * frac))
+    return tc.lr_final + (tc.lr - tc.lr_final) * cos
+
+
+def make_batches(stream, tc: TrainConfig, seed: int):
+    """Sample [B, T+1] windows from the token stream forever."""
+    rng = np.random.default_rng(seed)
+    arr = np.asarray(stream, dtype=np.int32)
+    n = len(arr) - (tc.seq_len + 1)
+    while True:
+        starts = rng.integers(0, n, size=tc.batch)
+        yield np.stack([arr[s: s + tc.seq_len + 1] for s in starts])
+
+
+def train(cfg: RwkvConfig = TINY, tc: TrainConfig = TrainConfig(),
+          n_train_tokens: int = 200_000, verbose: bool = True):
+    """Train and return (params, log) where log is a list of step records."""
+    key = jax.random.PRNGKey(tc.seed)
+    params = model.init_params(cfg, key)
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    stream = data.gen_stream(seed=tc.seed + 1, n_tokens=n_train_tokens)
+    batches = make_batches(stream, tc, seed=tc.seed + 2)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, toks: model.loss_fn(p, toks, cfg)))
+
+    @jax.jit
+    def opt_step(params, grads, m, v, step, lr):
+        grads, gnorm = _clip_by_global_norm(grads, tc.grad_clip)
+        params, m, v = _adamw_update(params, grads, m, v, step, tc, lr)
+        return params, m, v, gnorm
+
+    log = []
+    t0 = time.time()
+    for step in range(tc.steps):
+        toks = jnp.asarray(next(batches))
+        loss, grads = loss_grad(params, toks)
+        lr = _lr_at(step, tc)
+        params, m, v, gnorm = opt_step(params, grads, m, v, step, lr)
+        if step % tc.log_every == 0 or step == tc.steps - 1:
+            rec = {"step": step, "loss": float(loss), "lr": lr,
+                   "gnorm": float(gnorm), "elapsed_s": time.time() - t0}
+            log.append(rec)
+            if verbose:
+                print(f"step {step:4d}  loss {rec['loss']:.4f}  "
+                      f"lr {lr:.2e}  gnorm {rec['gnorm']:.2f}  "
+                      f"({rec['elapsed_s']:.0f}s)", flush=True)
+    return params, log
+
+
+def save_log(log, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)

@@ -1,0 +1,60 @@
+"""AOT lowering sanity + short-training smoke (loss must drop)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, train
+from compile.config import RwkvConfig, TrainConfig
+
+CFG = RwkvConfig("unit", n_layer=2, d_model=64, d_ffn=128, vocab=64)
+
+
+def test_lower_step_produces_hlo_text():
+    text = aot.lower_step(CFG, "exact")
+    assert text.startswith("HloModule"), text[:60]
+    assert "ROOT" in text
+    # one HLO parameter per model param + state + token
+    n_expected = len(model.param_order(CFG)) + 2
+    assert text.count("parameter(") >= n_expected
+
+
+def test_lower_step_pallas_variant_lowered():
+    text = aot.lower_step(CFG, "pallas")
+    assert text.startswith("HloModule")
+    # interpret-mode pallas inlines to plain HLO: no custom-call may remain
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_lower_seq_has_loop():
+    text = aot.lower_seq(CFG, 8)
+    assert text.startswith("HloModule")
+    assert "while" in text  # lax.scan lowers to a while loop
+
+
+def test_short_training_reduces_loss():
+    tc = TrainConfig(steps=25, batch=4, seq_len=64, warmup=5, log_every=5,
+                     lr=4e-3)
+    params, log = train.train(CFG, tc, n_train_tokens=20_000, verbose=False)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    assert np.isfinite(last)
+    assert last < first - 0.3, (first, last)
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(steps=100, warmup=10)
+    lrs = [train._lr_at(s, tc) for s in range(100)]
+    assert lrs[0] < lrs[9] <= tc.lr + 1e-12          # warmup rises
+    assert max(lrs) == pytest.approx(tc.lr, rel=1e-6)
+    assert lrs[-1] < tc.lr_final * 1.2               # decays to ~lr_final
+
+
+def test_make_batches_windows():
+    tc = TrainConfig(batch=3, seq_len=16)
+    stream = list(range(2000))
+    b = next(train.make_batches(stream, tc, seed=0))
+    assert b.shape == (3, 17)
+    # each row is a contiguous window
+    for row in b:
+        assert list(row) == list(range(row[0], row[0] + 17))

@@ -1,0 +1,98 @@
+"""Corpus/eval generators (determinism, gold validity) + HFWT round-trip."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import data, serialize
+
+
+def test_vocab_stable_and_sized():
+    v = data.build_vocab()
+    assert len(v) == 128
+    assert v[0] == "<pad>" and v[1] == "<bos>"
+    assert len(set(v)) == 128
+
+
+def test_stream_deterministic():
+    a = data.gen_stream(42, 5000)
+    b = data.gen_stream(42, 5000)
+    assert a == b
+    assert len(a) == 5000
+    assert all(0 <= t < 128 for t in a)
+
+
+def test_stream_seed_sensitivity():
+    assert data.gen_stream(1, 1000) != data.gen_stream(2, 1000)
+
+
+def test_fact_doc_recalls_are_consistent():
+    import random
+    rng = random.Random(7)
+    for _ in range(50):
+        words = data._gen_fact_doc(rng)
+        # parse facts
+        facts = {}
+        i = 0
+        while i < len(words):
+            j = words.index(".", i)
+            sent = words[i:j]
+            if len(sent) == 5 and sent[1] == "has":
+                facts[(sent[4], sent[0])] = sent[3]  # (object, name) -> color
+            elif len(sent) == 6 and sent[0] == "the":
+                # the OBJ of NAME is COLOR
+                assert facts[(sent[1], sent[3])] == sent[5]
+            i = j + 1
+
+
+def test_eval_data_gold_indices_valid():
+    d = data.gen_eval_data(seed=1, n_per_suite=40)
+    assert len(d["lambada"]) == 40
+    for item in d["lambada"]:
+        assert len(item["tokens"]) > 5
+    for name, suite in d["suites"].items():
+        assert len(suite) == 40, name
+        for item in suite:
+            assert 0 <= item["gold"] < len(item["choices"])
+            assert all(len(c) >= 1 for c in item["choices"])
+            # distractors differ from the gold continuation
+            gold = item["choices"][item["gold"]]
+            assert all(c != gold for i, c in enumerate(item["choices"])
+                       if i != item["gold"])
+
+
+def test_eval_data_deterministic():
+    a = data.gen_eval_data(seed=3, n_per_suite=10)
+    b = data.gen_eval_data(seed=3, n_per_suite=10)
+    assert json.dumps(a) == json.dumps(b)
+
+
+def test_hfwt_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a.weight": rng.normal(size=(7, 13)).astype(np.float32),
+        "b.codes": rng.integers(-8, 8, size=(5,)).astype(np.int8),
+        "c.scalar": np.array([3], np.int32),
+    }
+    p = tmp_path / "w.bin"
+    serialize.save_tensors(str(p), tensors, meta={"hello": 1})
+    back, meta = serialize.load_tensors(str(p))
+    assert meta == {"hello": 1}
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_hfwt_alignment(tmp_path):
+    tensors = {"x": np.ones(3, np.float32), "y": np.ones(5, np.float32)}
+    p = tmp_path / "w.bin"
+    serialize.save_tensors(str(p), tensors)
+    back, _ = serialize.load_tensors(str(p))
+    np.testing.assert_array_equal(back["y"], tensors["y"])
+
+
+def test_hfwt_rejects_bad_dtype(tmp_path):
+    with pytest.raises(AssertionError):
+        serialize.save_tensors(str(tmp_path / "w.bin"),
+                               {"x": np.ones(3, np.float16)})

@@ -1,0 +1,133 @@
+"""Approximation-error bounds of the hardware function units (vs libm).
+
+These bounds are the paper's accuracy story: the PWL sigmoid, EXP-LUT and
+DIVU-LUT must stay within small, known error envelopes.  The same bounds
+are asserted by the Rust property tests on the integer datapaths.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hw_ops, ref
+
+SET = settings(max_examples=50, deadline=None)
+
+# Known max absolute error of the eq-(9) PWL on [0, inf): the worst gap of
+# the classic Amin/Curtis/Hayes-Gill segmentation is < 0.019 (measured
+# 0.018941 at the segment joints).
+SIGMOID_PWL_MAX_ERR = 0.0190
+
+
+def test_sigmoid_pwl_max_error_grid():
+    x = jnp.linspace(-10.0, 10.0, 20001)
+    err = jnp.abs(ref.sigmoid_pwl_ref(x) - 1.0 / (1.0 + jnp.exp(-x)))
+    assert float(jnp.max(err)) <= SIGMOID_PWL_MAX_ERR + 1e-6
+
+
+@SET
+@given(st.floats(-50.0, 50.0))
+def test_sigmoid_pwl_pointwise(x):
+    got = float(ref.sigmoid_pwl_ref(jnp.float32(x)))
+    want = float(1.0 / (1.0 + np.exp(-np.float64(x))))
+    assert abs(got - want) <= SIGMOID_PWL_MAX_ERR + 1e-5
+    assert 0.0 <= got <= 1.0
+
+
+def test_sigmoid_pwl_symmetry():
+    x = jnp.linspace(-8.0, 8.0, 999)
+    s = ref.sigmoid_pwl_ref(x)
+    np.testing.assert_allclose(s + ref.sigmoid_pwl_ref(-x), 1.0, atol=1e-6)
+
+
+def test_sigmoid_pwl_nearly_monotone():
+    # Eq (9) as printed has a small downward jump at the x=2.375 joint
+    # (0.921875 -> 0.917969, i.e. -0.0039); the approximation is monotone
+    # only up to that discontinuity.  Assert no larger violation exists.
+    x = jnp.linspace(-8.0, 8.0, 4001)
+    s = np.asarray(ref.sigmoid_pwl_ref(x))
+    assert np.all(np.diff(s) >= -0.004)
+
+
+# EXP unit: relative error comes from (a) log2e ~= 1.4375 (0.37% low) and
+# (b) the 8-bit LUT truncation (up to 2^-8 in the exponent).  Bound ~3%
+# relative over a wide domain.
+EXP_REL_ERR = 0.032
+
+
+@SET
+@given(st.floats(-15.0, 8.0))
+def test_exp_lut_relative_error(x):
+    got = float(ref.exp_lut_ref(jnp.float32(x)))
+    # compare against 2^(1.4375*x): the LUT truncation is the only error
+    want = float(2.0 ** (1.4375 * np.float64(x)))
+    assert got > 0
+    assert abs(got - want) / want <= EXP_REL_ERR
+
+
+def test_exp_lut_against_true_exp_domain():
+    """Total error (log2e rounding + LUT) stays within 4% on [-10, 5]."""
+    x = jnp.linspace(-10.0, 5.0, 5001)
+    got = np.asarray(ref.exp_lut_ref(x), np.float64)
+    want = np.exp(np.asarray(x, np.float64))
+    rel = np.abs(got - want) / want
+    assert rel.max() <= 0.04, rel.max()
+
+
+def test_hw_exp_clamps_domain():
+    assert float(hw_ops.hw_exp(jnp.float32(-1e30))) >= 0.0
+    assert np.isfinite(float(hw_ops.hw_exp(jnp.float32(1e30))))
+
+
+# DIVU: 4-bit mantissa truncation gives <= ~12.5% worst-case mantissa
+# error; 8-bit output storage adds 2^-8.
+DIV_REL_ERR = 0.13
+
+
+@SET
+@given(st.floats(2.0**-10, 2.0**10), st.floats(2.0**-10, 2.0**10))
+def test_divu_relative_error(x, y):
+    got = float(ref.divu_ref(jnp.float32(x), jnp.float32(y)))
+    want = x / y
+    assert abs(got - want) / want <= DIV_REL_ERR
+
+
+def test_divu_exact_on_powers_of_two():
+    for k1 in range(-4, 5):
+        for k2 in range(-4, 5):
+            x, y = 2.0**k1, 2.0**k2
+            got = float(ref.divu_ref(jnp.float32(x), jnp.float32(y)))
+            np.testing.assert_allclose(got, x / y, rtol=1e-6)
+
+
+def test_hw_div_signs():
+    for sn in (-3.0, 3.0):
+        for sd in (-2.0, 2.0):
+            got = float(hw_ops.hw_div(jnp.float32(sn), jnp.float32(sd)))
+            assert np.sign(got) == np.sign(sn / sd)
+
+
+def test_hw_layernorm_close_to_exact():
+    import jax
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256,)) * 2.0
+    w = jnp.ones(256)
+    b = jnp.zeros(256)
+    got = hw_ops.hw_layernorm(x, w, b)
+    want = ref.layernorm_ref(x, w, b)
+    # DIVU mantissa truncation dominates: allow its relative envelope
+    err = np.abs(np.asarray(got - want))
+    scale = np.abs(np.asarray(want)) + 1e-3
+    assert (err / scale).max() <= 0.15
+
+
+def test_quant_sym_roundtrip_properties():
+    import jax
+    x = jax.random.normal(jax.random.PRNGKey(1), (1000,)) * 3.0
+    q = hw_ops.quant_sym(x, bits=9)
+    # max quantization step = s/qmax
+    step = float(jnp.max(jnp.abs(x))) / 255.0
+    assert float(jnp.max(jnp.abs(q - x))) <= step * 0.5 + 1e-7
+    # idempotent
+    q2 = hw_ops.quant_sym(q, bits=9, scale=jnp.max(jnp.abs(x)))
+    np.testing.assert_allclose(q, q2, atol=1e-7)

@@ -1,0 +1,169 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes/dtypes/value ranges; every kernel must
+assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dpot_mv, hw_layernorm, ref, wkv
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# --------------------------------------------------------------------------
+# LayerNorm kernel
+# --------------------------------------------------------------------------
+
+@SET
+@given(
+    d=st.sampled_from([32, 64, 128, 256, 768, 1024]),
+    block=st.sampled_from([64, 128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(d, block, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (d,), 3.0)
+    w = 1.0 + rand(k2, (d,), 0.1)
+    b = rand(k3, (d,), 0.1)
+    got = hw_layernorm.layernorm(x, w, b, block=block)
+    want = ref.layernorm_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_identity_equals_twopass():
+    key = jax.random.PRNGKey(0)
+    x = rand(key, (256,), 5.0)
+    w = jnp.ones(256)
+    b = jnp.zeros(256)
+    a = ref.layernorm_ref(x, w, b)
+    c = ref.layernorm_identity_ref(x, w, b)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-5)
+
+
+def test_layernorm_ragged_dim_clamps_block():
+    # d=96 is not divisible by 64; the kernel must clamp the block width.
+    key = jax.random.PRNGKey(1)
+    x = rand(key, (96,), 2.0)
+    w = jnp.ones(96)
+    b = jnp.zeros(96)
+    got = hw_layernorm.layernorm(x, w, b, block=64)
+    np.testing.assert_allclose(got, ref.layernorm_ref(x, w, b), rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_constant_input_stable():
+    # var == 0: eps must keep the output finite.
+    x = jnp.full((128,), 3.0)
+    got = hw_layernorm.layernorm(x, jnp.ones(128), jnp.zeros(128))
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+# --------------------------------------------------------------------------
+# WKV kernel
+# --------------------------------------------------------------------------
+
+@SET
+@given(d=st.sampled_from([16, 64, 128, 512]), seed=st.integers(0, 2**31 - 1))
+def test_wkv_step_matches_ref(d, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 7)
+    k = rand(ks[0], (d,), 1.5)
+    v = rand(ks[1], (d,), 1.0)
+    aa = rand(ks[2], (d,), 0.5)
+    bb = jnp.abs(rand(ks[3], (d,), 0.5)) + 0.5
+    pp = rand(ks[4], (d,), 1.0)
+    u = rand(ks[5], (d,), 0.3)
+    w = -jnp.exp(rand(ks[6], (d,), 0.5))  # effective decay, negative
+    got = wkv.wkv_step(k, v, aa, bb, pp, u, w)
+    want = ref.wkv_step_ref(k, v, aa, bb, pp, u, w)
+    for g, wnt in zip(got, want):
+        np.testing.assert_allclose(g, wnt, rtol=1e-5, atol=1e-5)
+
+
+def test_wkv_recurrence_stays_finite():
+    """pp running max keeps exp() in range over many steps."""
+    d = 64
+    key = jax.random.PRNGKey(3)
+    u = rand(key, (d,), 0.3)
+    w = -jnp.exp(jnp.linspace(-5.0, -1.0, d))
+    aa = jnp.zeros(d)
+    bb = jnp.zeros(d)
+    pp = jnp.full((d,), -1e30)
+    for t in range(200):
+        kk = rand(jax.random.PRNGKey(100 + t), (d,), 2.0)
+        vv = rand(jax.random.PRNGKey(500 + t), (d,), 1.0)
+        out, aa, bb, pp = wkv.wkv_step(kk, vv, aa, bb, pp, u, w)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(jnp.isfinite(aa))) and bool(jnp.all(jnp.isfinite(bb)))
+
+
+def test_wkv_first_token_equals_bonus_path():
+    """With empty state (pp=-inf), wkv == v for the first token."""
+    d = 32
+    key = jax.random.PRNGKey(4)
+    k = rand(key, (d,))
+    v = rand(jax.random.PRNGKey(5), (d,))
+    u = rand(jax.random.PRNGKey(6), (d,))
+    w = -jnp.ones(d)
+    out, aa, bb, pp = wkv.wkv_step(
+        k, v, jnp.zeros(d), jnp.zeros(d), jnp.full((d,), -1e30), u, w)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Delta-PoT matvec kernel
+# --------------------------------------------------------------------------
+
+def _random_codes(key, shape):
+    k1, k2, k3 = jax.random.split(key, 3)
+    sign = jnp.where(jax.random.bernoulli(k1, 0.5, shape), 1, -1).astype(jnp.int8)
+    dq0 = jax.random.randint(k2, shape, 0, 16).astype(jnp.int8)
+    dq1 = jax.random.randint(k3, shape, 0, 16).astype(jnp.int8)
+    return sign, dq0, dq1
+
+
+@SET
+@given(
+    dims=st.sampled_from([(16, 16), (64, 32), (128, 128), (256, 128), (96, 64)]),
+    tile=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dpot_matvec_matches_ref(dims, tile, seed):
+    d_out, d_in = dims
+    key = jax.random.PRNGKey(seed)
+    sign, dq0, dq1 = _random_codes(key, (d_out, d_in))
+    x = rand(jax.random.fold_in(key, 7), (d_in,))
+    gamma = jnp.array([0.37], jnp.float32)
+    got = dpot_mv.dpot_matvec(sign, dq0, dq1, gamma, x, tile_out=tile)
+    want = ref.dpot_matvec_ref(sign, dq0, dq1, gamma[0], x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dpot_zero_code_is_zero_weight():
+    """dq0 == 0 encodes exact zero regardless of dq1 (paper eq 6)."""
+    d = 8
+    sign = jnp.ones((d, d), jnp.int8)
+    dq0 = jnp.zeros((d, d), jnp.int8)
+    dq1 = jnp.full((d, d), 5, jnp.int8)
+    x = jnp.ones(d)
+    out = dpot_mv.dpot_matvec(sign, dq0, dq1, jnp.array([1.0]), x)
+    np.testing.assert_allclose(out, jnp.zeros(d), atol=0)
+
+
+def test_dpot_single_term_value():
+    """dq0=1, dq1=0 -> weight = 2*gamma*2^-1 = gamma."""
+    sign = jnp.ones((4, 4), jnp.int8)
+    dq0 = jnp.ones((4, 4), jnp.int8)
+    dq1 = jnp.zeros((4, 4), jnp.int8)
+    x = jnp.ones(4)
+    out = dpot_mv.dpot_matvec(sign, dq0, dq1, jnp.array([0.25]), x)
+    np.testing.assert_allclose(out, jnp.full(4, 4 * 0.25), rtol=1e-6)

@@ -1,0 +1,99 @@
+"""Quantizer codebooks: structure, paper-example checks, scheme ordering."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as q
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def test_rtn_levels_uniform():
+    lv = q.rtn_levels(9)
+    assert lv[0] == 0.0 and lv[-1] == 1.0
+    np.testing.assert_allclose(np.diff(lv), 1.0 / 255.0, rtol=1e-12)
+
+
+def test_pot_levels_are_powers_of_two():
+    lv = q.pot_levels()
+    nz = lv[lv > 0]
+    np.testing.assert_allclose(np.exp2(np.round(np.log2(nz))), nz, rtol=0)
+    assert lv.max() == 1.0
+
+
+def test_dpot_levels_match_paper_example():
+    """Paper section 3.1: gamma*(2^0 + 2^-2) is exactly representable as
+    2*gamma*(2^-1 + 2^-3) in Delta-PoT but not in 4-bit APoT."""
+    target = 2.0**0 + 2.0**-2  # 1.25
+    dpot = q.dpot_levels(k0=2, k1=2)
+    # normalize target by the pre-normalization max (2*(2^-1+2^-2)=1.5)
+    pre_levels = {0.0}
+    for dq0 in range(1, 4):
+        p0 = 2.0**-dq0
+        pre_levels.add(2 * p0)
+        for dq1 in range(1, 4):
+            pre_levels.add(2 * (p0 + p0 * 2.0**-dq1))
+    assert any(abs(lv - target) < 1e-12 for lv in pre_levels), sorted(pre_levels)
+    assert dpot.max() == 1.0
+
+
+def test_dpot_level_count_9bit_budget():
+    lv = q.dpot_levels(4, 4)
+    # sign+4+4 bits: at most 1 + 15*16 magnitudes, deduplicated
+    assert 100 <= len(lv) <= 241
+
+
+def test_apot_levels_sorted_unique_max1():
+    lv = q.apot_levels()
+    assert np.all(np.diff(lv) > 0)
+    assert lv[0] == 0.0 and lv[-1] == 1.0
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_fake_quant_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=512).astype(np.float64)
+    for scheme in q.SCHEMES:
+        wq = q.fake_quant_scheme(w, scheme)
+        assert wq.shape == w.shape
+        assert np.abs(wq).max() <= np.abs(w).max() * (1 + 1e-9)
+        # signs never flip
+        assert np.all((np.sign(wq) == np.sign(w)) | (wq == 0.0))
+
+
+def test_scheme_mse_ordering_gaussian():
+    """The paper's Table-1 story at codebook level: on gaussian weights,
+    Delta-PoT < {RTN-ish} << PoT in reconstruction MSE, and Delta-PoT
+    beats plain PoT and LogQ decisively."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=200_000) * 0.02
+    mse = {s: np.mean((q.fake_quant_scheme(w, s) - w) ** 2) for s in q.SCHEMES}
+    assert mse["dpot"] < mse["pot"] * 0.25, mse
+    assert mse["dpot"] < mse["logq"] * 0.25, mse
+    assert mse["rtn"] < mse["pot"], mse
+
+
+def test_quantize_logq_log_domain_rounding():
+    w = np.array([0.9, 0.6, 0.3, 0.1]) * 1.0
+    wq = q.quantize_logq(w)
+    nz = wq[wq > 0]
+    # every output is a power of two times the scale (scale = 0.9)
+    ratio = nz / 0.9
+    np.testing.assert_allclose(np.exp2(np.round(np.log2(ratio))), ratio, rtol=1e-12)
+
+
+def test_zero_tensor_passthrough():
+    w = np.zeros(16)
+    for scheme in q.SCHEMES:
+        np.testing.assert_array_equal(q.fake_quant_scheme(w, scheme), w)
+
+
+def test_dump_codebooks_roundtrip(tmp_path):
+    import json
+    p = tmp_path / "cb.json"
+    q.dump_codebooks(str(p))
+    data = json.loads(p.read_text())
+    assert set(data) == {"rtn", "pot", "apot", "dpot", "params"}
+    np.testing.assert_allclose(data["dpot"], q.dpot_levels().tolist())

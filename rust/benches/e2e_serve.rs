@@ -1,0 +1,101 @@
+//! End-to-end serving benchmark: coordinator throughput over the native
+//! model at several batch capacities, plus PJRT step/prefill latency on
+//! the trained artifacts when present (the E7 numbers).
+
+use std::path::Path;
+use std::time::Instant;
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::runtime::{RwkvRuntime, Variant};
+use hfrwkv::util::bench::{bench, section};
+
+fn main() {
+    section("coordinator throughput (native model, 16 requests x 32 tokens)");
+    for cap in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let coord = Coordinator::spawn(
+            test_model(4, 128, 512, 128),
+            CoordinatorConfig { max_active: cap },
+        );
+        let rxs: Vec<_> = (0..16u32)
+            .map(|i| coord.submit(GenRequest::greedy(vec![i % 128], 32)))
+            .collect();
+        let mut total = 0usize;
+        for rx in rxs {
+            total += rx.recv().unwrap().unwrap().tokens.len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "max_active={cap}: {:>8.0} tok/s aggregate ({total} tokens in {wall:.2}s)",
+            total as f64 / wall
+        );
+    }
+
+    section("open-loop load (Poisson arrivals, native model, max_active=4)");
+    // vLLM-style serving benchmark: requests arrive at rate λ; report
+    // end-to-end latency percentiles as the system approaches saturation.
+    for lambda_rps in [20.0f64, 60.0, 120.0] {
+        let coord = Coordinator::spawn(
+            test_model(4, 128, 512, 128),
+            CoordinatorConfig { max_active: 4 },
+        );
+        let mut rng = hfrwkv::Rng64::new(7);
+        let n = 40;
+        let mut rxs = Vec::new();
+        let t0 = Instant::now();
+        let mut next_arrival = 0.0f64;
+        for i in 0..n {
+            // exponential inter-arrival
+            next_arrival += -rng.next_f64().max(1e-12).ln() / lambda_rps;
+            let now = t0.elapsed().as_secs_f64();
+            if now < next_arrival {
+                // sleep (not spin): on a single-core box a spinning
+                // submitter starves the worker thread
+                std::thread::sleep(std::time::Duration::from_secs_f64(next_arrival - now));
+            }
+            rxs.push(coord.submit(GenRequest::greedy(vec![1 + i % 100], 16)));
+        }
+        // server-side end-to-end latency (queue + prefill + decode): the
+        // client recv()s lag submission, so client-side clocks would
+        // include idle waiting on *other* requests
+        let mut lats: Vec<f64> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().unwrap().unwrap();
+                (r.queue_seconds + r.prefill_seconds + r.decode_seconds) * 1e3
+            })
+            .collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "λ={lambda_rps:>5.0} req/s: e2e latency p50 {:>7.1} ms  p95 {:>7.1} ms  max {:>7.1} ms",
+            lats[lats.len() / 2],
+            lats[(lats.len() as f64 * 0.95) as usize],
+            lats.last().unwrap()
+        );
+    }
+
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("\nartifacts/ missing — skipping PJRT benches");
+        return;
+    }
+
+    section("PJRT runtime (trained tiny model)");
+    let runtime = RwkvRuntime::load(Path::new("artifacts")).unwrap();
+    let state = runtime.init_state();
+    bench("runtime.step (exact variant)", || {
+        runtime.step(Variant::Exact, &state, 17).unwrap()
+    });
+    bench("runtime.step (hwapprox variant)", || {
+        runtime.step(Variant::HwApprox, &state, 17).unwrap()
+    });
+    let chunk = runtime.manifest.seq_chunk;
+    let toks: Vec<u32> = (0..chunk as u32).collect();
+    let s = bench("runtime.seq_chunk (32 tokens)", || {
+        runtime.seq_chunk(&state, &toks).unwrap()
+    });
+    println!(
+        "prefill throughput ≈ {:.0} tok/s via seq_chunk",
+        s.throughput(chunk as f64)
+    );
+}

@@ -1,0 +1,20 @@
+//! Bench + regenerate E3 (Fig 7): simulator evaluation cost per
+//! (config, shape) pair and the full throughput grid with the paper's
+//! ratio anchors.
+
+use hfrwkv::config::{HFRWKV_CONFIGS, PAPER_SHAPES};
+use hfrwkv::harness::fig7;
+use hfrwkv::sim::AccelSim;
+use hfrwkv::util::bench::{bench, section};
+
+fn main() {
+    section("simulator evaluation cost");
+    let sim = AccelSim::new(&HFRWKV_CONFIGS[3]);
+    bench("AccelSim.evaluate 7B (streaming)", || sim.evaluate(&PAPER_SHAPES[4]));
+    let sim0 = AccelSim::new(&HFRWKV_CONFIGS[0]);
+    bench("AccelSim.evaluate 169M (resident)", || sim0.evaluate(&PAPER_SHAPES[0]));
+    bench("full fig7 grid (30 evaluations)", fig7::run);
+
+    section("Fig 7 regeneration");
+    println!("{}", fig7::report(&fig7::run(), true).unwrap());
+}

@@ -1,0 +1,18 @@
+//! Bench + regenerate E4 (Fig 8): power-model cost and the full
+//! energy-efficiency grid with the paper's headline energy anchors.
+
+use hfrwkv::config::HFRWKV_CONFIGS;
+use hfrwkv::harness::fig8;
+use hfrwkv::sim::power_watts;
+use hfrwkv::util::bench::{bench, section};
+
+fn main() {
+    section("power model");
+    bench("power_watts (streaming at full BW)", || {
+        power_watts(&HFRWKV_CONFIGS[3], 458e9)
+    });
+    bench("full fig8 grid", fig8::run);
+
+    section("Fig 8 regeneration");
+    println!("{}", fig8::report(&fig8::run()).unwrap());
+}

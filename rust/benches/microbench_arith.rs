@@ -1,0 +1,58 @@
+//! Microbenchmarks of the bit-accurate hardware units and the native
+//! forward pass — the L3 hot-path numbers tracked in EXPERIMENTS.md §Perf.
+
+use hfrwkv::arith::{self, dpot_mul, Divu, ExpSigmoidUnit, LayerNormUnit, MvArray};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::quant::{self, Codebook, DpotCode, DpotTensor, Scheme};
+use hfrwkv::util::bench::{bench, section};
+use hfrwkv::Rng64;
+
+fn main() {
+    section("function units (per call)");
+    let divu = Divu::new();
+    bench("divu.div (16-bit operands)", || divu.div(48_213, 771, 16));
+    let exps = ExpSigmoidUnit::new();
+    bench("exp_q (Q8.8)", || exps.exp_q(-517));
+    bench("sigmoid_q (Q8.8)", || exps.sigmoid_q(311));
+    bench("lod(32-bit)", || arith::lod(0x00F3_1200, 32));
+    let code = DpotCode { sign: -1, dq0: 3, dq1: 2 };
+    bench("dpot_mul", || dpot_mul(137, code));
+
+    section("vector units");
+    let mut rng = Rng64::new(1);
+    let x512: Vec<i32> = (0..512).map(|_| rng.below(511) as i32 - 255).collect();
+    let mut ln = LayerNormUnit::new(256);
+    bench("LayerNormUnit.forward d=512", || ln.forward(&x512, 6, 8));
+
+    let w: Vec<f32> = (0..512 * 512).map(|_| rng.normal() as f32 * 0.05).collect();
+    let enc = DpotTensor::encode(&w, 512, 512);
+    let mut arr = MvArray::new(512, 12);
+    bench("MvArray.matvec 512x512 (PMAC integer)", || arr.matvec(&enc, &x512));
+
+    section("quantizers (4096-element tensor)");
+    let w4k: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 0.05).collect();
+    for scheme in [Scheme::Rtn, Scheme::Pot, Scheme::LogQ, Scheme::Apot, Scheme::Dpot] {
+        let src = w4k.clone();
+        bench(&format!("fake_quant {scheme:?}"), move || {
+            let mut buf = src.clone();
+            quant::fake_quant(&mut buf, scheme);
+            buf[0]
+        });
+    }
+    let cb = Codebook::for_scheme(Scheme::Dpot);
+    bench("codebook.nearest (binary search)", || cb.nearest(0.137));
+    let w128: Vec<f32> = w4k[..4096].to_vec();
+    bench("DpotTensor::encode 64x64", move || {
+        DpotTensor::encode(&w128[..4096], 64, 64)
+    });
+
+    section("native forward (tiny test model, d=64)");
+    let m = test_model(2, 64, 128, 64);
+    let mut st = m.new_state();
+    let mut tok = 1u32;
+    bench("RwkvModel.step", move || {
+        let logits = m.step(&mut st, tok);
+        tok = (tok + 1) % 64;
+        logits[0]
+    });
+}

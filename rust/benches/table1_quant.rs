@@ -1,0 +1,34 @@
+//! Bench + regenerate E1 (Table 1): times the quantize-and-evaluate
+//! pipeline per scheme, then (when artifacts exist) prints the full
+//! quantization-ablation table on the trained model.
+
+use std::path::Path;
+
+use hfrwkv::eval;
+use hfrwkv::harness::table1;
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::quant::Scheme;
+use hfrwkv::util::bench::{bench, section};
+
+fn main() {
+    section("quantize + stream-score a synthetic model (d=64)");
+    let base = test_model(2, 64, 128, 64);
+    let stream: Vec<u32> = (0..256u32).map(|i| (i * 7 + 3) % 64).collect();
+    for scheme in [Scheme::Rtn, Scheme::Pot, Scheme::Dpot] {
+        let b = base.clone();
+        let s = stream.clone();
+        bench(&format!("quantize+score {scheme:?}"), move || {
+            let mut m = b.clone();
+            m.quantize_matrices(scheme);
+            eval::stream_ppl(&mut m, &s)
+        });
+    }
+
+    section("Table 1 regeneration (trained model)");
+    if Path::new("artifacts/manifest.json").exists() {
+        let rows = table1::run(Path::new("artifacts"), Some(60), true).unwrap();
+        println!("{}", table1::report(&rows).unwrap());
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for the full table");
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench + regenerate E2 (Table 2): resource-model evaluation cost and
+//! the full utilization table vs the paper's measured numbers.
+
+use hfrwkv::config::HFRWKV_CONFIGS;
+use hfrwkv::harness::table2;
+use hfrwkv::sim::resource_usage;
+use hfrwkv::util::bench::{bench, section};
+
+fn main() {
+    section("resource model");
+    bench("resource_usage (one config)", || resource_usage(&HFRWKV_CONFIGS[3]));
+    bench("resource_usage (all four)", || {
+        HFRWKV_CONFIGS.iter().map(resource_usage).collect::<Vec<_>>()
+    });
+
+    section("Table 2 regeneration");
+    println!("{}", table2::run().unwrap());
+}

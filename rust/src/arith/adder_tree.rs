@@ -1,0 +1,170 @@
+//! ATAC (Addition-Tree + ACcumulator) reductions and the integer
+//! LayerNorm datapath (§4.5, Fig 6).
+//!
+//! The LayerNorm module runs two parallel ATAC paths (Σx and Σx²), applies
+//! the identity σ² = E[x²] − E[x]² (eq 12), takes an integer square root,
+//! and streams `(x − μ)/σ` out through a DIVU.  Latency of one reduction
+//! is ⌈d/P⌉ + 9 cycles at tree parallelism P.
+
+use super::divu::Divu;
+
+/// Pipelined addition-tree + accumulator reduction over i64 (wide
+/// accumulators: with 9-bit inputs and d ≤ 16k the sums need ≤ 23 bits;
+/// the squares path needs ≤ 31).  Returns (sum, cycles).
+pub fn atac_sum(xs: &[i64], parallelism: usize) -> (i64, u64) {
+    assert!(parallelism.is_power_of_two());
+    let mut acc = 0i64;
+    let mut blocks = 0u64;
+    for chunk in xs.chunks(parallelism) {
+        // the tree reduces one P-wide block per cycle
+        acc += chunk.iter().sum::<i64>();
+        blocks += 1;
+    }
+    // +9: tree depth (log2 P ≤ 9 at P=512) pipeline fill — paper's ⌈d/P⌉+9
+    (acc, blocks + 9)
+}
+
+/// Integer square root (floor) via digit-by-digit (non-restoring) method —
+/// the "subtract-square-root module" of Fig 6.
+pub fn isqrt(x: u64) -> u32 {
+    if x == 0 {
+        return 0;
+    }
+    let mut op = x;
+    let mut res: u64 = 0;
+    let mut one: u64 = 1 << ((63 - x.leading_zeros() as u64) & !1);
+    while one != 0 {
+        if op >= res + one {
+            op -= res + one;
+            res = (res >> 1) + one;
+        } else {
+            res >>= 1;
+        }
+        one >>= 2;
+    }
+    res as u32
+}
+
+/// The full LayerNorm hardware datapath operating on 9-bit quantized
+/// inputs (raw values at `in_frac` fractional bits).
+pub struct LayerNormUnit {
+    pub tree_parallelism: usize,
+    divu: Divu,
+    /// cycles spent by the last `forward` call (for the cycle model
+    /// cross-check in sim::ln_module)
+    pub last_cycles: u64,
+}
+
+impl LayerNormUnit {
+    pub fn new(tree_parallelism: usize) -> Self {
+        Self { tree_parallelism, divu: Divu::new(), last_cycles: 0 }
+    }
+
+    /// Normalize `x_raw` (9-bit values, `in_frac` frac bits); returns raw
+    /// outputs at `out_frac` frac bits: (x−μ)/σ, no affine (γ/β applied
+    /// by the element-wise array downstream).
+    pub fn forward(&mut self, x_raw: &[i32], in_frac: u8, out_frac: u8) -> Vec<i32> {
+        let d = x_raw.len() as i64;
+        // two parallel ATAC paths
+        let (s1, c1) = atac_sum(&x_raw.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+                                self.tree_parallelism);
+        let (s2, c2) = atac_sum(
+            &x_raw.iter().map(|&v| (v as i64) * (v as i64)).collect::<Vec<_>>(),
+            self.tree_parallelism,
+        );
+        self.last_cycles = c1.max(c2) + super::divu::DIVU_STAGES as u64 + 2;
+
+        // mean in raw units scaled by d (keep everything integral:
+        // compare d²·var = d·Σx² − (Σx)²)
+        let var_d2 = d * s2 - s1 * s1; // ≥ 0 up to rounding
+        let var_d2 = var_d2.max(0) as u64;
+        // σ·d = sqrt(d²·var); add d²·ε in raw² units
+        let eps_raw2 = ((1u64 << (2 * in_frac)) as f64 * 1e-5 * (d * d) as f64) as u64;
+        let sigma_d = isqrt(var_d2 + eps_raw2) as i64; // σ·d in raw units
+        // per-element: (x·d − Σx) / (σ·d), via DIVU (signed)
+        x_raw
+            .iter()
+            .map(|&v| {
+                let num = v as i64 * d - s1;
+                let q = self
+                    .divu
+                    .div_signed(num.clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+                                sigma_d.clamp(1, i32::MAX as i64) as i32,
+                                out_frac);
+                crate::quant::fixed::sat16x(q, 16)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atac_sum_correct_and_cycle_formula() {
+        let xs: Vec<i64> = (0..1000).collect();
+        let (s, c) = atac_sum(&xs, 256);
+        assert_eq!(s, 999 * 1000 / 2);
+        assert_eq!(c, (1000 + 255) / 256 + 9);
+    }
+
+    #[test]
+    fn isqrt_exact_on_squares() {
+        for i in 0..2000u64 {
+            assert_eq!(isqrt(i * i), i as u32);
+            if i >= 1 {
+                assert_eq!(isqrt(i * i + 1), i as u32); // floor (i²+1 < (i+1)² for i≥1)
+                assert_eq!(isqrt(i * i - 1), i as u32 - 1);
+            }
+        }
+        assert_eq!(isqrt(u32::MAX as u64 * u32::MAX as u64), u32::MAX);
+    }
+
+    #[test]
+    fn layernorm_close_to_float_reference() {
+        let mut rng = crate::Rng64::new(6);
+        let d = 512;
+        let in_frac = 6u8;
+        let xf: Vec<f64> = (0..d).map(|_| rng.normal() * 2.0).collect();
+        let xr: Vec<i32> = xf
+            .iter()
+            .map(|&v| ((v * 64.0).round() as i64).clamp(-255, 255) as i32)
+            .collect();
+        let mut unit = LayerNormUnit::new(256);
+        let out = unit.forward(&xr, in_frac, 8);
+
+        // float reference on the *quantized* inputs
+        let xq: Vec<f64> = xr.iter().map(|&v| v as f64 / 64.0).collect();
+        let mu = xq.iter().sum::<f64>() / d as f64;
+        let var = xq.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+        let sd = (var + 1e-5).sqrt();
+        for (o, x) in out.iter().zip(&xq) {
+            let want = (x - mu) / sd;
+            let got = *o as f64 / 256.0;
+            // DIVU's 4-bit mantissa dominates the error envelope
+            assert!(
+                (got - want).abs() <= 0.13 * want.abs() + 0.05,
+                "{got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_constant_input_is_finite_zero() {
+        let xr = vec![100i32; 256];
+        let mut unit = LayerNormUnit::new(256);
+        let out = unit.forward(&xr, 6, 8);
+        for o in out {
+            assert!(o.abs() <= 1, "{o}");
+        }
+    }
+
+    #[test]
+    fn layernorm_cycles_tracked() {
+        let xr = vec![1i32; 1024];
+        let mut unit = LayerNormUnit::new(512);
+        let _ = unit.forward(&xr, 6, 8);
+        assert_eq!(unit.last_cycles, (1024 / 512 + 9) + 3 + 2);
+    }
+}

@@ -1,0 +1,159 @@
+//! Unsigned Division Unit (§4.3, Fig 5a).
+//!
+//! Three pipeline stages:
+//!  1. normalization + LOD:  X = 2^k1·x, Y = 2^k2·y with x,y ∈ [1,2)
+//!  2. fractional division:  x/y from a 256-entry 2D-LUT indexed by the
+//!     four MSBs after each leading one (4×4-bit indexing, 8-bit output)
+//!  3. recombination:        Q = (x/y) << (k1 - k2)
+//!
+//! The LUT is a ROM generated once at construction — the only place float
+//! math appears.  The datapath itself is integer shifts and a table read.
+
+use super::lod::lod;
+
+/// Pipeline depth (cycles) of the unit — used by the cycle model.
+pub const DIVU_STAGES: u32 = 3;
+
+/// The unsigned division unit with its 2D mantissa LUT.
+pub struct Divu {
+    /// lut[mx*16+my] = round( (16+mx)/(16+my) * 256 ), 9-bit values
+    /// in [128, 496] stored in u16 ROM words.
+    lut: [u16; 256],
+}
+
+impl Default for Divu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Divu {
+    pub fn new() -> Self {
+        let mut lut = [0u16; 256];
+        for mx in 0..16u32 {
+            for my in 0..16u32 {
+                let q = (16 + mx) as f64 / (16 + my) as f64;
+                lut[(mx * 16 + my) as usize] = (q * 256.0).round() as u16;
+            }
+        }
+        Self { lut }
+    }
+
+    /// 4-bit mantissa index: the four bits right below the leading one.
+    #[inline]
+    fn mantissa4(x: u32, k: u32) -> u32 {
+        if k >= 4 {
+            (x >> (k - 4)) & 0xF
+        } else {
+            (x << (4 - k)) & 0xF
+        }
+    }
+
+    /// Divide two nonzero unsigned integers; result returned as a raw
+    /// fixed-point value with `out_frac` fractional bits.
+    ///
+    /// Returns 0 when the dividend is 0; saturates when the denominator
+    /// is 0 (the RTL guards this upstream).
+    pub fn div(&self, x: u32, y: u32, out_frac: u8) -> i64 {
+        if x == 0 {
+            return 0;
+        }
+        let Some(k2) = lod(y, 32) else {
+            return i64::MAX; // divide-by-zero guard
+        };
+        let k1 = lod(x, 32).unwrap();
+        // stage 2: LUT mantissa division (8-bit fractional quotient)
+        let mx = Self::mantissa4(x, k1);
+        let my = Self::mantissa4(y, k2);
+        let frac = self.lut[(mx * 16 + my) as usize] as i64;
+        // stage 3: recombination — Q = frac · 2^(k1-k2-8+out_frac)
+        let sh = k1 as i32 - k2 as i32 - 8 + out_frac as i32;
+        super::shift_add::barrel(frac, sh)
+    }
+
+    /// Signed wrapper: sign-bit separation happens before the DIVU
+    /// (paper §4.3), recombined on the way out.
+    pub fn div_signed(&self, x: i32, y: i32, out_frac: u8) -> i64 {
+        let s = if (x < 0) ^ (y < 0) { -1 } else { 1 };
+        s * self.div(x.unsigned_abs(), y.unsigned_abs(), out_frac)
+    }
+
+    /// Float convenience view for model-level use: divide two positive
+    /// reals carried at `in_frac` fixed-point bits.
+    pub fn div_f64(&self, x: f64, y: f64, in_frac: u8) -> f64 {
+        let xi = (x * (1u64 << in_frac) as f64).round() as i64;
+        let yi = (y * (1u64 << in_frac) as f64).round() as i64;
+        if xi <= 0 {
+            return 0.0;
+        }
+        if yi <= 0 {
+            return f64::INFINITY;
+        }
+        const OF: u8 = 24;
+        self.div(xi as u32, yi as u32, OF) as f64 / (1u64 << OF) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_is_256_entries_of_9bit() {
+        let d = Divu::new();
+        for &v in d.lut.iter() {
+            assert!((128..=496).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn exact_on_powers_of_two() {
+        let d = Divu::new();
+        for k1 in 0..16 {
+            for k2 in 0..16 {
+                let got = d.div(1 << k1, 1 << k2, 16);
+                let want = ((1u64 << 16) as f64 * 2f64.powi(k1 - k2)) as i64;
+                assert_eq!(got, want, "2^{k1}/2^{k2}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_within_lut_bound() {
+        // 4-bit mantissa truncation: worst-case relative error ~ 2·2^-5
+        // on each operand plus LUT rounding → < 13% overall (matches the
+        // python algorithmic reference bound).
+        let d = Divu::new();
+        let mut rng = crate::Rng64::new(2);
+        for _ in 0..20_000 {
+            let x = (rng.next_u64() % 65_535 + 1) as u32;
+            let y = (rng.next_u64() % 65_535 + 1) as u32;
+            let got = d.div(x, y, 20) as f64 / (1u64 << 20) as f64;
+            let want = x as f64 / y as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel <= 0.13, "x={x} y={y} got={got} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn signed_division_signs() {
+        let d = Divu::new();
+        assert!(d.div_signed(-100, 10, 8) < 0);
+        assert!(d.div_signed(100, -10, 8) < 0);
+        assert!(d.div_signed(-100, -10, 8) > 0);
+    }
+
+    #[test]
+    fn zero_dividend_and_divisor() {
+        let d = Divu::new();
+        assert_eq!(d.div(0, 5, 8), 0);
+        assert_eq!(d.div(5, 0, 8), i64::MAX);
+    }
+
+    #[test]
+    fn div_f64_view() {
+        let d = Divu::new();
+        let got = d.div_f64(3.0, 2.0, 12);
+        assert!((got - 1.5).abs() / 1.5 < 0.13);
+    }
+}

@@ -1,0 +1,189 @@
+//! Reusable Exponential–Sigmoid unit (§4.4, Fig 5b).
+//!
+//! One datapath, two modes selected by `mode`:
+//!
+//! * mode 0 — base-e exponentiation via eq (8): e^x = 2^(x·log₂e) with
+//!   log₂e ≈ 1.0111₂ applied by the ShiftAddition unit, integer part by
+//!   barrel shift, fractional part through a 256-entry EXP-LUT;
+//! * mode 1 — sigmoid via the eq (9) five-segment PWL, slopes 1/4, 1/8,
+//!   1/32 as single barrel shifts, intercepts from the σ-LUT.
+//!
+//! I/O convention: inputs are Q8.8 (16-bit internal precision per §3.2),
+//! outputs are Q1.15 in [0, 1) — both nonlinearities in RWKV consume
+//! values in (0, 1] after the running-max stabilization.
+
+use super::shift_add::{barrel, log2e_const, ShiftAddConst};
+
+/// Pipeline depth (cycles) of the unit — used by the cycle model.
+pub const EXPS_STAGES: u32 = 4;
+
+/// Input fixed point: Q8.8.
+pub const IN_FRAC: u8 = 8;
+/// Output fixed point: Q1.15.
+pub const OUT_FRAC: u8 = 15;
+
+pub struct ExpSigmoidUnit {
+    /// exp_lut[v] = round(2^(v/256) · 256) ∈ [256, 511]
+    exp_lut: [u16; 256],
+    log2e: ShiftAddConst,
+}
+
+impl Default for ExpSigmoidUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExpSigmoidUnit {
+    pub fn new() -> Self {
+        let mut exp_lut = [0u16; 256];
+        for (v, e) in exp_lut.iter_mut().enumerate() {
+            *e = ((v as f64 / 256.0).exp2() * 256.0).round() as u16;
+        }
+        Self { exp_lut, log2e: log2e_const() }
+    }
+
+    /// mode 0: e^x for Q8.8 input, Q1.15 output (saturates at 0x7FFF for
+    /// x ≥ 0 — the WKV datapath only ever feeds x ≤ 0 here).
+    pub fn exp_q(&self, x_q88: i32) -> u16 {
+        // y = x · log2e, still Q8.8 (shift-add: x + x>>1 - x>>4)
+        let y = self.log2e.apply(x_q88 as i64);
+        // u = floor(y) (integer part), v = fractional 8 bits
+        let u = y >> 8;
+        let v = (y & 0xFF) as usize;
+        let lut = self.exp_lut[v] as i64; // 2^(v/256) in Q8 (256..511)
+        // out_q15 = lut · 2^(u+7): Q8 LUT → Q15 needs <<7, then ±u
+        let raw = barrel(lut, (u + 7) as i32);
+        raw.clamp(0, 0x7FFF) as u16
+    }
+
+    /// mode 1: σ(x) for Q8.8 input, Q1.15 output, eq (9) verbatim.
+    pub fn sigmoid_q(&self, x_q88: i32) -> u16 {
+        let ax = x_q88.unsigned_abs() as i64; // |x| in Q8.8
+        // thresholds in Q8.8: 5.0=1280, 2.375=608, 1.0=256
+        let pos: i64 = if ax >= 1280 {
+            0x8000 // 1.0 in Q1.15 (clamped below)
+        } else if ax >= 608 {
+            // 0.03125·x + 0.84375 → (ax<<2) + 27648   [slope 1/32: ·2^7/32]
+            (ax << 2) + 27_648
+        } else if ax >= 256 {
+            // 0.125·x + 0.625 → (ax<<4) + 20480
+            (ax << 4) + 20_480
+        } else {
+            // 0.25·x + 0.5 → (ax<<5) + 16384
+            (ax << 5) + 16_384
+        };
+        let pos = pos.min(0x7FFF);
+        let out = if x_q88 >= 0 { pos } else { 0x8000 - pos };
+        out.clamp(0, 0x7FFF) as u16
+    }
+
+    /// Float views used by the hardware-numerics forward pass.
+    pub fn exp_f64(&self, x: f64) -> f64 {
+        let xq = (x * 256.0).round().clamp(i32::MIN as f64, i32::MAX as f64) as i32;
+        self.exp_q(xq) as f64 / 32_768.0
+    }
+
+    pub fn sigmoid_f64(&self, x: f64) -> f64 {
+        let xq = (x * 256.0).round().clamp(-65_536.0, 65_536.0) as i32;
+        self.sigmoid_q(xq) as f64 / 32_768.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_lut_range() {
+        let u = ExpSigmoidUnit::new();
+        assert_eq!(u.exp_lut[0], 256);
+        assert_eq!(u.exp_lut[255], ((255.0f64 / 256.0).exp2() * 256.0).round() as u16);
+        assert!(u.exp_lut.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn exp_negative_domain_accuracy() {
+        // the WKV recurrence only evaluates e^x for x <= 0; total error
+        // (log2e rounding + LUT) must stay within ~4.5% relative or one
+        // output ulp (2^-15), matching the python reference bound.
+        let u = ExpSigmoidUnit::new();
+        for i in 0..4000 {
+            let x = -10.0 * (i as f64) / 4000.0;
+            let got = u.exp_f64(x);
+            let want = x.exp();
+            let err = (got - want).abs();
+            assert!(
+                err / want <= 0.045 || err <= 2.0 / 32_768.0,
+                "x={x} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_zero_is_one_minus_ulp() {
+        let u = ExpSigmoidUnit::new();
+        // e^0 = 1.0 saturates to 0x7FFF = 1 - 2^-15
+        assert_eq!(u.exp_q(0), 0x7FFF);
+    }
+
+    #[test]
+    fn exp_saturates_positive() {
+        let u = ExpSigmoidUnit::new();
+        assert_eq!(u.exp_q(10 * 256), 0x7FFF);
+    }
+
+    #[test]
+    fn exp_underflows_to_zero() {
+        let u = ExpSigmoidUnit::new();
+        assert_eq!(u.exp_q(-40 * 256), 0);
+    }
+
+    #[test]
+    fn sigmoid_matches_pwl_reference() {
+        // integer datapath == eq (9) evaluated in floats, to 1 ulp
+        let u = ExpSigmoidUnit::new();
+        let pwl = |x: f64| -> f64 {
+            let ax = x.abs();
+            let pos = if ax >= 5.0 {
+                1.0
+            } else if ax >= 2.375 {
+                0.03125 * ax + 0.84375
+            } else if ax >= 1.0 {
+                0.125 * ax + 0.625
+            } else {
+                0.25 * ax + 0.5
+            };
+            if x >= 0.0 { pos } else { 1.0 - pos }
+        };
+        for i in -2000..2000 {
+            // evaluate the float PWL on the Q8.8-quantized input so both
+            // sides see the same segment-boundary decisions
+            let x = (i as f64 / 100.0 * 256.0).round() / 256.0;
+            let got = u.sigmoid_f64(x);
+            let want = pwl(x).min(1.0 - 1.0 / 32_768.0);
+            assert!((got - want).abs() <= 2.0 / 32_768.0 + 1e-9, "x={x} {got} {want}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_true_error_bound() {
+        let u = ExpSigmoidUnit::new();
+        for i in -3000..3000 {
+            let x = i as f64 / 100.0;
+            let got = u.sigmoid_f64(x);
+            let want = 1.0 / (1.0 + (-x).exp());
+            assert!((got - want).abs() <= 0.0190 + 2.0 / 32_768.0, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_symmetry_in_integers() {
+        let u = ExpSigmoidUnit::new();
+        for x in (-1280i32..1280).step_by(7) {
+            let a = u.sigmoid_q(x) as i32;
+            let b = u.sigmoid_q(-x) as i32;
+            assert!((a + b - 0x8000).abs() <= 1, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Leading-One Detector — Algorithm 1 of the paper, verbatim: a
+//! hierarchical binary search that halves the inspected window each stage
+//! (log₂k stages for k-bit inputs; the paper reports 58% lower logic depth
+//! than sequential detection at 16 bits).
+
+/// Position of the most significant '1' in the low `width` bits of `x`,
+/// or `None` when that slice is zero (the paper returns -1).
+///
+/// `width` must be a power of two (8/16/32), matching the hardware's
+/// stage structure.
+pub fn lod(x: u32, width: u32) -> Option<u32> {
+    debug_assert!(width.is_power_of_two() && width <= 32);
+    let mut d: u32 = if width == 32 { x } else { x & ((1u32 << width) - 1) };
+    let mut p: u32 = 0;
+    let mut w = width;
+    // Algorithm 1: while w > 1, test the upper half, keep the half with
+    // the leading one, accumulate the position offset.
+    while w > 1 {
+        let h = w / 2;
+        let upper = d >> h; // d[w-1:h]
+        if upper != 0 {
+            d = upper;
+            p += h;
+        } else {
+            d &= (1u32 << h) - 1; // d[h-1:0]
+        }
+        w = h;
+    }
+    if d == 1 {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+/// Number of pipeline stages of the LOD for a `width`-bit input
+/// (one per halving) — used by the cycle model.
+pub fn lod_stages(width: u32) -> u32 {
+    width.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_leading_zeros_32() {
+        let mut rng = crate::Rng64::new(1);
+        for _ in 0..10_000 {
+            let x = rng.next_u64() as u32;
+            let want = if x == 0 { None } else { Some(31 - x.leading_zeros()) };
+            assert_eq!(lod(x, 32), want, "x={x:#x}");
+        }
+    }
+
+    #[test]
+    fn matches_at_16_bits() {
+        for x in 0..=u16::MAX as u32 {
+            let want = if x == 0 { None } else { Some(31 - x.leading_zeros()) };
+            assert_eq!(lod(x, 16), want);
+        }
+    }
+
+    #[test]
+    fn masks_above_width() {
+        // bits above `width` must be ignored
+        assert_eq!(lod(0x1_0001, 16), Some(0));
+        assert_eq!(lod(0xFF00_0001, 8), Some(0));
+    }
+
+    #[test]
+    fn zero_returns_none() {
+        for w in [8, 16, 32] {
+            assert_eq!(lod(0, w), None);
+        }
+    }
+
+    #[test]
+    fn powers_of_two_exact() {
+        for p in 0..32 {
+            assert_eq!(lod(1u32 << p, 32), Some(p));
+        }
+    }
+
+    #[test]
+    fn stage_count() {
+        assert_eq!(lod_stages(16), 4);
+        assert_eq!(lod_stages(32), 5);
+    }
+}

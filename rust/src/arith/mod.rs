@@ -1,0 +1,31 @@
+//! Bit-accurate models of the HFRWKV function units (§4).
+//!
+//! Everything in this module operates on integers exactly the way the RTL
+//! would: barrel shifts, saturating adds, LUT reads — no floating point on
+//! any datapath (f32/f64 appear only in constructors that *fill* LUTs,
+//! which is a ROM-generation step, and in test oracles).
+//!
+//! * [`lod`]         — leading-one detector, Algorithm 1.
+//! * [`shift_add`]   — barrel shifter + ShiftAddition unit (×log₂e, PWL
+//!   slopes as dyadic-fraction sums).
+//! * [`divu`]        — unsigned division unit (Fig 5a): LOD normalize,
+//!   4×4-bit 2D-LUT mantissa divide, exponent recombination.
+//! * [`exp_sigmoid`] — reusable EXP–σ unit (Fig 5b): mode 0 = e^x via
+//!   256-entry EXP-LUT, mode 1 = sigmoid via eq (9) PWL.
+//! * [`pmac`]        — Δ-PoT multiplier (Fig 4c) + PMAC accumulation and
+//!   the three MV-array modes (§4.2).
+//! * [`adder_tree`]  — ATAC (addition tree + accumulator) reductions and
+//!   the integer LayerNorm datapath (Fig 6).
+
+pub mod adder_tree;
+pub mod divu;
+pub mod exp_sigmoid;
+pub mod lod;
+pub mod pmac;
+pub mod shift_add;
+
+pub use adder_tree::{atac_sum, isqrt, LayerNormUnit};
+pub use divu::Divu;
+pub use exp_sigmoid::ExpSigmoidUnit;
+pub use lod::lod;
+pub use pmac::{dpot_mul, MvArray, Pmac};

@@ -1,0 +1,293 @@
+//! Δ-PoT Multiplication Accumulator (PMAC) and the Matrix-Vector
+//! Processing Array (§4.2, Fig 4).
+//!
+//! The Δ-PoT multiplier (Fig 4c) replaces a DSP multiply with barrel
+//! shifts: a weight `sign·2γ·(2^-dq0 + 2^-(dq0+dq1))` times an activation
+//! `a` is `sign·((a << (15-dq0)) + (a << (15-dq0-dq1)))` at 15 extra
+//! fractional bits, with the per-tensor `2γ` folded into the output
+//! scale.  Accumulation runs in 16-bit registers with saturation
+//! ("overflow protection", §4.2); a per-tensor post-shift chosen at
+//! calibration keeps typical sums in range.
+
+use crate::quant::{DpotCode, DpotTensor};
+
+/// Extra fractional bits carried by the shift-add product.
+pub const PROD_FRAC: u32 = 15;
+
+/// Δ-PoT multiply: activation raw value (9-bit domain) × code, returning
+/// the exact shift-add product at `frac(a) + PROD_FRAC` fractional bits.
+#[inline]
+pub fn dpot_mul(a: i32, code: DpotCode) -> i64 {
+    if code.sign == 0 || code.dq0 == 0 {
+        return 0;
+    }
+    let a = a as i64;
+    let s0 = PROD_FRAC as i32 - code.dq0 as i32;
+    let t0 = super::shift_add::barrel(a, s0);
+    let t = if code.dq1 == 0 {
+        t0
+    } else {
+        t0 + super::shift_add::barrel(a, s0 - code.dq1 as i32)
+    };
+    code.sign as i64 * t
+}
+
+/// One PMAC unit: Δ-PoT multiplier + 16-bit saturating accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Pmac {
+    acc: i32,
+    /// Right-shift applied to each product before accumulation (chosen at
+    /// calibration so row sums fit 16 bits).
+    pub post_shift: u32,
+    /// Number of times the accumulator clipped (observability for tests
+    /// and for the calibration loop).
+    pub sat_events: u64,
+}
+
+impl Pmac {
+    pub fn new(post_shift: u32) -> Self {
+        Self { acc: 0, post_shift, sat_events: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    /// Multiply-accumulate one (activation, code) pair.
+    #[inline]
+    pub fn mac(&mut self, a: i32, code: DpotCode) {
+        let p = dpot_mul(a, code) >> self.post_shift;
+        let sum = self.acc as i64 + p;
+        let clipped = sum.clamp(-32_767, 32_767);
+        if clipped != sum {
+            self.sat_events += 1;
+        }
+        self.acc = clipped as i32;
+    }
+
+    pub fn acc(&self) -> i32 {
+        self.acc
+    }
+}
+
+/// The parallel matrix-vector processing array with its three modes.
+///
+/// Mode 1 (AC on):   matrix-vector product, one column broadcast per
+///                   cycle — latency (l+4)·⌈m/d⌉ cycles.
+/// Mode 2 (AC off):  element-wise multiply — latency ⌈l/d⌉+4.
+/// Mode 3:           element-wise add via the adder array.
+pub struct MvArray {
+    /// d — number of PMAC units operating in parallel.
+    pub width: usize,
+    pub post_shift: u32,
+    pub sat_events: u64,
+}
+
+impl MvArray {
+    pub fn new(width: usize, post_shift: u32) -> Self {
+        Self { width, post_shift, sat_events: 0 }
+    }
+
+    /// Mode 1: `W @ x` where W is a Δ-PoT-encoded `rows × cols` tensor and
+    /// `x` holds quantized activations (raw 9-bit values at `x_frac`).
+    ///
+    /// Returns raw accumulator values; the caller applies the combined
+    /// output scale `2γ·x_scale·2^(post_shift - PROD_FRAC)`.
+    pub fn matvec(&mut self, w: &DpotTensor, x: &[i32]) -> Vec<i32> {
+        assert_eq!(w.cols, x.len());
+        let mut out = vec![0i32; w.rows];
+        // row blocks of `width` PMACs; within a block, stream columns —
+        // the reordering of Fig 3 (every PMAC sees x[j] the same cycle).
+        //
+        // Perf note (§Perf L3-3): the common case never saturates, so a
+        // fast path accumulates unclamped while tracking the running
+        // extrema; only rows that would clip re-run the exact per-add
+        // saturating loop.  Bit-exact by construction: when no partial
+        // sum leaves the rails, per-add clamping is the identity.
+        for (block_start, chunk) in
+            (0..w.rows).step_by(self.width).zip(out.chunks_mut(self.width))
+        {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let r = block_start + i;
+                let row = &w.codes[r * w.cols..(r + 1) * w.cols];
+                let mut sum = 0i64;
+                let (mut lo, mut hi) = (0i64, 0i64);
+                for (&xv, &code) in x.iter().zip(row) {
+                    sum += dpot_mul(xv, code) >> self.post_shift;
+                    lo = lo.min(sum);
+                    hi = hi.max(sum);
+                }
+                if lo >= -32_767 && hi <= 32_767 {
+                    *o = sum as i32;
+                } else {
+                    // exact saturating replay
+                    let mut pmac = Pmac::new(self.post_shift);
+                    for (&xv, &code) in x.iter().zip(row) {
+                        pmac.mac(xv, code);
+                    }
+                    self.sat_events += pmac.sat_events;
+                    *o = pmac.acc();
+                }
+            }
+        }
+        out
+    }
+
+    /// Mode 2: element-wise multiply of quantized activations with Δ-PoT
+    /// codes (AC disabled — products pass straight through).
+    pub fn elementwise_mul(&self, codes: &[DpotCode], x: &[i32]) -> Vec<i64> {
+        assert_eq!(codes.len(), x.len());
+        codes.iter().zip(x).map(|(&c, &a)| dpot_mul(a, c)).collect()
+    }
+
+    /// Mode 3: element-wise saturating add (9-bit domain).
+    pub fn elementwise_add(&self, a: &[i32], b: &[i32]) -> Vec<i32> {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| crate::quant::fixed::sat16x(x as i64 + y as i64, 16))
+            .collect()
+    }
+}
+
+/// Helper for model-level use: full quantized matvec with scales.
+///
+/// `x_f32` is quantized to 9 bits at `x_scale`, multiplied against the
+/// Δ-PoT tensor, and the result is returned in f32 (the output scale
+/// restores γ, the activation scale and the post-shift).
+pub fn matvec_quantized(
+    arr: &mut MvArray,
+    w: &DpotTensor,
+    x_f32: &[f32],
+    x_scale: f32,
+) -> Vec<f32> {
+    let qmax = 255.0f32;
+    let xq: Vec<i32> = x_f32
+        .iter()
+        .map(|&v| (v / x_scale * qmax).round().clamp(-qmax, qmax) as i32)
+        .collect();
+    let raw = arr.matvec(w, &xq);
+    let scale = w.gamma * (x_scale / qmax)
+        * (arr.post_shift as f64).exp2() as f32
+        / (PROD_FRAC as f64).exp2() as f32
+        * 2.0;
+    raw.into_iter().map(|r| r as f32 * scale).collect()
+}
+
+/// Pick the smallest post-shift that avoids saturation on a calibration
+/// input (binary scan, mirrors the offline calibration pass).
+pub fn calibrate_post_shift(w: &DpotTensor, x: &[i32]) -> u32 {
+    for shift in 0..24 {
+        let mut arr = MvArray::new(64, shift);
+        let _ = arr.matvec(w, x);
+        if arr.sat_events == 0 {
+            return shift;
+        }
+    }
+    24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::DpotTensor;
+
+    fn encode(vals: &[f32], rows: usize, cols: usize) -> DpotTensor {
+        DpotTensor::encode(vals, rows, cols)
+    }
+
+    #[test]
+    fn dpot_mul_matches_decoded_value() {
+        // integer shift-add == a · magnitude · 2^PROD_FRAC exactly,
+        // because every Δ-PoT magnitude is dyadic with ≤ 15 frac bits...
+        // (truncation can occur for dq0+dq1 > 15; allow 1 ulp per term)
+        let mut rng = crate::Rng64::new(3);
+        for _ in 0..5000 {
+            let a = (rng.below(511) as i32) - 255;
+            let dq0 = 1 + rng.below(15) as u8;
+            let dq1 = rng.below(16) as u8;
+            let sign = if rng.next_f64() < 0.5 { -1i8 } else { 1 };
+            let code = DpotCode { sign, dq0, dq1 };
+            let got = dpot_mul(a, code) as f64;
+            // magnitude()/2 = p0+p1 (the format's 2× lives in the output
+            // scale), so the product models a·sign·(p0+p1)·2^15
+            let want = a as f64 * code.sign as f64 * (code.magnitude() / 2.0) * 32_768.0;
+            assert!((got - want).abs() <= 2.0, "a={a} code={code:?} {got} {want}");
+        }
+    }
+
+    #[test]
+    fn zero_activation_or_code_gives_zero() {
+        assert_eq!(dpot_mul(0, DpotCode { sign: 1, dq0: 3, dq1: 2 }), 0);
+        assert_eq!(dpot_mul(123, DpotCode::ZERO), 0);
+    }
+
+    #[test]
+    fn matvec_matches_float_reference() {
+        let mut rng = crate::Rng64::new(7);
+        let (rows, cols) = (32, 48);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 0.1).collect();
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        let enc = encode(&w, rows, cols);
+        let wq = enc.decode();
+        let x_scale = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+
+        // post-shift 14 keeps worst-case 48-element row sums inside the
+        // 16-bit accumulators (verified by the sat_events assert below)
+        let mut arr = MvArray::new(8, 14);
+        let got = matvec_quantized(&mut arr, &enc, &x, x_scale);
+
+        // reference: dequantized weights × quantized activations
+        let xq: Vec<f32> = x
+            .iter()
+            .map(|&v| (v / x_scale * 255.0).round() / 255.0 * x_scale)
+            .collect();
+        for r in 0..rows {
+            let want: f32 = (0..cols).map(|c| wq[r * cols + c] * xq[c]).sum();
+            let tol = 0.02 * x_scale + (arr.post_shift as f64).exp2() as f32
+                * enc.gamma * x_scale / 255.0 / 16_384.0
+                + want.abs() * 0.02;
+            assert!(
+                (got[r] - want).abs() <= tol.max(0.05),
+                "row {r}: {} vs {want}",
+                got[r]
+            );
+        }
+        assert_eq!(arr.sat_events, 0);
+    }
+
+    #[test]
+    fn accumulator_saturates_and_counts() {
+        let w: Vec<f32> = vec![1.0; 256];
+        let enc = encode(&w, 1, 256);
+        let x = vec![255i32; 256];
+        let mut arr = MvArray::new(4, 0); // no post-shift → must clip
+        let out = arr.matvec(&enc, &x);
+        assert_eq!(out[0], 32_767);
+        assert!(arr.sat_events > 0);
+    }
+
+    #[test]
+    fn calibration_removes_saturation() {
+        let w: Vec<f32> = vec![1.0; 256];
+        let enc = encode(&w, 1, 256);
+        let x = vec![255i32; 256];
+        let shift = calibrate_post_shift(&enc, &x);
+        let mut arr = MvArray::new(4, shift);
+        let _ = arr.matvec(&enc, &x);
+        assert_eq!(arr.sat_events, 0);
+        assert!(shift >= 7, "shift {shift}");
+    }
+
+    #[test]
+    fn elementwise_modes() {
+        let arr = MvArray::new(4, 0);
+        let codes = [DpotCode { sign: 1, dq0: 1, dq1: 0 }; 4]; // 0.5·2=1.0 weight
+        let x = [10, -20, 30, -40];
+        let prods = arr.elementwise_mul(&codes, &x);
+        for (p, &xi) in prods.iter().zip(&x) {
+            assert_eq!(*p, (xi as i64) << 14); // a·2^-1·2^15
+        }
+        let sums = arr.elementwise_add(&[100, -200], &[50, -50]);
+        assert_eq!(sums, vec![150, -250]);
+    }
+}

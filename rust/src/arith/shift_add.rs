@@ -1,0 +1,104 @@
+//! Barrel shifter + the shared ShiftAddition unit (§4.4).
+//!
+//! "All fixed-constant multiplications — whether by log₂e or by segment
+//! slopes — are replaced by a dedicated ShiftAddition unit [which]
+//! dynamically selects and combines bit-shifted operands."  A constant is
+//! expressed as a short signed sum of dyadic fractions ±2^-k; multiplying
+//! is then a handful of barrel shifts and adds.
+
+/// Arithmetic barrel shift: positive `sh` shifts left, negative right.
+/// Mirrors a bidirectional barrel shifter with sign extension.
+#[inline]
+pub fn barrel(x: i64, sh: i32) -> i64 {
+    if sh >= 64 {
+        0
+    } else if sh >= 0 {
+        x << sh
+    } else if sh <= -64 {
+        if x < 0 { -1 } else { 0 }
+    } else {
+        x >> (-sh)
+    }
+}
+
+/// One term of a shift-add constant: `sign * 2^shift` (shift may be
+/// negative for fractional terms).
+#[derive(Clone, Copy, Debug)]
+pub struct DyadicTerm {
+    pub sign: i8,
+    pub shift: i32,
+}
+
+/// A constant expressed as Σ sign·2^shift, evaluated by the ShiftAddition
+/// unit.  `apply` computes x·constant exactly in integer arithmetic.
+#[derive(Clone, Debug)]
+pub struct ShiftAddConst {
+    pub terms: Vec<DyadicTerm>,
+}
+
+impl ShiftAddConst {
+    pub fn new(terms: &[(i8, i32)]) -> Self {
+        Self { terms: terms.iter().map(|&(sign, shift)| DyadicTerm { sign, shift }).collect() }
+    }
+
+    /// The constant's value (for tests / documentation).
+    pub fn value(&self) -> f64 {
+        self.terms.iter().map(|t| t.sign as f64 * (t.shift as f64).exp2()).sum()
+    }
+
+    /// x · constant via shifts and adds (exact when all shifts >= 0;
+    /// truncating like the RTL when fractional).
+    #[inline]
+    pub fn apply(&self, x: i64) -> i64 {
+        self.terms
+            .iter()
+            .map(|t| t.sign as i64 * barrel(x, t.shift))
+            .sum()
+    }
+}
+
+/// log₂e ≈ 1.0111₂ = 1 + 1/2 - 1/16 (paper eq 8: "a single addition, one
+/// subtraction, and two shift operations").
+pub fn log2e_const() -> ShiftAddConst {
+    ShiftAddConst::new(&[(1, 0), (1, -1), (-1, -4)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrel_both_directions() {
+        assert_eq!(barrel(5, 3), 40);
+        assert_eq!(barrel(40, -3), 5);
+        assert_eq!(barrel(-40, -3), -5);
+        assert_eq!(barrel(-1, -10), -1); // arithmetic shift keeps sign
+        assert_eq!(barrel(123, 64), 0);
+    }
+
+    #[test]
+    fn log2e_value() {
+        assert!((log2e_const().value() - 1.4375).abs() < 1e-15);
+        // binary: 1.0111
+        assert!((1.4375f64 - (1.0 + 0.25 + 0.125 + 0.0625)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn apply_matches_multiplication_for_integral_terms() {
+        let c = ShiftAddConst::new(&[(1, 2), (1, 0), (-1, 1)]); // 4+1-2 = 3
+        for x in -100i64..100 {
+            assert_eq!(c.apply(x), 3 * x);
+        }
+    }
+
+    #[test]
+    fn apply_log2e_truncation_error_bounded() {
+        // applying to a Q8.8 value: error vs exact multiply is < 2 ulp
+        let c = log2e_const();
+        for i in -32_768i64..32_768 {
+            let got = c.apply(i);
+            let want = (i as f64 * 1.4375).floor();
+            assert!((got as f64 - want).abs() <= 2.0, "i={i} got={got} want={want}");
+        }
+    }
+}

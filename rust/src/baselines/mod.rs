@@ -1,0 +1,200 @@
+//! Analytic CPU/GPU baselines for Figs 7–8 (DESIGN.md §2, §8).
+//!
+//! Batch-1 RWKV decode on commodity hardware decomposes into a per-token
+//! dispatch floor (the python generation loop + per-op kernel launches +
+//! the multi-kernel LayerNorm reductions of the paper's §1 motivation),
+//! a small per-layer term, and weight streaming:
+//!
+//! `t_token = c + a·n_layer + bytes/(BW·eff)`      (weights resident)
+//! `t_token = c + a·n_layer + bytes/PCIe_BW`        (weights exceed VRAM)
+//!
+//! Constants are calibrated ONCE against the paper's 169M ratio column
+//! (the only size with fully quoted ratios) and physical bandwidth, then
+//! held fixed for all other sizes — the 7B crossover (U50 < A100 < U280)
+//! must *emerge* from the byte arithmetic, and does (EXPERIMENTS.md E3).
+//!
+//! Note on fidelity: the paper's A100 169M:7B throughput ratio (≈2.7×
+//! for 44× the bytes) is only satisfiable with a launch-dominated model;
+//! a pure-roofline GPU would be several times faster at 169M than the
+//! paper measured.  That launch-bound behaviour is literally the paper's
+//! claim (1)-(3) in §1, so we model it directly.
+
+use crate::config::ModelShape;
+
+/// One baseline platform (CPU or GPU).
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineSpec {
+    pub name: &'static str,
+    /// fixed per-token dispatch floor, seconds (python loop, sampling,
+    /// host sync) — the dominant term at small models
+    pub token_overhead_s: f64,
+    /// per-layer dispatch overhead, seconds
+    pub layer_overhead_s: f64,
+    /// device memory bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// sustained fraction of that bandwidth on this workload
+    pub bw_eff: f64,
+    /// device memory capacity, bytes (0 = host memory, never spills)
+    pub vram_bytes: u64,
+    /// host↔device link bandwidth used when weights exceed VRAM
+    pub pcie_bw: f64,
+    /// bytes per weight as served by ChatRWKV on this platform
+    /// (fp32 on CPU, fp16 on GPU)
+    pub bytes_per_weight: f64,
+    /// measured power draw during RWKV inference, watts (calibrated so
+    /// the paper's energy-efficiency headlines reproduce; see Fig 8)
+    pub power_w: f64,
+}
+
+impl BaselineSpec {
+    /// Bytes of weights touched per generated token.
+    pub fn weight_bytes(&self, shape: &ModelShape) -> f64 {
+        shape.n_params() as f64 * self.bytes_per_weight
+    }
+
+    /// Whether the model's weights fit device memory.
+    pub fn fits_vram(&self, shape: &ModelShape) -> bool {
+        self.vram_bytes == 0 || self.weight_bytes(shape) <= self.vram_bytes as f64 * 0.92
+    }
+
+    /// Seconds per generated token.
+    pub fn token_seconds(&self, shape: &ModelShape) -> f64 {
+        let bytes = self.weight_bytes(shape);
+        let stream = if self.fits_vram(shape) {
+            bytes / (self.mem_bw * self.bw_eff)
+        } else {
+            // weights spill: every token re-streams them over the link
+            bytes / self.pcie_bw
+        };
+        self.token_overhead_s + self.layer_overhead_s * shape.n_layer as f64 + stream
+    }
+
+    pub fn tokens_per_sec(&self, shape: &ModelShape) -> f64 {
+        1.0 / self.token_seconds(shape)
+    }
+
+    pub fn tokens_per_joule(&self, shape: &ModelShape) -> f64 {
+        self.tokens_per_sec(shape) / self.power_w
+    }
+}
+
+/// Intel Core i7-12650H + DDR4 (paper §5.1), ChatRWKV fp32 CPU path.
+/// Calibrated to the 26.74× @169M anchor; bandwidth-bound beyond 430M.
+pub const CPU_I7_12650H: BaselineSpec = BaselineSpec {
+    name: "CPU i7-12650H",
+    token_overhead_s: 1.2e-3,
+    layer_overhead_s: 0.45e-3,
+    mem_bw: 60.0e9,
+    bw_eff: 0.58,
+    vram_bytes: 0,
+    pcie_bw: f64::INFINITY,
+    bytes_per_weight: 4.0,
+    power_w: 54.5,
+};
+
+/// NVIDIA RTX 2080Ti (616 GB/s, 11 GB).  7B fp16 exceeds VRAM → PCIe3.
+pub const GPU_2080TI: BaselineSpec = BaselineSpec {
+    name: "RTX 2080Ti",
+    token_overhead_s: 13.0e-3,
+    layer_overhead_s: 0.05e-3,
+    mem_bw: 616.0e9,
+    bw_eff: 0.90,
+    vram_bytes: 11 * 1_073_741_824,
+    pcie_bw: 13.0e9,
+    bytes_per_weight: 2.0,
+    power_w: 126.0,
+};
+
+/// NVIDIA RTX 3090 (936 GB/s, 24 GB).
+pub const GPU_3090: BaselineSpec = BaselineSpec {
+    name: "RTX 3090",
+    token_overhead_s: 8.1e-3,
+    layer_overhead_s: 0.05e-3,
+    mem_bw: 936.0e9,
+    bw_eff: 0.95,
+    vram_bytes: 24 * 1_073_741_824,
+    pcie_bw: 13.0e9,
+    bytes_per_weight: 2.0,
+    power_w: 168.0,
+};
+
+/// NVIDIA A100-40G (1555 GB/s).
+pub const GPU_A100: BaselineSpec = BaselineSpec {
+    name: "A100",
+    token_overhead_s: 5.6e-3,
+    layer_overhead_s: 0.065e-3,
+    mem_bw: 1555.0e9,
+    bw_eff: 0.84,
+    vram_bytes: 40 * 1_073_741_824,
+    pcie_bw: 26.0e9,
+    bytes_per_weight: 2.0,
+    power_w: 152.0,
+};
+
+pub const ALL_BASELINES: [BaselineSpec; 4] =
+    [CPU_I7_12650H, GPU_2080TI, GPU_3090, GPU_A100];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PAPER_SHAPES;
+
+    #[test]
+    fn gpu_order_at_169m() {
+        let s = &PAPER_SHAPES[0];
+        assert!(GPU_A100.tokens_per_sec(s) > GPU_3090.tokens_per_sec(s));
+        assert!(GPU_3090.tokens_per_sec(s) > GPU_2080TI.tokens_per_sec(s));
+        assert!(GPU_2080TI.tokens_per_sec(s) > CPU_I7_12650H.tokens_per_sec(s));
+    }
+
+    #[test]
+    fn cpu_bandwidth_bound_at_7b() {
+        let s = &PAPER_SHAPES[4];
+        let bytes_t = s.n_params() as f64 * 4.0 / (60e9 * 0.58);
+        let total = CPU_I7_12650H.token_seconds(s);
+        assert!(bytes_t / total > 0.95, "{}", bytes_t / total);
+    }
+
+    #[test]
+    fn gpus_launch_bound_at_169m() {
+        // the paper's §1 motivation: at 169M the GPU spends most of the
+        // token on dispatch, not on memory traffic
+        let s = &PAPER_SHAPES[0];
+        for g in [GPU_2080TI, GPU_3090, GPU_A100] {
+            let overhead = g.token_overhead_s + g.layer_overhead_s * s.n_layer as f64;
+            assert!(overhead / g.token_seconds(s) > 0.8, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn a100_bandwidth_matters_at_7b() {
+        // ...but at 7B the byte term is a major fraction on the A100
+        let s = &PAPER_SHAPES[4];
+        let g = GPU_A100;
+        let bytes_t = g.weight_bytes(s) / (g.mem_bw * g.bw_eff);
+        assert!(bytes_t / g.token_seconds(s) > 0.5);
+    }
+
+    #[test]
+    fn vram_spill_cliff_2080ti() {
+        // 7B fp16 = ~14.8 GB > 11 GB: the 2080Ti must fall off the PCIe
+        // cliff; 3B (~6 GB) still fits
+        assert!(GPU_2080TI.fits_vram(&PAPER_SHAPES[3]));
+        assert!(!GPU_2080TI.fits_vram(&PAPER_SHAPES[4]));
+        let t3b = GPU_2080TI.tokens_per_sec(&PAPER_SHAPES[3]);
+        let t7b = GPU_2080TI.tokens_per_sec(&PAPER_SHAPES[4]);
+        assert!(t3b / t7b > 10.0, "{t3b} {t7b}");
+    }
+
+    #[test]
+    fn throughput_decreases_with_size() {
+        for b in ALL_BASELINES {
+            let mut prev = f64::INFINITY;
+            for s in &PAPER_SHAPES {
+                let t = b.tokens_per_sec(s);
+                assert!(t < prev, "{} {}", b.name, s.name);
+                prev = t;
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Accelerator configurations (HFRWKV_0/1, HFRWKV*_0/1) and FPGA platform
+//! specifications (Alveo U50 / U280), straight from §5.1 and §5.3.1.
+
+
+
+/// FPGA card the design is implemented on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Platform {
+    AlveoU50,
+    AlveoU280,
+}
+
+impl Platform {
+    /// Rated HBM2 bandwidth (GB/s) — §5.1.
+    pub fn hbm_bandwidth_gbps(self) -> f64 {
+        match self {
+            Platform::AlveoU50 => 201.0,
+            Platform::AlveoU280 => 460.0,
+        }
+    }
+
+    /// HBM capacity in bytes (both cards carry 8 GB of HBM2).
+    pub fn hbm_capacity_bytes(self) -> u64 {
+        8 * (1 << 30)
+    }
+
+    /// Total on-board resources: (LUT, FF, DSP, BRAM36, URAM288).
+    pub fn resources(self) -> super::super::sim::resources::ResourceVector {
+        use crate::sim::resources::ResourceVector;
+        match self {
+            Platform::AlveoU50 => ResourceVector {
+                lut: 872_000,
+                ff: 1_743_000,
+                dsp: 5_952,
+                bram: 1_344,
+                uram: 640,
+            },
+            Platform::AlveoU280 => ResourceVector {
+                lut: 1_304_000,
+                ff: 2_607_000,
+                dsp: 9_024,
+                bram: 2_016,
+                uram: 960,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Platform::AlveoU50 => "Alveo U50",
+            Platform::AlveoU280 => "Alveo U280",
+        }
+    }
+}
+
+/// One deployed accelerator configuration (one Table 2 column).
+#[derive(Clone, Copy, Debug)]
+pub struct AccelConfig {
+    pub name: &'static str,
+    pub platform: Platform,
+    /// On-chip clock in Hz (350 MHz on U50, 400 MHz on U280).
+    pub freq_hz: f64,
+    /// `d` — number of parallel PMAC units in the MV processing array.
+    pub pmac_count: usize,
+    /// ATAC addition-tree parallelism of the LayerNorm module.
+    pub tree_parallelism: usize,
+    /// Replicated Unsigned Division Units (all configs: 128).
+    pub divu_count: usize,
+    /// Replicated Exponential–Sigmoid Units (all configs: 128).
+    pub exps_count: usize,
+    /// Whether matrix weights are fully resident on chip (the `_0`
+    /// small-model configs) or streamed through the ping-pong URAM
+    /// double buffer (`_1`).
+    pub weights_resident: bool,
+    /// URAM ping-pong buffer size per bank, bytes (only `_1` configs).
+    pub chunk_bytes: usize,
+    /// Fraction of rated HBM bandwidth sustained (measured by the paper:
+    /// 99.95% on U50, 99.64% on U280).
+    pub bandwidth_efficiency: f64,
+}
+
+impl AccelConfig {
+    /// Effective streaming bandwidth in bytes/s.
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.platform.hbm_bandwidth_gbps() * 1e9 * self.bandwidth_efficiency
+    }
+
+    /// Cycles available per second.
+    pub fn cycles_per_second(&self) -> f64 {
+        self.freq_hz
+    }
+}
+
+/// The paper's four deployed configurations (Table 2).
+pub const HFRWKV_CONFIGS: [AccelConfig; 4] = [
+    AccelConfig {
+        name: "HFRWKV_0",
+        platform: Platform::AlveoU50,
+        freq_hz: 350e6,
+        pmac_count: 384,
+        tree_parallelism: 256,
+        divu_count: 128,
+        exps_count: 128,
+        weights_resident: true,
+        chunk_bytes: 0,
+        bandwidth_efficiency: 0.9995,
+    },
+    AccelConfig {
+        name: "HFRWKV_1",
+        platform: Platform::AlveoU50,
+        freq_hz: 350e6,
+        pmac_count: 512,
+        tree_parallelism: 512,
+        divu_count: 128,
+        exps_count: 128,
+        weights_resident: false,
+        // 64 URAM (288 Kb = 36 KB each) per ping-pong bank: Table 2 lists
+        // 128 URAM for HFRWKV_1 = 2 banks x 64.
+        chunk_bytes: 64 * 36 * 1024,
+        bandwidth_efficiency: 0.9995,
+    },
+    AccelConfig {
+        name: "HFRWKV*_0",
+        platform: Platform::AlveoU280,
+        freq_hz: 400e6,
+        pmac_count: 768,
+        tree_parallelism: 256,
+        divu_count: 128,
+        exps_count: 128,
+        weights_resident: true,
+        chunk_bytes: 0,
+        bandwidth_efficiency: 0.9964,
+    },
+    AccelConfig {
+        name: "HFRWKV*_1",
+        platform: Platform::AlveoU280,
+        freq_hz: 400e6,
+        pmac_count: 1024,
+        tree_parallelism: 512,
+        divu_count: 128,
+        exps_count: 128,
+        weights_resident: false,
+        // Table 2: 256 URAM = 2 banks x 128.
+        chunk_bytes: 128 * 36 * 1024,
+        bandwidth_efficiency: 0.9964,
+    },
+];
+
+/// Look up a config by its Table 2 name.
+pub fn config_by_name(name: &str) -> Option<&'static AccelConfig> {
+    HFRWKV_CONFIGS.iter().find(|c| c.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_bandwidth_below_rated() {
+        for c in HFRWKV_CONFIGS {
+            assert!(c.effective_bandwidth() < c.platform.hbm_bandwidth_gbps() * 1e9);
+            assert!(c.effective_bandwidth() > c.platform.hbm_bandwidth_gbps() * 0.99e9);
+        }
+    }
+
+    #[test]
+    fn streaming_configs_have_chunks() {
+        for c in HFRWKV_CONFIGS {
+            assert_eq!(c.weights_resident, c.chunk_bytes == 0);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(config_by_name("HFRWKV*_1").is_some());
+        assert!(config_by_name("nope").is_none());
+    }
+}

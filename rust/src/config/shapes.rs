@@ -1,0 +1,103 @@
+//! RWKV-4 model shapes (the published family plus the tiny served model).
+//!
+//! The simulator and the analytic baselines need *shapes only* — byte
+//! traffic and cycle counts are functions of tensor dimensions, never of
+//! weight values (DESIGN.md §2).
+
+
+
+/// Architecture shape of an RWKV-4 model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+}
+
+impl ModelShape {
+    pub const fn new(
+        name: &'static str,
+        n_layer: usize,
+        d_model: usize,
+        d_ffn: usize,
+        vocab: usize,
+    ) -> Self {
+        Self { name, n_layer, d_model, d_ffn, vocab }
+    }
+
+    /// Parameters held in *matrices* (Δ-PoT quantized, streamed per token
+    /// in large-model mode).  Mirrors `python/compile/config.py`.
+    pub fn matrix_params(&self) -> u64 {
+        let (d, f, v, n) = (
+            self.d_model as u64,
+            self.d_ffn as u64,
+            self.vocab as u64,
+            self.n_layer as u64,
+        );
+        let per_layer = 4 * d * d + 2 * d * f + d * d;
+        v * d * 2 + n * per_layer
+    }
+
+    /// Parameters held in *vectors* (9-bit uniform, resident on chip).
+    pub fn vector_params(&self) -> u64 {
+        let (d, n) = (self.d_model as u64, self.n_layer as u64);
+        n * (5 * d + 2 * d + 4 * d) + 4 * d
+    }
+
+    pub fn n_params(&self) -> u64 {
+        self.matrix_params() + self.vector_params()
+    }
+
+    /// Bytes that must cross HBM per generated token when matrix weights
+    /// are streamed at `bits_per_weight` (9 for Δ-PoT, 16 for FP16 ...).
+    pub fn stream_bytes_per_token(&self, bits_per_weight: f64) -> f64 {
+        self.matrix_params() as f64 * bits_per_weight / 8.0
+    }
+
+    /// MAC count of one token's forward pass (matrix ops only; the
+    /// element-wise/nonlinear work is accounted separately by the sim).
+    pub fn macs_per_token(&self) -> u64 {
+        self.matrix_params()
+    }
+}
+
+/// The model served end-to-end (must match `python/compile/config.py::TINY`).
+pub const TINY_SHAPE: ModelShape = ModelShape::new("tiny-1m", 4, 128, 512, 128);
+
+/// Published RWKV-4 family, as evaluated in the paper's Figs 7–8.
+pub const PAPER_SHAPES: [ModelShape; 5] = [
+    ModelShape::new("rwkv4-169m", 12, 768, 3072, 50277),
+    ModelShape::new("rwkv4-430m", 24, 1024, 4096, 50277),
+    ModelShape::new("rwkv4-1b5", 24, 2048, 8192, 50277),
+    ModelShape::new("rwkv4-3b", 32, 2560, 10240, 50277),
+    ModelShape::new("rwkv4-7b", 32, 4096, 16384, 50277),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_plus_vector_is_total() {
+        for s in PAPER_SHAPES {
+            assert_eq!(s.n_params(), s.matrix_params() + s.vector_params());
+            assert!(s.vector_params() < s.matrix_params() / 100);
+        }
+    }
+
+    #[test]
+    fn stream_bytes_scale_with_bits() {
+        let s = PAPER_SHAPES[0];
+        let b9 = s.stream_bytes_per_token(9.0);
+        let b16 = s.stream_bytes_per_token(16.0);
+        assert!((b16 / b9 - 16.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_matches_python_param_count() {
+        // python: TINY.n_params == 988_672 (checked in python tests)
+        assert_eq!(TINY_SHAPE.n_params(), crate::model::tiny_expected_params());
+    }
+}

@@ -1,0 +1,273 @@
+//! Generation engine: prefill + decode over either the PJRT runtime or
+//! the native Rust forwards (the engine is generic so every model path —
+//! exact PJRT, hwapprox PJRT, native f32, native hardware-numerics —
+//! serves through the same coordinator).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{FinishReason, GenRequest};
+use crate::model::sampler::Sampler;
+use crate::model::{HwModel, RwkvModel, State};
+use crate::runtime::{RwkvRuntime, Variant};
+
+/// Anything that can run RWKV one token at a time with explicit state.
+pub trait EngineModel {
+    fn vocab(&self) -> usize;
+    fn state_len(&self) -> usize;
+    fn init_state(&self) -> Vec<f32>;
+    /// One step; returns logits and mutates `state` in place.
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>>;
+    /// Optional bulk prefill; default = token-by-token.
+    fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
+        let mut logits = Vec::new();
+        for &t in tokens {
+            logits = self.forward(state, t, variant)?;
+        }
+        Ok(logits)
+    }
+}
+
+impl EngineModel for RwkvRuntime {
+    fn vocab(&self) -> usize {
+        self.manifest.vocab
+    }
+
+    fn state_len(&self) -> usize {
+        self.manifest.state_len()
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        RwkvRuntime::init_state(self)
+    }
+
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>> {
+        let out = self.step(variant, state, token)?;
+        *state = out.state;
+        Ok(out.logits)
+    }
+
+    fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
+        // chunk through the scan executable (exact variant only — the hw
+        // artifact has no seq build), then finish with single steps
+        let chunk = self.manifest.seq_chunk;
+        let vocab = self.manifest.vocab;
+        let mut last_logits = Vec::new();
+        let mut i = 0;
+        if variant == Variant::Exact {
+            while tokens.len() - i >= chunk {
+                let (logits_flat, new_state) = self.seq_chunk(state, &tokens[i..i + chunk])?;
+                *state = new_state;
+                last_logits = logits_flat[(chunk - 1) * vocab..].to_vec();
+                i += chunk;
+            }
+        }
+        for &t in &tokens[i..] {
+            last_logits = self.forward(state, t, variant)?;
+        }
+        Ok(last_logits)
+    }
+}
+
+impl EngineModel for RwkvModel {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn state_len(&self) -> usize {
+        self.n_layer * 5 * self.d
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.new_state().data
+    }
+
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, _variant: Variant) -> Result<Vec<f32>> {
+        let mut st = State { data: std::mem::take(state), n_layer: self.n_layer, d: self.d };
+        let logits = self.step(&mut st, token);
+        *state = st.data;
+        Ok(logits)
+    }
+}
+
+impl EngineModel for HwModel {
+    fn vocab(&self) -> usize {
+        HwModel::vocab(self)
+    }
+
+    fn state_len(&self) -> usize {
+        let s = self.new_state();
+        s.n_layer * 5 * s.d
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.new_state().data
+    }
+
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, _variant: Variant) -> Result<Vec<f32>> {
+        let proto = self.new_state();
+        let mut st = State { data: std::mem::take(state), n_layer: proto.n_layer, d: proto.d };
+        let logits = self.step(&mut st, token);
+        *state = st.data;
+        Ok(logits)
+    }
+}
+
+/// One in-flight generation (the session): prompt consumed, state held,
+/// decode in progress.
+pub struct ActiveSession {
+    pub request_id: u64,
+    pub req: GenRequest,
+    pub state: Vec<f32>,
+    pub generated: Vec<u32>,
+    pub sampler: Sampler,
+    pub next_token: u32,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub enqueued_at: Instant,
+    pub started_at: Instant,
+}
+
+/// The engine drives sessions over any [`EngineModel`].
+pub struct Engine<M: EngineModel> {
+    pub model: M,
+}
+
+impl<M: EngineModel> Engine<M> {
+    pub fn new(model: M) -> Engine<M> {
+        Engine { model }
+    }
+
+    /// Admit a request: run prefill, sample the first token.
+    pub fn start(&mut self, request_id: u64, req: GenRequest, enqueued_at: Instant) -> Result<ActiveSession> {
+        let t0 = Instant::now();
+        let mut state = self.model.init_state();
+        let mut sampler = Sampler::new(req.temperature, req.top_k, req.seed);
+        let prompt = if req.prompt.is_empty() { vec![crate::model::tokenizer::BOS] } else { req.prompt.clone() };
+        let logits = self.model.prefill(&mut state, &prompt, req.variant)?;
+        let next_token = sampler.sample(&logits);
+        Ok(ActiveSession {
+            request_id,
+            req,
+            state,
+            generated: Vec::new(),
+            sampler,
+            next_token,
+            prefill_seconds: t0.elapsed().as_secs_f64(),
+            decode_seconds: 0.0,
+            enqueued_at,
+            started_at: t0,
+        })
+    }
+
+    /// One decode step for a session; returns Some(reason) when done.
+    pub fn step_session(&mut self, s: &mut ActiveSession) -> Result<Option<FinishReason>> {
+        let t0 = Instant::now();
+        let tok = s.next_token;
+        s.generated.push(tok);
+        if s.req.stop_token == Some(tok) {
+            s.decode_seconds += t0.elapsed().as_secs_f64();
+            return Ok(Some(FinishReason::StopToken));
+        }
+        if s.generated.len() >= s.req.max_new_tokens {
+            s.decode_seconds += t0.elapsed().as_secs_f64();
+            return Ok(Some(FinishReason::MaxTokens));
+        }
+        let logits = self.model.forward(&mut s.state, tok, s.req.variant)?;
+        s.next_token = s.sampler.sample(&logits);
+        s.decode_seconds += t0.elapsed().as_secs_f64();
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::rwkv::testing::test_model;
+
+    fn engine() -> Engine<RwkvModel> {
+        Engine::new(test_model(2, 32, 64, 50))
+    }
+
+    #[test]
+    fn generates_requested_token_count() {
+        let mut e = engine();
+        let req = GenRequest::greedy(vec![1, 2, 3], 10);
+        let mut s = e.start(1, req, Instant::now()).unwrap();
+        let mut finish = None;
+        while finish.is_none() {
+            finish = e.step_session(&mut s).unwrap();
+        }
+        assert_eq!(finish, Some(FinishReason::MaxTokens));
+        assert_eq!(s.generated.len(), 10);
+    }
+
+    #[test]
+    fn stop_token_halts_early() {
+        let mut e = engine();
+        // find what greedy generates first, then use it as the stop token
+        let req = GenRequest::greedy(vec![1, 2, 3], 5);
+        let mut s = e.start(1, req, Instant::now()).unwrap();
+        let first = s.next_token;
+        let mut req2 = GenRequest::greedy(vec![1, 2, 3], 50);
+        req2.stop_token = Some(first);
+        let mut s2 = e.start(2, req2, Instant::now()).unwrap();
+        let mut finish = None;
+        while finish.is_none() {
+            finish = e.step_session(&mut s2).unwrap();
+        }
+        assert_eq!(finish, Some(FinishReason::StopToken));
+        assert_eq!(s2.generated, vec![first]);
+    }
+
+    #[test]
+    fn greedy_is_deterministic_across_sessions() {
+        let mut e = engine();
+        let gen = |e: &mut Engine<RwkvModel>| {
+            let mut s = e.start(0, GenRequest::greedy(vec![4, 9], 12), Instant::now()).unwrap();
+            while e.step_session(&mut s).unwrap().is_none() {}
+            s.generated
+        };
+        assert_eq!(gen(&mut e), gen(&mut e));
+    }
+
+    #[test]
+    fn empty_prompt_uses_bos() {
+        let mut e = engine();
+        let mut s = e.start(0, GenRequest::greedy(vec![], 3), Instant::now()).unwrap();
+        while e.step_session(&mut s).unwrap().is_none() {}
+        assert_eq!(s.generated.len(), 3);
+    }
+
+    #[test]
+    fn interleaved_equals_sequential() {
+        // THE state-isolation invariant: driving two sessions
+        // alternately must produce exactly what driving them one after
+        // the other produces.
+        let mut e = engine();
+        let ra = GenRequest::greedy(vec![3, 1, 4], 8);
+        let rb = GenRequest::greedy(vec![2, 7], 8);
+
+        // sequential
+        let mut sa = e.start(1, ra.clone(), Instant::now()).unwrap();
+        while e.step_session(&mut sa).unwrap().is_none() {}
+        let mut sb = e.start(2, rb.clone(), Instant::now()).unwrap();
+        while e.step_session(&mut sb).unwrap().is_none() {}
+
+        // interleaved
+        let mut ia = e.start(3, ra, Instant::now()).unwrap();
+        let mut ib = e.start(4, rb, Instant::now()).unwrap();
+        let (mut da, mut db) = (false, false);
+        while !(da && db) {
+            if !da {
+                da = e.step_session(&mut ia).unwrap().is_some();
+            }
+            if !db {
+                db = e.step_session(&mut ib).unwrap().is_some();
+            }
+        }
+        assert_eq!(sa.generated, ia.generated);
+        assert_eq!(sb.generated, ib.generated);
+    }
+}

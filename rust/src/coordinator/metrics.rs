@@ -1,0 +1,69 @@
+//! Serving metrics: counters + derived rates, printable as a report.
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub enqueued: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_seconds_total: f64,
+    pub decode_seconds_total: f64,
+    pub queue_seconds_total: f64,
+}
+
+impl Metrics {
+    /// Decode throughput over completed work (tokens/s of engine time).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_seconds_total > 0.0 {
+            self.tokens_generated as f64 / self.decode_seconds_total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_queue_seconds(&self) -> f64 {
+        if self.admitted > 0 {
+            self.queue_seconds_total / self.admitted as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} enqueued / {} admitted / {} completed\n\
+             tokens:   {} generated\n\
+             decode:   {:.1} tok/s (engine time)\n\
+             prefill:  {:.3} s total\n\
+             queueing: {:.4} s mean wait",
+            self.enqueued,
+            self.admitted,
+            self.completed,
+            self.tokens_generated,
+            self.decode_tokens_per_sec(),
+            self.prefill_seconds_total,
+            self.mean_queue_seconds(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_guard_div_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.decode_tokens_per_sec(), 0.0);
+        assert_eq!(m.mean_queue_seconds(), 0.0);
+    }
+
+    #[test]
+    fn report_contains_counts() {
+        let m = Metrics { enqueued: 3, admitted: 2, completed: 1, tokens_generated: 42,
+            prefill_seconds_total: 0.5, decode_seconds_total: 2.0, queue_seconds_total: 0.1 };
+        let r = m.report();
+        assert!(r.contains("42 generated"));
+        assert!(r.contains("21.0 tok/s"));
+    }
+}

@@ -1,0 +1,80 @@
+//! L3 serving coordinator — the request path.
+//!
+//! The paper's system serves sustained single-token decode (batch 1); a
+//! production deployment still needs admission, fair scheduling across
+//! concurrent sessions, state management and metrics, so the coordinator
+//! implements vLLM-style *continuous batching at the session level*: a
+//! worker thread owns the PJRT runtime exclusively and round-robins one
+//! decode step per active session per scheduling cycle, admitting queued
+//! requests as slots free up.  Recurrent state (the RWKV advantage: O(d)
+//! per session, no KV cache growth) lives in the session table.
+//!
+//! * [`engine`]    — prefill (chunked through the `seq` executable) +
+//!   step decode against [`crate::runtime::RwkvRuntime`].
+//! * [`scheduler`] — admission queue + round-robin step scheduler.
+//! * [`metrics`]   — latency/throughput counters.
+
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineModel};
+pub use metrics::Metrics;
+pub use scheduler::{Coordinator, CoordinatorConfig};
+
+use crate::runtime::Variant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    pub variant: Variant,
+    /// stop generation when this token is produced (e.g. BOS)
+    pub stop_token: Option<u32>,
+}
+
+impl GenRequest {
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            variant: Variant::Exact,
+            stop_token: None,
+        }
+    }
+}
+
+/// Why a generation finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub request_id: u64,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub queue_seconds: f64,
+}
+
+impl GenResponse {
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_seconds > 0.0 {
+            self.tokens.len() as f64 / self.decode_seconds
+        } else {
+            0.0
+        }
+    }
+}

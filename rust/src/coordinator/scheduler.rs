@@ -1,0 +1,248 @@
+//! Admission queue + round-robin continuous batching + worker thread.
+//!
+//! One worker thread owns the engine (and therefore the PJRT client)
+//! exclusively.  Each scheduling cycle it (1) admits queued requests up
+//! to `max_active`, (2) advances every active session by exactly one
+//! decode step in admission order — round-robin fairness, no starvation —
+//! and (3) completes finished sessions.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{ActiveSession, Engine, EngineModel};
+use super::metrics::Metrics;
+use super::{GenRequest, GenResponse};
+
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// maximum concurrently-decoding sessions
+    pub max_active: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_active: 8 }
+    }
+}
+
+struct Job {
+    id: u64,
+    req: GenRequest,
+    enqueued_at: Instant,
+    reply: Sender<Result<GenResponse>>,
+}
+
+/// Handle to a running coordinator.  Cloneable; `generate` is blocking,
+/// `submit` is async-style (returns a receiver).
+pub struct Coordinator {
+    tx: Sender<Job>,
+    next_id: std::sync::atomic::AtomicU64,
+    pub metrics: Arc<Mutex<Metrics>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread around an engine model.
+    pub fn spawn<M: EngineModel + Send + 'static>(model: M, cfg: CoordinatorConfig) -> Coordinator {
+        Self::spawn_with(move || model, cfg)
+    }
+
+    /// Spawn with a factory executed *inside* the worker thread — required
+    /// for models that are not `Send` (the PJRT runtime holds `Rc`s and
+    /// raw pointers; constructing it on the owning thread sidesteps any
+    /// cross-thread transfer).
+    pub fn spawn_with<M, F>(factory: F, cfg: CoordinatorConfig) -> Coordinator
+    where
+        M: EngineModel + 'static,
+        F: FnOnce() -> M + Send + 'static,
+    {
+        let (tx, rx) = channel::<Job>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || worker_loop(Engine::new(factory()), rx, cfg, m2));
+        Coordinator {
+            tx,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            metrics,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> Receiver<Result<GenResponse>> {
+        let (reply, rx) = channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.metrics.lock().unwrap().enqueued += 1;
+        let job = Job { id, req, enqueued_at: Instant::now(), reply };
+        // if the worker is gone the receiver will simply disconnect
+        let _ = self.tx.send(job);
+        rx
+    }
+
+    /// Blocking generate.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("coordinator worker terminated"))?
+    }
+
+    /// Graceful shutdown: drop the queue and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.clone());
+        // dropping self.tx happens in Drop; explicitly take the worker
+        if let Some(w) = self.worker.take() {
+            // close the channel by replacing tx with a dead one
+            let (dead, _) = channel();
+            self.tx = dead;
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // closing tx ends the worker loop once the queue drains
+        let (dead, _) = channel();
+        self.tx = dead;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<M: EngineModel>(
+    mut engine: Engine<M>,
+    rx: Receiver<Job>,
+    cfg: CoordinatorConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let mut active: Vec<(ActiveSession, Sender<Result<GenResponse>>)> = Vec::new();
+    let mut queue: std::collections::VecDeque<Job> = Default::default();
+    loop {
+        // 1. pull everything currently queued (block only when idle)
+        loop {
+            match rx.try_recv() {
+                Ok(job) => queue.push_back(job),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if active.is_empty() && queue.is_empty() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        if active.is_empty() && queue.is_empty() {
+            // idle: block for the next job (or shut down)
+            match rx.recv() {
+                Ok(job) => queue.push_back(job),
+                Err(_) => return,
+            }
+        }
+
+        // 2. admit in FIFO order up to max_active
+        while active.len() < cfg.max_active {
+            let Some(job) = queue.pop_front() else { break };
+            let queue_s = job.enqueued_at.elapsed().as_secs_f64();
+            match engine.start(job.id, job.req, job.enqueued_at) {
+                Ok(mut sess) => {
+                    sess.prefill_seconds += 0.0;
+                    metrics.lock().unwrap().admitted += 1;
+                    metrics.lock().unwrap().queue_seconds_total += queue_s;
+                    active.push((sess, job.reply));
+                }
+                Err(e) => {
+                    let _ = job.reply.send(Err(e));
+                }
+            }
+        }
+
+        // 3. one decode step per active session, admission order
+        let mut finished = Vec::new();
+        for (i, (sess, _)) in active.iter_mut().enumerate() {
+            match engine.step_session(sess) {
+                Ok(Some(reason)) => finished.push((i, Ok(reason))),
+                Ok(None) => {}
+                Err(e) => finished.push((i, Err(e))),
+            }
+        }
+        // 4. complete (reverse order keeps indices valid)
+        for (i, outcome) in finished.into_iter().rev() {
+            let (sess, reply) = active.remove(i);
+            let mut m = metrics.lock().unwrap();
+            m.completed += 1;
+            m.tokens_generated += sess.generated.len() as u64;
+            m.decode_seconds_total += sess.decode_seconds;
+            m.prefill_seconds_total += sess.prefill_seconds;
+            drop(m);
+            let resp = outcome.map(|reason| GenResponse {
+                request_id: sess.request_id,
+                tokens: sess.generated,
+                finish: reason,
+                prefill_seconds: sess.prefill_seconds,
+                decode_seconds: sess.decode_seconds,
+                queue_seconds: (sess.started_at - sess.enqueued_at).as_secs_f64(),
+            });
+            let _ = reply.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::rwkv::testing::test_model;
+
+    fn coordinator(max_active: usize) -> Coordinator {
+        Coordinator::spawn(test_model(2, 32, 64, 50), CoordinatorConfig { max_active })
+    }
+
+    #[test]
+    fn serves_one_request() {
+        let c = coordinator(4);
+        let r = c.generate(GenRequest::greedy(vec![1, 2], 6)).unwrap();
+        assert_eq!(r.tokens.len(), 6);
+        assert_eq!(r.finish, super::super::FinishReason::MaxTokens);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let c = coordinator(3);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| c.submit(GenRequest::greedy(vec![1 + i as u32], 5)))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.tokens.len(), 5);
+        }
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.tokens_generated, 50);
+    }
+
+    #[test]
+    fn batched_output_matches_solo_output() {
+        // continuous batching must not change any session's tokens
+        let solo = {
+            let c = coordinator(1);
+            c.generate(GenRequest::greedy(vec![5, 6, 7], 8)).unwrap().tokens
+        };
+        let c = coordinator(4);
+        // fill the batch with interference
+        let _noise1 = c.submit(GenRequest::greedy(vec![9], 8));
+        let _noise2 = c.submit(GenRequest::greedy(vec![11, 12], 8));
+        let got = c.generate(GenRequest::greedy(vec![5, 6, 7], 8)).unwrap().tokens;
+        assert_eq!(got, solo);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let c = coordinator(2);
+        let _ = c.generate(GenRequest::greedy(vec![1], 2)).unwrap();
+        c.shutdown();
+    }
+}

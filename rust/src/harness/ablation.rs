@@ -1,0 +1,139 @@
+//! Design-choice ablations beyond the paper (DESIGN.md §6, last row):
+//!
+//! * double buffering on/off (serial transfer-then-compute)
+//! * fine-grained pipelining on/off
+//! * Δ-PoT 9-bit vs fp16 streaming (the bandwidth win of §3)
+//! * ATAC tree-parallelism sweep
+//! * MV-array width (d) sweep
+//! * Δ-PoT (k0,k1) codebook allocation sweep (reconstruction MSE)
+
+use anyhow::Result;
+
+use super::{render_table, write_result};
+use crate::config::{AccelConfig, HFRWKV_CONFIGS, PAPER_SHAPES};
+use crate::sim::{memory, timing, AccelSim};
+use crate::util::json::Json;
+
+pub fn run() -> Result<String> {
+    let mut out = String::new();
+    let mut j = Json::obj();
+
+    // ---- double buffering ----------------------------------------------------
+    let shape = &PAPER_SHAPES[4]; // 7B, streaming regime
+    let cfg = &HFRWKV_CONFIGS[3];
+    let compute = timing::token_compute_cycles(shape, cfg, true);
+    let bytes = shape.stream_bytes_per_token(9.0);
+    let t_cycles = memory::transfer_cycles(cfg, bytes);
+    let n_chunks = (bytes / cfg.chunk_bytes as f64).ceil() as usize;
+    let overlapped = memory::overlap_closed_form(compute, t_cycles, n_chunks);
+    let serial = compute + t_cycles;
+    out.push_str(&format!(
+        "double buffering @7B/U280: overlapped {overlapped} cy vs serial {serial} cy \
+         → {:.2}x speedup\n",
+        serial as f64 / overlapped as f64
+    ));
+    j.set("double_buffer_speedup", serial as f64 / overlapped as f64);
+
+    // ---- pipelining -----------------------------------------------------------
+    // measured on the *resident* configs: streaming configs are
+    // transfer-bound, where compute pipelining is hidden by the overlap
+    let mut rows = Vec::new();
+    for (cfg_idx, shape) in [(0usize, &PAPER_SHAPES[0]), (2, &PAPER_SHAPES[0])] {
+        let mut sim = AccelSim::new(&HFRWKV_CONFIGS[cfg_idx]);
+        let on = sim.evaluate(shape).tokens_per_sec;
+        sim.pipelined = false;
+        let off = sim.evaluate(shape).tokens_per_sec;
+        rows.push(vec![
+            format!("{} @{}", HFRWKV_CONFIGS[cfg_idx].name, shape.name),
+            format!("{on:.1}"),
+            format!("{off:.1}"),
+            format!("{:.2}x", on / off),
+        ]);
+    }
+    out.push_str("\nfine-grained pipelining (compute-bound resident configs):\n");
+    out.push_str(&render_table(&["config", "pipelined", "serial", "gain"], &rows));
+
+    // ---- weight bit-width (the Δ-PoT bandwidth win) -----------------------------
+    let mut rows = Vec::new();
+    for bits in [9.0, 12.0, 16.0] {
+        let mut sim = AccelSim::new(&HFRWKV_CONFIGS[3]);
+        sim.weight_bits = bits;
+        let r = sim.evaluate(&PAPER_SHAPES[4]);
+        rows.push(vec![
+            format!("{bits:.0}-bit"),
+            format!("{:.1}", r.tokens_per_sec),
+            format!("{:.1}%", r.bandwidth_utilization * 100.0),
+        ]);
+    }
+    out.push_str("\nstreamed weight width @7B/U280:\n");
+    out.push_str(&render_table(&["width", "tok/s", "BW util"], &rows));
+
+    // ---- ATAC tree parallelism sweep ------------------------------------------
+    let mut rows = Vec::new();
+    for p in [64usize, 128, 256, 512, 1024] {
+        let c = timing::layernorm_cycles(4096, p, 128);
+        rows.push(vec![p.to_string(), c.to_string()]);
+    }
+    out.push_str("\nLayerNorm latency vs tree parallelism (d=4096):\n");
+    out.push_str(&render_table(&["P", "cycles"], &rows));
+
+    // ---- MV array width sweep ---------------------------------------------------
+    let mut rows = Vec::new();
+    for d in [128usize, 256, 384, 512, 768, 1024, 2048] {
+        let cfg = AccelConfig { pmac_count: d, ..*&HFRWKV_CONFIGS[1] };
+        let cycles = timing::token_compute_cycles(&PAPER_SHAPES[0], &cfg, true);
+        rows.push(vec![d.to_string(), cycles.to_string(),
+            format!("{:.0}", cfg.freq_hz / cycles as f64)]);
+    }
+    out.push_str("\nMV-array width sweep @169M (350 MHz):\n");
+    out.push_str(&render_table(&["d (PMACs)", "cycles/token", "tok/s"], &rows));
+
+    // ---- Δ-PoT allocation sweep --------------------------------------------------
+    let mut rng = crate::Rng64::new(31);
+    let data: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32 * 0.02).collect();
+    let mut rows = Vec::new();
+    for (k0, k1) in [(2u32, 2u32), (3, 3), (4, 4), (5, 3), (3, 5), (6, 2)] {
+        let levels = dpot_levels_k(k0, k1);
+        let cb = crate::quant::Codebook::new(levels.into_iter().map(|x| x as f32).collect());
+        let mse = cb.mse(&data);
+        rows.push(vec![
+            format!("k0={k0},k1={k1} ({} bits)", 1 + k0 + k1),
+            format!("{mse:.3e}"),
+        ]);
+    }
+    out.push_str("\nΔ-PoT (k0,k1) allocation sweep — gaussian reconstruction MSE:\n");
+    out.push_str(&render_table(&["allocation", "MSE"], &rows));
+
+    write_result("ablation", &j)?;
+    Ok(out)
+}
+
+/// Δ-PoT level set for arbitrary (k0, k1) — the "arbitrary allocation"
+/// flexibility the paper claims over APoT (§3.1).
+pub fn dpot_levels_k(k0: u32, k1: u32) -> Vec<f64> {
+    let mut lv = vec![0.0f64];
+    for dq0 in 1..(1u32 << k0) {
+        let p0 = (-(dq0 as f64)).exp2();
+        lv.push(2.0 * p0);
+        for dq1 in 1..(1u32 << k1) {
+            lv.push(2.0 * (p0 + p0 * (-(dq1 as f64)).exp2()));
+        }
+    }
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lv.dedup();
+    let max = *lv.last().unwrap();
+    lv.iter().map(|x| x / max).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn dpot_levels_k_generalizes_default() {
+        let general = super::dpot_levels_k(4, 4);
+        let fixed = crate::quant::dpot_levels();
+        assert_eq!(general.len(), fixed.len());
+        for (a, b) in general.iter().zip(&fixed) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+}

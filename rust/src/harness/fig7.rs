@@ -1,0 +1,132 @@
+//! E3 — Fig 7: throughput (tokens/s) of CPU, three GPUs, HFRWKV and
+//! HFRWKV* across the five RWKV-4 model sizes, plus the paper's quoted
+//! ratio anchors for side-by-side verification.
+
+use anyhow::Result;
+
+use super::{render_table, write_result};
+use crate::baselines::ALL_BASELINES;
+use crate::config::PAPER_SHAPES;
+use crate::sim::AccelSim;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub model: String,
+    pub tokens_per_sec: Vec<(String, f64)>, // platform -> tok/s
+    pub bandwidth_utilization: [f64; 2],    // U50, U280
+}
+
+pub fn run() -> Vec<Fig7Row> {
+    PAPER_SHAPES
+        .iter()
+        .map(|shape| {
+            let mut cols = Vec::new();
+            for b in &ALL_BASELINES {
+                cols.push((b.name.to_string(), b.tokens_per_sec(shape)));
+            }
+            let u50 = AccelSim::deployed_for(false, shape).evaluate(shape);
+            let u280 = AccelSim::deployed_for(true, shape).evaluate(shape);
+            cols.push(("HFRWKV".to_string(), u50.tokens_per_sec));
+            cols.push(("HFRWKV*".to_string(), u280.tokens_per_sec));
+            Fig7Row {
+                model: shape.name.to_string(),
+                tokens_per_sec: cols,
+                bandwidth_utilization: [u50.bandwidth_utilization, u280.bandwidth_utilization],
+            }
+        })
+        .collect()
+}
+
+/// Paper's quoted ratio anchors: (label, ours, paper).
+pub fn anchor_ratios(rows: &[Fig7Row]) -> Vec<(String, f64, f64)> {
+    let get = |row: usize, name: &str| -> f64 {
+        rows[row]
+            .tokens_per_sec
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap()
+    };
+    vec![
+        ("169M HFRWKV/CPU".into(), get(0, "HFRWKV") / get(0, "CPU i7-12650H"), 26.74),
+        ("169M HFRWKV/2080Ti".into(), get(0, "HFRWKV") / get(0, "RTX 2080Ti"), 14.46),
+        ("169M HFRWKV/3090".into(), get(0, "HFRWKV") / get(0, "RTX 3090"), 9.37),
+        ("169M HFRWKV/A100".into(), get(0, "HFRWKV") / get(0, "A100"), 6.51),
+        ("169M HFRWKV*/CPU".into(), get(0, "HFRWKV*") / get(0, "CPU i7-12650H"), 59.8),
+        ("169M HFRWKV*/2080Ti".into(), get(0, "HFRWKV*") / get(0, "RTX 2080Ti"), 32.33),
+        ("169M HFRWKV*/3090".into(), get(0, "HFRWKV*") / get(0, "RTX 3090"), 20.95),
+        ("169M HFRWKV*/A100".into(), get(0, "HFRWKV*") / get(0, "A100"), 14.55),
+        ("7B HFRWKV/3090".into(), get(4, "HFRWKV") / get(4, "RTX 3090"), 0.55),
+        ("7B HFRWKV/A100".into(), get(4, "HFRWKV") / get(4, "A100"), 0.45),
+        ("7B HFRWKV*/A100".into(), get(4, "HFRWKV*") / get(4, "A100"), 1.03),
+    ]
+}
+
+pub fn report(rows: &[Fig7Row], detail: bool) -> Result<String> {
+    let mut headers: Vec<&str> = vec!["model"];
+    for (name, _) in &rows[0].tokens_per_sec {
+        headers.push(Box::leak(name.clone().into_boxed_str()));
+    }
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut row = vec![r.model.clone()];
+            row.extend(r.tokens_per_sec.iter().map(|(_, v)| format!("{v:.1}")));
+            row
+        })
+        .collect();
+    let mut out = String::from("Fig 7 — throughput (tokens/s), batch 1 sustained decode\n");
+    out.push_str(&render_table(&headers, &body));
+
+    out.push_str("\nratio anchors vs paper:\n");
+    let anchors = anchor_ratios(rows);
+    let body: Vec<Vec<String>> = anchors
+        .iter()
+        .map(|(l, ours, paper)| {
+            vec![
+                l.clone(),
+                format!("{ours:.2}"),
+                format!("{paper:.2}"),
+                format!("{:+.0}%", 100.0 * (ours / paper - 1.0)),
+            ]
+        })
+        .collect();
+    out.push_str(&render_table(&["anchor", "ours", "paper", "delta"], &body));
+
+    if detail {
+        out.push_str("\nE6 — HBM bandwidth utilization (streaming configs):\n");
+        for r in rows {
+            out.push_str(&format!(
+                "  {:<12} U50 {:.2}%  U280 {:.2}%   (paper: 99.95% / 99.64%)\n",
+                r.model,
+                r.bandwidth_utilization[0] * 100.0,
+                r.bandwidth_utilization[1] * 100.0
+            ));
+        }
+    }
+
+    let mut j = Json::obj();
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut o = Json::obj();
+            o.set("model", r.model.as_str());
+            for (n, v) in &r.tokens_per_sec {
+                o.set(n, *v);
+            }
+            o
+        })
+        .collect();
+    let anchors_json: Vec<Json> = anchors
+        .iter()
+        .map(|(l, ours, paper)| {
+            let mut o = Json::obj();
+            o.set("anchor", l.as_str()).set("ours", *ours).set("paper", *paper);
+            o
+        })
+        .collect();
+    j.set("rows", Json::Arr(rows_json)).set("anchors", Json::Arr(anchors_json));
+    write_result("fig7", &j)?;
+    Ok(out)
+}

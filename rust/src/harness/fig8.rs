@@ -1,0 +1,111 @@
+//! E4 — Fig 8: energy efficiency (tokens/J) of every platform across the
+//! five model sizes.
+
+use anyhow::Result;
+
+use super::{render_table, write_result};
+use crate::baselines::ALL_BASELINES;
+use crate::config::PAPER_SHAPES;
+use crate::sim::AccelSim;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub model: String,
+    pub tokens_per_joule: Vec<(String, f64)>,
+    pub fpga_power: [f64; 2], // U50, U280 watts
+}
+
+pub fn run() -> Vec<Fig8Row> {
+    PAPER_SHAPES
+        .iter()
+        .map(|shape| {
+            let mut cols = Vec::new();
+            for b in &ALL_BASELINES {
+                cols.push((b.name.to_string(), b.tokens_per_joule(shape)));
+            }
+            let u50 = AccelSim::deployed_for(false, shape).evaluate(shape);
+            let u280 = AccelSim::deployed_for(true, shape).evaluate(shape);
+            cols.push(("HFRWKV".to_string(), u50.tokens_per_joule));
+            cols.push(("HFRWKV*".to_string(), u280.tokens_per_joule));
+            Fig8Row {
+                model: shape.name.to_string(),
+                tokens_per_joule: cols,
+                fpga_power: [u50.power_watts, u280.power_watts],
+            }
+        })
+        .collect()
+}
+
+/// Paper's quoted energy anchors.
+pub fn anchor_ratios(rows: &[Fig8Row]) -> Vec<(String, f64, f64)> {
+    let get = |row: usize, name: &str| -> f64 {
+        rows[row]
+            .tokens_per_joule
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap()
+    };
+    vec![
+        // headline pairings (see EXPERIMENTS.md E5 discussion)
+        ("169M HFRWKV*/CPU".into(), get(0, "HFRWKV*") / get(0, "CPU i7-12650H"), 139.17),
+        ("169M HFRWKV*/2080Ti".into(), get(0, "HFRWKV*") / get(0, "RTX 2080Ti"), 171.36),
+    ]
+}
+
+pub fn report(rows: &[Fig8Row]) -> Result<String> {
+    let mut headers: Vec<&str> = vec!["model"];
+    for (name, _) in &rows[0].tokens_per_joule {
+        headers.push(Box::leak(name.clone().into_boxed_str()));
+    }
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut row = vec![r.model.clone()];
+            row.extend(r.tokens_per_joule.iter().map(|(_, v)| format!("{v:.3}")));
+            row
+        })
+        .collect();
+    let mut out = String::from("Fig 8 — energy efficiency (tokens/J)\n");
+    out.push_str(&render_table(&headers, &body));
+    out.push_str("\nFPGA board power (W): ");
+    for r in rows {
+        out.push_str(&format!(
+            "{}: U50 {:.1}/U280 {:.1}  ",
+            r.model, r.fpga_power[0], r.fpga_power[1]
+        ));
+    }
+    out.push('\n');
+    out.push_str("\nenergy anchors vs paper:\n");
+    let anchors = anchor_ratios(rows);
+    let body: Vec<Vec<String>> = anchors
+        .iter()
+        .map(|(l, ours, paper)| {
+            vec![
+                l.clone(),
+                format!("{ours:.1}"),
+                format!("{paper:.2}"),
+                format!("{:+.0}%", 100.0 * (ours / paper - 1.0)),
+            ]
+        })
+        .collect();
+    out.push_str(&render_table(&["anchor", "ours", "paper", "delta"], &body));
+
+    let mut j = Json::obj();
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut o = Json::obj();
+            o.set("model", r.model.as_str());
+            for (n, v) in &r.tokens_per_joule {
+                o.set(n, *v);
+            }
+            o.set("power_u50", r.fpga_power[0]).set("power_u280", r.fpga_power[1]);
+            o
+        })
+        .collect();
+    j.set("rows", Json::Arr(rows_json));
+    write_result("fig8", &j)?;
+    Ok(out)
+}

@@ -1,0 +1,94 @@
+//! E5 — the abstract's headline claims: best-case throughput and energy
+//! ratios vs CPU and GPU across the full evaluation grid.
+
+use anyhow::Result;
+
+use super::{fig7, fig8, render_table, write_result};
+use crate::util::json::Json;
+
+pub struct Headline {
+    pub label: String,
+    pub ours: f64,
+    pub paper: f64,
+}
+
+pub fn run() -> Vec<Headline> {
+    let t = fig7::run();
+    let e = fig8::run();
+    // Best ratio across the grid, excluding rows where the baseline fell
+    // off its VRAM/PCIe cliff (7B does not fit the 2080Ti; comparing
+    // against a spilled baseline would overstate the win far beyond the
+    // paper's own protocol, which quotes the GPU headline at 169M).
+    let spilled = |row: &fig7::Fig7Row, base: &str| -> bool {
+        base.contains("2080Ti") && row.model.contains("7b")
+    };
+    let best_ratio = |rows: &[fig7::Fig7Row], fpga: &str, base: &str| -> f64 {
+        rows.iter()
+            .filter(|r| !spilled(r, base))
+            .map(|r| {
+                let f = r.tokens_per_sec.iter().find(|(n, _)| n == fpga).unwrap().1;
+                let b = r.tokens_per_sec.iter().find(|(n, _)| n == base).unwrap().1;
+                f / b
+            })
+            .fold(0.0, f64::max)
+    };
+    let best_energy = |rows: &[fig8::Fig8Row], fpga: &str, base: &str| -> f64 {
+        rows.iter()
+            .filter(|r| !(base.contains("2080Ti") && r.model.contains("7b")))
+            .map(|r| {
+                let f = r.tokens_per_joule.iter().find(|(n, _)| n == fpga).unwrap().1;
+                let b = r.tokens_per_joule.iter().find(|(n, _)| n == base).unwrap().1;
+                f / b
+            })
+            .fold(0.0, f64::max)
+    };
+    vec![
+        Headline {
+            label: "throughput vs CPU (63.48x)".into(),
+            ours: best_ratio(&t, "HFRWKV*", "CPU i7-12650H"),
+            paper: 63.48,
+        },
+        Headline {
+            label: "energy vs CPU (139.17x)".into(),
+            ours: best_energy(&e, "HFRWKV*", "CPU i7-12650H"),
+            paper: 139.17,
+        },
+        Headline {
+            label: "throughput vs GPU (32.33x)".into(),
+            ours: best_ratio(&t, "HFRWKV*", "RTX 2080Ti"),
+            paper: 32.33,
+        },
+        Headline {
+            label: "energy vs GPU (171.36x)".into(),
+            ours: best_energy(&e, "HFRWKV*", "RTX 2080Ti"),
+            paper: 171.36,
+        },
+    ]
+}
+
+pub fn report(rows: &[Headline]) -> Result<String> {
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|h| {
+            vec![
+                h.label.clone(),
+                format!("{:.2}", h.ours),
+                format!("{:.2}", h.paper),
+                format!("{:+.0}%", 100.0 * (h.ours / h.paper - 1.0)),
+            ]
+        })
+        .collect();
+    let table = render_table(&["headline", "ours", "paper", "delta"], &body);
+    let mut j = Json::obj();
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|h| {
+            let mut o = Json::obj();
+            o.set("label", h.label.as_str()).set("ours", h.ours).set("paper", h.paper);
+            o
+        })
+        .collect();
+    j.set("headlines", Json::Arr(arr));
+    write_result("headline", &j)?;
+    Ok(table)
+}

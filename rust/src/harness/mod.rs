@@ -1,0 +1,72 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §6 experiment index).
+//!
+//! Every generator both prints the paper-formatted rows and returns a
+//! [`crate::util::json::Json`] blob that the CLI writes under `results/`.
+
+pub mod ablation;
+pub mod fig7;
+pub mod fig8;
+pub mod headline;
+pub mod table1;
+pub mod table2;
+
+use crate::util::json::Json;
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(headers.iter().map(|s| s.to_string()).collect(), &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a result blob under `results/<name>.json`.
+pub fn write_result(name: &str, j: &Json) -> crate::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let path = std::path::PathBuf::from(format!("results/{name}.json"));
+    std::fs::write(&path, j.to_string())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer".into(), "2.25".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name") && lines[0].contains("value"));
+        assert!(lines[3].contains("longer"));
+    }
+}

@@ -1,0 +1,174 @@
+//! E1 — Table 1: perplexity + accuracy of the trained model under every
+//! quantization scheme (FP16 baseline, RTN, PoT, LogQ, APoT, Proposed
+//! Δ-PoT, plus a "Proposed+HW" row running the full bit-accurate
+//! hardware datapath).
+//!
+//! Protocol mirrors §5.2: matrix weights are fake-quantized per scheme at
+//! the W9A9-equivalent budget; evaluation is held-out LAMBADA-style ppl +
+//! last-word accuracy and six multiple-choice suites.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{render_table, write_result};
+use crate::eval::{self, McItem};
+use crate::model::{HwModel, RwkvModel, WeightFile};
+use crate::quant::Scheme;
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub name: String,
+    /// held-out continuous-stream perplexity (low-variance delta signal)
+    pub stream_ppl: f64,
+    pub ppl: f64,
+    pub lambada_acc: f64,
+    pub suite_accs: Vec<(String, f64)>,
+}
+
+impl Table1Row {
+    pub fn average_acc(&self) -> f64 {
+        let mut accs: Vec<f64> = self.suite_accs.iter().map(|(_, a)| *a).collect();
+        accs.push(self.lambada_acc);
+        accs.iter().sum::<f64>() / accs.len() as f64
+    }
+}
+
+fn eval_model<S: eval::Scorer>(
+    name: &str,
+    model: &mut S,
+    stream: &[u32],
+    docs: &[Vec<u32>],
+    suites: &[(String, Vec<McItem>)],
+) -> Table1Row {
+    let stream_ppl = eval::stream_ppl(model, stream);
+    let (ppl, lacc) = eval::eval_lambada(model, docs);
+    let suite_accs = suites
+        .iter()
+        .map(|(n, items)| (n.clone(), eval::eval_suite(model, items)))
+        .collect();
+    Table1Row { name: name.to_string(), stream_ppl, ppl, lambada_acc: lacc, suite_accs }
+}
+
+/// Run the full ablation.  `limit` caps docs/items per suite (None = all).
+pub fn run(artifacts: &Path, limit: Option<usize>, include_hw: bool) -> Result<Vec<Table1Row>> {
+    let manifest = Manifest::load(artifacts)?;
+    let weights = WeightFile::load(&manifest.weights)?;
+    let base = RwkvModel::from_weights(&weights)?;
+    let eval_json = manifest.load_eval_data()?;
+    let (mut docs, mut suites) = eval::parse_eval_data(&eval_json)?;
+    let mut stream = eval::parse_valid_stream(&eval_json).unwrap_or_default();
+    if stream.is_empty() {
+        stream = docs.iter().flatten().copied().collect();
+    }
+    if let Some(n) = limit {
+        docs.truncate(n);
+        stream.truncate((n * 30).max(500));
+        for (_, items) in suites.iter_mut() {
+            items.truncate(n);
+        }
+    }
+
+    let mut rows = Vec::new();
+    for scheme in [Scheme::Fp32, Scheme::Rtn, Scheme::Pot, Scheme::LogQ, Scheme::Apot, Scheme::Dpot] {
+        let mut m = base.clone();
+        m.quantize_matrices(scheme);
+        // §5.2 protocol: quantized rows run W9A9 (9-bit activations too);
+        // the FP16 baseline row runs full precision.
+        if scheme != Scheme::Fp32 {
+            m.act_bits = Some(9);
+        }
+        rows.push(eval_model(scheme.name(), &mut m, &stream, &docs, &suites));
+    }
+    if include_hw {
+        // the full datapath: Δ-PoT matrices + 9-bit activations +
+        // LUT/PWL/DIVU nonlinearities, calibrated on a training slice
+        let calib: Vec<u32> = stream.iter().copied().take(512).collect();
+        let mut hw = HwModel::from_f32(base.clone(), &calib);
+        rows.push(eval_model("Proposed+HW", &mut hw, &stream, &docs, &suites));
+    }
+    Ok(rows)
+}
+
+/// Cross-path check: score the held-out stream through the *compiled
+/// PJRT executable* with FP32 and Δ-PoT-quantized weights swapped into
+/// the device buffers.  Returns (name, stream_ppl) rows; the Δ-PoT row
+/// must match the native-forward Proposed row to f32 tolerance.
+pub fn run_pjrt_crosscheck(artifacts: &Path, stream_cap: usize) -> Result<Vec<(String, f64)>> {
+    use crate::eval::PjrtScorer;
+    use crate::runtime::{RwkvRuntime, Variant};
+
+    let mut runtime = RwkvRuntime::load(artifacts)?;
+    let eval_json = runtime.manifest.load_eval_data()?;
+    let mut stream = eval::parse_valid_stream(&eval_json).unwrap_or_default();
+    stream.truncate(stream_cap);
+
+    let mut rows = Vec::new();
+    for (name, scheme) in [("FP16 (PJRT)", Scheme::Fp32), ("Proposed (PJRT)", Scheme::Dpot)] {
+        let mut weights = WeightFile::load(&runtime.manifest.weights)?;
+        if scheme != Scheme::Fp32 {
+            // quantize matrix tensors in the weight file (same protocol
+            // as RwkvModel::quantize_matrices)
+            for t in weights.tensors.values_mut() {
+                let is_matrix = t.shape.len() == 2;
+                if is_matrix {
+                    crate::quant::fake_quant(&mut t.data, scheme);
+                }
+            }
+        }
+        runtime.swap_weights(&weights)?;
+        let mut scorer = PjrtScorer { runtime: &runtime, variant: Variant::Exact };
+        rows.push((name.to_string(), eval::stream_ppl(&mut scorer, &stream)));
+    }
+    Ok(rows)
+}
+
+/// Print + persist.
+pub fn report(rows: &[Table1Row]) -> Result<String> {
+    let mut headers = vec!["Precision", "stream ppl", "lambada ppl", "lambada acc"];
+    if let Some(r) = rows.first() {
+        for (n, _) in &r.suite_accs {
+            headers.push(Box::leak(n.clone().into_boxed_str()));
+        }
+    }
+    headers.push("Average acc");
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut row = vec![
+                r.name.clone(),
+                format!("{:.3}", r.stream_ppl),
+                format!("{:.2}", r.ppl),
+                format!("{:.2}", r.lambada_acc * 100.0),
+            ];
+            for (_, a) in &r.suite_accs {
+                row.push(format!("{:.1}", a * 100.0));
+            }
+            row.push(format!("{:.2}", r.average_acc() * 100.0));
+            row
+        })
+        .collect();
+    let table = render_table(&headers, &body);
+
+    let mut j = Json::obj();
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str())
+                .set("stream_ppl", r.stream_ppl)
+                .set("ppl", r.ppl)
+                .set("lambada_acc", r.lambada_acc)
+                .set("average_acc", r.average_acc());
+            for (n, a) in &r.suite_accs {
+                o.set(n, *a);
+            }
+            o
+        })
+        .collect();
+    j.set("rows", Json::Arr(rows_json));
+    write_result("table1", &j)?;
+    Ok(table)
+}

@@ -1,0 +1,61 @@
+//! E2 — Table 2: resource utilization of the four deployed configs,
+//! model vs the paper's measured numbers.
+
+use anyhow::Result;
+
+use super::{render_table, write_result};
+use crate::config::HFRWKV_CONFIGS;
+use crate::sim::resources::{paper_table2, resource_usage};
+use crate::util::json::Json;
+
+pub fn run() -> Result<String> {
+    let mut rows = Vec::new();
+    let mut j_rows = Vec::new();
+    for cfg in &HFRWKV_CONFIGS {
+        let got = resource_usage(cfg);
+        let want = paper_table2(cfg.name).unwrap();
+        let total = cfg.platform.resources();
+        let pct = |x: u64, t: u64| format!("{x} ({:.0}%)", 100.0 * x as f64 / t as f64);
+        rows.push(vec![
+            cfg.name.to_string(),
+            cfg.platform.name().to_string(),
+            format!("{:.0}MHz", cfg.freq_hz / 1e6),
+            pct(got.lut, total.lut),
+            pct(got.ff, total.ff),
+            pct(got.dsp, total.dsp),
+            pct(got.bram, total.bram),
+            pct(got.uram, total.uram),
+        ]);
+        rows.push(vec![
+            "  (paper)".to_string(),
+            String::new(),
+            String::new(),
+            want.lut.to_string(),
+            want.ff.to_string(),
+            want.dsp.to_string(),
+            want.bram.to_string(),
+            want.uram.to_string(),
+        ]);
+        let mut o = Json::obj();
+        o.set("config", cfg.name)
+            .set("lut", got.lut)
+            .set("ff", got.ff)
+            .set("dsp", got.dsp)
+            .set("bram", got.bram)
+            .set("uram", got.uram)
+            .set("paper_lut", want.lut)
+            .set("paper_ff", want.ff)
+            .set("paper_dsp", want.dsp)
+            .set("paper_bram", want.bram)
+            .set("paper_uram", want.uram);
+        j_rows.push(o);
+    }
+    let table = render_table(
+        &["Config", "Platform", "Freq", "LUT", "FF", "DSP", "BRAM", "URAM"],
+        &rows,
+    );
+    let mut j = Json::obj();
+    j.set("rows", Json::Arr(j_rows));
+    write_result("table2", &j)?;
+    Ok(table)
+}

@@ -1,0 +1,126 @@
+//! # HFRWKV — fully on-chip RWKV accelerator, reproduced as a library
+//!
+//! Reproduction of *"HFRWKV: A High-Performance Fully On-Chip Hardware
+//! Accelerator for RWKV"* (Liu et al., CS.AR 2026) as a three-layer
+//! Rust + JAX + Pallas system.  This crate is Layer 3: everything that runs
+//! at request time.  Python (Layers 1/2) runs once at build time and
+//! produces `artifacts/` (HLO text + trained weights); see `python/`.
+//!
+//! Module map (see DESIGN.md §5 for the full system inventory):
+//!
+//! * [`config`]      — model shapes (RWKV-4 169M..7B), accelerator configs
+//!   (HFRWKV_0/1 on Alveo U50/U280), platform specs.
+//! * [`quant`]       — the quantizer family: RTN, PoT, LogQ, APoT and the
+//!   paper's Δ-PoT (§3), plus fixed-point helpers and calibration.
+//! * [`arith`]       — bit-accurate models of the FPGA function units:
+//!   LOD, barrel shifter, Δ-PoT multiplier/PMAC (§4.2), unsigned division
+//!   unit (§4.3), exponential–sigmoid unit (§4.4), ATAC adder tree (§4.5).
+//! * [`model`]       — RWKV-4 inference in Rust: weights container, f32
+//!   reference forward, and the hardware-numerics forward built on
+//!   [`arith`] + [`quant`].
+//! * [`runtime`]     — PJRT wrapper: load `artifacts/*.hlo.txt`, compile on
+//!   the CPU client, execute with device-resident weight buffers.
+//! * [`coordinator`] — the serving layer: sessions with recurrent state,
+//!   request queue, batching scheduler, generation engine, metrics.
+//! * [`sim`]         — cycle-accurate accelerator simulator: HBM bridge
+//!   with ping-pong double buffering, MV-array / complex-unit / LayerNorm
+//!   timing, resource model (Table 2), energy model (Fig 8).
+//! * [`baselines`]   — analytic CPU/GPU rooflines (i7-12650H, RTX 2080Ti,
+//!   RTX 3090, A100) for Figs 7–8.
+//! * [`eval`]        — perplexity + the seven synthetic benchmark suites
+//!   standing in for LAMBADA/HellaSwag/ARC/SciQ/PIQA/Winogrande.
+//! * [`harness`]     — regenerates every paper table and figure.
+
+pub mod arith;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod harness;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::{AccelConfig, ModelShape, Platform};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Deterministic xorshift64* PRNG — used everywhere randomness is needed
+/// (workload generation, proptest seeds) so runs are reproducible without
+/// pulling in the `rand` crate.
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_f64() * n as f64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng64::new(7);
+        let mut b = Rng64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng64::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng64::new(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

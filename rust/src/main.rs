@@ -1,0 +1,145 @@
+//! HFRWKV command-line interface — the L3 leader entrypoint.
+//!
+//! Subcommands regenerate each paper artifact or serve the trained model:
+//!
+//! ```text
+//! hfrwkv table1 [--limit N] [--no-hw]     Table 1 quantization ablation
+//! hfrwkv table2                            Table 2 resource utilization
+//! hfrwkv fig7 [--detail]                   Fig 7 throughput grid
+//! hfrwkv fig8                              Fig 8 energy efficiency
+//! hfrwkv headline                          abstract's headline ratios
+//! hfrwkv ablation                          design-choice ablations
+//! hfrwkv serve [--requests N] [--hw]       serve the tiny model via PJRT
+//! hfrwkv all                               everything except serve
+//! ```
+
+use std::path::Path;
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::harness::{ablation, fig7, fig8, headline, table1, table2};
+use hfrwkv::model::Tokenizer;
+use hfrwkv::runtime::{RwkvRuntime, Variant};
+
+/// Tiny argv helper (clap is unavailable offline).
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> (String, Args) {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        (cmd, Args { rest: it.collect() })
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.rest.iter().any(|a| a == name)
+    }
+
+    fn value(&self, name: &str) -> Option<&str> {
+        self.rest
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.rest.get(i + 1))
+            .map(|s| s.as_str())
+    }
+}
+
+fn main() {
+    let (cmd, args) = Args::parse();
+    let result = match cmd.as_str() {
+        "table1" => cmd_table1(&args),
+        "table2" => table2::run().map(|t| println!("{t}")),
+        "fig7" => fig7::report(&fig7::run(), args.flag("--detail")).map(|t| println!("{t}")),
+        "fig8" => fig8::report(&fig8::run()).map(|t| println!("{t}")),
+        "headline" => headline::report(&headline::run()).map(|t| println!("{t}")),
+        "ablation" => ablation::run().map(|t| println!("{t}")),
+        "serve" => cmd_serve(&args),
+        "all" => cmd_all(&args),
+        _ => {
+            eprintln!("usage: hfrwkv <table1|table2|fig7|fig8|headline|ablation|serve|all> [flags]");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn cmd_table1(args: &Args) -> hfrwkv::Result<()> {
+    let limit = args.value("--limit").map(|v| v.parse().unwrap());
+    let include_hw = !args.flag("--no-hw");
+    println!("Table 1 — quantization ablation on the trained tiny model");
+    let rows = table1::run(artifacts_dir(), limit, include_hw)?;
+    println!("{}", table1::report(&rows)?);
+    if args.flag("--pjrt") {
+        println!("cross-path check (same ablation through the compiled PJRT executable):");
+        for (name, ppl) in table1::run_pjrt_crosscheck(artifacts_dir(), 2000)? {
+            println!("  {name:<16} stream ppl {ppl:.3}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> hfrwkv::Result<()> {
+    let n_requests: usize = args.value("--requests").map(|v| v.parse().unwrap()).unwrap_or(8);
+    let variant = if args.flag("--hw") { Variant::HwApprox } else { Variant::Exact };
+
+    println!("loading artifacts + compiling PJRT executables ...");
+    let manifest = hfrwkv::runtime::Manifest::load(artifacts_dir())?;
+    let eval_data = manifest.load_eval_data()?;
+    let tokenizer = Tokenizer::from_json(eval_data.req("vocab")?)?;
+
+    // the PJRT runtime is constructed inside the worker thread (not Send)
+    let coord = Coordinator::spawn_with(
+        || RwkvRuntime::load(Path::new("artifacts")).expect("runtime load"),
+        CoordinatorConfig { max_active: 4 },
+    );
+    let prompts = [
+        "alice has a red hat . the hat of alice is",
+        "three plus four is",
+        "bob likes carol . so carol",
+        "dave has a blue cup . the cup of dave is",
+    ];
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            // BOS-prefix: documents are BOS-led in the training corpus
+            let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
+            prompt.extend(tokenizer.encode(prompts[i % prompts.len()]).unwrap());
+            let mut req = GenRequest::greedy(prompt, 16);
+            req.variant = variant;
+            coord.submit(req)
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap()?;
+        println!(
+            "[{i}] {:>6.1} tok/s decode, {:.1} ms prefill: {}",
+            r.decode_tokens_per_sec(),
+            r.prefill_seconds * 1e3,
+            tokenizer.decode(&r.tokens)
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics.lock().unwrap().clone();
+    println!("\n{}", m.report());
+    println!("wall time {wall:.2}s → {:.1} tok/s aggregate",
+             m.tokens_generated as f64 / wall);
+    Ok(())
+}
+
+fn cmd_all(args: &Args) -> hfrwkv::Result<()> {
+    println!("== Table 2 ==\n{}", table2::run()?);
+    println!("== Fig 7 ==\n{}", fig7::report(&fig7::run(), true)?);
+    println!("== Fig 8 ==\n{}", fig8::report(&fig8::run())?);
+    println!("== Headlines ==\n{}", headline::report(&headline::run())?);
+    println!("== Ablations ==\n{}", ablation::run()?);
+    cmd_table1(args)?;
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! RWKV-4 inference in Rust: weights container (HFWT reader), the f32
+//! reference forward pass, the hardware-numerics forward pass built on
+//! [`crate::arith`] + [`crate::quant`], tokenizer and sampler.
+//!
+//! Two Rust forwards exist alongside the PJRT path:
+//!
+//! * [`rwkv::RwkvModel`] — plain f32, bit-for-bit the same math as the
+//!   JAX `exact` variant (validated against the HLO executable in
+//!   `rust/tests/golden_parity.rs`).  The Table 1 ablation runs here
+//!   (fake-quantized weights, f32 activations).
+//! * [`rwkv_hw::HwModel`] — the paper's datapath: Δ-PoT matrices, 9-bit
+//!   activations, EXP-LUT/PWL-sigmoid/DIVU nonlinearities, ATAC-identity
+//!   LayerNorm.  This measures the full W9A9 + approximation stack.
+
+pub mod rwkv;
+pub mod rwkv_hw;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use rwkv::{RwkvModel, State};
+pub use rwkv_hw::HwModel;
+pub use sampler::Sampler;
+pub use tokenizer::Tokenizer;
+pub use weights::WeightFile;
+
+/// Parameter count of the tiny served model — must equal
+/// `python/compile/config.py::TINY.n_params` (cross-checked in tests).
+pub fn tiny_expected_params() -> u64 {
+    890_880
+}

@@ -1,0 +1,521 @@
+//! RWKV-4 f32 forward pass — the Rust twin of the JAX `exact` variant
+//! (`python/compile/model.py::step`).  Validated against the AOT HLO
+//! executable in `rust/tests/golden_parity.rs`.
+
+use anyhow::{bail, Result};
+
+use super::weights::WeightFile;
+use crate::quant::Scheme;
+
+pub const PP_INIT: f32 = -1e30;
+
+/// Recurrent state: per layer, 5 rows of d (att_x_prev, ffn_x_prev, aa,
+/// bb, pp), flattened `[n_layer * 5 * d]` in the artifact layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct State {
+    pub data: Vec<f32>,
+    pub n_layer: usize,
+    pub d: usize,
+}
+
+impl State {
+    pub fn new(n_layer: usize, d: usize) -> State {
+        let mut data = vec![0f32; n_layer * 5 * d];
+        for l in 0..n_layer {
+            for i in 0..d {
+                data[(l * 5 + 4) * d + i] = PP_INIT;
+            }
+        }
+        State { data, n_layer, d }
+    }
+
+    #[inline]
+    pub fn row(&self, layer: usize, r: usize) -> &[f32] {
+        let o = (layer * 5 + r) * self.d;
+        &self.data[o..o + self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, layer: usize, r: usize) -> &mut [f32] {
+        let o = (layer * 5 + r) * self.d;
+        &mut self.data[o..o + self.d]
+    }
+}
+
+/// Per-layer parameters (slices into owned storage).
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1_w: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_w: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub att_decay: Vec<f32>, // raw; effective w = -exp(raw)
+    pub att_first: Vec<f32>,
+    pub att_mix_k: Vec<f32>,
+    pub att_mix_v: Vec<f32>,
+    pub att_mix_r: Vec<f32>,
+    pub att_key: Vec<f32>,        // [d, d]
+    pub att_value: Vec<f32>,      // [d, d]
+    pub att_receptance: Vec<f32>, // [d, d]
+    pub att_output: Vec<f32>,     // [d, d]
+    pub ffn_mix_k: Vec<f32>,
+    pub ffn_mix_r: Vec<f32>,
+    pub ffn_key: Vec<f32>,        // [f, d]
+    pub ffn_receptance: Vec<f32>, // [d, d]
+    pub ffn_value: Vec<f32>,      // [d, f]
+}
+
+/// The full model.
+#[derive(Clone, Debug)]
+pub struct RwkvModel {
+    pub n_layer: usize,
+    pub d: usize,
+    pub f: usize,
+    pub vocab: usize,
+    pub emb: Vec<f32>, // [v, d]
+    pub ln0_w: Vec<f32>,
+    pub ln0_b: Vec<f32>,
+    pub blocks: Vec<Block>,
+    pub ln_out_w: Vec<f32>,
+    pub ln_out_b: Vec<f32>,
+    pub head: Vec<f32>, // [v, d]
+    /// When set, every LayerNorm/projection output is quantized to this
+    /// many bits at a dynamic per-vector scale — the "A9" half of the
+    /// paper's W9A9 ablation protocol (§5.2).  None = f32 activations.
+    pub act_bits: Option<u32>,
+}
+
+/// Quantize a vector in place at `bits` with dynamic max-abs scale.
+#[inline]
+pub fn act_quant(xs: &mut [f32], bits: Option<u32>) {
+    let Some(bits) = bits else { return };
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let s = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if s == 0.0 {
+        return;
+    }
+    for x in xs.iter_mut() {
+        *x = (*x / s * qmax).round() * s / qmax;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitive ops
+// ---------------------------------------------------------------------------
+
+pub fn layernorm(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+    let d = x.len() as f32;
+    let mu = x.iter().sum::<f32>() / d;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mu) * inv * w[i] + b[i];
+    }
+}
+
+/// w[m,l] @ x[l] -> out[m]
+///
+/// Perf note (§Perf L3-1): the dot product runs 8 independent
+/// accumulators so LLVM can vectorize — serial `acc += a*b` is an
+/// ordered float reduction the compiler must not reassociate, which
+/// capped the original version at ~1.7 GMAC/s.
+pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
+    let l = x.len();
+    debug_assert_eq!(w.len(), out.len() * l);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &w[r * l..(r + 1) * l];
+        let mut acc = [0f32; 8];
+        let chunks = l / 8;
+        for c in 0..chunks {
+            let rb = &row[c * 8..c * 8 + 8];
+            let xb = &x[c * 8..c * 8 + 8];
+            for k in 0..8 {
+                acc[k] += rb[k] * xb[k];
+            }
+        }
+        let mut tail = 0f32;
+        for k in chunks * 8..l {
+            tail += row[k] * x[k];
+        }
+        *o = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]) + tail;
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl RwkvModel {
+    /// Assemble from a loaded weight file (artifact naming convention).
+    pub fn from_weights(wf: &WeightFile) -> Result<RwkvModel> {
+        let meta = &wf.meta;
+        let (n_layer, d, f, vocab) = match (
+            meta.get("n_layer"),
+            meta.get("d_model"),
+            meta.get("d_ffn"),
+            meta.get("vocab"),
+        ) {
+            (Some(n), Some(d), Some(f), Some(v)) => (
+                n.as_usize()?,
+                d.as_usize()?,
+                f.as_usize()?,
+                v.as_usize()?,
+            ),
+            _ => bail!("weight file missing model meta"),
+        };
+        let get = |name: &str| -> Result<Vec<f32>> { Ok(wf.get(name)?.data.clone()) };
+        let mut blocks = Vec::with_capacity(n_layer);
+        for i in 0..n_layer {
+            let b = |suffix: &str| format!("blocks.{i}.{suffix}");
+            blocks.push(Block {
+                ln1_w: get(&b("ln1.weight"))?,
+                ln1_b: get(&b("ln1.bias"))?,
+                ln2_w: get(&b("ln2.weight"))?,
+                ln2_b: get(&b("ln2.bias"))?,
+                att_decay: get(&b("att.time_decay"))?,
+                att_first: get(&b("att.time_first"))?,
+                att_mix_k: get(&b("att.time_mix_k"))?,
+                att_mix_v: get(&b("att.time_mix_v"))?,
+                att_mix_r: get(&b("att.time_mix_r"))?,
+                att_key: get(&b("att.key"))?,
+                att_value: get(&b("att.value"))?,
+                att_receptance: get(&b("att.receptance"))?,
+                att_output: get(&b("att.output"))?,
+                ffn_mix_k: get(&b("ffn.time_mix_k"))?,
+                ffn_mix_r: get(&b("ffn.time_mix_r"))?,
+                ffn_key: get(&b("ffn.key"))?,
+                ffn_receptance: get(&b("ffn.receptance"))?,
+                ffn_value: get(&b("ffn.value"))?,
+            });
+        }
+        Ok(RwkvModel {
+            n_layer,
+            d,
+            f,
+            vocab,
+            emb: get("emb")?,
+            ln0_w: get("ln0.weight")?,
+            ln0_b: get("ln0.bias")?,
+            blocks,
+            ln_out_w: get("ln_out.weight")?,
+            ln_out_b: get("ln_out.bias")?,
+            head: get("head")?,
+            act_bits: None,
+        })
+    }
+
+    pub fn new_state(&self) -> State {
+        State::new(self.n_layer, self.d)
+    }
+
+    /// Fake-quantize every *matrix* weight under `scheme` (the Table 1
+    /// protocol: vector/additive weights stay 9-bit-uniform ≈ lossless at
+    /// f32, matching §3.2's mixed-precision split).
+    pub fn quantize_matrices(&mut self, scheme: Scheme) {
+        use crate::quant::fake_quant;
+        fake_quant(&mut self.emb, scheme);
+        fake_quant(&mut self.head, scheme);
+        for b in &mut self.blocks {
+            fake_quant(&mut b.att_key, scheme);
+            fake_quant(&mut b.att_value, scheme);
+            fake_quant(&mut b.att_receptance, scheme);
+            fake_quant(&mut b.att_output, scheme);
+            fake_quant(&mut b.ffn_key, scheme);
+            fake_quant(&mut b.ffn_receptance, scheme);
+            fake_quant(&mut b.ffn_value, scheme);
+        }
+    }
+
+    /// One autoregressive step: returns logits, updates `state` in place.
+    ///
+    /// Perf note (§Perf L3-2): scratch buffers are reused via a
+    /// thread-local (10 allocations/step otherwise — ~8% of a step on
+    /// the tiny model).
+    pub fn step(&self, state: &mut State, token: u32) -> Vec<f32> {
+        SCRATCH.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            let buf = match slot.as_mut() {
+                Some(b) if b.fits(self.d, self.f) => slot.as_mut().unwrap(),
+                _ => {
+                    *slot = Some(Buffers::new(self.d, self.f));
+                    slot.as_mut().unwrap()
+                }
+            };
+            self.step_buf(state, token, buf)
+        })
+    }
+
+    /// Step with caller-provided scratch (allocation-free hot path).
+    pub fn step_buf(&self, state: &mut State, token: u32, buf: &mut Buffers) -> Vec<f32> {
+        let d = self.d;
+        let mut x = vec![0f32; d];
+        // embedding + ln0
+        let emb_row = &self.emb[token as usize * d..(token as usize + 1) * d];
+        layernorm(emb_row, &self.ln0_w, &self.ln0_b, &mut x);
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            self.time_mixing(blk, l, &x, state, buf);
+            for i in 0..d {
+                x[i] += buf.dx[i];
+            }
+            self.channel_mixing(blk, l, &x, state, buf);
+            for i in 0..d {
+                x[i] += buf.dx[i];
+            }
+        }
+
+        let mut xn = vec![0f32; d];
+        layernorm(&x, &self.ln_out_w, &self.ln_out_b, &mut xn);
+        let mut logits = vec![0f32; self.vocab];
+        matvec(&self.head, &xn, &mut logits);
+        logits
+    }
+
+    fn time_mixing(&self, blk: &Block, l: usize, x: &[f32], state: &mut State, buf: &mut Buffers) {
+        let d = self.d;
+        layernorm(x, &blk.ln1_w, &blk.ln1_b, &mut buf.xn);
+        act_quant(&mut buf.xn, self.act_bits);
+        {
+            let xp = state.row(l, 0);
+            for i in 0..d {
+                buf.xk[i] = buf.xn[i] * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
+                buf.xv[i] = buf.xn[i] * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
+                buf.xr[i] = buf.xn[i] * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
+            }
+        }
+        state.row_mut(l, 0).copy_from_slice(&buf.xn);
+        matvec(&blk.att_receptance, &buf.xr, &mut buf.r);
+        matvec(&blk.att_key, &buf.xk, &mut buf.k);
+        matvec(&blk.att_value, &buf.xv, &mut buf.v);
+        act_quant(&mut buf.k, self.act_bits);
+        act_quant(&mut buf.v, self.act_bits);
+
+        for i in 0..d {
+            let r = sigmoid(buf.r[i]);
+            let (k, v) = (buf.k[i], buf.v[i]);
+            let aa = state.row(l, 2)[i];
+            let bb = state.row(l, 3)[i];
+            let pp = state.row(l, 4)[i];
+            let w_eff = -blk.att_decay[i].exp();
+            let u = blk.att_first[i];
+
+            // output branch
+            let ww = u + k;
+            let qq = pp.max(ww);
+            let e1 = (pp - qq).exp();
+            let e2 = (ww - qq).exp();
+            let wkv = (e1 * aa + e2 * v) / (e1 * bb + e2);
+
+            // state branch
+            let ww = pp + w_eff;
+            let qq = ww.max(k);
+            let e1 = (ww - qq).exp();
+            let e2 = (k - qq).exp();
+            state.row_mut(l, 2)[i] = e1 * aa + e2 * v;
+            state.row_mut(l, 3)[i] = e1 * bb + e2;
+            state.row_mut(l, 4)[i] = qq;
+
+            buf.gated_d[i] = r * wkv;
+        }
+        act_quant(&mut buf.gated_d, self.act_bits);
+        matvec(&blk.att_output, &buf.gated_d, &mut buf.dx);
+    }
+
+    fn channel_mixing(&self, blk: &Block, l: usize, x: &[f32], state: &mut State, buf: &mut Buffers) {
+        let d = self.d;
+        layernorm(x, &blk.ln2_w, &blk.ln2_b, &mut buf.xn);
+        act_quant(&mut buf.xn, self.act_bits);
+        {
+            let xp = state.row(l, 1);
+            for i in 0..d {
+                buf.xk[i] = buf.xn[i] * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
+                buf.xr[i] = buf.xn[i] * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
+            }
+        }
+        state.row_mut(l, 1).copy_from_slice(&buf.xn);
+        matvec(&blk.ffn_receptance, &buf.xr, &mut buf.r);
+        matvec(&blk.ffn_key, &buf.xk, &mut buf.kf);
+        for v in buf.kf.iter_mut() {
+            let relu = v.max(0.0);
+            *v = relu * relu;
+        }
+        act_quant(&mut buf.kf, self.act_bits);
+        matvec(&blk.ffn_value, &buf.kf, &mut buf.dx);
+        for i in 0..d {
+            buf.dx[i] *= sigmoid(buf.r[i]);
+        }
+    }
+
+    /// Log-softmax of logits (for scoring).
+    pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+        let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let lse = logits.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        logits.iter().map(|&v| v - lse).collect()
+    }
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<Option<Buffers>> = const { std::cell::RefCell::new(None) };
+}
+
+/// Scratch buffers reused across steps (perf: no per-step allocation).
+pub struct Buffers {
+    xn: Vec<f32>,
+    xk: Vec<f32>,
+    xv: Vec<f32>,
+    xr: Vec<f32>,
+    r: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    kf: Vec<f32>,
+    gated_d: Vec<f32>,
+    dx: Vec<f32>,
+}
+
+impl Buffers {
+    pub fn new(d: usize, f: usize) -> Buffers {
+        Buffers {
+            xn: vec![0.0; d],
+            xk: vec![0.0; d],
+            xv: vec![0.0; d],
+            xr: vec![0.0; d],
+            r: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            kf: vec![0.0; f],
+            gated_d: vec![0.0; d],
+            dx: vec![0.0; d],
+        }
+    }
+
+    fn fits(&self, d: usize, f: usize) -> bool {
+        self.xn.len() == d && self.kf.len() == f
+    }
+}
+
+/// Deterministic random tiny models for tests and benches (no artifacts
+/// required).  Kept out of `#[cfg(test)]` so integration tests and bench
+/// binaries can use it.
+pub mod testing {
+    use super::*;
+
+    /// A deterministic random tiny model.
+    pub fn test_model(n_layer: usize, d: usize, f: usize, vocab: usize) -> RwkvModel {
+        let mut rng = crate::Rng64::new(42);
+        let mut randv = |n: usize, s: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * s).collect()
+        };
+        let blocks = (0..n_layer)
+            .map(|_| Block {
+                ln1_w: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                ln2_w: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                att_decay: (0..d).map(|i| -5.0 + 4.0 * i as f32 / d as f32).collect(),
+                att_first: vec![0.3f32.ln(); d],
+                att_mix_k: vec![0.5; d],
+                att_mix_v: vec![0.5; d],
+                att_mix_r: vec![0.5; d],
+                att_key: randv(d * d, 0.08),
+                att_value: randv(d * d, 0.08),
+                att_receptance: randv(d * d, 0.08),
+                att_output: randv(d * d, 0.04),
+                ffn_mix_k: vec![0.5; d],
+                ffn_mix_r: vec![0.5; d],
+                ffn_key: randv(f * d, 0.08),
+                ffn_receptance: randv(d * d, 0.08),
+                ffn_value: randv(d * f, 0.03),
+            })
+            .collect();
+        RwkvModel {
+            n_layer,
+            d,
+            f,
+            vocab,
+            emb: randv(vocab * d, 0.02),
+            ln0_w: vec![1.0; d],
+            ln0_b: vec![0.0; d],
+            blocks,
+            ln_out_w: vec![1.0; d],
+            ln_out_b: vec![0.0; d],
+            head: randv(vocab * d, 0.02),
+            act_bits: None,
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    pub use super::testing::test_model;
+
+    #[test]
+    fn step_produces_finite_logits() {
+        let m = test_model(2, 32, 64, 50);
+        let mut s = m.new_state();
+        for t in 0..20 {
+            let logits = m.step(&mut s, t % 50);
+            assert_eq!(logits.len(), 50);
+            assert!(logits.iter().all(|v| v.is_finite()), "t={t}");
+        }
+    }
+
+    #[test]
+    fn state_distinguishes_histories() {
+        let m = test_model(2, 32, 64, 50);
+        let mut s1 = m.new_state();
+        let mut s2 = m.new_state();
+        m.step(&mut s1, 3);
+        m.step(&mut s2, 7);
+        let l1 = m.step(&mut s1, 5);
+        let l2 = m.step(&mut s2, 5);
+        let diff: f32 = l1.iter().zip(&l2).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(diff > 1e-5);
+    }
+
+    #[test]
+    fn deterministic_given_state() {
+        let m = test_model(2, 32, 64, 50);
+        let mut s1 = m.new_state();
+        let mut s2 = m.new_state();
+        let l1 = m.step(&mut s1, 9);
+        let l2 = m.step(&mut s2, 9);
+        assert_eq!(l1, l2);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = RwkvModel::log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = lp.iter().map(|v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quantize_matrices_changes_weights_not_vectors() {
+        let mut m = test_model(1, 16, 32, 20);
+        let decay = m.blocks[0].att_decay.clone();
+        let key_before = m.blocks[0].att_key.clone();
+        m.quantize_matrices(Scheme::Pot);
+        assert_eq!(m.blocks[0].att_decay, decay);
+        assert_ne!(m.blocks[0].att_key, key_before);
+    }
+
+    #[test]
+    fn long_rollout_stays_finite() {
+        let m = test_model(2, 32, 64, 50);
+        let mut s = m.new_state();
+        let mut tok = 1u32;
+        for _ in 0..500 {
+            let logits = m.step(&mut s, tok);
+            tok = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u32;
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+}

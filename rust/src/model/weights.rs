@@ -1,0 +1,181 @@
+//! HFWT tensor-container reader (writer lives in
+//! `python/compile/serialize.py`; keep the two in sync).
+//!
+//! Layout: magic `HFWT1\n` | u64-LE header length | JSON header | data.
+//! Header: `{"tensors":[{"name","dtype","shape","offset","nbytes"}],
+//! "meta":{...}}`, offsets relative to the data section, 64-byte aligned.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8] = b"HFWT1\n";
+
+/// One named tensor (f32-converted view + original dtype/shape).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => bail!("{}: expected 2-D, got {s:?}", self.name),
+        }
+    }
+}
+
+/// A loaded weight file.
+#[derive(Debug)]
+pub struct WeightFile {
+    pub tensors: HashMap<String, Tensor>,
+    pub meta: Json,
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if raw.len() < MAGIC.len() + 8 || &raw[..MAGIC.len()] != MAGIC {
+            bail!("{}: not an HFWT file", path.display());
+        }
+        let hlen = u64::from_le_bytes(raw[6..14].try_into().unwrap()) as usize;
+        let header_end = 14 + hlen;
+        let header = json::parse(std::str::from_utf8(&raw[14..header_end])?)?;
+        let data = &raw[header_end..];
+
+        let mut tensors = HashMap::new();
+        for e in header.req("tensors")?.as_arr()? {
+            let name = e.req("name")?.as_str()?.to_string();
+            let dtype = e.req("dtype")?.as_str()?.to_string();
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            let offset = e.req("offset")?.as_usize()?;
+            let nbytes = e.req("nbytes")?.as_usize()?;
+            let bytes = data
+                .get(offset..offset + nbytes)
+                .ok_or_else(|| anyhow!("{name}: data out of range"))?;
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let values = match dtype.as_str() {
+                "float32" => bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect::<Vec<f32>>(),
+                "int8" => bytes.iter().map(|&b| b as i8 as f32).collect(),
+                "int32" => bytes
+                    .chunks_exact(4)
+                    .map(|b| i32::from_le_bytes(b.try_into().unwrap()) as f32)
+                    .collect(),
+                d => bail!("{name}: unsupported dtype {d}"),
+            };
+            if values.len() != n && !shape.is_empty() {
+                bail!("{name}: {} values for shape {shape:?}", values.len());
+            }
+            tensors.insert(name.clone(), Tensor { name, dtype, shape, data: values });
+        }
+        let meta = header.get("meta").cloned().unwrap_or(Json::obj());
+        Ok(WeightFile { tensors, meta })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.tensors.values().map(|t| t.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Write a minimal HFWT file (mirrors the python writer).
+    pub fn write_test_file(path: &Path, tensors: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut entries = Vec::new();
+        let mut blob: Vec<u8> = Vec::new();
+        for (name, shape, data) in tensors {
+            let offset = blob.len();
+            for v in data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+            let mut e = Json::obj();
+            e.set("name", *name)
+                .set("dtype", "float32")
+                .set("shape", shape.iter().map(|&s| s as u64).collect::<Vec<u64>>())
+                .set("offset", offset)
+                .set("nbytes", data.len() * 4);
+            entries.push(e);
+            while blob.len() % 64 != 0 {
+                blob.push(0);
+            }
+        }
+        let mut header = Json::obj();
+        header.set("tensors", Json::Arr(entries)).set("meta", Json::obj());
+        let hs = header.to_string();
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(hs.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(hs.as_bytes()).unwrap();
+        f.write_all(&blob).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_via_test_writer() {
+        let dir = std::env::temp_dir().join("hfwt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_test_file(
+            &p,
+            &[
+                ("a", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                ("b", vec![2], vec![-1.5, 0.25]),
+            ],
+        );
+        let wf = WeightFile::load(&p).unwrap();
+        assert_eq!(wf.get("a").unwrap().dims2().unwrap(), (2, 3));
+        assert_eq!(wf.get("b").unwrap().data, vec![-1.5, 0.25]);
+        assert_eq!(wf.total_params(), 8);
+        assert!(wf.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("hfwt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC........").unwrap();
+        assert!(WeightFile::load(&p).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let p = Path::new("artifacts/tiny.weights.bin");
+        if !p.exists() {
+            return; // artifact-gated; integration tests cover this
+        }
+        let wf = WeightFile::load(p).unwrap();
+        assert_eq!(wf.total_params(), crate::model::tiny_expected_params());
+        assert_eq!(wf.get("emb").unwrap().dims2().unwrap(), (128, 128));
+    }
+}

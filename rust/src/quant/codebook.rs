@@ -1,0 +1,119 @@
+//! Nearest-level codebook lookup (binary search over sorted levels).
+//!
+//! This is the hot inner loop of weight quantization: `nearest` is called
+//! once per weight element.  The perf pass replaced a linear scan with
+//! `partition_point` binary search (see EXPERIMENTS.md §Perf).
+
+use super::schemes::{self, Scheme};
+
+/// A sorted set of nonnegative magnitude levels with max = 1.0.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    levels: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mut levels: Vec<f32>) -> Self {
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        assert!(!levels.is_empty());
+        Self { levels }
+    }
+
+    /// Build the codebook for a scheme (panics on Fp32/LogQ which have no
+    /// nearest-level semantics — LogQ rounds in the log domain).
+    pub fn for_scheme(scheme: Scheme) -> Self {
+        let lv = match scheme {
+            Scheme::Rtn => schemes::rtn_levels(),
+            Scheme::Pot => schemes::pot_levels(),
+            Scheme::Apot => schemes::apot_levels(),
+            Scheme::Dpot => schemes::dpot_levels(),
+            Scheme::Fp32 | Scheme::LogQ => {
+                panic!("no codebook for {scheme:?}")
+            }
+        };
+        Self::new(lv.into_iter().map(|x| x as f32).collect())
+    }
+
+    pub fn levels(&self) -> &[f32] {
+        &self.levels
+    }
+
+    /// Nearest level to `y` (expects 0 <= y <= 1; values above 1 clamp to
+    /// the top level).  Ties round toward the lower level, matching
+    /// numpy's `searchsorted`-based python mirror.
+    #[inline]
+    pub fn nearest(&self, y: f32) -> f32 {
+        let lv = &self.levels;
+        let idx = lv.partition_point(|&l| l < y).clamp(1, lv.len() - 1);
+        let (lo, hi) = (lv[idx - 1], lv[idx]);
+        if y - lo < hi - y {
+            lo
+        } else {
+            hi
+        }
+    }
+
+    /// Mean-squared reconstruction error of this codebook on `data`
+    /// (normalized by per-slice max-abs) — used by ablation benches.
+    pub fn mse(&self, data: &[f32]) -> f64 {
+        let scale = data.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if scale == 0.0 {
+            return 0.0;
+        }
+        data.iter()
+            .map(|&x| {
+                let q = self.nearest(x.abs() / scale) * scale * x.signum();
+                ((x - q) as f64).powi(2)
+            })
+            .sum::<f64>()
+            / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_is_truly_nearest() {
+        let cb = Codebook::for_scheme(Scheme::Dpot);
+        let mut rng = crate::Rng64::new(5);
+        for _ in 0..2000 {
+            let y = rng.next_f64() as f32;
+            let got = cb.nearest(y);
+            let brute = cb
+                .levels()
+                .iter()
+                .copied()
+                .min_by(|a, b| {
+                    (a - y).abs().partial_cmp(&(b - y).abs()).unwrap()
+                })
+                .unwrap();
+            assert!((got - y).abs() <= (brute - y).abs() + 1e-7, "y={y}");
+        }
+    }
+
+    #[test]
+    fn nearest_clamps_out_of_range() {
+        let cb = Codebook::for_scheme(Scheme::Rtn);
+        assert_eq!(cb.nearest(2.0), 1.0);
+        assert_eq!(cb.nearest(0.0), 0.0);
+    }
+
+    #[test]
+    fn mse_zero_on_exact_levels() {
+        let cb = Codebook::new(vec![0.0, 0.5, 1.0]);
+        let data = [0.0f32, 0.5, 1.0, -0.5, -1.0];
+        assert!(cb.mse(&data) < 1e-12);
+    }
+
+    #[test]
+    fn dpot_lower_mse_than_pot_on_gaussian() {
+        let mut rng = crate::Rng64::new(9);
+        let data: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32 * 0.02).collect();
+        let dpot = Codebook::for_scheme(Scheme::Dpot).mse(&data);
+        let pot = Codebook::for_scheme(Scheme::Pot).mse(&data);
+        assert!(dpot < pot * 0.25, "dpot {dpot} pot {pot}");
+    }
+}

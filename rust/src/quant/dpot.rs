@@ -1,0 +1,182 @@
+//! Δ-PoT code-level encoding (§3.1, eqs 5–6): the storage format the
+//! accelerator actually keeps in URAM and feeds to the PMAC shift-add
+//! datapath — not just the fake-quant value grid.
+//!
+//! Each weight is `sign · 2γ · (p0 + p1)` with `p0 = 2^-dq0` (0 if dq0=0)
+//! and `p1 = p0 · 2^-dq1` (0 if dq1=0).  With k0 = k1 = 4 the stored code
+//! is 9 bits: 1 sign + 4 + 4 — the differential encoding (`dq1` is the
+//! *difference* q1 - q0) is what widens the representable exponent range
+//! at fixed bits.
+
+pub const DPOT_K0: u32 = 4;
+pub const DPOT_K1: u32 = 4;
+
+/// One encoded weight: (sign ∈ {-1,0,1}, dq0 ∈ 0..16, dq1 ∈ 0..16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DpotCode {
+    pub sign: i8,
+    pub dq0: u8,
+    pub dq1: u8,
+}
+
+impl DpotCode {
+    pub const ZERO: DpotCode = DpotCode { sign: 0, dq0: 0, dq1: 0 };
+
+    /// Decode to the magnitude level in [0, 1.5] (before γ scaling):
+    /// 2·(p0 + p1).
+    #[inline]
+    pub fn magnitude(self) -> f64 {
+        if self.dq0 == 0 {
+            return 0.0;
+        }
+        let p0 = (-(self.dq0 as f64)).exp2();
+        let p1 = if self.dq1 == 0 { 0.0 } else { p0 * (-(self.dq1 as f64)).exp2() };
+        2.0 * (p0 + p1)
+    }
+
+    /// Decode to a signed value given the tensor scale γ.
+    #[inline]
+    pub fn value(self, gamma: f32) -> f32 {
+        self.sign as f32 * self.magnitude() as f32 * gamma
+    }
+
+    /// Pack into the 9-bit storage word (sign | dq0 | dq1).
+    pub fn pack(self) -> u16 {
+        let s = if self.sign < 0 { 1u16 } else { 0 };
+        (s << 8) | ((self.dq0 as u16) << 4) | self.dq1 as u16
+    }
+
+    pub fn unpack(w: u16) -> Self {
+        let dq0 = ((w >> 4) & 0xF) as u8;
+        let dq1 = (w & 0xF) as u8;
+        let sign = if dq0 == 0 { 0 } else if (w >> 8) & 1 == 1 { -1 } else { 1 };
+        DpotCode { sign, dq0, dq1 }
+    }
+}
+
+/// Sorted (magnitude, code) table for nearest-code encoding.
+fn code_table() -> Vec<(f64, DpotCode)> {
+    let mut t = vec![(0.0, DpotCode::ZERO)];
+    for dq0 in 1..16u8 {
+        for dq1 in 0..16u8 {
+            let c = DpotCode { sign: 1, dq0, dq1 };
+            t.push((c.magnitude(), c));
+        }
+    }
+    t.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    t.dedup_by(|a, b| a.0 == b.0);
+    t
+}
+
+/// A whole tensor encoded in Δ-PoT: code planes + per-tensor γ.
+///
+/// γ is chosen so max|w| maps to the largest representable magnitude
+/// (2·(2^-1 + 2^-2) = 1.5), exactly like the fake-quant path.
+#[derive(Clone, Debug)]
+pub struct DpotTensor {
+    pub codes: Vec<DpotCode>,
+    pub gamma: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl DpotTensor {
+    /// Encode a row-major `rows x cols` matrix.
+    pub fn encode(w: &[f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(w.len(), rows * cols);
+        let table = code_table();
+        let max = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let top = table.last().unwrap().0 as f32; // 1.5
+        let gamma = if max == 0.0 { 1.0 } else { max / top };
+        let codes = w
+            .iter()
+            .map(|&x| {
+                if x == 0.0 || max == 0.0 {
+                    return DpotCode::ZERO;
+                }
+                let y = (x.abs() / gamma) as f64;
+                let idx = table.partition_point(|&(m, _)| m < y).clamp(1, table.len() - 1);
+                let (lo, hi) = (table[idx - 1], table[idx]);
+                let mut c = if y - lo.0 < hi.0 - y { lo.1 } else { hi.1 };
+                if c.dq0 != 0 {
+                    c.sign = if x < 0.0 { -1 } else { 1 };
+                }
+                c
+            })
+            .collect();
+        Self { codes, gamma, rows, cols }
+    }
+
+    /// Decode back to f32 (the values the PMAC arithmetic realizes).
+    pub fn decode(&self) -> Vec<f32> {
+        self.codes.iter().map(|c| c.value(self.gamma)).collect()
+    }
+
+    /// Storage footprint in bits (9 per weight + γ).
+    pub fn storage_bits(&self) -> u64 {
+        self.codes.len() as u64 * 9 + 32
+    }
+
+    #[inline]
+    pub fn code(&self, r: usize, c: usize) -> DpotCode {
+        self.codes[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for dq0 in 0..16u8 {
+            for dq1 in 0..16u8 {
+                for sign in [-1i8, 1] {
+                    let c = DpotCode { sign: if dq0 == 0 { 0 } else { sign }, dq0, dq1 };
+                    assert_eq!(DpotCode::unpack(c.pack()), c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_code_is_zero() {
+        assert_eq!(DpotCode::ZERO.magnitude(), 0.0);
+        assert_eq!(DpotCode { sign: 0, dq0: 0, dq1: 7 }.magnitude(), 0.0);
+    }
+
+    #[test]
+    fn encode_decode_matches_fake_quant() {
+        // code-level encode→decode must land on the same grid as the
+        // fake-quant path (same level set, same scale rule)
+        let mut rng = crate::Rng64::new(4);
+        let w: Vec<f32> = (0..1024).map(|_| rng.normal() as f32 * 0.1).collect();
+        let enc = DpotTensor::encode(&w, 32, 32);
+        let dec = enc.decode();
+        let mut fq = w.clone();
+        super::super::fake_quant(&mut fq, super::super::Scheme::Dpot);
+        for (a, b) in dec.iter().zip(&fq) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn encode_error_bounded() {
+        let mut rng = crate::Rng64::new(8);
+        let w: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let enc = DpotTensor::encode(&w, 64, 64);
+        let dec = enc.decode();
+        let max = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        for (a, b) in w.iter().zip(&dec) {
+            // worst gap in the Δ-PoT level set is < 25% of magnitude near
+            // the top and absolute 2γ·2^-15 near zero
+            assert!((a - b).abs() <= 0.15 * max, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn storage_is_nine_bits_per_weight() {
+        let enc = DpotTensor::encode(&[0.5f32; 64], 8, 8);
+        assert_eq!(enc.storage_bits(), 64 * 9 + 32);
+    }
+}

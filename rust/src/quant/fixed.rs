@@ -1,0 +1,113 @@
+//! Fixed-point value type used by the bit-accurate hardware models.
+//!
+//! The accelerator keeps activations at 9 bits (sign + 8) and runs the
+//! complex-function units at 16-bit internal precision (§3.2).  `Fixed`
+//! carries an `i32` raw value + fractional-bit count and saturates on
+//! conversion, mirroring the RTL's overflow-protection ("not explicitly
+//! shown in the diagram", §4.2 — here it is).
+
+/// A saturating fixed-point value: `value = raw * 2^-frac`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fixed {
+    pub raw: i32,
+    pub frac: u8,
+}
+
+impl Fixed {
+    /// Quantize an f64 into a `bits`-wide signed fixed-point value with
+    /// `frac` fractional bits (round-to-nearest, saturating).
+    pub fn from_f64(x: f64, bits: u32, frac: u8) -> Self {
+        let max = (1i64 << (bits - 1)) - 1;
+        let raw = (x * (1u64 << frac) as f64).round() as i64;
+        Self { raw: raw.clamp(-max, max) as i32, frac }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 / (1u64 << self.frac) as f64
+    }
+
+    /// Re-scale to a different fractional precision (arithmetic shift —
+    /// exactly what the RTL's alignment barrel shifters do).
+    pub fn rescale(self, frac: u8) -> Self {
+        let raw = if frac >= self.frac {
+            (self.raw as i64) << (frac - self.frac)
+        } else {
+            (self.raw as i64) >> (self.frac - frac)
+        };
+        Self { raw: sat16x(raw, 32), frac }
+    }
+
+    /// Saturating add at the given bit width.
+    pub fn sat_add(self, other: Fixed, bits: u32) -> Self {
+        assert_eq!(self.frac, other.frac);
+        let sum = self.raw as i64 + other.raw as i64;
+        Fixed { raw: sat16x(sum, bits), frac: self.frac }
+    }
+}
+
+/// Saturate an i64 into a `bits`-wide signed integer.
+pub fn sat16x(x: i64, bits: u32) -> i32 {
+    let max = if bits >= 32 { i32::MAX as i64 } else { (1i64 << (bits - 1)) - 1 };
+    x.clamp(-max, max) as i32
+}
+
+/// Saturate into the 16-bit internal width of the complex units.
+#[inline]
+pub fn sat16(x: i64) -> i32 {
+    sat16x(x, 16)
+}
+
+/// Saturate into the 9-bit activation width.
+#[inline]
+pub fn sat9(x: i64) -> i32 {
+    sat16x(x, 9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_half_ulp() {
+        for frac in [4u8, 8, 12] {
+            for i in -100..100 {
+                let x = i as f64 * 0.37;
+                let f = Fixed::from_f64(x, 16, frac);
+                let ulp = 1.0 / (1u64 << frac) as f64;
+                if x.abs() < (1 << (15 - frac)) as f64 {
+                    assert!((f.to_f64() - x).abs() <= ulp / 2.0 + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_at_bit_width() {
+        let f = Fixed::from_f64(1e9, 16, 8);
+        assert_eq!(f.raw, (1 << 15) - 1);
+        let f = Fixed::from_f64(-1e9, 9, 0);
+        assert_eq!(f.raw, -255);
+    }
+
+    #[test]
+    fn rescale_shifts() {
+        let f = Fixed { raw: 256, frac: 8 }; // 1.0
+        assert_eq!(f.rescale(12).raw, 4096);
+        assert_eq!(f.rescale(4).raw, 16);
+        assert!((f.rescale(12).to_f64() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sat_add_saturates() {
+        let a = Fixed { raw: 30_000, frac: 8 };
+        let b = Fixed { raw: 10_000, frac: 8 };
+        assert_eq!(a.sat_add(b, 16).raw, 32_767);
+    }
+
+    #[test]
+    fn sat9_range() {
+        assert_eq!(sat9(300), 255);
+        assert_eq!(sat9(-300), -255);
+        assert_eq!(sat9(100), 100);
+    }
+}

@@ -1,0 +1,131 @@
+//! Quantization strategy (§3): the Δ-PoT scheme plus the comparators of
+//! Table 1 (RTN, PoT, LogQ, APoT), fixed-point helpers, and fake-quant
+//! application to whole weight sets.
+//!
+//! Every scheme is held to the same 9-bit storage budget the paper's
+//! ablation uses ("equivalent W9A9"): RTN = sign+8 uniform, PoT/LogQ =
+//! sign + 8-bit exponent, APoT/Δ-PoT = sign + two 4-bit terms.
+
+mod codebook;
+mod dpot;
+pub mod fixed;
+mod schemes;
+
+pub use codebook::Codebook;
+pub use dpot::{DpotCode, DpotTensor, DPOT_K0, DPOT_K1};
+pub use fixed::Fixed;
+pub use schemes::{apot_levels, dpot_levels, pot_levels, rtn_levels, Scheme};
+
+/// Fake-quantize a weight tensor in place under `scheme` (per-tensor
+/// max-abs scale).  Returns the scale used.
+pub fn fake_quant(w: &mut [f32], scheme: Scheme) -> f32 {
+    let scale = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    if scale == 0.0 {
+        return 0.0;
+    }
+    match scheme {
+        Scheme::Fp32 => {}
+        Scheme::LogQ => {
+            // log-domain rounding (assignment differs from PoT's
+            // nearest-in-linear even though the level set is identical)
+            for x in w.iter_mut() {
+                if *x == 0.0 {
+                    continue;
+                }
+                let y = (x.abs() / scale) as f64;
+                let e = (-y.log2()).round().clamp(0.0, 255.0);
+                let lv = (-e).exp2();
+                *x = x.signum() * (lv as f32) * scale;
+            }
+        }
+        _ => {
+            let cb = Codebook::for_scheme(scheme);
+            for x in w.iter_mut() {
+                let y = x.abs() / scale;
+                *x = x.signum() * cb.nearest(y) * scale;
+            }
+        }
+    }
+    scale
+}
+
+/// Uniform symmetric quantization of activations (paper §3.2: 9 bits).
+/// Returns the dequantized value grid the hardware would see.
+pub fn quant_activation(x: f32, scale: f32, bits: u32) -> f32 {
+    if scale <= 0.0 {
+        return 0.0;
+    }
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let q = (x / scale * qmax).round().clamp(-qmax, qmax);
+    q * scale / qmax
+}
+
+/// Vector form of [`quant_activation`].
+pub fn quant_activations(xs: &mut [f32], scale: f32, bits: u32) {
+    for x in xs.iter_mut() {
+        *x = quant_activation(*x, scale, bits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_quant_preserves_sign_and_bound() {
+        let mut rng = crate::Rng64::new(3);
+        for scheme in [Scheme::Rtn, Scheme::Pot, Scheme::LogQ, Scheme::Apot, Scheme::Dpot] {
+            let orig: Vec<f32> = (0..512).map(|_| rng.normal() as f32 * 0.05).collect();
+            let mut w = orig.clone();
+            fake_quant(&mut w, scheme);
+            let max = orig.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            for (a, b) in orig.iter().zip(&w) {
+                assert!(b.abs() <= max * 1.0001, "{scheme:?}");
+                assert!(a.signum() == b.signum() || *b == 0.0, "{scheme:?}: {a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_scheme_is_identity() {
+        let mut w = vec![0.1f32, -0.5, 0.025];
+        let orig = w.clone();
+        fake_quant(&mut w, Scheme::Fp32);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn activation_quant_grid() {
+        // 9-bit: 255 positive levels; error <= scale/255/2
+        let scale = 4.0f32;
+        for i in 0..1000 {
+            let x = -4.0 + 8.0 * (i as f32) / 1000.0;
+            let q = quant_activation(x, scale, 9);
+            assert!((q - x).abs() <= scale / 255.0 / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn activation_quant_saturates() {
+        assert_eq!(quant_activation(100.0, 1.0, 9), 1.0);
+        assert_eq!(quant_activation(-100.0, 1.0, 9), -1.0);
+    }
+
+    #[test]
+    fn mse_ordering_matches_paper_story() {
+        // Table 1 at codebook level: dpot ~ rtn << pot; dpot < logq.
+        let mut rng = crate::Rng64::new(11);
+        let w: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32 * 0.02).collect();
+        let mse = |scheme: Scheme| -> f64 {
+            let mut q = w.clone();
+            fake_quant(&mut q, scheme);
+            w.iter().zip(&q).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+                / w.len() as f64
+        };
+        let (rtn, pot, logq, dpot) =
+            (mse(Scheme::Rtn), mse(Scheme::Pot), mse(Scheme::LogQ), mse(Scheme::Dpot));
+        assert!(dpot < pot * 0.25, "dpot {dpot} pot {pot}");
+        assert!(dpot < logq * 0.25, "dpot {dpot} logq {logq}");
+        assert!(rtn < pot, "rtn {rtn} pot {pot}");
+    }
+}

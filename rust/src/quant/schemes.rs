@@ -1,0 +1,147 @@
+//! Codebook level-set constructors for every quantization scheme of the
+//! Table 1 ablation.  Levels are *nonnegative magnitudes normalized so the
+//! largest is 1.0*; per-tensor scaling maps max|w| onto that top level.
+//!
+//! These must match `python/compile/quantize.py` bit-for-bit — a golden
+//! test compares against `artifacts/quant_codebooks.json`.
+
+
+
+/// Quantization scheme selector (Table 1 rows; Fp32 = the FP16 baseline
+/// row, lossless at our f32 working precision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Fp32,
+    Rtn,
+    Pot,
+    LogQ,
+    Apot,
+    Dpot,
+}
+
+impl Scheme {
+    pub const ALL_QUANT: [Scheme; 5] =
+        [Scheme::Rtn, Scheme::Pot, Scheme::LogQ, Scheme::Apot, Scheme::Dpot];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Fp32 => "FP16",
+            Scheme::Rtn => "RTN",
+            Scheme::Pot => "PoT",
+            Scheme::LogQ => "LogQ",
+            Scheme::Apot => "APoT",
+            Scheme::Dpot => "Proposed",
+        }
+    }
+}
+
+/// RTN: uniform symmetric 9-bit — 255 positive levels plus zero.
+pub fn rtn_levels() -> Vec<f64> {
+    (0..=255).map(|i| i as f64 / 255.0).collect()
+}
+
+/// PoT: {0} ∪ {2^-e} for e in 0..256 (sign + 8-bit exponent; deep
+/// underflow collapses to ~0 exactly like the paper's single-term format).
+pub fn pot_levels() -> Vec<f64> {
+    let mut lv: Vec<f64> = (0..256).map(|e| (-(e as f64)).exp2()).collect();
+    lv.push(0.0);
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lv.dedup();
+    lv
+}
+
+/// APoT (eq 4) with k=4, n=2: p_i ∈ {0, 2^-i, 2^-(i+2), ..., 2^-(i+28)}.
+pub fn apot_levels() -> Vec<f64> {
+    let term = |i: u32| -> Vec<f64> {
+        let mut v = vec![0.0];
+        for j in 0..15u32 {
+            v.push((-(i as f64) - 2.0 * j as f64).exp2());
+        }
+        v
+    };
+    let (t0, t1) = (term(0), term(1));
+    let mut lv: Vec<f64> = t0
+        .iter()
+        .flat_map(|a| t1.iter().map(move |b| a + b))
+        .collect();
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lv.dedup();
+    let max = *lv.last().unwrap();
+    lv.iter().map(|x| x / max).collect()
+}
+
+/// Δ-PoT (eq 5–6) with k0=k1=4: level = 2·(p0 + p1),
+/// p0 = 2^-dq0 (dq0∈1..15; 0 ⇒ p0=0), p1 = p0·2^-dq1 (dq1∈1..15; 0 ⇒ 0).
+pub fn dpot_levels() -> Vec<f64> {
+    let mut lv = vec![0.0f64];
+    for dq0 in 1..16u32 {
+        let p0 = (-(dq0 as f64)).exp2();
+        lv.push(2.0 * p0);
+        for dq1 in 1..16u32 {
+            lv.push(2.0 * (p0 + p0 * (-(dq1 as f64)).exp2()));
+        }
+    }
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lv.dedup();
+    let max = *lv.last().unwrap();
+    lv.iter().map(|x| x / max).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtn_uniform_spacing() {
+        let lv = rtn_levels();
+        assert_eq!(lv.len(), 256);
+        for w in lv.windows(2) {
+            assert!((w[1] - w[0] - 1.0 / 255.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn pot_levels_are_pure_powers() {
+        for &l in pot_levels().iter().filter(|&&l| l > 0.0) {
+            let e = l.log2().round();
+            assert!((l - e.exp2()).abs() < 1e-300);
+        }
+    }
+
+    #[test]
+    fn dpot_denser_than_apot_near_top() {
+        // the paper's argument: Δ-PoT's unit-stride exponents give denser
+        // levels in the high-magnitude region than APoT's stride-2.
+        let count_above = |lv: &[f64], t: f64| lv.iter().filter(|&&x| x >= t).count();
+        let d = dpot_levels();
+        let a = apot_levels();
+        assert!(count_above(&d, 0.25) > count_above(&a, 0.25));
+    }
+
+    #[test]
+    fn paper_example_value_representable() {
+        // §3.1 example: γ(2^0 + 2^-2) = 1.25γ is exactly 2γ(2^-1 + 2^-3).
+        // In normalized (max=1) coordinates: 1.25/1.5.
+        let target = 1.25 / 1.5;
+        assert!(
+            dpot_levels().iter().any(|&l| (l - target).abs() < 1e-12),
+            "Δ-PoT must represent the paper's example exactly"
+        );
+    }
+
+    #[test]
+    fn level_sets_sorted_unique_max1() {
+        for lv in [rtn_levels(), pot_levels(), apot_levels(), dpot_levels()] {
+            assert!(lv.windows(2).all(|w| w[1] > w[0]));
+            assert_eq!(*lv.last().unwrap(), 1.0);
+            assert_eq!(lv[0], 0.0);
+        }
+    }
+
+    #[test]
+    fn dpot_count_within_9bit_budget() {
+        let n = dpot_levels().len();
+        assert!(n <= 1 + 15 * 16, "{n}");
+        assert!(n >= 100, "{n}");
+    }
+}

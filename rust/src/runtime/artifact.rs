@@ -1,0 +1,113 @@
+//! `artifacts/manifest.json` — the ABI between the Python build layer and
+//! this runtime: parameter order/shapes, state shape, artifact file names.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub n_params: u64,
+    pub seq_chunk: usize,
+    pub pp_init: f32,
+    pub param_order: Vec<ParamSpec>,
+    pub step_hlo: PathBuf,
+    pub step_hw_hlo: PathBuf,
+    pub seq_hlo: PathBuf,
+    pub weights: PathBuf,
+    pub eval_data: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = json::parse_file(&dir.join("manifest.json"))
+            .context("loading artifacts/manifest.json — run `make artifacts` first")?;
+        let cfg = j.req("config")?;
+        let arts = j.req("artifacts")?;
+        let file = |key: &str| -> Result<PathBuf> {
+            Ok(dir.join(arts.req(key)?.as_str()?))
+        };
+        let param_order = j
+            .req("param_order")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            n_layer: cfg.req("n_layer")?.as_usize()?,
+            d_model: cfg.req("d_model")?.as_usize()?,
+            d_ffn: cfg.req("d_ffn")?.as_usize()?,
+            vocab: cfg.req("vocab")?.as_usize()?,
+            n_params: j.req("n_params")?.as_f64()? as u64,
+            seq_chunk: j.req("seq_chunk")?.as_usize()?,
+            pp_init: j.req("pp_init")?.as_f64()? as f32,
+            param_order,
+            step_hlo: file("step")?,
+            step_hw_hlo: file("step_hw")?,
+            seq_hlo: file("seq")?,
+            weights: file("weights")?,
+            eval_data: file("eval_data")?,
+        })
+    }
+
+    pub fn state_len(&self) -> usize {
+        self.n_layer * 5 * self.d_model
+    }
+
+    /// Load the eval data JSON.
+    pub fn load_eval_data(&self) -> Result<Json> {
+        json::parse_file(&self.eval_data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.n_layer, 4);
+        assert_eq!(m.state_len(), 4 * 5 * 128);
+        assert_eq!(m.n_params, crate::model::tiny_expected_params());
+        // param order covers emb first, head last (the AOT flattening)
+        assert_eq!(m.param_order.first().unwrap().name, "emb");
+        assert_eq!(m.param_order.last().unwrap().name, "head");
+        assert!(m.step_hlo.exists() && m.seq_hlo.exists() && m.weights.exists());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

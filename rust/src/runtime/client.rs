@@ -1,0 +1,172 @@
+//! PJRT client wrapper: compile the HLO-text artifacts once, keep weights
+//! device-resident, execute token steps / sequence chunks.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::Manifest;
+use crate::model::weights::WeightFile;
+
+/// Which compiled model variant to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// exact numerics with the Pallas kernels lowered in
+    Exact,
+    /// every nonlinearity through the paper's hardware approximations
+    HwApprox,
+}
+
+/// Output of one step execution.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub state: Vec<f32>,
+}
+
+/// The compiled runtime.  NOT Sync: PJRT buffers are used from the
+/// owning coordinator thread (the engine thread owns this exclusively).
+pub struct RwkvRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    step_exe: xla::PjRtLoadedExecutable,
+    step_hw_exe: xla::PjRtLoadedExecutable,
+    seq_exe: xla::PjRtLoadedExecutable,
+    /// device-resident parameter buffers, in manifest order
+    params: Vec<xla::PjRtBuffer>,
+}
+
+impl RwkvRuntime {
+    /// Load artifacts from `dir`, compile all three executables, and
+    /// upload the weights.
+    pub fn load(dir: &Path) -> Result<RwkvRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(to_anyhow)
+        };
+        let step_exe = compile(&manifest.step_hlo)?;
+        let step_hw_exe = compile(&manifest.step_hw_hlo)?;
+        let seq_exe = compile(&manifest.seq_hlo)?;
+
+        let weights = WeightFile::load(&manifest.weights)?;
+        let params = Self::upload_params(&client, &manifest, &weights)?;
+        Ok(RwkvRuntime { manifest, client, step_exe, step_hw_exe, seq_exe, params })
+    }
+
+    /// Upload a full parameter set (manifest order) as device buffers.
+    fn upload_params(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        weights: &WeightFile,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        manifest
+            .param_order
+            .iter()
+            .map(|spec| {
+                let t = weights.get(&spec.name)?;
+                if t.shape != spec.shape {
+                    bail!("{}: shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
+                }
+                client
+                    .buffer_from_host_buffer::<f32>(&t.data, &spec.shape, None)
+                    .map_err(to_anyhow)
+            })
+            .collect()
+    }
+
+    /// Replace the device-resident weights (e.g. with a fake-quantized
+    /// set for the Table 1 ablation through the PJRT path).
+    pub fn swap_weights(&mut self, weights: &WeightFile) -> Result<()> {
+        self.params = Self::upload_params(&self.client, &self.manifest, weights)?;
+        Ok(())
+    }
+
+    /// Fresh initial state vector.
+    pub fn init_state(&self) -> Vec<f32> {
+        let m = &self.manifest;
+        let mut s = vec![0f32; m.state_len()];
+        let d = m.d_model;
+        for l in 0..m.n_layer {
+            for i in 0..d {
+                s[(l * 5 + 4) * d + i] = m.pp_init;
+            }
+        }
+        s
+    }
+
+    fn exe(&self, variant: Variant) -> &xla::PjRtLoadedExecutable {
+        match variant {
+            Variant::Exact => &self.step_exe,
+            Variant::HwApprox => &self.step_hw_exe,
+        }
+    }
+
+    /// Execute one token step.
+    pub fn step(&self, variant: Variant, state: &[f32], token: u32) -> Result<StepOutput> {
+        let m = &self.manifest;
+        if state.len() != m.state_len() {
+            bail!("state length {} != {}", state.len(), m.state_len());
+        }
+        let state_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(state, &[m.n_layer, 5, m.d_model], None)
+            .map_err(to_anyhow)?;
+        let token_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[token as i32], &[], None)
+            .map_err(to_anyhow)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&state_buf);
+        args.push(&token_buf);
+        let result = self.exe(variant).execute_b(&args).map_err(to_anyhow)?;
+        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let (logits, state) = lit.to_tuple2().map_err(to_anyhow)?;
+        Ok(StepOutput {
+            logits: logits.to_vec::<f32>().map_err(to_anyhow)?,
+            state: state.to_vec::<f32>().map_err(to_anyhow)?,
+        })
+    }
+
+    /// Execute a SEQ_CHUNK-token chunk: returns per-position logits
+    /// (flattened [T, vocab]) and the carried state.
+    pub fn seq_chunk(&self, state: &[f32], tokens: &[u32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        if tokens.len() != m.seq_chunk {
+            bail!("seq chunk must be exactly {} tokens", m.seq_chunk);
+        }
+        let state_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(state, &[m.n_layer, 5, m.d_model], None)
+            .map_err(to_anyhow)?;
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&toks, &[toks.len()], None)
+            .map_err(to_anyhow)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&state_buf);
+        args.push(&tok_buf);
+        let result = self.seq_exe.execute_b(&args).map_err(to_anyhow)?;
+        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let (logits, state) = lit.to_tuple2().map_err(to_anyhow)?;
+        Ok((
+            logits.to_vec::<f32>().map_err(to_anyhow)?,
+            state.to_vec::<f32>().map_err(to_anyhow)?,
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT artifacts, compile once, execute on the
+//! request path with device-resident weight buffers.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for the 64-bit-proto-id gotcha).  Three
+//! executables are compiled at startup:
+//!
+//! * `step`    — one token through the Pallas-kernel model variant
+//! * `step_hw` — one token through the hardware-approximation variant
+//! * `seq`     — a SEQ_CHUNK-token scan (bulk scoring / prefill)
+//!
+//! Weights upload once as `PjRtBuffer`s and are reused across every call
+//! (`execute_b`), so the steady-state step cost is two small transfers
+//! (state in, logits+state out) — this was the biggest single win of the
+//! L3 perf pass (EXPERIMENTS.md §Perf).
+
+mod artifact;
+mod client;
+
+pub use artifact::Manifest;
+pub use client::{RwkvRuntime, StepOutput, Variant};

@@ -1,0 +1,181 @@
+//! Top-level accelerator simulation: per-token latency, throughput,
+//! bandwidth utilization and power for any (config, model shape) pair.
+
+use super::{energy, memory, resources, timing};
+use crate::config::{AccelConfig, ModelShape};
+
+/// Everything the harness needs about one (config, shape) evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenReport {
+    pub cycles: u64,
+    pub seconds: f64,
+    pub tokens_per_sec: f64,
+    pub compute_cycles: u64,
+    pub transfer_cycles: u64,
+    pub bandwidth_utilization: f64,
+    pub power_watts: f64,
+    pub tokens_per_joule: f64,
+    /// true when the model fits on chip under this config's policy
+    pub feasible: bool,
+}
+
+/// The accelerator simulator for one deployed configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AccelSim {
+    pub cfg: AccelConfig,
+    /// fine-grained pipelining enabled (the paper's design; ablation
+    /// benches flip this off)
+    pub pipelined: bool,
+    /// weight bit width as streamed/stored (9 = Δ-PoT; 16 for the fp16
+    /// what-if ablation)
+    pub weight_bits: f64,
+}
+
+impl AccelSim {
+    pub fn new(cfg: &AccelConfig) -> Self {
+        Self { cfg: *cfg, pipelined: true, weight_bits: 9.0 }
+    }
+
+    /// Simulate sustained single-token decode (batch 1, the paper's
+    /// measurement protocol).
+    pub fn evaluate(&self, shape: &ModelShape) -> TokenReport {
+        let compute = timing::token_compute_cycles(shape, &self.cfg, self.pipelined);
+        let stream_bytes = if self.cfg.weights_resident {
+            0.0
+        } else {
+            shape.stream_bytes_per_token(self.weight_bits)
+        };
+        let sched = memory::schedule_token(&self.cfg, compute, stream_bytes);
+        let seconds = sched.total_cycles as f64 / self.cfg.freq_hz;
+        let tokens_per_sec = 1.0 / seconds;
+        let bytes_per_sec = stream_bytes / seconds;
+        let power = energy::power_watts(&self.cfg, bytes_per_sec);
+
+        // Feasibility.  The paper's "_0 fully on-chip" claim cannot mean
+        // all 169M matrix weights in 23 MB of URAM+BRAM (impossible at 9
+        // bits) — the §4.1 text keeps "vector weights and historical
+        // values" on-chip with matrices cached/prefetched; we adopt that
+        // reading: _0 needs vectors+activations on chip (always true for
+        // the supported sizes) and the matrices in HBM, with the hot
+        // working set per layer fitting the URAM budget.
+        let feasible = if self.cfg.weights_resident {
+            let plat = self.cfg.platform.resources();
+            let uram_bytes = plat.uram * 36 * 1024;
+            // one d×d layer tile + all vector weights URAM-cacheable,
+            // and the array sized for this model (Table 2's "Support
+            // Size": the _0 configs serve only the 169M-class shapes,
+            // d_model ≤ 2·PMACs)
+            let layer_tile = (shape.d_model as u64 * shape.d_model as u64) * 9 / 8;
+            let vectors = shape.vector_params() * 9 / 8;
+            layer_tile + vectors <= uram_bytes
+                && shape.d_model <= 2 * self.cfg.pmac_count
+                && shape.stream_bytes_per_token(self.weight_bits)
+                    <= self.cfg.platform.hbm_capacity_bytes() as f64
+        } else {
+            shape.stream_bytes_per_token(self.weight_bits)
+                <= self.cfg.platform.hbm_capacity_bytes() as f64
+        };
+
+        TokenReport {
+            cycles: sched.total_cycles,
+            seconds,
+            tokens_per_sec,
+            compute_cycles: sched.compute_cycles,
+            transfer_cycles: sched.transfer_cycles,
+            bandwidth_utilization: sched.bandwidth_utilization,
+            power_watts: power,
+            tokens_per_joule: tokens_per_sec / power,
+            feasible,
+        }
+    }
+
+    /// The config the paper deploys for this model size: `_0` for 169M,
+    /// `_1` otherwise (§5.3.1 "Support Size").
+    pub fn deployed_for(platform_is_u280: bool, shape: &ModelShape) -> AccelSim {
+        use crate::config::HFRWKV_CONFIGS;
+        let small = shape.name.contains("169m") || shape.name.contains("tiny");
+        let idx = match (platform_is_u280, small) {
+            (false, true) => 0,
+            (false, false) => 1,
+            (true, true) => 2,
+            (true, false) => 3,
+        };
+        AccelSim::new(&HFRWKV_CONFIGS[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HFRWKV_CONFIGS, PAPER_SHAPES};
+
+    #[test]
+    fn anchor_169m_throughput_band() {
+        // DESIGN §8 anchor: HFRWKV_0 at 169M ≈ 1000 tok/s (±30%)
+        let r = AccelSim::new(&HFRWKV_CONFIGS[0]).evaluate(&PAPER_SHAPES[0]);
+        assert!((700.0..1400.0).contains(&r.tokens_per_sec), "{}", r.tokens_per_sec);
+    }
+
+    #[test]
+    fn anchor_7b_transfer_bound() {
+        // 7B on U280_1: transfer-bound, ~55-60 tok/s, util > 99%
+        let r = AccelSim::new(&HFRWKV_CONFIGS[3]).evaluate(&PAPER_SHAPES[4]);
+        assert!((40.0..80.0).contains(&r.tokens_per_sec), "{}", r.tokens_per_sec);
+        assert!(r.bandwidth_utilization > 0.99);
+    }
+
+    #[test]
+    fn u280_beats_u50_everywhere() {
+        for shape in &PAPER_SHAPES {
+            let u50 = AccelSim::deployed_for(false, shape).evaluate(shape);
+            let u280 = AccelSim::deployed_for(true, shape).evaluate(shape);
+            assert!(u280.tokens_per_sec > u50.tokens_per_sec, "{}", shape.name);
+        }
+    }
+
+    #[test]
+    fn hfrwkv_star_ratio_matches_paper_at_169m() {
+        // paper: HFRWKV* is 59.8/26.74 = 2.236× HFRWKV at 169M — this
+        // ratio is pure (d, freq) arithmetic and must reproduce tightly.
+        let a = AccelSim::new(&HFRWKV_CONFIGS[0]).evaluate(&PAPER_SHAPES[0]);
+        let b = AccelSim::new(&HFRWKV_CONFIGS[2]).evaluate(&PAPER_SHAPES[0]);
+        let ratio = b.tokens_per_sec / a.tokens_per_sec;
+        assert!((ratio - 2.236).abs() / 2.236 < 0.12, "{ratio}");
+    }
+
+    #[test]
+    fn fp16_streaming_ablation_slower() {
+        // streaming fp16 instead of Δ-PoT9 must cost ~16/9 in the
+        // transfer-bound regime — the quantization bandwidth win.
+        let mut sim = AccelSim::new(&HFRWKV_CONFIGS[3]);
+        let q9 = sim.evaluate(&PAPER_SHAPES[4]);
+        sim.weight_bits = 16.0;
+        let f16 = sim.evaluate(&PAPER_SHAPES[4]);
+        let ratio = q9.tokens_per_sec / f16.tokens_per_sec;
+        assert!((ratio - 16.0 / 9.0).abs() < 0.25, "{ratio}");
+    }
+
+    #[test]
+    fn pipelining_ablation_helps() {
+        let mut sim = AccelSim::new(&HFRWKV_CONFIGS[0]);
+        let on = sim.evaluate(&PAPER_SHAPES[0]);
+        sim.pipelined = false;
+        let off = sim.evaluate(&PAPER_SHAPES[0]);
+        assert!(on.tokens_per_sec > off.tokens_per_sec);
+    }
+
+    #[test]
+    fn feasibility_flags() {
+        // 7B can never be URAM-resident; it does fit HBM when streamed.
+        let r0 = AccelSim::new(&HFRWKV_CONFIGS[0]).evaluate(&PAPER_SHAPES[4]);
+        assert!(!r0.feasible);
+        let r1 = AccelSim::new(&HFRWKV_CONFIGS[1]).evaluate(&PAPER_SHAPES[4]);
+        assert!(r1.feasible);
+    }
+
+    #[test]
+    fn power_and_energy_consistent() {
+        let r = AccelSim::new(&HFRWKV_CONFIGS[1]).evaluate(&PAPER_SHAPES[1]);
+        assert!((r.tokens_per_joule - r.tokens_per_sec / r.power_watts).abs() < 1e-9);
+    }
+}

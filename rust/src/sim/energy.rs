@@ -1,0 +1,81 @@
+//! Power / energy model → Fig 8.
+//!
+//! Substitution for Vivado power reports (DESIGN.md §2): a standard
+//! static + dynamic decomposition.  Dynamic power is per-resource-class
+//! toggle energy × utilization × clock, with UltraScale+-typical
+//! coefficients chosen so total board power lands in the 17–26 W band a
+//! Vivado report gives for designs of this size.  Energy-efficiency
+//! *ratios* (the paper's claim) depend only on these being held fixed
+//! across configs.
+
+use super::resources::{resource_usage, ResourceVector};
+use crate::config::AccelConfig;
+
+/// Static (leakage + HBM PHY idle) power per card, watts.
+pub const STATIC_W: f64 = 9.0;
+/// HBM access energy, picojoules per byte (HBM2 ≈ 3 pJ/bit, controller
+/// overhead folded in).
+pub const HBM_PJ_PER_BYTE: f64 = 25.0;
+
+// Dynamic power coefficients, watts per unit per GHz at the observed
+// toggle rates (fitted to Vivado-typical reports for arithmetic-dense
+// UltraScale+ designs).
+const W_PER_LUT_GHZ: f64 = 160e-6;
+const W_PER_FF_GHZ: f64 = 40e-6;
+const W_PER_DSP_GHZ: f64 = 4.0e-3;
+const W_PER_BRAM_GHZ: f64 = 14.0e-3;
+const W_PER_URAM_GHZ: f64 = 45.0e-3;
+
+/// Dynamic logic power of a resource vector at `freq_hz`, watts.
+pub fn dynamic_watts(usage: &ResourceVector, freq_hz: f64) -> f64 {
+    let ghz = freq_hz / 1e9;
+    ghz * (usage.lut as f64 * W_PER_LUT_GHZ
+        + usage.ff as f64 * W_PER_FF_GHZ
+        + usage.dsp as f64 * W_PER_DSP_GHZ
+        + usage.bram as f64 * W_PER_BRAM_GHZ
+        + usage.uram as f64 * W_PER_URAM_GHZ)
+}
+
+/// Total board power while streaming `bytes_per_sec` from HBM.
+pub fn power_watts(cfg: &AccelConfig, bytes_per_sec: f64) -> f64 {
+    let usage = resource_usage(cfg);
+    STATIC_W + dynamic_watts(&usage, cfg.freq_hz) + bytes_per_sec * HBM_PJ_PER_BYTE * 1e-12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HFRWKV_CONFIGS;
+
+    #[test]
+    fn power_in_vivado_typical_band() {
+        for cfg in &HFRWKV_CONFIGS {
+            // worst case: full rated bandwidth
+            let p = power_watts(cfg, cfg.effective_bandwidth());
+            assert!((14.0..55.0).contains(&p), "{}: {p} W", cfg.name);
+        }
+    }
+
+    #[test]
+    fn streaming_configs_draw_more() {
+        let p0 = power_watts(&HFRWKV_CONFIGS[0], 0.0);
+        let p1 = power_watts(&HFRWKV_CONFIGS[1], HFRWKV_CONFIGS[1].effective_bandwidth());
+        assert!(p1 > p0);
+    }
+
+    #[test]
+    fn u280_draws_more_than_u50() {
+        let u50 = power_watts(&HFRWKV_CONFIGS[1], 201e9);
+        let u280 = power_watts(&HFRWKV_CONFIGS[3], 460e9);
+        assert!(u280 > u50, "{u280} vs {u50}");
+    }
+
+    #[test]
+    fn hbm_term_scales_linearly() {
+        let cfg = &HFRWKV_CONFIGS[1];
+        let a = power_watts(cfg, 0.0);
+        let b = power_watts(cfg, 100e9);
+        let c = power_watts(cfg, 200e9);
+        assert!((2.0 * (b - a) - (c - a)).abs() < 1e-9);
+    }
+}

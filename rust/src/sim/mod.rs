@@ -1,0 +1,27 @@
+//! Cycle-accurate accelerator simulator (§4 architecture, §5.3 results).
+//!
+//! The simulator composes the paper's own latency formulas into a
+//! per-token cycle count, overlaps weight streaming with compute through
+//! the ping-pong double-buffer model, and layers resource (Table 2) and
+//! energy (Fig 8) models on top.
+//!
+//! * [`timing`]    — closed-form cycle counts for every operation class
+//!   (MVM `(l+4)·⌈m/d⌉`, element-wise `⌈l/d⌉+4`, ATAC `⌈d/P⌉+9`, complex
+//!   unit passes) and the per-RWKV-block schedule.
+//! * [`memory`]    — HBM channel + URAM ping-pong double-buffer bridge;
+//!   includes a discrete-event simulation used to validate the
+//!   closed-form overlap model.
+//! * [`resources`] — LUT/FF/DSP/BRAM/URAM cost model → Table 2.
+//! * [`energy`]    — static + per-resource dynamic power → Fig 8.
+//! * [`accel`]     — ties it together: `AccelSim::evaluate(shape)` returns
+//!   throughput, utilization and the compute/transfer breakdown.
+
+pub mod accel;
+pub mod energy;
+pub mod memory;
+pub mod resources;
+pub mod timing;
+
+pub use accel::{AccelSim, TokenReport};
+pub use energy::power_watts;
+pub use resources::{resource_usage, ResourceVector};

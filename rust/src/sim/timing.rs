@@ -1,0 +1,182 @@
+//! Closed-form cycle counts for every operation class, straight from the
+//! paper, and the per-RWKV-block schedule that composes them.
+//!
+//! §4.2: MVM on d PMACs over W[m,l]: `(l+4)·⌈m/d⌉` cycles (pipeline
+//!        init/drain overhead of 4); element-wise over l: `⌈l/d⌉+4`.
+//! §4.3: DIVU is a 3-stage pipeline, ×128 replicated.
+//! §4.4: EXP–σ is a short pipeline (4 stages), ×128 replicated.
+//! §4.5: one ATAC reduction over d elements at tree parallelism P:
+//!        `⌈d/P⌉+9` cycles; the mean and variance paths run in parallel.
+
+use crate::config::{AccelConfig, ModelShape};
+use crate::arith::divu::DIVU_STAGES;
+use crate::arith::exp_sigmoid::EXPS_STAGES;
+
+#[inline]
+fn ceil_div(a: usize, b: usize) -> u64 {
+    ((a + b - 1) / b) as u64
+}
+
+/// Matrix-vector multiply W[m,l]·x — mode 1 of the MV array.
+pub fn mvm_cycles(m: usize, l: usize, d: usize) -> u64 {
+    (l as u64 + 4) * ceil_div(m, d)
+}
+
+/// One element-wise pass over an l-vector — modes 2/3 of the MV array.
+pub fn elementwise_cycles(l: usize, d: usize) -> u64 {
+    ceil_div(l, d) + 4
+}
+
+/// One pass of an l-vector through the replicated complex units.
+pub fn complex_cycles(l: usize, units: usize, stages: u32) -> u64 {
+    ceil_div(l, units) + stages as u64
+}
+
+/// Full LayerNorm of a d-vector: parallel ATAC paths, subtract-sqrt, then
+/// the normalization stream through the DIVUs (Fig 6).
+pub fn layernorm_cycles(d: usize, tree_p: usize, divu_count: usize) -> u64 {
+    let atac = ceil_div(d, tree_p) + 9; // both paths run in parallel
+    let sqrt_stage = 4;
+    let stream = complex_cycles(d, divu_count, DIVU_STAGES);
+    atac + sqrt_stage + stream
+}
+
+/// Cycle breakdown of one token through one RWKV block + amortized head.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockCycles {
+    pub mvm: u64,
+    pub elementwise: u64,
+    pub complex: u64,
+    pub layernorm: u64,
+}
+
+impl BlockCycles {
+    pub fn total_serial(&self) -> u64 {
+        self.mvm + self.elementwise + self.complex + self.layernorm
+    }
+
+    /// Pipelined total: the element-wise and complex passes overlap with
+    /// MVM streaming (fine-grained pipelining, §4.1 "fine-grained
+    /// pipelining enables batched processing of element-wise operations").
+    /// LayerNorm gates the block entry and cannot overlap (data dependency
+    /// on the full normalized vector).
+    pub fn total_pipelined(&self) -> u64 {
+        self.mvm.max(self.elementwise + self.complex) + self.layernorm
+    }
+}
+
+/// Cycles for one RWKV block (time mixing + channel mixing).
+pub fn block_cycles(shape: &ModelShape, cfg: &AccelConfig) -> BlockCycles {
+    let (dm, df) = (shape.d_model, shape.d_ffn);
+    let d = cfg.pmac_count;
+    let mut c = BlockCycles::default();
+
+    // ---- time mixing -----------------------------------------------------
+    c.layernorm += layernorm_cycles(dm, cfg.tree_parallelism, cfg.divu_count);
+    // token-shift: xk/xv/xr each = 2 muls + 1 add on the element-wise array
+    c.elementwise += 9 * elementwise_cycles(dm, d);
+    // r/k/v projections
+    c.mvm += 3 * mvm_cycles(dm, dm, d);
+    // sigmoid(r)
+    c.complex += complex_cycles(dm, cfg.exps_count, EXPS_STAGES);
+    // WKV (eq 2, stabilized): 4 exponentials, 1 division, ~12 element-wise
+    c.complex += 4 * complex_cycles(dm, cfg.exps_count, EXPS_STAGES);
+    c.complex += complex_cycles(dm, cfg.divu_count, DIVU_STAGES);
+    c.elementwise += 12 * elementwise_cycles(dm, d);
+    // r ⊙ wkv, output projection, residual add
+    c.elementwise += elementwise_cycles(dm, d);
+    c.mvm += mvm_cycles(dm, dm, d);
+    c.elementwise += elementwise_cycles(dm, d);
+
+    // ---- channel mixing ----------------------------------------------------
+    c.layernorm += layernorm_cycles(dm, cfg.tree_parallelism, cfg.divu_count);
+    // token-shift: xk/xr
+    c.elementwise += 6 * elementwise_cycles(dm, d);
+    // key projection to FFN width + relu² (element-wise over df)
+    c.mvm += mvm_cycles(df, dm, d);
+    c.elementwise += 2 * elementwise_cycles(df, d);
+    // receptance + sigmoid
+    c.mvm += mvm_cycles(dm, dm, d);
+    c.complex += complex_cycles(dm, cfg.exps_count, EXPS_STAGES);
+    // value projection back + gate + residual
+    c.mvm += mvm_cycles(dm, df, d);
+    c.elementwise += 2 * elementwise_cycles(dm, d);
+
+    c
+}
+
+/// Cycles for the head (final LayerNorm + vocab projection).
+pub fn head_cycles(shape: &ModelShape, cfg: &AccelConfig) -> BlockCycles {
+    BlockCycles {
+        mvm: mvm_cycles(shape.vocab, shape.d_model, cfg.pmac_count),
+        layernorm: layernorm_cycles(shape.d_model, cfg.tree_parallelism, cfg.divu_count),
+        ..Default::default()
+    }
+}
+
+/// Total compute cycles for one token (all blocks + embedding LN + head).
+pub fn token_compute_cycles(shape: &ModelShape, cfg: &AccelConfig, pipelined: bool) -> u64 {
+    let blk = block_cycles(shape, cfg);
+    let head = head_cycles(shape, cfg);
+    let ln0 = layernorm_cycles(shape.d_model, cfg.tree_parallelism, cfg.divu_count);
+    let per_block = if pipelined { blk.total_pipelined() } else { blk.total_serial() };
+    let head_c = if pipelined { head.total_pipelined() } else { head.total_serial() };
+    ln0 + shape.n_layer as u64 * per_block + head_c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HFRWKV_CONFIGS, PAPER_SHAPES};
+
+    #[test]
+    fn mvm_formula_square_matches_paper() {
+        // paper: (l+4)·(l/d) for square matrices
+        assert_eq!(mvm_cycles(768, 768, 384), (768 + 4) * 2);
+        assert_eq!(mvm_cycles(512, 512, 512), 512 + 4);
+    }
+
+    #[test]
+    fn elementwise_formula_matches_paper() {
+        // paper: l/d + 4
+        assert_eq!(elementwise_cycles(512, 512), 1 + 4);
+        assert_eq!(elementwise_cycles(4096, 1024), 4 + 4);
+    }
+
+    #[test]
+    fn layernorm_dominated_by_atac_at_small_p() {
+        let small = layernorm_cycles(4096, 256, 128);
+        let large = layernorm_cycles(4096, 512, 128);
+        assert!(small > large);
+    }
+
+    #[test]
+    fn pipelined_never_slower_than_serial() {
+        for shape in &PAPER_SHAPES {
+            for cfg in &HFRWKV_CONFIGS {
+                let b = block_cycles(shape, cfg);
+                assert!(b.total_pipelined() <= b.total_serial());
+                assert!(b.total_pipelined() >= b.mvm);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_cycles_monotone_in_model_size() {
+        let cfg = &HFRWKV_CONFIGS[1];
+        let mut prev = 0;
+        for shape in &PAPER_SHAPES {
+            let c = token_compute_cycles(shape, cfg, true);
+            assert!(c > prev, "{}: {c} vs {prev}", shape.name);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn known_169m_magnitude() {
+        // sanity anchor for the whole model: 169M on HFRWKV_0 (d=384,
+        // 350 MHz) must land near ~340k cycles/token → ~1000 tok/s.
+        let c = token_compute_cycles(&PAPER_SHAPES[0], &HFRWKV_CONFIGS[0], true);
+        assert!((250_000..500_000).contains(&c), "{c}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + repeated timed batches, reporting min/median/mean/p95 with a
+//! simple adaptive iteration count so short operations are measured in
+//! batches large enough to dominate timer overhead.  Every `cargo bench`
+//! target is a `harness = false` binary built on this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    /// nanoseconds per iteration
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, returning per-iteration statistics.  The closure's
+/// return value is passed through `std::hint::black_box` to defeat DCE.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+    // pilot run to size batches at ~10ms each
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let pilot = t0.elapsed().max(Duration::from_nanos(30));
+    let batch = ((10e-3 / pilot.as_secs_f64()).ceil() as u64).clamp(1, 1_000_000);
+
+    // warmup
+    let warm_end = Instant::now() + Duration::from_millis(100);
+    while Instant::now() < warm_end {
+        std::hint::black_box(f());
+    }
+
+    // timed batches (up to 24 samples or ~0.6 s, whichever first)
+    let mut samples = Vec::new();
+    let deadline = Instant::now() + Duration::from_millis(600);
+    while samples.len() < 24 && (samples.len() < 6 || Instant::now() < deadline) {
+        let t = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let stats = BenchStats {
+        name: name.to_string(),
+        min_ns: samples[0],
+        median_ns: samples[n / 2],
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        iters: batch * n as u64,
+    };
+    println!(
+        "{:<44} {:>12} /iter  (min {}, p95 {}, {} iters)",
+        stats.name,
+        fmt_ns(stats.median_ns),
+        fmt_ns(stats.min_ns),
+        fmt_ns(stats.p95_ns),
+        stats.iters
+    );
+    stats
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.min_ns > 0.0);
+        assert!(s.median_ns >= s.min_ns);
+        assert!(s.p95_ns >= s.median_ns);
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let s = BenchStats {
+            name: "x".into(),
+            min_ns: 100.0,
+            median_ns: 100.0,
+            mean_ns: 100.0,
+            p95_ns: 100.0,
+            iters: 1,
+        };
+        assert!((s.throughput(1.0) - 1e7).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

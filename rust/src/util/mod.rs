@@ -1,0 +1,10 @@
+//! From-scratch substrates the offline environment forces us to own:
+//! a JSON parser/serializer ([`json`]), a micro-benchmark statistics
+//! harness ([`bench`]), and a miniature property-based testing layer
+//! ([`prop`]).  No external crates beyond `xla` and `anyhow` exist in
+//! this build, so these are first-class parts of the system inventory
+//! (DESIGN.md §5).
+
+pub mod bench;
+pub mod json;
+pub mod prop;

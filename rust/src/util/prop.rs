@@ -1,0 +1,122 @@
+//! Miniature property-based testing layer (proptest is unavailable
+//! offline).  Seeded generation + bounded shrinking for the invariant
+//! tests in `rust/tests/proptests.rs`.
+//!
+//! A property is a closure over a generated value; on failure the runner
+//! shrinks by re-generating from "smaller" generator parameters (halving
+//! sizes) and reports the smallest failing case found.
+
+use crate::Rng64;
+
+/// Generation context: an RNG plus a size budget that shrinks on failure.
+pub struct Gen {
+    pub rng: Rng64,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + (self.rng.next_f64() * ((hi - lo) as f64 + 1.0)) as i32
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_normal(&mut self, scale: f32) -> f32 {
+        self.rng.normal() as f32 * scale
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_normal(scale)).collect()
+    }
+
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len).map(|_| self.i32_in(lo, hi)).collect()
+    }
+
+    /// A length scaled by the shrink budget (≥ 1).
+    pub fn sized_len(&mut self, max: usize) -> usize {
+        self.usize_in(1, max.min(self.size).max(1))
+    }
+}
+
+/// Run `cases` random cases of a property.  On failure, retries with
+/// halved size budgets to find a smaller counterexample, then panics with
+/// the seed so the case can be replayed deterministically.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut g = Gen { rng: Rng64::new(seed), size: 256 };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: halve the size budget until the property passes
+            let mut smallest = (256usize, msg.clone());
+            let mut size = 128usize;
+            while size >= 1 {
+                let mut g = Gen { rng: Rng64::new(seed), size };
+                match prop(&mut g) {
+                    Err(m) => smallest = (size, m),
+                    Ok(()) => break,
+                }
+                if size == 1 {
+                    break;
+                }
+                size /= 2;
+            }
+            panic!(
+                "property {name:?} failed (seed {seed:#x}, smallest size {}):\n  {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 50, |g| {
+            let (a, b) = (g.i32_in(-1000, 1000), g.i32_in(-1000, 1000));
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 3, |g| {
+            let len = g.sized_len(64);
+            let v = g.vec_i32(len, 0, 10);
+            Err(format!("len {}", v.len()))
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut g = Gen { rng: Rng64::new(1), size: 64 };
+        for _ in 0..1000 {
+            let x = g.i32_in(-5, 5);
+            assert!((-5..=5).contains(&x));
+            let u = g.usize_in(2, 9);
+            assert!((2..=9).contains(&u));
+            let l = g.sized_len(1000);
+            assert!((1..=64).contains(&l));
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Cross-implementation parity: the Rust f32 forward, the PJRT `exact`
+//! executable (with the Pallas kernels lowered in) and the `seq` chunked
+//! scorer must agree on the trained model, and the Rust codebooks must
+//! match the Python golden dump bit-for-bit.
+//!
+//! These tests require `make artifacts`; they skip with a note when
+//! artifacts are absent so `cargo test` works on a fresh clone.
+
+use std::path::Path;
+
+use hfrwkv::model::{RwkvModel, WeightFile};
+use hfrwkv::runtime::{Manifest, RwkvRuntime, Variant};
+use hfrwkv::util::json;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn rust_forward_matches_pjrt_exact() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = RwkvRuntime::load(dir).unwrap();
+    let weights = WeightFile::load(&runtime.manifest.weights).unwrap();
+    let model = RwkvModel::from_weights(&weights).unwrap();
+
+    let mut rust_state = model.new_state();
+    let mut pjrt_state = runtime.init_state();
+    let tokens = [1u32, 17, 42, 99, 5, 64, 101, 3];
+    for &t in &tokens {
+        let rust_logits = model.step(&mut rust_state, t);
+        let out = runtime.step(Variant::Exact, &pjrt_state, t).unwrap();
+        pjrt_state = out.state;
+        let max_diff = rust_logits
+            .iter()
+            .zip(&out.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 2e-3, "token {t}: logits diverge by {max_diff}");
+    }
+    // states agree too (ignore the -1e30 pp sentinels)
+    let max_sdiff = rust_state
+        .data
+        .iter()
+        .zip(&pjrt_state)
+        .filter(|(a, b)| **a > -1e29 && **b > -1e29)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_sdiff < 2e-2, "state diverges by {max_sdiff}");
+}
+
+#[test]
+fn seq_chunk_matches_step_loop() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = RwkvRuntime::load(dir).unwrap();
+    let chunk = runtime.manifest.seq_chunk;
+    let vocab = runtime.manifest.vocab;
+    let tokens: Vec<u32> = (0..chunk as u32).map(|i| (i * 7 + 1) % 128).collect();
+
+    let mut state = runtime.init_state();
+    let mut step_logits = Vec::new();
+    for &t in &tokens {
+        let out = runtime.step(Variant::Exact, &state, t).unwrap();
+        state = out.state;
+        step_logits.push(out.logits);
+    }
+    let (flat, seq_state) = runtime.seq_chunk(&runtime.init_state(), &tokens).unwrap();
+    for (i, sl) in step_logits.iter().enumerate() {
+        let chunk_l = &flat[i * vocab..(i + 1) * vocab];
+        let max_diff = sl
+            .iter()
+            .zip(chunk_l)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 2e-3, "position {i}: {max_diff}");
+    }
+    let max_sdiff = state
+        .iter()
+        .zip(&seq_state)
+        .filter(|(a, b)| **a > -1e29 && **b > -1e29)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_sdiff < 2e-2);
+}
+
+#[test]
+fn hwapprox_executable_close_to_exact() {
+    let Some(dir) = artifacts() else { return };
+    let runtime = RwkvRuntime::load(dir).unwrap();
+    let state = runtime.init_state();
+    let a = runtime.step(Variant::Exact, &state, 17).unwrap();
+    let b = runtime.step(Variant::HwApprox, &state, 17).unwrap();
+    let max_diff = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    // approximations shift logits a little but must not explode
+    assert!(max_diff > 0.0, "hw variant should differ from exact");
+    assert!(max_diff < 5.0, "hw variant diverged: {max_diff}");
+}
+
+#[test]
+fn codebooks_match_python_golden() {
+    let Some(dir) = artifacts() else { return };
+    let j = json::parse_file(&dir.join("quant_codebooks.json")).unwrap();
+    let check = |name: &str, ours: Vec<f64>| {
+        let golden = j.req(name).unwrap().as_f64_vec().unwrap();
+        assert_eq!(golden.len(), ours.len(), "{name}: level count");
+        for (i, (a, b)) in golden.iter().zip(&ours).enumerate() {
+            assert!((a - b).abs() < 1e-14, "{name}[{i}]: python {a} vs rust {b}");
+        }
+    };
+    check("rtn", hfrwkv::quant::rtn_levels());
+    check("apot", hfrwkv::quant::apot_levels());
+    check("dpot", hfrwkv::quant::dpot_levels());
+    // pot: python dumps only levels >= 2^-64 (json hygiene)
+    let golden_pot = j.req("pot").unwrap().as_f64_vec().unwrap();
+    let ours_pot: Vec<f64> = hfrwkv::quant::pot_levels()
+        .into_iter()
+        .filter(|&l| l == 0.0 || l >= 2f64.powi(-64))
+        .collect();
+    assert_eq!(golden_pot.len(), ours_pot.len());
+    for (a, b) in golden_pot.iter().zip(&ours_pot) {
+        assert!((a - b).abs() < 1e-14);
+    }
+}
+
+#[test]
+fn manifest_consistent_with_weights() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let weights = WeightFile::load(&manifest.weights).unwrap();
+    assert_eq!(weights.total_params(), manifest.n_params);
+    for spec in &manifest.param_order {
+        let t = weights.get(&spec.name).unwrap();
+        assert_eq!(t.shape, spec.shape, "{}", spec.name);
+    }
+}
+
+#[test]
+fn pjrt_crosscheck_matches_native_eval() {
+    // the Table 1 cross-path check: scoring through the compiled HLO with
+    // swapped (quantized) weights must agree with the native forward
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let weights = WeightFile::load(&manifest.weights).unwrap();
+    let mut native = RwkvModel::from_weights(&weights).unwrap();
+    let eval_json = manifest.load_eval_data().unwrap();
+    let stream: Vec<u32> = hfrwkv::eval::parse_valid_stream(&eval_json)
+        .unwrap()
+        .into_iter()
+        .take(500)
+        .collect();
+    let native_ppl = hfrwkv::eval::stream_ppl(&mut native, &stream);
+    let rows = hfrwkv::harness::table1::run_pjrt_crosscheck(dir, 500).unwrap();
+    let fp = rows.iter().find(|(n, _)| n.starts_with("FP16")).unwrap().1;
+    assert!(
+        (fp - native_ppl).abs() / native_ppl < 0.01,
+        "pjrt {fp} vs native {native_ppl}"
+    );
+    // quantized row exists and stays close (weight-only Δ-PoT is gentle)
+    let dp = rows.iter().find(|(n, _)| n.starts_with("Proposed")).unwrap().1;
+    assert!((dp - fp).abs() / fp < 0.05, "Δ-PoT ppl {dp} vs fp {fp}");
+}
+
+#[test]
+fn trained_model_beats_uniform_ppl() {
+    // the end-to-end training claim: the trained tiny model must sit far
+    // below uniform perplexity (vocab = 128) on held-out synthetic docs
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(dir).unwrap();
+    let weights = WeightFile::load(&manifest.weights).unwrap();
+    let mut model = RwkvModel::from_weights(&weights).unwrap();
+    let eval_json = manifest.load_eval_data().unwrap();
+    let (docs, _) = hfrwkv::eval::parse_eval_data(&eval_json).unwrap();
+    let (ppl, acc) = hfrwkv::eval::eval_lambada(&mut model, &docs[..50.min(docs.len())]);
+    assert!(ppl < 16.0, "held-out ppl {ppl} (uniform would be 128)");
+    assert!(acc > 0.05, "last-word acc {acc}");
+}

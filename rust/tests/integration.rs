@@ -1,0 +1,209 @@
+//! Cross-module integration tests: quantization → model quality,
+//! simulator → baselines crossovers, coordinator → engine behaviour,
+//! harness end-to-end runs.
+
+use hfrwkv::baselines::{CPU_I7_12650H, GPU_3090, GPU_A100};
+use hfrwkv::config::{HFRWKV_CONFIGS, PAPER_SHAPES};
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::quant::Scheme;
+use hfrwkv::sim::AccelSim;
+
+// ---------------------------------------------------------------------------
+// quantization × model quality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantization_degrades_gracefully_on_random_model() {
+    // fake-quantizing a model must keep the forward pass finite and keep
+    // Δ-PoT closer to the f32 logits than PoT on average
+    let base = test_model(2, 64, 128, 64);
+    let probe_tokens: Vec<u32> = (0..32).map(|i| (i * 5 + 2) % 64).collect();
+
+    let logits_of = |scheme: Option<Scheme>| -> Vec<f32> {
+        let mut m = base.clone();
+        if let Some(s) = scheme {
+            m.quantize_matrices(s);
+        }
+        let mut st = m.new_state();
+        let mut out = Vec::new();
+        for &t in &probe_tokens {
+            out = m.step(&mut st, t);
+        }
+        out
+    };
+    let exact = logits_of(None);
+    let err = |scheme: Scheme| -> f64 {
+        logits_of(Some(scheme))
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+    };
+    let (dpot, pot, rtn) = (err(Scheme::Dpot), err(Scheme::Pot), err(Scheme::Rtn));
+    assert!(dpot.is_finite() && pot.is_finite() && rtn.is_finite());
+    assert!(dpot < pot, "dpot {dpot} should beat pot {pot}");
+}
+
+#[test]
+fn act_quant_9bit_is_gentle() {
+    let mut m = test_model(2, 64, 128, 64);
+    let mut st = m.new_state();
+    let exact = m.step(&mut st, 5);
+    m.act_bits = Some(9);
+    let mut st = m.new_state();
+    let quant = m.step(&mut st, 5);
+    let max_diff = exact
+        .iter()
+        .zip(&quant)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff > 0.0);
+    assert!(max_diff < 0.5, "{max_diff}");
+}
+
+// ---------------------------------------------------------------------------
+// simulator × baselines: the paper's Fig 7 structure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig7_crossover_structure() {
+    // FPGA dominates everything at 169M; U50 falls below the big GPUs at
+    // 7B; U280 stays at least on par with the A100 (the paper's story).
+    let s169 = &PAPER_SHAPES[0];
+    let s7b = &PAPER_SHAPES[4];
+
+    let u50_169 = AccelSim::deployed_for(false, s169).evaluate(s169).tokens_per_sec;
+    let u280_169 = AccelSim::deployed_for(true, s169).evaluate(s169).tokens_per_sec;
+    assert!(u50_169 > GPU_A100.tokens_per_sec(s169) * 5.0);
+    assert!(u280_169 > u50_169);
+
+    let u50_7b = AccelSim::deployed_for(false, s7b).evaluate(s7b).tokens_per_sec;
+    let u280_7b = AccelSim::deployed_for(true, s7b).evaluate(s7b).tokens_per_sec;
+    assert!(u50_7b < GPU_3090.tokens_per_sec(s7b), "U50 must lose to 3090 at 7B");
+    assert!(u280_7b > GPU_A100.tokens_per_sec(s7b) * 0.9, "U280 ~ A100 at 7B");
+}
+
+#[test]
+fn fig8_fpga_always_wins_energy() {
+    // energy efficiency is the unconditional win in the paper
+    for shape in &PAPER_SHAPES {
+        let u280 = AccelSim::deployed_for(true, shape).evaluate(shape);
+        for b in [&CPU_I7_12650H, &GPU_3090, &GPU_A100] {
+            assert!(
+                u280.tokens_per_joule > b.tokens_per_joule(shape),
+                "{} vs {} at {}",
+                u280.tokens_per_joule,
+                b.name,
+                shape.name
+            );
+        }
+    }
+}
+
+#[test]
+fn headline_ratios_within_band() {
+    let headlines = hfrwkv::harness::headline::run();
+    for h in &headlines {
+        let rel = h.ours / h.paper;
+        assert!(
+            (0.75..1.35).contains(&rel),
+            "{}: ours {:.2} vs paper {:.2}",
+            h.label,
+            h.ours,
+            h.paper
+        );
+    }
+}
+
+#[test]
+fn fig7_anchor_ratios_within_band() {
+    let rows = hfrwkv::harness::fig7::run();
+    for (label, ours, paper) in hfrwkv::harness::fig7::anchor_ratios(&rows) {
+        let rel = ours / paper;
+        assert!(
+            (0.7..1.45).contains(&rel),
+            "{label}: ours {ours:.2} vs paper {paper:.2}"
+        );
+    }
+}
+
+#[test]
+fn table2_fits_all_platforms() {
+    for cfg in &HFRWKV_CONFIGS {
+        let usage = hfrwkv::sim::resource_usage(cfg);
+        assert!(usage.fits_in(&cfg.platform.resources()), "{}", cfg.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator behaviour under load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_handles_mixed_workload() {
+    let coord = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 4 },
+    );
+    // mixed lengths and sampling settings
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        let mut req = GenRequest::greedy(vec![(i % 40) as u32 + 1], 3 + (i % 7) as usize);
+        if i % 3 == 0 {
+            req.temperature = 0.7;
+            req.top_k = 10;
+            req.seed = i;
+        }
+        rxs.push((i, coord.submit(req)));
+    }
+    for (i, rx) in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.tokens.len(), 3 + (i % 7) as usize);
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.completed, 12);
+}
+
+#[test]
+fn coordinator_fifo_admission_under_saturation() {
+    // with max_active=1 every request runs alone; completion order must
+    // equal submission order (FIFO, no starvation)
+    let coord = Coordinator::spawn(
+        test_model(1, 32, 64, 50),
+        CoordinatorConfig { max_active: 1 },
+    );
+    let rxs: Vec<_> = (0..6)
+        .map(|i| coord.submit(GenRequest::greedy(vec![i as u32 + 1], 4)))
+        .collect();
+    let mut ids = Vec::new();
+    for rx in rxs {
+        ids.push(rx.recv().unwrap().unwrap().request_id);
+    }
+    let mut sorted = ids.clone();
+    sorted.sort();
+    assert_eq!(ids, sorted, "completion order broke FIFO: {ids:?}");
+}
+
+// ---------------------------------------------------------------------------
+// harness end-to-end (simulation side; artifact-dependent parts live in
+// golden_parity.rs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn harness_reports_render() {
+    let fig7 = hfrwkv::harness::fig7::run();
+    let text = hfrwkv::harness::fig7::report(&fig7, true).unwrap();
+    assert!(text.contains("HFRWKV*"));
+    assert!(text.contains("99.95%"));
+
+    let fig8 = hfrwkv::harness::fig8::run();
+    let text = hfrwkv::harness::fig8::report(&fig8).unwrap();
+    assert!(text.contains("tokens/J"));
+
+    let t2 = hfrwkv::harness::table2::run().unwrap();
+    assert!(t2.contains("HFRWKV*_1") && t2.contains("1537"));
+
+    let abl = hfrwkv::harness::ablation::run().unwrap();
+    assert!(abl.contains("double buffering"));
+}

@@ -1,0 +1,233 @@
+//! Property-based tests on system invariants, built on the in-crate
+//! mini-prop layer (`hfrwkv::util::prop`; proptest is unavailable in the
+//! offline build).  Covers L3 coordinator invariants (routing/batching/
+//! state), quantizer algebra, and the bit-accurate arithmetic envelopes.
+
+use hfrwkv::arith::{self, lod};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::prop_assert;
+use hfrwkv::quant::{self, DpotCode, DpotTensor, Scheme};
+use hfrwkv::util::prop::{check, Gen};
+
+// ---------------------------------------------------------------------------
+// quantizer algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    // quantizing twice == quantizing once, for every scheme
+    check("fake_quant idempotent", 40, |g: &mut Gen| {
+        let len = g.sized_len(512);
+        let w = g.vec_f32(len, 0.1);
+        for scheme in Scheme::ALL_QUANT {
+            let mut q1 = w.clone();
+            quant::fake_quant(&mut q1, scheme);
+            let mut q2 = q1.clone();
+            quant::fake_quant(&mut q2, scheme);
+            for (a, b) in q1.iter().zip(&q2) {
+                prop_assert!(
+                    (a - b).abs() <= 1e-6 * a.abs().max(1e-12),
+                    "{scheme:?}: {a} requantized to {b}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dpot_roundtrip_through_codes() {
+    // encode→decode must land on the fake-quant grid for every input
+    check("dpot code roundtrip", 30, |g: &mut Gen| {
+        let rows = g.usize_in(1, 16);
+        let cols = g.usize_in(1, 32);
+        let w = g.vec_f32(rows * cols, 0.3);
+        let enc = DpotTensor::encode(&w, rows, cols);
+        let dec = enc.decode();
+        let mut fq = w.clone();
+        quant::fake_quant(&mut fq, Scheme::Dpot);
+        for (i, (a, b)) in dec.iter().zip(&fq).enumerate() {
+            prop_assert!((a - b).abs() <= 1e-5, "elem {i}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dpot_pack_unpack() {
+    check("dpot pack/unpack", 50, |g: &mut Gen| {
+        let dq0 = g.i32_in(0, 15) as u8;
+        let dq1 = g.i32_in(0, 15) as u8;
+        let sign = if dq0 == 0 { 0 } else if g.i32_in(0, 1) == 0 { -1 } else { 1 };
+        let c = DpotCode { sign, dq0, dq1 };
+        prop_assert!(DpotCode::unpack(c.pack()) == c, "{c:?}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// bit-accurate arithmetic envelopes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lod_matches_leading_zeros() {
+    check("lod == 31-clz", 100, |g: &mut Gen| {
+        let x = (g.rng.next_u64() & 0xFFFF_FFFF) as u32;
+        let want = if x == 0 { None } else { Some(31 - x.leading_zeros()) };
+        prop_assert!(lod(x, 32) == want, "x={x:#x}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_divu_error_envelope() {
+    let divu = arith::Divu::new();
+    check("divu <= 13% relative", 100, |g: &mut Gen| {
+        let x = g.i32_in(1, 1 << 20) as u32;
+        let y = g.i32_in(1, 1 << 20) as u32;
+        let got = divu.div(x, y, 20) as f64 / (1u64 << 20) as f64;
+        let want = x as f64 / y as f64;
+        prop_assert!(
+            (got - want).abs() / want <= 0.13,
+            "{x}/{y}: got {got} want {want}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exp_sigmoid_envelopes() {
+    let u = arith::ExpSigmoidUnit::new();
+    check("exp/sigmoid envelopes", 100, |g: &mut Gen| {
+        // exp on the WKV domain (x <= 0)
+        let x = -(g.rng.next_f64() * 12.0);
+        let got = u.exp_f64(x);
+        let want = x.exp();
+        prop_assert!(
+            (got - want).abs() / want <= 0.045 || (got - want).abs() <= 2.0 / 32_768.0,
+            "exp({x}): {got} vs {want}"
+        );
+        // sigmoid anywhere
+        let s = g.rng.next_f64() * 20.0 - 10.0;
+        let gs = u.sigmoid_f64(s);
+        let ws = 1.0 / (1.0 + (-s).exp());
+        prop_assert!((gs - ws).abs() <= 0.0191, "sigmoid({s}): {gs} vs {ws}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pmac_matches_shiftadd_semantics() {
+    check("pmac product semantics", 60, |g: &mut Gen| {
+        let a = g.i32_in(-255, 255);
+        let dq0 = g.i32_in(1, 15) as u8;
+        let dq1 = g.i32_in(0, 15) as u8;
+        let sign = if g.i32_in(0, 1) == 0 { -1i8 } else { 1 };
+        let code = DpotCode { sign, dq0, dq1 };
+        let got = arith::dpot_mul(a, code) as f64;
+        let want = a as f64 * sign as f64 * (code.magnitude() / 2.0) * 32_768.0;
+        prop_assert!((got - want).abs() <= 2.0, "a={a} {code:?}: {got} vs {want}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_atac_sum_exact() {
+    check("atac sum == iter sum", 40, |g: &mut Gen| {
+        let len = g.sized_len(2048);
+        let xs: Vec<i64> = (0..len).map(|_| g.i32_in(-255, 255) as i64).collect();
+        let (sum, cycles) = arith::atac_sum(&xs, 256);
+        prop_assert!(sum == xs.iter().sum::<i64>(), "sum mismatch");
+        prop_assert!(cycles == ((len + 255) / 256) as u64 + 9, "cycle formula");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// simulator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_overlap_bounds() {
+    use hfrwkv::sim::memory::{overlap_closed_form, overlap_event_sim};
+    check("overlap bounded by max and sum", 60, |g: &mut Gen| {
+        let c = g.i32_in(1_000, 10_000_000) as u64;
+        let t = g.i32_in(1_000, 10_000_000) as u64;
+        let n = g.usize_in(1, 256);
+        let total = overlap_closed_form(c, t, n);
+        prop_assert!(total + n as u64 >= c.max(t), "below max(c,t)"); // integer chunking slack
+        prop_assert!(total <= c + t + (t / n as u64) + 2, "above serial");
+        let ev = overlap_event_sim(c, t, n);
+        let chunk = (t / n as u64).max(c / n as u64).max(1);
+        prop_assert!(
+            (ev as i64 - total as i64).unsigned_abs() <= chunk + 2,
+            "event {ev} vs closed {total}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mvm_cycles_monotone() {
+    use hfrwkv::sim::timing::mvm_cycles;
+    check("mvm cycles monotone in m, anti-monotone in d", 50, |g: &mut Gen| {
+        let m = g.usize_in(64, 4096);
+        let l = g.usize_in(64, 4096);
+        let d = 1 << g.usize_in(5, 10);
+        prop_assert!(mvm_cycles(m + d, l, d) >= mvm_cycles(m, l, d), "m monotone");
+        prop_assert!(mvm_cycles(m, l, d * 2) <= mvm_cycles(m, l, d), "d anti-monotone");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants (routing / batching / state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_interleaving_preserves_outputs() {
+    // any admission capacity must produce identical tokens per request
+    use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+    let reference: Vec<Vec<u32>> = {
+        let c = Coordinator::spawn(test_model(1, 32, 64, 50), CoordinatorConfig { max_active: 1 });
+        (0..5)
+            .map(|i| c.generate(GenRequest::greedy(vec![i + 1], 6)).unwrap().tokens)
+            .collect()
+    };
+    check("batching preserves outputs", 4, |g: &mut Gen| {
+        let cap = g.usize_in(1, 6);
+        let c = Coordinator::spawn(test_model(1, 32, 64, 50), CoordinatorConfig { max_active: cap });
+        let rxs: Vec<_> = (0..5u32)
+            .map(|i| c.submit(GenRequest::greedy(vec![i + 1], 6)))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let got = rx.recv().unwrap().map_err(|e| e.to_string())?.tokens;
+            prop_assert!(got == reference[i], "cap={cap} req={i}: {got:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_isolation_across_sessions() {
+    // generating with arbitrary interleaving never cross-contaminates
+    use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+    check("state isolation", 3, |g: &mut Gen| {
+        let cap = g.usize_in(2, 5);
+        let c = Coordinator::spawn(test_model(2, 32, 64, 50), CoordinatorConfig { max_active: cap });
+        // same request submitted twice amid noise must match itself
+        let probe = GenRequest::greedy(vec![7, 3, 9], 8);
+        let a = c.submit(probe.clone());
+        let noise: Vec<_> = (0..cap as u32)
+            .map(|i| c.submit(GenRequest::greedy(vec![i + 20], 10)))
+            .collect();
+        let b = c.submit(probe);
+        let ta = a.recv().unwrap().map_err(|e| e.to_string())?.tokens;
+        let tb = b.recv().unwrap().map_err(|e| e.to_string())?.tokens;
+        for rx in noise {
+            let _ = rx.recv().unwrap().map_err(|e| e.to_string())?;
+        }
+        prop_assert!(ta == tb, "probe diverged: {ta:?} vs {tb:?}");
+        Ok(())
+    });
+}
