@@ -1,35 +1,95 @@
-//! End-to-end serving benchmark: coordinator throughput over the native
-//! model at several batch capacities, plus PJRT step/prefill latency on
-//! the trained artifacts when present (the E7 numbers).
+//! End-to-end serving benchmark: batched-vs-sequential coordinator
+//! decode sweep over batch capacities (the §Perf L3-3 weight-reuse
+//! claim, measured), open-loop Poisson load, plus PJRT step/prefill
+//! latency on the trained artifacts when present (the E7 numbers).
+//!
+//! Emits `BENCH_e2e_serve.json` so future PRs can track the trajectory.
 
 use std::path::Path;
 use std::time::Instant;
 
-use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, GenRequest};
 use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::RwkvModel;
 use hfrwkv::runtime::{RwkvRuntime, Variant};
-use hfrwkv::util::bench::{bench, section};
+use hfrwkv::util::bench::{bench, section, BenchReport};
+
+const N_REQUESTS: u32 = 32;
+const TOKENS_PER_REQUEST: usize = 32;
+const CAPS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Wrapper that hides `RwkvModel`'s `forward_batch` override, so the
+/// coordinator decodes it through the default per-session forward loop —
+/// the pre-fusion baseline (every weight matrix streamed B times per
+/// cycle) measured against the same scheduler.
+struct SequentialRwkv(RwkvModel);
+
+impl EngineModel for SequentialRwkv {
+    fn vocab(&self) -> usize {
+        self.0.vocab
+    }
+
+    fn state_len(&self) -> usize {
+        EngineModel::state_len(&self.0)
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        EngineModel::init_state(&self.0)
+    }
+
+    fn forward(
+        &mut self,
+        state: &mut Vec<f32>,
+        token: u32,
+        variant: Variant,
+    ) -> hfrwkv::Result<Vec<f32>> {
+        self.0.forward(state, token, variant)
+    }
+    // no forward_batch override: inherits the per-session default loop
+}
+
+/// Drive N_REQUESTS greedy generations through a fresh coordinator at
+/// each capacity; returns (cap, aggregate tok/s) pairs.
+fn sweep<M, F>(label: &str, mk: F) -> Vec<(usize, f64)>
+where
+    M: EngineModel + Send + 'static,
+    F: Fn() -> M,
+{
+    CAPS.iter()
+        .map(|&cap| {
+            let t0 = Instant::now();
+            let coord = Coordinator::spawn(mk(), CoordinatorConfig { max_active: cap });
+            let rxs: Vec<_> = (0..N_REQUESTS)
+                .map(|i| coord.submit(GenRequest::greedy(vec![i % 128], TOKENS_PER_REQUEST)))
+                .collect();
+            let mut total = 0usize;
+            for rx in rxs {
+                total += rx.recv().unwrap().unwrap().tokens.len();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let tps = total as f64 / wall;
+            println!(
+                "  {label:<10} B={cap:>2}: {tps:>9.0} tok/s aggregate \
+                 ({total} tokens in {wall:.2}s)"
+            );
+            (cap, tps)
+        })
+        .collect()
+}
 
 fn main() {
-    section("coordinator throughput (native model, 16 requests x 32 tokens)");
-    for cap in [1usize, 2, 4, 8] {
-        let t0 = Instant::now();
-        let coord = Coordinator::spawn(
-            test_model(4, 128, 512, 128),
-            CoordinatorConfig { max_active: cap },
-        );
-        let rxs: Vec<_> = (0..16u32)
-            .map(|i| coord.submit(GenRequest::greedy(vec![i % 128], 32)))
-            .collect();
-        let mut total = 0usize;
-        for rx in rxs {
-            total += rx.recv().unwrap().unwrap().tokens.len();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "max_active={cap}: {:>8.0} tok/s aggregate ({total} tokens in {wall:.2}s)",
-            total as f64 / wall
-        );
+    let mut report = BenchReport::new("e2e_serve");
+
+    section("batched vs sequential decode (4x128 test model, 32 req x 32 tok)");
+    let sequential = sweep("sequential", || SequentialRwkv(test_model(4, 128, 512, 128)));
+    let batched = sweep("batched", || test_model(4, 128, 512, 128));
+    println!();
+    for ((cap, seq_tps), (_, bat_tps)) in sequential.iter().zip(&batched) {
+        let speedup = bat_tps / seq_tps;
+        println!("  B={cap:>2}: batched/sequential = {speedup:.2}x");
+        report.record(&format!("sequential_tok_s_b{cap}"), *seq_tps);
+        report.record(&format!("batched_tok_s_b{cap}"), *bat_tps);
+        report.record(&format!("speedup_b{cap}"), speedup);
     }
 
     section("open-loop load (Poisson arrivals, native model, max_active=4)");
@@ -67,12 +127,20 @@ fn main() {
             })
             .collect();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = lats[lats.len() / 2];
+        let p95 = lats[(lats.len() as f64 * 0.95) as usize];
         println!(
-            "λ={lambda_rps:>5.0} req/s: e2e latency p50 {:>7.1} ms  p95 {:>7.1} ms  max {:>7.1} ms",
-            lats[lats.len() / 2],
-            lats[(lats.len() as f64 * 0.95) as usize],
+            "λ={lambda_rps:>5.0} req/s: e2e latency p50 {p50:>7.1} ms  \
+             p95 {p95:>7.1} ms  max {:>7.1} ms",
             lats.last().unwrap()
         );
+        report.record(&format!("openloop_p50_ms_lambda{lambda_rps:.0}"), p50);
+        report.record(&format!("openloop_p95_ms_lambda{lambda_rps:.0}"), p95);
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
     }
 
     if !Path::new("artifacts/manifest.json").exists() {
@@ -81,7 +149,15 @@ fn main() {
     }
 
     section("PJRT runtime (trained tiny model)");
-    let runtime = RwkvRuntime::load(Path::new("artifacts")).unwrap();
+    // stub builds (no `pjrt` feature) error at load even with artifacts
+    // present — skip rather than panic
+    let runtime = match RwkvRuntime::load(Path::new("artifacts")) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("PJRT runtime unavailable ({e}) — skipping PJRT benches");
+            return;
+        }
+    };
     let state = runtime.init_state();
     bench("runtime.step (exact variant)", || {
         runtime.step(Variant::Exact, &state, 17).unwrap()

@@ -5,7 +5,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use super::{FinishReason, GenRequest};
 use crate::model::sampler::Sampler;
@@ -19,14 +19,63 @@ pub trait EngineModel {
     fn init_state(&self) -> Vec<f32>;
     /// One step; returns logits and mutates `state` in place.
     fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>>;
-    /// Optional bulk prefill; default = token-by-token.
+
+    /// Batched decode: advance each (state, token) pair by one step,
+    /// returning one *per-session* logits outcome, in order — so one
+    /// failing session cannot poison its batchmates (each entry's state
+    /// is advanced exactly once, error or not).
+    ///
+    /// The default loops [`EngineModel::forward`]; batch-aware models
+    /// override it to fuse the B per-matrix matvecs into one matmul so
+    /// every weight row fetched does B columns of MAC work — the
+    /// software analog of the paper's on-chip weight reuse (§Perf L3-3).
+    fn forward_batch(
+        &mut self,
+        states: &mut [&mut Vec<f32>],
+        tokens: &[u32],
+        variant: Variant,
+    ) -> Vec<Result<Vec<f32>>> {
+        states
+            .iter_mut()
+            .zip(tokens)
+            .map(|(state, &tok)| self.forward(state, tok, variant))
+            .collect()
+    }
+
+    /// Optional bulk prefill; default = token-by-token.  An empty prompt
+    /// is an error: returning empty logits would send every caller's
+    /// sampler out of bounds (BOS-pad upstream instead, as
+    /// [`Engine::start`] does).
     fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("prefill requires at least one prompt token (pad empty prompts with BOS)");
+        }
         let mut logits = Vec::new();
         for &t in tokens {
             logits = self.forward(state, t, variant)?;
         }
         Ok(logits)
     }
+}
+
+/// Shared `forward_batch` glue for the native models: marshal the flat
+/// engine states into [`State`]s, run the fused batch step, scatter the
+/// states back, and wrap the (infallible) per-session logits in Ok.
+fn batch_via_step(
+    n_layer: usize,
+    d: usize,
+    states: &mut [&mut Vec<f32>],
+    step: impl FnOnce(&mut [State]) -> Vec<Vec<f32>>,
+) -> Vec<Result<Vec<f32>>> {
+    let mut sts: Vec<State> = states
+        .iter_mut()
+        .map(|s| State { data: std::mem::take(&mut **s), n_layer, d })
+        .collect();
+    let logits = step(&mut sts);
+    for (slot, st) in states.iter_mut().zip(sts) {
+        **slot = st.data;
+    }
+    logits.into_iter().map(Ok).collect()
 }
 
 impl EngineModel for RwkvRuntime {
@@ -49,6 +98,9 @@ impl EngineModel for RwkvRuntime {
     }
 
     fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
+        if tokens.is_empty() {
+            bail!("prefill requires at least one prompt token (pad empty prompts with BOS)");
+        }
         // chunk through the scan executable (exact variant only — the hw
         // artifact has no seq build), then finish with single steps
         let chunk = self.manifest.seq_chunk;
@@ -89,6 +141,15 @@ impl EngineModel for RwkvModel {
         *state = st.data;
         Ok(logits)
     }
+
+    fn forward_batch(
+        &mut self,
+        states: &mut [&mut Vec<f32>],
+        tokens: &[u32],
+        _variant: Variant,
+    ) -> Vec<Result<Vec<f32>>> {
+        batch_via_step(self.n_layer, self.d, states, |sts| self.step_batch(sts, tokens))
+    }
 }
 
 impl EngineModel for HwModel {
@@ -97,8 +158,7 @@ impl EngineModel for HwModel {
     }
 
     fn state_len(&self) -> usize {
-        let s = self.new_state();
-        s.n_layer * 5 * s.d
+        self.n_layer() * 5 * self.d()
     }
 
     fn init_state(&self) -> Vec<f32> {
@@ -106,11 +166,21 @@ impl EngineModel for HwModel {
     }
 
     fn forward(&mut self, state: &mut Vec<f32>, token: u32, _variant: Variant) -> Result<Vec<f32>> {
-        let proto = self.new_state();
-        let mut st = State { data: std::mem::take(state), n_layer: proto.n_layer, d: proto.d };
+        let (n_layer, d) = (self.n_layer(), self.d());
+        let mut st = State { data: std::mem::take(state), n_layer, d };
         let logits = self.step(&mut st, token);
         *state = st.data;
         Ok(logits)
+    }
+
+    fn forward_batch(
+        &mut self,
+        states: &mut [&mut Vec<f32>],
+        tokens: &[u32],
+        _variant: Variant,
+    ) -> Vec<Result<Vec<f32>>> {
+        let (n_layer, d) = (self.n_layer(), self.d());
+        batch_via_step(n_layer, d, states, |sts| self.step_batch(sts, tokens))
     }
 }
 
@@ -161,23 +231,105 @@ impl<M: EngineModel> Engine<M> {
         })
     }
 
-    /// One decode step for a session; returns Some(reason) when done.
-    pub fn step_session(&mut self, s: &mut ActiveSession) -> Result<Option<FinishReason>> {
-        let t0 = Instant::now();
+    /// First half of a decode step: commit the pending sampled token and
+    /// check the finish conditions.  Returns Some(reason) when the
+    /// session is done (no forward needed); otherwise the caller runs
+    /// the second half — forward + resample — per session via
+    /// [`Engine::step_session`] or fused via [`Engine::step_batch`].
+    pub fn commit_pending(&self, s: &mut ActiveSession) -> Option<FinishReason> {
         let tok = s.next_token;
         s.generated.push(tok);
         if s.req.stop_token == Some(tok) {
-            s.decode_seconds += t0.elapsed().as_secs_f64();
-            return Ok(Some(FinishReason::StopToken));
+            return Some(FinishReason::StopToken);
         }
         if s.generated.len() >= s.req.max_new_tokens {
-            s.decode_seconds += t0.elapsed().as_secs_f64();
-            return Ok(Some(FinishReason::MaxTokens));
+            return Some(FinishReason::MaxTokens);
         }
+        None
+    }
+
+    /// One decode step for a session; returns Some(reason) when done.
+    pub fn step_session(&mut self, s: &mut ActiveSession) -> Result<Option<FinishReason>> {
+        let t0 = Instant::now();
+        if let Some(reason) = self.commit_pending(s) {
+            s.decode_seconds += t0.elapsed().as_secs_f64();
+            return Ok(Some(reason));
+        }
+        let tok = *s.generated.last().expect("commit_pending pushed a token");
         let logits = self.model.forward(&mut s.state, tok, s.req.variant)?;
         s.next_token = s.sampler.sample(&logits);
         s.decode_seconds += t0.elapsed().as_secs_f64();
         Ok(None)
+    }
+
+    /// Second half of a batched decode cycle: advance every continuing
+    /// session (pending token already committed) with ONE
+    /// [`EngineModel::forward_batch`] per variant group, then resample.
+    /// Order within a group is the caller's — i.e. admission — order, so
+    /// round-robin fairness and determinism are preserved.  The batch
+    /// wall time is split evenly across participants for the per-session
+    /// decode metrics.
+    ///
+    /// Outcomes are per session, aligned with `sessions` (None =
+    /// advanced fine): a failing session reports its own error and its
+    /// batchmates keep generating — the same isolation the pre-fusion
+    /// per-session scheduler had.
+    pub fn step_batch(&mut self, sessions: &mut [&mut ActiveSession]) -> Vec<Option<anyhow::Error>> {
+        let n = sessions.len();
+        let mut errors: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        if n == 0 {
+            return errors;
+        }
+        let t0 = Instant::now();
+        let mut variants: Vec<Variant> = Vec::new();
+        for s in sessions.iter() {
+            if !variants.contains(&s.req.variant) {
+                variants.push(s.req.variant);
+            }
+        }
+        for variant in variants {
+            let idx: Vec<usize> = (0..n)
+                .filter(|&i| sessions[i].req.variant == variant)
+                .collect();
+            let tokens: Vec<u32> = idx
+                .iter()
+                .map(|&i| *sessions[i].generated.last().expect("pending token committed"))
+                .collect();
+            let results = {
+                let mut states: Vec<&mut Vec<f32>> = sessions
+                    .iter_mut()
+                    .filter(|s| s.req.variant == variant)
+                    .map(|s| &mut s.state)
+                    .collect();
+                self.model.forward_batch(&mut states, &tokens, variant)
+            };
+            // defensive: a misbehaving override returning the wrong
+            // count means the result/session alignment is unknown —
+            // fail the whole group rather than misassign logits
+            if results.len() != idx.len() {
+                for &i in &idx {
+                    errors[i] = Some(anyhow!(
+                        "forward_batch returned {} results for {} sessions",
+                        results.len(),
+                        idx.len()
+                    ));
+                }
+                continue;
+            }
+            for (slot, res) in results.into_iter().enumerate() {
+                let i = idx[slot];
+                let s = &mut *sessions[i];
+                match res {
+                    Ok(lg) => s.next_token = s.sampler.sample(&lg),
+                    Err(e) => errors[i] = Some(e),
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64() / n as f64;
+        for s in sessions.iter_mut() {
+            s.decode_seconds += dt;
+        }
+        errors
     }
 }
 
@@ -238,6 +390,85 @@ mod tests {
         let mut s = e.start(0, GenRequest::greedy(vec![], 3), Instant::now()).unwrap();
         while e.step_session(&mut s).unwrap().is_none() {}
         assert_eq!(s.generated.len(), 3);
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_loop() {
+        let mut a = test_model(2, 32, 64, 50);
+        let mut b = test_model(2, 32, 64, 50);
+        let mut states_a: Vec<Vec<f32>> = (0..3).map(|_| a.init_state()).collect();
+        let mut states_b = states_a.clone();
+        let tokens = [3u32, 7, 9];
+        let loop_logits: Vec<Vec<f32>> = states_a
+            .iter_mut()
+            .zip(tokens)
+            .map(|(s, t)| a.forward(s, t, Variant::Exact).unwrap())
+            .collect();
+        let batch_logits: Vec<Vec<f32>> = {
+            let mut refs: Vec<&mut Vec<f32>> = states_b.iter_mut().collect();
+            b.forward_batch(&mut refs, &tokens, Variant::Exact)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect()
+        };
+        assert_eq!(loop_logits, batch_logits);
+        assert_eq!(states_a, states_b);
+    }
+
+    #[test]
+    fn prefill_rejects_empty_prompt() {
+        let mut m = test_model(1, 32, 64, 50);
+        let mut state = m.init_state();
+        assert!(m.prefill(&mut state, &[], Variant::Exact).is_err());
+    }
+
+    #[test]
+    fn engine_step_batch_equals_step_session() {
+        // two engines over the same model: one driven per session, one
+        // through commit_pending + step_batch — identical tokens
+        let mut per = engine();
+        let mut bat = engine();
+        let reqs = [
+            GenRequest::greedy(vec![1, 2, 3], 9),
+            GenRequest::greedy(vec![4], 9),
+            GenRequest::greedy(vec![5, 6], 9),
+        ];
+        let mut ps: Vec<ActiveSession> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| per.start(i as u64, r.clone(), Instant::now()).unwrap())
+            .collect();
+        let mut bs: Vec<ActiveSession> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| bat.start(i as u64, r.clone(), Instant::now()).unwrap())
+            .collect();
+        // per-session path
+        for s in ps.iter_mut() {
+            while per.step_session(s).unwrap().is_none() {}
+        }
+        // batched path
+        let mut done = vec![false; bs.len()];
+        loop {
+            let mut live: Vec<&mut ActiveSession> = Vec::new();
+            for (s, d) in bs.iter_mut().zip(done.iter_mut()) {
+                if *d {
+                    continue;
+                }
+                match bat.commit_pending(s) {
+                    Some(_) => *d = true,
+                    None => live.push(s),
+                }
+            }
+            if live.is_empty() {
+                break;
+            }
+            let errs = bat.step_batch(&mut live);
+            assert!(errs.iter().all(|e| e.is_none()));
+        }
+        for (p, b) in ps.iter().zip(&bs) {
+            assert_eq!(p.generated, b.generated);
+        }
     }
 
     #[test]

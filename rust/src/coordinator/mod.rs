@@ -4,10 +4,13 @@
 //! production deployment still needs admission, fair scheduling across
 //! concurrent sessions, state management and metrics, so the coordinator
 //! implements vLLM-style *continuous batching at the session level*: a
-//! worker thread owns the PJRT runtime exclusively and round-robins one
-//! decode step per active session per scheduling cycle, admitting queued
-//! requests as slots free up.  Recurrent state (the RWKV advantage: O(d)
-//! per session, no KV cache growth) lives in the session table.
+//! worker thread owns the PJRT runtime exclusively and advances every
+//! active session by one decode step per scheduling cycle — fused into a
+//! single batched forward so each weight matrix is streamed once per
+//! cycle and reused across all B sessions (the software analog of the
+//! paper's on-chip weight reuse) — admitting queued requests as slots
+//! free up.  Recurrent state (the RWKV advantage: O(d) per session, no
+//! KV cache growth) lives in the session table.
 //!
 //! * [`engine`]    — prefill (chunked through the `seq` executable) +
 //!   step decode against [`crate::runtime::RwkvRuntime`].

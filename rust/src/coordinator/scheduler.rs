@@ -4,7 +4,11 @@
 //! exclusively.  Each scheduling cycle it (1) admits queued requests up
 //! to `max_active`, (2) advances every active session by exactly one
 //! decode step in admission order — round-robin fairness, no starvation —
-//! and (3) completes finished sessions.
+//! via a single fused [`Engine::step_batch`] forward that reuses each
+//! weight matrix across all active sessions, and (3) completes finished
+//! sessions.  Batched and per-session decode are bit-exact for the
+//! native models, so scheduling capacity never changes a session's
+//! tokens (asserted by `prop_interleaving_preserves_outputs`).
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -15,7 +19,7 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{ActiveSession, Engine, EngineModel};
 use super::metrics::Metrics;
-use super::{GenRequest, GenResponse};
+use super::{FinishReason, GenRequest, GenResponse};
 
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
@@ -161,15 +165,36 @@ fn worker_loop<M: EngineModel>(
             }
         }
 
-        // 3. one decode step per active session, admission order
-        let mut finished = Vec::new();
-        for (i, (sess, _)) in active.iter_mut().enumerate() {
-            match engine.step_session(sess) {
-                Ok(Some(reason)) => finished.push((i, Ok(reason))),
-                Ok(None) => {}
-                Err(e) => finished.push((i, Err(e))),
+        // 3. decode cycle: commit every session's pending token in
+        //    admission order, then advance all continuing sessions with
+        //    ONE batched forward — each weight matrix is streamed once
+        //    per cycle and reused across all B sessions instead of being
+        //    refetched B times (§Perf L3-3 weight-reuse amortization).
+        let mut finished: Vec<(usize, Result<FinishReason>)> = Vec::new();
+        {
+            let mut live: Vec<(usize, &mut ActiveSession)> = Vec::new();
+            for (i, (sess, _)) in active.iter_mut().enumerate() {
+                match engine.commit_pending(sess) {
+                    Some(reason) => finished.push((i, Ok(reason))),
+                    None => live.push((i, sess)),
+                }
+            }
+            if !live.is_empty() {
+                let errs = {
+                    let mut batch: Vec<&mut ActiveSession> =
+                        live.iter_mut().map(|(_, s)| &mut **s).collect();
+                    engine.step_batch(&mut batch)
+                };
+                // per-session outcomes: a failing session finishes with
+                // its own error, its batchmates keep generating
+                for ((i, _), err) in live.into_iter().zip(errs) {
+                    if let Some(e) = err {
+                        finished.push((i, Err(e)));
+                    }
+                }
             }
         }
+        finished.sort_by_key(|&(i, _)| i);
         // 4. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
             let (sess, reply) = active.remove(i);

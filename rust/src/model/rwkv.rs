@@ -1,6 +1,23 @@
 //! RWKV-4 f32 forward pass — the Rust twin of the JAX `exact` variant
 //! (`python/compile/model.py::step`).  Validated against the AOT HLO
 //! executable in `rust/tests/golden_parity.rs`.
+//!
+//! # Perf notes
+//!
+//! * §Perf L3-1 ([`matvec`]): the dot product runs 8 independent
+//!   accumulators so LLVM can vectorize (see the function doc).
+//! * §Perf L3-3 ([`matmul`] / [`RwkvModel::step_batch`]): batched decode
+//!   stacks the B active sessions' activations into a `[B, d]` panel and
+//!   runs ONE matmul per weight matrix instead of B matvecs.  The kernel
+//!   loops weight *rows* in the outer loop and blocks the panel columns
+//!   in groups of four, so each weight chunk loaded into registers feeds
+//!   four sessions' accumulators before being evicted — the software
+//!   analog of the paper's on-chip weight reuse (chunked double buffering
+//!   exists so every weight word fetched does as much MAC work as
+//!   possible; here every weight row streamed from cache does B columns
+//!   of MAC work).  Per-column accumulation order is kept identical to
+//!   [`matvec`], so batched decode is bit-exact with sequential decode
+//!   (asserted in `rust/tests/batch_parity.rs`).
 
 use anyhow::{bail, Result};
 
@@ -137,7 +154,98 @@ pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
         for k in chunks * 8..l {
             tail += row[k] * x[k];
         }
-        *o = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]) + tail;
+        *o = reduce8(acc, tail);
+    }
+}
+
+/// Reduce the 8 accumulators exactly like [`matvec`] does — one shared
+/// expression so the batched kernel cannot drift from the sequential one.
+#[inline]
+fn reduce8(acc: [f32; 8], tail: f32) -> f32 {
+    (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]) + tail
+}
+
+/// w[m,l] @ xs[b,l]ᵀ -> out[b,m]: the batched-decode twin of [`matvec`].
+///
+/// `xs` holds B activation columns back to back (`xs[j*l..(j+1)*l]` is
+/// session j's vector); `out` is laid out the same way per session.
+///
+/// Perf note (§Perf L3-3): the outer loop walks weight rows and the
+/// panel columns are blocked four at a time, so each 8-wide weight chunk
+/// is loaded once and multiplied into four sessions' accumulators —
+/// B-fold weight reuse instead of streaming the matrix once per session.
+/// Each column keeps the exact [`matvec`] accumulation order (8
+/// accumulators, same reduction tree), so per-column results are
+/// bit-exact with the sequential path at any B.
+pub fn matmul(w: &[f32], xs: &[f32], out: &mut [f32], b: usize) {
+    if b == 0 {
+        return;
+    }
+    let l = xs.len() / b;
+    let m = out.len() / b;
+    // hard asserts: unlike matvec, the extra `b` parameter lets slice
+    // lengths disagree, which would silently misindex in release builds
+    assert_eq!(xs.len(), b * l, "xs must hold exactly b columns");
+    assert_eq!(out.len(), b * m, "out must hold exactly b columns");
+    assert_eq!(w.len(), m * l, "w shape inconsistent with xs/out panels");
+    let chunks = l / 8;
+    for r in 0..m {
+        let row = &w[r * l..(r + 1) * l];
+        let mut j = 0usize;
+        while j + 4 <= b {
+            let x0 = &xs[j * l..(j + 1) * l];
+            let x1 = &xs[(j + 1) * l..(j + 2) * l];
+            let x2 = &xs[(j + 2) * l..(j + 3) * l];
+            let x3 = &xs[(j + 3) * l..(j + 4) * l];
+            let mut a0 = [0f32; 8];
+            let mut a1 = [0f32; 8];
+            let mut a2 = [0f32; 8];
+            let mut a3 = [0f32; 8];
+            for c in 0..chunks {
+                let o = c * 8;
+                let rb = &row[o..o + 8];
+                let b0 = &x0[o..o + 8];
+                let b1 = &x1[o..o + 8];
+                let b2 = &x2[o..o + 8];
+                let b3 = &x3[o..o + 8];
+                for k in 0..8 {
+                    a0[k] += rb[k] * b0[k];
+                    a1[k] += rb[k] * b1[k];
+                    a2[k] += rb[k] * b2[k];
+                    a3[k] += rb[k] * b3[k];
+                }
+            }
+            let (mut t0, mut t1, mut t2, mut t3) = (0f32, 0f32, 0f32, 0f32);
+            for k in chunks * 8..l {
+                t0 += row[k] * x0[k];
+                t1 += row[k] * x1[k];
+                t2 += row[k] * x2[k];
+                t3 += row[k] * x3[k];
+            }
+            out[j * m + r] = reduce8(a0, t0);
+            out[(j + 1) * m + r] = reduce8(a1, t1);
+            out[(j + 2) * m + r] = reduce8(a2, t2);
+            out[(j + 3) * m + r] = reduce8(a3, t3);
+            j += 4;
+        }
+        while j < b {
+            let x = &xs[j * l..(j + 1) * l];
+            let mut acc = [0f32; 8];
+            for c in 0..chunks {
+                let o = c * 8;
+                let rb = &row[o..o + 8];
+                let xb = &x[o..o + 8];
+                for k in 0..8 {
+                    acc[k] += rb[k] * xb[k];
+                }
+            }
+            let mut tail = 0f32;
+            for k in chunks * 8..l {
+                tail += row[k] * x[k];
+            }
+            out[j * m + r] = reduce8(acc, tail);
+            j += 1;
+        }
     }
 }
 
@@ -347,6 +455,174 @@ impl RwkvModel {
         }
     }
 
+    /// Batched autoregressive step: advance B independent sessions one
+    /// token each, sharing every weight-matrix pass across the batch.
+    ///
+    /// `states[j]` and `tokens[j]` belong to session j; returns one
+    /// logits vector per session, in order.  The elementwise WKV
+    /// recurrence runs per session; the seven projections per block run
+    /// as single [`matmul`]s over the `[B, d]` activation panel, so each
+    /// weight matrix is streamed once per decode cycle instead of B
+    /// times (§Perf L3-3).  Results are bit-exact with calling
+    /// [`RwkvModel::step`] per session.
+    pub fn step_batch(&self, states: &mut [State], tokens: &[u32]) -> Vec<Vec<f32>> {
+        BATCH_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            self.step_batch_buf(states, tokens, &mut buf)
+        })
+    }
+
+    /// Batched step with caller-provided scratch (allocation-free hot
+    /// path; see [`RwkvModel::step_batch`]).
+    pub fn step_batch_buf(
+        &self,
+        states: &mut [State],
+        tokens: &[u32],
+        buf: &mut BatchBuffers,
+    ) -> Vec<Vec<f32>> {
+        let b = states.len();
+        assert_eq!(tokens.len(), b, "one token per session");
+        if b == 0 {
+            return Vec::new();
+        }
+        let d = self.d;
+        buf.ensure(d, self.f, b);
+
+        // embedding + ln0, per column
+        for (j, &tok) in tokens.iter().enumerate() {
+            let o = j * d;
+            let emb_row = &self.emb[tok as usize * d..(tok as usize + 1) * d];
+            layernorm(emb_row, &self.ln0_w, &self.ln0_b, &mut buf.x[o..o + d]);
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            self.time_mixing_batch(blk, l, states, buf);
+            for i in 0..b * d {
+                buf.x[i] += buf.dx[i];
+            }
+            self.channel_mixing_batch(blk, l, states, buf);
+            for i in 0..b * d {
+                buf.x[i] += buf.dx[i];
+            }
+        }
+
+        for j in 0..b {
+            let o = j * d;
+            layernorm(&buf.x[o..o + d], &self.ln_out_w, &self.ln_out_b, &mut buf.xn[o..o + d]);
+        }
+        let mut logits = vec![0f32; b * self.vocab];
+        matmul(&self.head, &buf.xn[..b * d], &mut logits, b);
+        logits.chunks(self.vocab).map(|c| c.to_vec()).collect()
+    }
+
+    fn time_mixing_batch(
+        &self,
+        blk: &Block,
+        l: usize,
+        states: &mut [State],
+        buf: &mut BatchBuffers,
+    ) {
+        let d = self.d;
+        let b = states.len();
+        for (j, st) in states.iter_mut().enumerate() {
+            let o = j * d;
+            layernorm(&buf.x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut buf.xn[o..o + d]);
+            act_quant(&mut buf.xn[o..o + d], self.act_bits);
+            {
+                let xp = st.row(l, 0);
+                for i in 0..d {
+                    let xn = buf.xn[o + i];
+                    buf.xk[o + i] = xn * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
+                    buf.xv[o + i] = xn * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
+                    buf.xr[o + i] = xn * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
+                }
+            }
+            st.row_mut(l, 0).copy_from_slice(&buf.xn[o..o + d]);
+        }
+        matmul(&blk.att_receptance, &buf.xr, &mut buf.r, b);
+        matmul(&blk.att_key, &buf.xk, &mut buf.k, b);
+        matmul(&blk.att_value, &buf.xv, &mut buf.v, b);
+        for j in 0..b {
+            let o = j * d;
+            act_quant(&mut buf.k[o..o + d], self.act_bits);
+            act_quant(&mut buf.v[o..o + d], self.act_bits);
+        }
+
+        // per-session elementwise WKV recurrence (state stays private)
+        for (j, st) in states.iter_mut().enumerate() {
+            let o = j * d;
+            for i in 0..d {
+                let r = sigmoid(buf.r[o + i]);
+                let (k, v) = (buf.k[o + i], buf.v[o + i]);
+                let aa = st.row(l, 2)[i];
+                let bb = st.row(l, 3)[i];
+                let pp = st.row(l, 4)[i];
+                let w_eff = -blk.att_decay[i].exp();
+                let u = blk.att_first[i];
+
+                // output branch
+                let ww = u + k;
+                let qq = pp.max(ww);
+                let e1 = (pp - qq).exp();
+                let e2 = (ww - qq).exp();
+                let wkv = (e1 * aa + e2 * v) / (e1 * bb + e2);
+
+                // state branch
+                let ww = pp + w_eff;
+                let qq = ww.max(k);
+                let e1 = (ww - qq).exp();
+                let e2 = (k - qq).exp();
+                st.row_mut(l, 2)[i] = e1 * aa + e2 * v;
+                st.row_mut(l, 3)[i] = e1 * bb + e2;
+                st.row_mut(l, 4)[i] = qq;
+
+                buf.gated_d[o + i] = r * wkv;
+            }
+            act_quant(&mut buf.gated_d[o..o + d], self.act_bits);
+        }
+        matmul(&blk.att_output, &buf.gated_d, &mut buf.dx, b);
+    }
+
+    fn channel_mixing_batch(
+        &self,
+        blk: &Block,
+        l: usize,
+        states: &mut [State],
+        buf: &mut BatchBuffers,
+    ) {
+        let d = self.d;
+        let f = self.f;
+        let b = states.len();
+        for (j, st) in states.iter_mut().enumerate() {
+            let o = j * d;
+            layernorm(&buf.x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut buf.xn[o..o + d]);
+            act_quant(&mut buf.xn[o..o + d], self.act_bits);
+            {
+                let xp = st.row(l, 1);
+                for i in 0..d {
+                    let xn = buf.xn[o + i];
+                    buf.xk[o + i] = xn * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
+                    buf.xr[o + i] = xn * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
+                }
+            }
+            st.row_mut(l, 1).copy_from_slice(&buf.xn[o..o + d]);
+        }
+        matmul(&blk.ffn_receptance, &buf.xr, &mut buf.r, b);
+        matmul(&blk.ffn_key, &buf.xk, &mut buf.kf, b);
+        for v in buf.kf.iter_mut() {
+            let relu = v.max(0.0);
+            *v = relu * relu;
+        }
+        for j in 0..b {
+            let of = j * f;
+            act_quant(&mut buf.kf[of..of + f], self.act_bits);
+        }
+        matmul(&blk.ffn_value, &buf.kf, &mut buf.dx, b);
+        for i in 0..b * d {
+            buf.dx[i] *= sigmoid(buf.r[i]);
+        }
+    }
+
     /// Log-softmax of logits (for scoring).
     pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
         let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
@@ -357,6 +633,78 @@ impl RwkvModel {
 
 thread_local! {
     static SCRATCH: std::cell::RefCell<Option<Buffers>> = const { std::cell::RefCell::new(None) };
+    static BATCH_SCRATCH: std::cell::RefCell<BatchBuffers> =
+        std::cell::RefCell::new(BatchBuffers::new());
+}
+
+/// Scratch panels for batched decode: every per-activation buffer from
+/// [`Buffers`], widened to B columns laid out session-major (column j of
+/// panel `p` lives at `p[j*d..(j+1)*d]`, or `j*f` for the FFN hidden).
+/// Resized on demand so one thread-local serves any batch width; the
+/// hw-numerics batch path (`rwkv_hw`) reuses the same struct.
+pub struct BatchBuffers {
+    pub(crate) x: Vec<f32>,
+    pub(crate) xn: Vec<f32>,
+    pub(crate) xk: Vec<f32>,
+    pub(crate) xv: Vec<f32>,
+    pub(crate) xr: Vec<f32>,
+    pub(crate) r: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) kf: Vec<f32>,
+    pub(crate) gated_d: Vec<f32>,
+    pub(crate) dx: Vec<f32>,
+}
+
+impl BatchBuffers {
+    pub fn new() -> BatchBuffers {
+        BatchBuffers {
+            x: Vec::new(),
+            xn: Vec::new(),
+            xk: Vec::new(),
+            xv: Vec::new(),
+            xr: Vec::new(),
+            r: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            kf: Vec::new(),
+            gated_d: Vec::new(),
+            dx: Vec::new(),
+        }
+    }
+
+    /// Size every panel for a (d, f, B) batch.  Panels are pure outputs
+    /// (fully written before any read each step), so when the size is
+    /// already right this is free — no per-step re-zeroing.
+    pub(crate) fn ensure(&mut self, d: usize, f: usize, b: usize) {
+        for p in [
+            &mut self.x,
+            &mut self.xn,
+            &mut self.xk,
+            &mut self.xv,
+            &mut self.xr,
+            &mut self.r,
+            &mut self.k,
+            &mut self.v,
+            &mut self.gated_d,
+            &mut self.dx,
+        ] {
+            if p.len() != b * d {
+                p.clear();
+                p.resize(b * d, 0.0);
+            }
+        }
+        if self.kf.len() != b * f {
+            self.kf.clear();
+            self.kf.resize(b * f, 0.0);
+        }
+    }
+}
+
+impl Default for BatchBuffers {
+    fn default() -> BatchBuffers {
+        BatchBuffers::new()
+    }
 }
 
 /// Scratch buffers reused across steps (perf: no per-step allocation).
@@ -500,6 +848,77 @@ pub mod tests {
         m.quantize_matrices(Scheme::Pot);
         assert_eq!(m.blocks[0].att_decay, decay);
         assert_ne!(m.blocks[0].att_key, key_before);
+    }
+
+    #[test]
+    fn matmul_is_per_column_matvec() {
+        // exercise the 4-column block, the remainder columns, and the
+        // non-multiple-of-8 tail of the dot product
+        let mut rng = crate::Rng64::new(9);
+        for (m, l, b) in [(5, 12, 1), (7, 16, 3), (9, 19, 4), (11, 33, 7), (4, 8, 9)] {
+            let w: Vec<f32> = (0..m * l).map(|_| rng.normal() as f32 * 0.2).collect();
+            let xs: Vec<f32> = (0..b * l).map(|_| rng.normal() as f32 * 0.5).collect();
+            let mut out = vec![0f32; b * m];
+            matmul(&w, &xs, &mut out, b);
+            let mut col = vec![0f32; m];
+            for j in 0..b {
+                matvec(&w, &xs[j * l..(j + 1) * l], &mut col);
+                for r in 0..m {
+                    assert_eq!(
+                        out[j * m + r].to_bits(),
+                        col[r].to_bits(),
+                        "m={m} l={l} b={b} col {j} row {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_batch_bitexact_with_step() {
+        // d and f chosen to exercise the vector-tail paths too
+        let m = test_model(2, 36, 52, 41);
+        let b = 5;
+        let mut seq: Vec<State> = (0..b).map(|_| m.new_state()).collect();
+        let mut bat: Vec<State> = (0..b).map(|_| m.new_state()).collect();
+        // diverge the histories before batching
+        for j in 0..b {
+            m.step(&mut seq[j], (j * 3 % 41) as u32);
+            m.step(&mut bat[j], (j * 3 % 41) as u32);
+        }
+        for t in 0..8 {
+            let tokens: Vec<u32> = (0..b).map(|j| ((t * 7 + j * 5) % 41) as u32).collect();
+            let batch_logits = m.step_batch(&mut bat, &tokens);
+            for j in 0..b {
+                let seq_logits = m.step(&mut seq[j], tokens[j]);
+                assert_eq!(seq_logits, batch_logits[j], "t={t} session {j}");
+                assert_eq!(seq[j], bat[j], "t={t} session {j} state");
+            }
+        }
+    }
+
+    #[test]
+    fn step_batch_quantized_activations_bitexact() {
+        let mut m = test_model(2, 32, 64, 50);
+        m.act_bits = Some(9);
+        let b = 3;
+        let mut seq: Vec<State> = (0..b).map(|_| m.new_state()).collect();
+        let mut bat: Vec<State> = (0..b).map(|_| m.new_state()).collect();
+        for t in 0..6 {
+            let tokens: Vec<u32> = (0..b).map(|j| ((t * 11 + j * 17) % 50) as u32).collect();
+            let batch_logits = m.step_batch(&mut bat, &tokens);
+            for j in 0..b {
+                let seq_logits = m.step(&mut seq[j], tokens[j]);
+                assert_eq!(seq_logits, batch_logits[j], "t={t} session {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_batch_empty_is_empty() {
+        let m = test_model(1, 16, 32, 20);
+        let logits = m.step_batch(&mut [], &[]);
+        assert!(logits.is_empty());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use std::collections::HashMap;
 
-use super::rwkv::{matvec, RwkvModel, State};
+use super::rwkv::{matmul, matvec, BatchBuffers, RwkvModel, State};
 use crate::arith::{Divu, ExpSigmoidUnit};
 use crate::quant::DpotTensor;
 
@@ -149,6 +149,14 @@ impl HwModel {
 
     pub fn vocab(&self) -> usize {
         self.base.vocab
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.base.n_layer
+    }
+
+    pub fn d(&self) -> usize {
+        self.base.d
     }
 
     fn scale(&self, l: usize, site: &'static str) -> f32 {
@@ -297,6 +305,161 @@ impl HwModel {
         self.clip_events = clips;
         logits
     }
+
+    /// Batched autoregressive step on the hardware datapath: the B
+    /// sessions share one [`matmul`] per Δ-PoT matrix (B-fold weight
+    /// reuse, §Perf L3-3) while every per-site 9-bit quantization,
+    /// LUT/PWL nonlinearity and the WKV recurrence run column-wise per
+    /// session — so each column is bit-exact with [`HwModel::step`].
+    /// `clip_events` afterwards holds the clip total across this call's
+    /// whole batch (the same observability signal, aggregated).  Note:
+    /// like the sequential [`HwModel::step`], each call overwrites the
+    /// counter — if an engine splits one decode cycle into several
+    /// variant groups, only the last group's total is visible.
+    pub fn step_batch(&mut self, states: &mut [State], tokens: &[u32]) -> Vec<Vec<f32>> {
+        HW_BATCH_SCRATCH.with(|cell| {
+            let mut panels = cell.borrow_mut();
+            self.step_batch_panels(states, tokens, &mut panels)
+        })
+    }
+
+    fn step_batch_panels(
+        &mut self,
+        states: &mut [State],
+        tokens: &[u32],
+        panels: &mut BatchBuffers,
+    ) -> Vec<Vec<f32>> {
+        let b = states.len();
+        assert_eq!(tokens.len(), b, "one token per session");
+        if b == 0 {
+            return Vec::new();
+        }
+        let d = self.base.d;
+        let f = self.base.f;
+        let mut clips = 0u64;
+        panels.ensure(d, f, b);
+        let BatchBuffers { x, xn, xk, xv, xr, r, k, v, kf, gated_d: gated, dx } = panels;
+
+        for (j, &tok) in tokens.iter().enumerate() {
+            let o = j * d;
+            let emb_row = &self.q.emb[tok as usize * d..(tok as usize + 1) * d];
+            self.hw_layernorm(emb_row, &self.base.ln0_w, &self.base.ln0_b, &mut x[o..o + d]);
+        }
+
+        for l in 0..self.base.n_layer {
+            let blk = &self.base.blocks[l];
+            let qb = &self.q.blocks[l];
+
+            // ---- time mixing --------------------------------------------
+            for (j, st) in states.iter_mut().enumerate() {
+                let o = j * d;
+                self.hw_layernorm(&x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut xn[o..o + d]);
+                quant9(&mut xn[o..o + d], self.scale(l, "att_xn"), &mut clips);
+                {
+                    let xp = st.row(l, 0);
+                    for i in 0..d {
+                        let xni = xn[o + i];
+                        xk[o + i] = xni * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
+                        xv[o + i] = xni * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
+                        xr[o + i] = xni * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
+                    }
+                }
+                st.row_mut(l, 0).copy_from_slice(&xn[o..o + d]);
+            }
+            matmul(&qb.att_receptance, &xr, &mut *r, b);
+            matmul(&qb.att_key, &xk, &mut *k, b);
+            matmul(&qb.att_value, &xv, &mut *v, b);
+            for j in 0..b {
+                let o = j * d;
+                quant9(&mut k[o..o + d], self.scale(l, "att_k"), &mut clips);
+                quant9(&mut v[o..o + d], self.scale(l, "att_v"), &mut clips);
+            }
+
+            for (j, st) in states.iter_mut().enumerate() {
+                let o = j * d;
+                for i in 0..d {
+                    let rr = self.hw_sigmoid(r[o + i]);
+                    let aa = st.row(l, 2)[i];
+                    let bb = st.row(l, 3)[i];
+                    let pp = st.row(l, 4)[i];
+                    let w_eff = -blk.att_decay[i].exp();
+                    let u = blk.att_first[i];
+
+                    let ww = u + k[o + i];
+                    let qq = pp.max(ww);
+                    let e1 = self.hw_exp(pp - qq);
+                    let e2 = self.hw_exp(ww - qq);
+                    let wkv = self.hw_div(e1 * aa + e2 * v[o + i], e1 * bb + e2);
+
+                    let ww = pp + w_eff;
+                    let qq = ww.max(k[o + i]);
+                    let e1 = self.hw_exp(ww - qq);
+                    let e2 = self.hw_exp(k[o + i] - qq);
+                    st.row_mut(l, 2)[i] = e1 * aa + e2 * v[o + i];
+                    st.row_mut(l, 3)[i] = e1 * bb + e2;
+                    st.row_mut(l, 4)[i] = qq;
+                    gated[o + i] = rr * wkv;
+                }
+                quant9(&mut gated[o..o + d], self.scale(l, "att_gated"), &mut clips);
+            }
+            matmul(&qb.att_output, &gated, &mut *dx, b);
+            for i in 0..b * d {
+                x[i] += dx[i];
+            }
+
+            // ---- channel mixing -----------------------------------------
+            for (j, st) in states.iter_mut().enumerate() {
+                let o = j * d;
+                self.hw_layernorm(&x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut xn[o..o + d]);
+                quant9(&mut xn[o..o + d], self.scale(l, "ffn_xn"), &mut clips);
+                {
+                    let xp = st.row(l, 1);
+                    for i in 0..d {
+                        let xni = xn[o + i];
+                        xk[o + i] = xni * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
+                        xr[o + i] = xni * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
+                    }
+                }
+                st.row_mut(l, 1).copy_from_slice(&xn[o..o + d]);
+            }
+            matmul(&qb.ffn_receptance, &xr, &mut *r, b);
+            matmul(&qb.ffn_key, &xk, &mut *kf, b);
+            for kv in kf.iter_mut() {
+                let relu = kv.max(0.0);
+                *kv = relu * relu;
+            }
+            for j in 0..b {
+                let of = j * f;
+                quant9(&mut kf[of..of + f], self.scale(l, "ffn_k2"), &mut clips);
+            }
+            matmul(&qb.ffn_value, &kf, &mut *dx, b);
+            for i in 0..b * d {
+                dx[i] = self.hw_sigmoid(r[i]) * dx[i];
+                x[i] += dx[i];
+            }
+            for j in 0..b {
+                let o = j * d;
+                quant9(&mut x[o..o + d], self.scale(l, "resid"), &mut clips);
+            }
+        }
+
+        for j in 0..b {
+            let o = j * d;
+            let (w, bias) = (&self.base.ln_out_w, &self.base.ln_out_b);
+            self.hw_layernorm(&x[o..o + d], w, bias, &mut xn[o..o + d]);
+        }
+        let mut logits = vec![0f32; b * self.base.vocab];
+        matmul(&self.q.head, &xn, &mut logits, b);
+        self.clip_events = clips;
+        logits.chunks(self.base.vocab).map(|c| c.to_vec()).collect()
+    }
+}
+
+thread_local! {
+    // own thread-local (separate from rwkv's BATCH_SCRATCH, which is
+    // private to that module) reusing the same panel struct
+    static HW_BATCH_SCRATCH: std::cell::RefCell<BatchBuffers> =
+        std::cell::RefCell::new(BatchBuffers::new());
 }
 
 /// Calibration probe: replicate the f32 forward, reporting activations at

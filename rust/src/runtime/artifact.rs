@@ -78,6 +78,20 @@ impl Manifest {
         self.n_layer * 5 * self.d_model
     }
 
+    /// Fresh initial state vector (pp rows filled with `pp_init`) — the
+    /// single source of the state layout for both the real PJRT client
+    /// and the featureless stub.
+    pub fn init_state(&self) -> Vec<f32> {
+        let mut s = vec![0f32; self.state_len()];
+        let d = self.d_model;
+        for l in 0..self.n_layer {
+            for i in 0..d {
+                s[(l * 5 + 4) * d + i] = self.pp_init;
+            }
+        }
+        s
+    }
+
     /// Load the eval data JSON.
     pub fn load_eval_data(&self) -> Result<Json> {
         json::parse_file(&self.eval_data)

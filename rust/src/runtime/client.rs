@@ -6,23 +6,8 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::Manifest;
+use super::{StepOutput, Variant};
 use crate::model::weights::WeightFile;
-
-/// Which compiled model variant to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Variant {
-    /// exact numerics with the Pallas kernels lowered in
-    Exact,
-    /// every nonlinearity through the paper's hardware approximations
-    HwApprox,
-}
-
-/// Output of one step execution.
-#[derive(Clone, Debug)]
-pub struct StepOutput {
-    pub logits: Vec<f32>,
-    pub state: Vec<f32>,
-}
 
 /// The compiled runtime.  NOT Sync: PJRT buffers are used from the
 /// owning coordinator thread (the engine thread owns this exclusively).
@@ -90,15 +75,7 @@ impl RwkvRuntime {
 
     /// Fresh initial state vector.
     pub fn init_state(&self) -> Vec<f32> {
-        let m = &self.manifest;
-        let mut s = vec![0f32; m.state_len()];
-        let d = m.d_model;
-        for l in 0..m.n_layer {
-            for i in 0..d {
-                s[(l * 5 + 4) * d + i] = m.pp_init;
-            }
-        }
-        s
+        self.manifest.init_state()
     }
 
     fn exe(&self, variant: Variant) -> &xla::PjRtLoadedExecutable {

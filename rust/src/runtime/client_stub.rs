@@ -1,0 +1,59 @@
+//! Stub PJRT client for builds without the `pjrt` cargo feature.
+//!
+//! The real client (`client.rs`) wraps the offline-vendored `xla` crate,
+//! which cannot be expressed as a registry dependency.  This stub keeps
+//! the exact public API — `RwkvRuntime`, its methods, and the shared
+//! [`Variant`]/[`StepOutput`] types from the parent module — so every
+//! caller (engine, eval scorer, harness cross-checks, CLI) compiles
+//! unchanged; the only behavioural difference is that [`RwkvRuntime::load`]
+//! returns an error, which each of those paths already handles (they guard
+//! on artifact presence and surface `Result`s).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifact::Manifest;
+use super::{StepOutput, Variant};
+use crate::model::weights::WeightFile;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: hfrwkv was built without the `pjrt` \
+     feature (the offline `xla` crate is not in this build's dependency graph)";
+
+/// Stub runtime.  Never constructible — `load` always errors — but the
+/// type and its surface stay identical to the real client so the
+/// coordinator/eval/harness code is feature-independent.
+pub struct RwkvRuntime {
+    pub manifest: Manifest,
+}
+
+impl RwkvRuntime {
+    /// Always errors in stub builds.
+    pub fn load(_dir: &Path) -> Result<RwkvRuntime> {
+        bail!(UNAVAILABLE);
+    }
+
+    /// Replace the device-resident weights (unreachable in stub builds).
+    pub fn swap_weights(&mut self, _weights: &WeightFile) -> Result<()> {
+        bail!(UNAVAILABLE);
+    }
+
+    /// Fresh initial state vector.
+    pub fn init_state(&self) -> Vec<f32> {
+        self.manifest.init_state()
+    }
+
+    /// Execute one token step (unreachable in stub builds).
+    pub fn step(&self, _variant: Variant, _state: &[f32], _token: u32) -> Result<StepOutput> {
+        bail!(UNAVAILABLE);
+    }
+
+    /// Execute a SEQ_CHUNK-token chunk (unreachable in stub builds).
+    pub fn seq_chunk(&self, _state: &[f32], _tokens: &[u32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!(UNAVAILABLE);
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+}

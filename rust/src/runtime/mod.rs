@@ -13,9 +13,37 @@
 //! (`execute_b`), so the steady-state step cost is two small transfers
 //! (state in, logits+state out) — this was the biggest single win of the
 //! L3 perf pass (EXPERIMENTS.md §Perf).
+//!
+//! The PJRT client depends on the offline-vendored `xla` crate, which is
+//! not available as a registry dependency; builds without the `pjrt`
+//! cargo feature get an API-identical stub whose `load` errors, so every
+//! native-model path (the default serving configuration) still compiles
+//! and runs.  Enabling `pjrt` additionally requires adding the vendored
+//! crate to `rust/Cargo.toml` (e.g. `xla = { path = "../vendor/xla" }`);
+//! the feature flag alone cannot supply the dependency.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
+mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 mod client;
 
 pub use artifact::Manifest;
-pub use client::{RwkvRuntime, StepOutput, Variant};
+pub use client::RwkvRuntime;
+
+/// Which compiled model variant to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// exact numerics with the Pallas kernels lowered in
+    Exact,
+    /// every nonlinearity through the paper's hardware approximations
+    HwApprox,
+}
+
+/// Output of one step execution.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub state: Vec<f32>,
+}

@@ -87,6 +87,46 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable benchmark record: named scalar results accumulated
+/// during a bench run and written as `BENCH_<name>.json`, so successive
+/// PRs can diff performance trajectories without parsing stdout.
+pub struct BenchReport {
+    name: String,
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one named scalar (tok/s, speedup, latency ms, ...).
+    pub fn record(&mut self, key: &str, value: f64) -> &mut Self {
+        self.entries.push((key.to_string(), value));
+        self
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        self.write_in(std::path::Path::new("."))
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn write_in(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        use crate::util::json::Json;
+        let mut results = Json::obj();
+        for (k, v) in &self.entries {
+            results.set(k, *v);
+        }
+        let mut j = Json::obj();
+        j.set("bench", self.name.as_str());
+        j.set("results", results);
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, j.to_string())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +156,19 @@ mod tests {
             iters: 1,
         };
         assert!((s.throughput(1.0) - 1e7).abs() < 1.0);
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_json() {
+        let mut r = BenchReport::new("unit_test");
+        r.record("tok_s_b8", 1234.5).record("speedup_b8", 3.25);
+        let dir = std::env::temp_dir();
+        let path = r.write_in(&dir).unwrap();
+        let j = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "unit_test");
+        let res = j.req("results").unwrap();
+        assert!((res.req("speedup_b8").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-12);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -166,6 +166,30 @@ fn coordinator_handles_mixed_workload() {
 }
 
 #[test]
+fn staggered_finishes_preserve_outputs() {
+    // sessions leave the fused decode batch at different cycles
+    // (staggered max_new_tokens); the survivors' tokens must not move
+    let mk_req = |i: u64| GenRequest::greedy(vec![(i % 40) as u32 + 1], 2 + i as usize * 3);
+    let solo: Vec<Vec<u32>> = (0..6u64)
+        .map(|i| {
+            let c = Coordinator::spawn(
+                test_model(2, 32, 64, 50),
+                CoordinatorConfig { max_active: 1 },
+            );
+            c.generate(mk_req(i)).unwrap().tokens
+        })
+        .collect();
+    let c = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 6 },
+    );
+    let rxs: Vec<_> = (0..6u64).map(|i| c.submit(mk_req(i))).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().unwrap().tokens, solo[i], "request {i}");
+    }
+}
+
+#[test]
 fn coordinator_fifo_admission_under_saturation() {
     // with max_active=1 every request runs alone; completion order must
     // equal submission order (FIFO, no starvation)
