@@ -29,7 +29,7 @@ fn main() -> hfrwkv::Result<()> {
     println!("== serving (coordinator -> PJRT CPU, batch-1 model, 4-way continuous batching) ==");
     let coord = Coordinator::spawn_with(
         || RwkvRuntime::load(std::path::Path::new("artifacts")).expect("runtime"),
-        CoordinatorConfig { max_active: 4 },
+        CoordinatorConfig { max_active: 4, ..Default::default() },
     );
     // warm-up (compilation happens inside the worker)
     let _ = coord.generate(GenRequest::greedy(vec![1], 1))?;

@@ -58,7 +58,8 @@ where
     CAPS.iter()
         .map(|&cap| {
             let t0 = Instant::now();
-            let coord = Coordinator::spawn(mk(), CoordinatorConfig { max_active: cap });
+            let cfg = CoordinatorConfig { max_active: cap, ..Default::default() };
+            let coord = Coordinator::spawn(mk(), cfg);
             let rxs: Vec<_> = (0..N_REQUESTS)
                 .map(|i| coord.submit(GenRequest::greedy(vec![i % 128], TOKENS_PER_REQUEST)))
                 .collect();
@@ -98,7 +99,7 @@ fn main() {
     for lambda_rps in [20.0f64, 60.0, 120.0] {
         let coord = Coordinator::spawn(
             test_model(4, 128, 512, 128),
-            CoordinatorConfig { max_active: 4 },
+            CoordinatorConfig { max_active: 4, ..Default::default() },
         );
         let mut rng = hfrwkv::Rng64::new(7);
         let n = 40;
@@ -119,23 +120,26 @@ fn main() {
         // server-side end-to-end latency (queue + prefill + decode): the
         // client recv()s lag submission, so client-side clocks would
         // include idle waiting on *other* requests
-        let mut lats: Vec<f64> = rxs
-            .into_iter()
-            .map(|rx| {
-                let r = rx.recv().unwrap().unwrap();
-                (r.queue_seconds + r.prefill_seconds + r.decode_seconds) * 1e3
-            })
-            .collect();
+        let mut lats: Vec<f64> = Vec::new();
+        let mut ttfts: Vec<f64> = Vec::new();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            lats.push((r.queue_seconds + r.prefill_seconds + r.decode_seconds) * 1e3);
+            ttfts.push(r.ttft_seconds * 1e3);
+        }
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p50 = lats[lats.len() / 2];
         let p95 = lats[(lats.len() as f64 * 0.95) as usize];
+        let ttft_p50 = ttfts[ttfts.len() / 2];
         println!(
             "λ={lambda_rps:>5.0} req/s: e2e latency p50 {p50:>7.1} ms  \
-             p95 {p95:>7.1} ms  max {:>7.1} ms",
+             p95 {p95:>7.1} ms  max {:>7.1} ms  ttft p50 {ttft_p50:>6.2} ms",
             lats.last().unwrap()
         );
         report.record(&format!("openloop_p50_ms_lambda{lambda_rps:.0}"), p50);
         report.record(&format!("openloop_p95_ms_lambda{lambda_rps:.0}"), p95);
+        report.record(&format!("openloop_ttft_p50_ms_lambda{lambda_rps:.0}"), ttft_p50);
     }
 
     match report.write() {

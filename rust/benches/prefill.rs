@@ -1,0 +1,129 @@
+//! Prefill benchmark: sequence-parallel chunked prefill
+//! (`prefill_chunk`, §Perf L3-4) vs token-by-token prefill, swept over
+//! prompt length ∈ {16, 64, 256, 1024} for both the exact f32 model and
+//! the hardware-numerics model.
+//!
+//! Token-by-token prefill streams every weight matrix from memory once
+//! *per prompt token* (and pays a full `[vocab, d]` head projection per
+//! token whose logits are discarded); chunked prefill streams each
+//! matrix once *per chunk* and runs the head once.  The exact model
+//! here is sized like a real serving model — production-scale vocab
+//! (32768, as in the RWKV world tokenizer) and a weight set (~130 MB)
+//! far beyond any LLC, the regime the paper's chunked double buffering
+//! targets — so the per-token path is memory-bound with a discarded
+//! head projection per token, while the panel path stays compute-bound.
+//!
+//! Emits `BENCH_prefill.json` so future PRs can track the trajectory.
+
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::rwkv::RwkvModel;
+use hfrwkv::model::HwModel;
+use hfrwkv::util::bench::{bench, section, BenchReport};
+
+const LENS: [usize; 4] = [16, 64, 256, 1024];
+
+fn prompt(len: usize, vocab: usize) -> Vec<u32> {
+    (0..len).map(|t| ((t * 13 + 7) % vocab) as u32).collect()
+}
+
+/// Cross-check bit-exactness once before timing anything (the full
+/// parity story lives in `rust/tests/prefill_parity.rs`).
+fn assert_exact_parity(m: &RwkvModel, len: usize) {
+    let tokens = prompt(len, m.vocab);
+    let mut s_step = m.new_state();
+    let mut last = Vec::new();
+    for &t in &tokens {
+        last = m.step(&mut s_step, t);
+    }
+    let mut s_chunk = m.new_state();
+    let chunked = m.prefill_chunk(&mut s_chunk, &tokens);
+    assert_eq!(last, chunked, "chunked prefill must be bit-exact (len {len})");
+    assert_eq!(s_step, s_chunk, "chunked prefill state must match (len {len})");
+}
+
+fn main() {
+    let mut report = BenchReport::new("prefill");
+
+    section("exact f32 prefill: chunked vs token-by-token (4x384/1536, vocab 32768)");
+    println!("building model ...");
+    let m = test_model(4, 384, 1536, 32768);
+    assert_exact_parity(&m, 48);
+    // the assert above passed ⇒ chunked output is bit-exact with
+    // token-by-token on the exact path; record that in the report
+    report.record("exact_bitexact", 1.0);
+    for &len in &LENS {
+        let tokens = prompt(len, m.vocab);
+        let st = bench(&format!("exact token-by-token len={len}"), || {
+            let mut s = m.new_state();
+            let mut out = Vec::new();
+            for &t in &tokens {
+                out = m.step(&mut s, t);
+            }
+            out
+        });
+        let sc = bench(&format!("exact chunked len={len}"), || {
+            let mut s = m.new_state();
+            m.prefill_chunk(&mut s, &tokens)
+        });
+        let tok_tps = st.throughput(len as f64);
+        let chu_tps = sc.throughput(len as f64);
+        println!(
+            "  len {len:>5}: chunked {chu_tps:>9.0} tok/s vs token-by-token \
+             {tok_tps:>9.0} tok/s = {:.2}x",
+            chu_tps / tok_tps
+        );
+        report.record(&format!("exact_token_tok_s_len{len}"), tok_tps);
+        report.record(&format!("exact_chunked_tok_s_len{len}"), chu_tps);
+        report.record(&format!("exact_speedup_len{len}"), chu_tps / tok_tps);
+    }
+
+    section("hw-numerics prefill: chunked vs token-by-token (2x128/512, vocab 1024)");
+    println!("building + calibrating hw model ...");
+    let base = test_model(2, 128, 512, 1024);
+    let calib = prompt(64, base.vocab);
+    let mut hw = HwModel::from_f32(base, &calib);
+    // hw parity cross-check
+    {
+        let tokens = prompt(48, hw.vocab());
+        let mut s_step = hw.new_state();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = hw.step(&mut s_step, t);
+        }
+        let mut s_chunk = hw.new_state();
+        let chunked = hw.prefill_chunk(&mut s_chunk, &tokens);
+        assert_eq!(last, chunked, "hw chunked prefill must be bit-exact");
+        assert_eq!(s_step, s_chunk, "hw chunked prefill state must match");
+        report.record("hw_bitexact", 1.0);
+    }
+    for &len in &LENS {
+        let tokens = prompt(len, hw.vocab());
+        let st = bench(&format!("hw token-by-token len={len}"), || {
+            let mut s = hw.new_state();
+            let mut out = Vec::new();
+            for &t in &tokens {
+                out = hw.step(&mut s, t);
+            }
+            out
+        });
+        let sc = bench(&format!("hw chunked len={len}"), || {
+            let mut s = hw.new_state();
+            hw.prefill_chunk(&mut s, &tokens)
+        });
+        let tok_tps = st.throughput(len as f64);
+        let chu_tps = sc.throughput(len as f64);
+        println!(
+            "  len {len:>5}: chunked {chu_tps:>9.0} tok/s vs token-by-token \
+             {tok_tps:>9.0} tok/s = {:.2}x",
+            chu_tps / tok_tps
+        );
+        report.record(&format!("hw_token_tok_s_len{len}"), tok_tps);
+        report.record(&format!("hw_chunked_tok_s_len{len}"), chu_tps);
+        report.record(&format!("hw_speedup_len{len}"), chu_tps / tok_tps);
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
+}

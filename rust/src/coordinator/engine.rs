@@ -42,20 +42,63 @@ pub trait EngineModel {
             .collect()
     }
 
-    /// Optional bulk prefill; default = token-by-token.  An empty prompt
-    /// is an error: returning empty logits would send every caller's
-    /// sampler out of bounds (BOS-pad upstream instead, as
-    /// [`Engine::start`] does).
-    fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
-        if tokens.is_empty() {
-            bail!("prefill requires at least one prompt token (pad empty prompts with BOS)");
-        }
+    /// Consume a bounded slice of prompt tokens, returning the logits of
+    /// the slice's LAST token.  This is the scheduler's unit of prefill
+    /// work: a `Prefilling` session consumes one chunk per scheduling
+    /// cycle, interleaved with decode, so a long prompt cannot
+    /// head-of-line-block active decoders.
+    ///
+    /// The default runs token-by-token; sequence-parallel models
+    /// override it to stream each weight matrix ONCE per chunk over a
+    /// `[T, d]` token panel (§Perf L3-4).  An empty slice is an error:
+    /// returning empty logits would send every caller's sampler out of
+    /// bounds (BOS-pad upstream instead, as [`Engine::admit`] does).
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        variant: Variant,
+    ) -> Result<Vec<f32>> {
+        reject_empty_prompt(tokens)?;
         let mut logits = Vec::new();
         for &t in tokens {
             logits = self.forward(state, t, variant)?;
         }
         Ok(logits)
     }
+
+    /// Whole-prompt prefill: one maximal chunk.  Callers that need
+    /// bounded per-call latency use [`EngineModel::prefill_chunk`]
+    /// directly (the scheduler does).
+    fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
+        self.prefill_chunk(state, tokens, variant)
+    }
+}
+
+/// The one empty-prompt guard every prefill path shares: empty logits
+/// would send the caller's sampler out of bounds, so reject here.
+fn reject_empty_prompt(tokens: &[u32]) -> Result<()> {
+    if tokens.is_empty() {
+        bail!("prefill requires at least one prompt token (pad empty prompts with BOS)");
+    }
+    Ok(())
+}
+
+/// Shared `prefill_chunk` glue for the native models: reject empty
+/// slices, marshal the flat engine state into a [`State`], run the
+/// sequence-parallel panel prefill, scatter the state back.
+fn prefill_via_state(
+    n_layer: usize,
+    d: usize,
+    state: &mut Vec<f32>,
+    tokens: &[u32],
+    run: impl FnOnce(&mut State, &[u32]) -> Vec<f32>,
+) -> Result<Vec<f32>> {
+    reject_empty_prompt(tokens)?;
+    let mut st = State { data: std::mem::take(state), n_layer, d };
+    let logits = run(&mut st, tokens);
+    *state = st.data;
+    Ok(logits)
 }
 
 /// Shared `forward_batch` glue for the native models: marshal the flat
@@ -97,10 +140,13 @@ impl EngineModel for RwkvRuntime {
         Ok(out.logits)
     }
 
-    fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
-        if tokens.is_empty() {
-            bail!("prefill requires at least one prompt token (pad empty prompts with BOS)");
-        }
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        variant: Variant,
+    ) -> Result<Vec<f32>> {
+        reject_empty_prompt(tokens)?;
         // chunk through the scan executable (exact variant only — the hw
         // artifact has no seq build), then finish with single steps
         let chunk = self.manifest.seq_chunk;
@@ -150,6 +196,18 @@ impl EngineModel for RwkvModel {
     ) -> Vec<Result<Vec<f32>>> {
         batch_via_step(self.n_layer, self.d, states, |sts| self.step_batch(sts, tokens))
     }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        _variant: Variant,
+    ) -> Result<Vec<f32>> {
+        let (n_layer, d) = (self.n_layer, self.d);
+        prefill_via_state(n_layer, d, state, tokens, |st, toks| {
+            RwkvModel::prefill_chunk(self, st, toks)
+        })
+    }
 }
 
 impl EngineModel for HwModel {
@@ -182,21 +240,61 @@ impl EngineModel for HwModel {
         let (n_layer, d) = (self.n_layer(), self.d());
         batch_via_step(n_layer, d, states, |sts| self.step_batch(sts, tokens))
     }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        _variant: Variant,
+    ) -> Result<Vec<f32>> {
+        let (n_layer, d) = (self.n_layer(), self.d());
+        prefill_via_state(n_layer, d, state, tokens, |st, toks| {
+            HwModel::prefill_chunk(self, st, toks)
+        })
+    }
 }
 
-/// One in-flight generation (the session): prompt consumed, state held,
-/// decode in progress.
+/// Where a session is in its lifecycle.  Admission no longer runs the
+/// whole prompt inline: a session starts `Prefilling` and consumes one
+/// bounded chunk per scheduling cycle (via [`Engine::prefill_tick`]),
+/// interleaved with the batched decode of the sessions already in
+/// `Decoding` — continuous batching across both phases.
+#[derive(Clone, Debug)]
+pub enum SessionPhase {
+    /// Prompt being consumed; `pos` tokens of `req.prompt` (BOS-padded
+    /// in place at admission, never empty) are already folded into the
+    /// state.
+    Prefilling { pos: usize },
+    /// Prompt fully consumed; `next_token` holds the pending sample.
+    Decoding,
+}
+
+/// One in-flight generation (the session): state held, prompt being
+/// consumed or decode in progress (see [`SessionPhase`]).
 pub struct ActiveSession {
     pub request_id: u64,
     pub req: GenRequest,
+    pub phase: SessionPhase,
     pub state: Vec<f32>,
     pub generated: Vec<u32>,
     pub sampler: Sampler,
+    /// Sampled but not yet committed token — meaningless until the
+    /// session reaches [`SessionPhase::Decoding`].
     pub next_token: u32,
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
+    /// Time from enqueue to the first sampled token (set when prefill
+    /// completes; 0 while still prefilling).
+    pub ttft_seconds: f64,
     pub enqueued_at: Instant,
     pub started_at: Instant,
+}
+
+impl ActiveSession {
+    /// True once the prompt is fully consumed and decode can proceed.
+    pub fn is_decoding(&self) -> bool {
+        matches!(self.phase, SessionPhase::Decoding)
+    }
 }
 
 /// The engine drives sessions over any [`EngineModel`].
@@ -209,26 +307,68 @@ impl<M: EngineModel> Engine<M> {
         Engine { model }
     }
 
-    /// Admit a request: run prefill, sample the first token.
-    pub fn start(&mut self, request_id: u64, req: GenRequest, enqueued_at: Instant) -> Result<ActiveSession> {
-        let t0 = Instant::now();
-        let mut state = self.model.init_state();
-        let mut sampler = Sampler::new(req.temperature, req.top_k, req.seed);
-        let prompt = if req.prompt.is_empty() { vec![crate::model::tokenizer::BOS] } else { req.prompt.clone() };
-        let logits = self.model.prefill(&mut state, &prompt, req.variant)?;
-        let next_token = sampler.sample(&logits);
-        Ok(ActiveSession {
+    /// Admit a request WITHOUT doing any forward work: the session
+    /// enters [`SessionPhase::Prefilling`] and the scheduler drives it
+    /// through [`Engine::prefill_tick`] one bounded chunk at a time.
+    /// An empty prompt is BOS-padded in place (one prompt copy per
+    /// session, read by every tick — no duplicate allocation).
+    pub fn admit(&mut self, request_id: u64, mut req: GenRequest, enqueued_at: Instant) -> ActiveSession {
+        let state = self.model.init_state();
+        let sampler = Sampler::new(req.temperature, req.top_k, req.seed);
+        if req.prompt.is_empty() {
+            req.prompt = vec![crate::model::tokenizer::BOS];
+        }
+        ActiveSession {
             request_id,
             req,
+            phase: SessionPhase::Prefilling { pos: 0 },
             state,
             generated: Vec::new(),
             sampler,
-            next_token,
-            prefill_seconds: t0.elapsed().as_secs_f64(),
+            next_token: 0,
+            prefill_seconds: 0.0,
             decode_seconds: 0.0,
+            ttft_seconds: 0.0,
             enqueued_at,
-            started_at: t0,
-        })
+            started_at: Instant::now(),
+        }
+    }
+
+    /// Consume up to `max_chunk` prompt tokens of a `Prefilling` session
+    /// (ONE [`EngineModel::prefill_chunk`] call — a single matmul pass
+    /// per weight matrix for sequence-parallel models).  When the prompt
+    /// is exhausted the first token is sampled, time-to-first-token is
+    /// recorded, and the session moves to [`SessionPhase::Decoding`].
+    ///
+    /// Returns true once the session is decoding (immediately true for
+    /// sessions already there).
+    pub fn prefill_tick(&mut self, s: &mut ActiveSession, max_chunk: usize) -> Result<bool> {
+        let SessionPhase::Prefilling { pos } = &mut s.phase else {
+            return Ok(true);
+        };
+        let t0 = Instant::now();
+        let prompt = &s.req.prompt;
+        let end = pos.saturating_add(max_chunk.max(1)).min(prompt.len());
+        let logits = self.model.prefill_chunk(&mut s.state, &prompt[*pos..end], s.req.variant)?;
+        *pos = end;
+        let done = *pos == prompt.len();
+        s.prefill_seconds += t0.elapsed().as_secs_f64();
+        if done {
+            s.next_token = s.sampler.sample(&logits);
+            s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
+            s.phase = SessionPhase::Decoding;
+        }
+        Ok(done)
+    }
+
+    /// Admit a request and run its whole prefill to completion (one
+    /// maximal chunk): the blocking convenience path for tests, examples
+    /// and non-scheduler callers.
+    pub fn start(&mut self, request_id: u64, req: GenRequest, enqueued_at: Instant) -> Result<ActiveSession> {
+        let mut sess = self.admit(request_id, req, enqueued_at);
+        self.prefill_tick(&mut sess, usize::MAX)?;
+        debug_assert!(sess.is_decoding(), "maximal prefill_tick must finish the prompt");
+        Ok(sess)
     }
 
     /// First half of a decode step: commit the pending sampled token and
@@ -237,6 +377,11 @@ impl<M: EngineModel> Engine<M> {
     /// the second half — forward + resample — per session via
     /// [`Engine::step_session`] or fused via [`Engine::step_batch`].
     pub fn commit_pending(&self, s: &mut ActiveSession) -> Option<FinishReason> {
+        debug_assert!(
+            s.is_decoding(),
+            "commit_pending requires a Decoding session — drive prefill_tick (or start) first, \
+             otherwise the placeholder next_token would be committed as output"
+        );
         let tok = s.next_token;
         s.generated.push(tok);
         if s.req.stop_token == Some(tok) {
@@ -382,6 +527,27 @@ mod tests {
             s.generated
         };
         assert_eq!(gen(&mut e), gen(&mut e));
+    }
+
+    #[test]
+    fn chunked_prefill_ticks_match_start() {
+        let mut a = engine();
+        let mut b = engine();
+        let req = GenRequest::greedy(vec![1, 2, 3, 4, 5, 6, 7], 6);
+        let sa = a.start(1, req.clone(), Instant::now()).unwrap();
+        let mut sb = b.admit(1, req, Instant::now());
+        assert!(!sb.is_decoding());
+        let mut ticks = 0;
+        while !b.prefill_tick(&mut sb, 3).unwrap() {
+            ticks += 1;
+            assert!(ticks < 10, "prefill_tick failed to make progress");
+        }
+        assert!(sb.is_decoding());
+        assert_eq!(sa.next_token, sb.next_token);
+        assert_eq!(sa.state, sb.state);
+        assert!(sb.ttft_seconds > 0.0);
+        // further ticks are no-ops
+        assert!(b.prefill_tick(&mut sb, 3).unwrap());
     }
 
     #[test]

@@ -9,6 +9,14 @@ pub struct Metrics {
     pub prefill_seconds_total: f64,
     pub decode_seconds_total: f64,
     pub queue_seconds_total: f64,
+    /// Sessions that actually produced a first token (finished prefill).
+    /// A session whose prefill errors completes without one, so TTFT
+    /// means are taken over this count, not `completed`.
+    pub first_tokens: u64,
+    /// Sum over sessions counted in `first_tokens` of time-to-first-token
+    /// (enqueue → first sampled token, i.e. queueing + chunked prefill as
+    /// actually interleaved with other sessions' decode).
+    pub ttft_seconds_total: f64,
 }
 
 impl Metrics {
@@ -29,12 +37,22 @@ impl Metrics {
         }
     }
 
+    /// Mean time-to-first-token over sessions that produced one.
+    pub fn mean_ttft_seconds(&self) -> f64 {
+        if self.first_tokens > 0 {
+            self.ttft_seconds_total / self.first_tokens as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {} enqueued / {} admitted / {} completed\n\
              tokens:   {} generated\n\
              decode:   {:.1} tok/s (engine time)\n\
              prefill:  {:.3} s total\n\
+             ttft:     {:.4} s mean (enqueue -> first token)\n\
              queueing: {:.4} s mean wait",
             self.enqueued,
             self.admitted,
@@ -42,6 +60,7 @@ impl Metrics {
             self.tokens_generated,
             self.decode_tokens_per_sec(),
             self.prefill_seconds_total,
+            self.mean_ttft_seconds(),
             self.mean_queue_seconds(),
         )
     }
@@ -56,14 +75,17 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.decode_tokens_per_sec(), 0.0);
         assert_eq!(m.mean_queue_seconds(), 0.0);
+        assert_eq!(m.mean_ttft_seconds(), 0.0);
     }
 
     #[test]
     fn report_contains_counts() {
         let m = Metrics { enqueued: 3, admitted: 2, completed: 1, tokens_generated: 42,
-            prefill_seconds_total: 0.5, decode_seconds_total: 2.0, queue_seconds_total: 0.1 };
+            prefill_seconds_total: 0.5, decode_seconds_total: 2.0, queue_seconds_total: 0.1,
+            first_tokens: 1, ttft_seconds_total: 0.25 };
         let r = m.report();
         assert!(r.contains("42 generated"));
         assert!(r.contains("21.0 tok/s"));
+        assert!(r.contains("0.2500 s mean (enqueue -> first token)"));
     }
 }

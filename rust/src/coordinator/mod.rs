@@ -9,8 +9,13 @@
 //! single batched forward so each weight matrix is streamed once per
 //! cycle and reused across all B sessions (the software analog of the
 //! paper's on-chip weight reuse) — admitting queued requests as slots
-//! free up.  Recurrent state (the RWKV advantage: O(d) per session, no
-//! KV cache growth) lives in the session table.
+//! free up.  Prefill is interleaved the same way: an admitted session
+//! consumes one bounded sequence-parallel chunk of its prompt per cycle
+//! (§Perf L3-4) instead of running the whole prompt inline at
+//! admission, so a long prompt cannot head-of-line-block the decoders;
+//! time-to-first-token is surfaced per response and in [`Metrics`].
+//! Recurrent state (the RWKV advantage: O(d) per session, no KV cache
+//! growth) lives in the session table.
 //!
 //! * [`engine`]    — prefill (chunked through the `seq` executable) +
 //!   step decode against [`crate::runtime::RwkvRuntime`].
@@ -21,7 +26,7 @@ pub mod engine;
 pub mod metrics;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineModel};
+pub use engine::{Engine, EngineModel, SessionPhase};
 pub use metrics::Metrics;
 pub use scheduler::{Coordinator, CoordinatorConfig};
 
@@ -70,6 +75,9 @@ pub struct GenResponse {
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
     pub queue_seconds: f64,
+    /// Time-to-first-token: enqueue → first sampled token, including
+    /// queueing and chunked prefill as interleaved with other sessions.
+    pub ttft_seconds: f64,
 }
 
 impl GenResponse {

@@ -1,14 +1,32 @@
-//! Admission queue + round-robin continuous batching + worker thread.
+//! Admission queue + prefill/decode-interleaved continuous batching +
+//! worker thread.
 //!
 //! One worker thread owns the engine (and therefore the PJRT client)
-//! exclusively.  Each scheduling cycle it (1) admits queued requests up
-//! to `max_active`, (2) advances every active session by exactly one
-//! decode step in admission order — round-robin fairness, no starvation —
-//! via a single fused [`Engine::step_batch`] forward that reuses each
-//! weight matrix across all active sessions, and (3) completes finished
-//! sessions.  Batched and per-session decode are bit-exact for the
-//! native models, so scheduling capacity never changes a session's
-//! tokens (asserted by `prop_interleaving_preserves_outputs`).
+//! exclusively.  Each scheduling cycle it
+//!
+//! 1. **admits** queued requests up to `max_active` — admission is
+//!    bookkeeping only (no forward work), so a request with a huge
+//!    prompt enters the table instantly;
+//! 2. **prefills**: every `Prefilling` session consumes at most
+//!    `prefill_chunk` prompt tokens via ONE sequence-parallel
+//!    [`Engine::prefill_tick`] (one matmul per weight matrix over the
+//!    whole chunk, §Perf L3-4).  Bounding the chunk bounds the cycle
+//!    time, so a 1k-token prompt spreads over ~`len/chunk` cycles
+//!    instead of head-of-line-blocking every decoding session (asserted
+//!    by `long_prompt_does_not_stall_decoders` in
+//!    `rust/tests/prefill_parity.rs`);
+//! 3. **decodes**: advances every `Decoding` session by exactly one
+//!    step in admission order — round-robin fairness, no starvation —
+//!    via a single fused [`Engine::step_batch`] forward that reuses
+//!    each weight matrix across all active sessions (§Perf L3-3);
+//! 4. **completes** finished sessions, recording per-session
+//!    time-to-first-token into [`Metrics`].
+//!
+//! Chunked and token-by-token prefill are bit-exact for the native
+//! models, as are batched and per-session decode, so neither scheduling
+//! capacity nor chunk size ever changes a session's tokens (asserted by
+//! `prop_interleaving_preserves_outputs` and the parity suites in
+//! `rust/tests/`).
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -23,13 +41,18 @@ use super::{FinishReason, GenRequest, GenResponse};
 
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
-    /// maximum concurrently-decoding sessions
+    /// maximum concurrently-active sessions (prefilling + decoding)
     pub max_active: usize,
+    /// maximum prompt tokens a `Prefilling` session consumes per
+    /// scheduling cycle; bounds how long one cycle can stall decode.
+    /// 32–128 is the useful range: big enough to amortize each weight
+    /// matrix over many tokens, small enough to keep decode latency flat
+    pub prefill_chunk: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_active: 8 }
+        CoordinatorConfig { max_active: 8, prefill_chunk: 64 }
     }
 }
 
@@ -148,32 +171,49 @@ fn worker_loop<M: EngineModel>(
             }
         }
 
-        // 2. admit in FIFO order up to max_active
+        // 2. admit in FIFO order up to max_active — bookkeeping only
+        //    (prefill happens chunk-by-chunk in phase 3), so admission
+        //    can never stall the sessions already in flight
         while active.len() < cfg.max_active {
             let Some(job) = queue.pop_front() else { break };
             let queue_s = job.enqueued_at.elapsed().as_secs_f64();
-            match engine.start(job.id, job.req, job.enqueued_at) {
-                Ok(mut sess) => {
-                    sess.prefill_seconds += 0.0;
-                    metrics.lock().unwrap().admitted += 1;
-                    metrics.lock().unwrap().queue_seconds_total += queue_s;
-                    active.push((sess, job.reply));
-                }
-                Err(e) => {
-                    let _ = job.reply.send(Err(e));
-                }
+            let sess = engine.admit(job.id, job.req, job.enqueued_at);
+            {
+                let mut m = metrics.lock().unwrap();
+                m.admitted += 1;
+                m.queue_seconds_total += queue_s;
+            }
+            active.push((sess, job.reply));
+        }
+
+        let mut finished: Vec<(usize, Result<FinishReason>)> = Vec::new();
+
+        // 3. prefill cycle: every Prefilling session consumes one
+        //    bounded sequence-parallel chunk of its prompt (§Perf L3-4).
+        //    A session whose prompt completes this cycle samples its
+        //    first token and joins the decode batch below immediately.
+        for (i, (sess, _)) in active.iter_mut().enumerate() {
+            if sess.is_decoding() {
+                continue;
+            }
+            if let Err(e) = engine.prefill_tick(sess, cfg.prefill_chunk) {
+                finished.push((i, Err(e)));
             }
         }
 
-        // 3. decode cycle: commit every session's pending token in
-        //    admission order, then advance all continuing sessions with
-        //    ONE batched forward — each weight matrix is streamed once
-        //    per cycle and reused across all B sessions instead of being
-        //    refetched B times (§Perf L3-3 weight-reuse amortization).
-        let mut finished: Vec<(usize, Result<FinishReason>)> = Vec::new();
+        // 4. decode cycle: commit every decoding session's pending token
+        //    in admission order, then advance all continuing sessions
+        //    with ONE batched forward — each weight matrix is streamed
+        //    once per cycle and reused across all B sessions instead of
+        //    being refetched B times (§Perf L3-3 weight-reuse
+        //    amortization).  Sessions still prefilling (or failed above)
+        //    are skipped.
         {
             let mut live: Vec<(usize, &mut ActiveSession)> = Vec::new();
             for (i, (sess, _)) in active.iter_mut().enumerate() {
+                if !sess.is_decoding() {
+                    continue;
+                }
                 match engine.commit_pending(sess) {
                     Some(reason) => finished.push((i, Ok(reason))),
                     None => live.push((i, sess)),
@@ -195,15 +235,23 @@ fn worker_loop<M: EngineModel>(
             }
         }
         finished.sort_by_key(|&(i, _)| i);
-        // 4. complete (reverse order keeps indices valid)
+        // 5. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
             let (sess, reply) = active.remove(i);
-            let mut m = metrics.lock().unwrap();
-            m.completed += 1;
-            m.tokens_generated += sess.generated.len() as u64;
-            m.decode_seconds_total += sess.decode_seconds;
-            m.prefill_seconds_total += sess.prefill_seconds;
-            drop(m);
+            {
+                let mut m = metrics.lock().unwrap();
+                m.completed += 1;
+                m.tokens_generated += sess.generated.len() as u64;
+                m.decode_seconds_total += sess.decode_seconds;
+                m.prefill_seconds_total += sess.prefill_seconds;
+                // TTFT only for sessions that sampled a first token — a
+                // prefill failure completes without one and must not
+                // drag the mean toward zero
+                if sess.is_decoding() {
+                    m.first_tokens += 1;
+                    m.ttft_seconds_total += sess.ttft_seconds;
+                }
+            }
             let resp = outcome.map(|reason| GenResponse {
                 request_id: sess.request_id,
                 tokens: sess.generated,
@@ -211,6 +259,7 @@ fn worker_loop<M: EngineModel>(
                 prefill_seconds: sess.prefill_seconds,
                 decode_seconds: sess.decode_seconds,
                 queue_seconds: (sess.started_at - sess.enqueued_at).as_secs_f64(),
+                ttft_seconds: sess.ttft_seconds,
             });
             let _ = reply.send(resp);
         }
@@ -223,7 +272,10 @@ mod tests {
     use crate::model::rwkv::testing::test_model;
 
     fn coordinator(max_active: usize) -> Coordinator {
-        Coordinator::spawn(test_model(2, 32, 64, 50), CoordinatorConfig { max_active })
+        Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig { max_active, ..Default::default() },
+        )
     }
 
     #[test]
@@ -232,6 +284,27 @@ mod tests {
         let r = c.generate(GenRequest::greedy(vec![1, 2], 6)).unwrap();
         assert_eq!(r.tokens.len(), 6);
         assert_eq!(r.finish, super::super::FinishReason::MaxTokens);
+        assert!(r.ttft_seconds > 0.0, "ttft must be recorded");
+        assert!(r.ttft_seconds <= r.queue_seconds + r.prefill_seconds + r.decode_seconds + 1.0);
+    }
+
+    #[test]
+    fn prompt_longer_than_chunk_is_served_across_cycles() {
+        // prompt of 45 tokens at chunk 8 → 6 prefill cycles, then decode;
+        // output must match a solo run with whole-prompt prefill
+        let prompt: Vec<u32> = (0..45u32).map(|t| (t * 7 + 3) % 50).collect();
+        let solo = {
+            let c = coordinator(1);
+            c.generate(GenRequest::greedy(prompt.clone(), 6)).unwrap().tokens
+        };
+        let c = Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig { max_active: 4, prefill_chunk: 8 },
+        );
+        let r = c.generate(GenRequest::greedy(prompt, 6)).unwrap();
+        assert_eq!(r.tokens, solo);
+        let m = c.metrics.lock().unwrap();
+        assert!(m.ttft_seconds_total > 0.0);
     }
 
     #[test]

@@ -98,7 +98,7 @@ fn cmd_serve(args: &Args) -> hfrwkv::Result<()> {
     // the PJRT runtime is constructed inside the worker thread (not Send)
     let coord = Coordinator::spawn_with(
         || RwkvRuntime::load(Path::new("artifacts")).expect("runtime load"),
-        CoordinatorConfig { max_active: 4 },
+        CoordinatorConfig { max_active: 4, ..Default::default() },
     );
     let prompts = [
         "alice has a red hat . the hat of alice is",
@@ -120,9 +120,10 @@ fn cmd_serve(args: &Args) -> hfrwkv::Result<()> {
     for (i, rx) in rxs.into_iter().enumerate() {
         let r = rx.recv().unwrap()?;
         println!(
-            "[{i}] {:>6.1} tok/s decode, {:.1} ms prefill: {}",
+            "[{i}] {:>6.1} tok/s decode, {:.1} ms prefill, {:.1} ms ttft: {}",
             r.decode_tokens_per_sec(),
             r.prefill_seconds * 1e3,
+            r.ttft_seconds * 1e3,
             tokenizer.decode(&r.tokens)
         );
     }

@@ -18,6 +18,20 @@
 //!   of MAC work).  Per-column accumulation order is kept identical to
 //!   [`matvec`], so batched decode is bit-exact with sequential decode
 //!   (asserted in `rust/tests/batch_parity.rs`).
+//! * §Perf L3-4 ([`RwkvModel::prefill_chunk`]): sequence-parallel
+//!   prefill.  RWKV's dual formulation makes the seven projections per
+//!   block *time*-parallel — only the tiny elementwise WKV / token-shift
+//!   recurrence is inherently sequential — so a prompt chunk of T tokens
+//!   is laid out as a `[T, d]` panel and every weight matrix is streamed
+//!   ONCE per chunk through the same [`matmul`] row-panel kernel instead
+//!   of once per token.  The recurrence runs as a cheap elementwise loop
+//!   between projections, and the head projection runs only on the last
+//!   token (token-by-token prefill computes — and discards — full logits
+//!   for every prompt token).  Per-column op order is identical to
+//!   [`matvec`]/[`RwkvModel::step`], so chunked prefill is bit-exact
+//!   with token-by-token prefill at any T (asserted in
+//!   `rust/tests/prefill_parity.rs`); `rust/benches/prefill.rs` measures
+//!   the resulting prefill speedup.
 
 use anyhow::{bail, Result};
 
@@ -623,6 +637,188 @@ impl RwkvModel {
         }
     }
 
+    /// Sequence-parallel chunked prefill: consume `tokens` (a slice of
+    /// the prompt), leaving `state` exactly as T calls to
+    /// [`RwkvModel::step`] would, and return the logits of the LAST
+    /// token of the chunk.
+    ///
+    /// The chunk is laid out as a `[T, d]` activation panel: per block,
+    /// each of the seven weight matrices runs as ONE [`matmul`] over all
+    /// T token columns (§Perf L3-4 weight reuse), while token shift and
+    /// the WKV recurrence — the only sequential parts of RWKV's dual
+    /// formulation — run as cheap elementwise loops over t between the
+    /// projections.  Per-column op order matches [`matvec`], so chunked
+    /// prefill is bit-exact with token-by-token prefill at any T.
+    /// Callers bound T (the serving layer feeds 32–128-token chunks) to
+    /// bound per-cycle latency and scratch memory.
+    pub fn prefill_chunk(&self, state: &mut State, tokens: &[u32]) -> Vec<f32> {
+        BATCH_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            self.prefill_chunk_buf(state, tokens, &mut buf)
+        })
+    }
+
+    /// [`RwkvModel::prefill_chunk`] with caller-provided scratch
+    /// (allocation-free except for the returned logits).
+    pub fn prefill_chunk_buf(
+        &self,
+        state: &mut State,
+        tokens: &[u32],
+        buf: &mut BatchBuffers,
+    ) -> Vec<f32> {
+        let t_len = tokens.len();
+        assert!(t_len > 0, "prefill_chunk requires at least one token");
+        let d = self.d;
+        buf.ensure(d, self.f, t_len);
+
+        // embedding + ln0, per token column
+        for (t, &tok) in tokens.iter().enumerate() {
+            let o = t * d;
+            let emb_row = &self.emb[tok as usize * d..(tok as usize + 1) * d];
+            layernorm(emb_row, &self.ln0_w, &self.ln0_b, &mut buf.x[o..o + d]);
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            self.time_mixing_seq(blk, l, state, t_len, buf);
+            for i in 0..t_len * d {
+                buf.x[i] += buf.dx[i];
+            }
+            self.channel_mixing_seq(blk, l, state, t_len, buf);
+            for i in 0..t_len * d {
+                buf.x[i] += buf.dx[i];
+            }
+        }
+
+        // head projection on the LAST token only — token-by-token
+        // prefill pays a full [vocab, d] matvec per prompt token and
+        // throws all but the last away
+        let o = (t_len - 1) * d;
+        let mut xn = vec![0f32; d];
+        layernorm(&buf.x[o..o + d], &self.ln_out_w, &self.ln_out_b, &mut xn);
+        let mut logits = vec![0f32; self.vocab];
+        matvec(&self.head, &xn, &mut logits);
+        logits
+    }
+
+    /// Time mixing over a `[T, d]` prompt panel (§Perf L3-4): LayerNorm
+    /// and token shift walk the panel in t order (token t's shift reads
+    /// token t-1's normed activation; the chunk's first token reads the
+    /// carried state row), then the three projections and the output
+    /// projection each run as ONE [`matmul`] over all T columns, with
+    /// the elementwise WKV recurrence between them.
+    fn time_mixing_seq(
+        &self,
+        blk: &Block,
+        l: usize,
+        state: &mut State,
+        t_len: usize,
+        buf: &mut BatchBuffers,
+    ) {
+        let d = self.d;
+        for t in 0..t_len {
+            let o = t * d;
+            layernorm(&buf.x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut buf.xn[o..o + d]);
+            act_quant(&mut buf.xn[o..o + d], self.act_bits);
+            for i in 0..d {
+                let xn = buf.xn[o + i];
+                let xp = if t == 0 { state.row(l, 0)[i] } else { buf.xn[o - d + i] };
+                buf.xk[o + i] = xn * blk.att_mix_k[i] + xp * (1.0 - blk.att_mix_k[i]);
+                buf.xv[o + i] = xn * blk.att_mix_v[i] + xp * (1.0 - blk.att_mix_v[i]);
+                buf.xr[o + i] = xn * blk.att_mix_r[i] + xp * (1.0 - blk.att_mix_r[i]);
+            }
+        }
+        let last = (t_len - 1) * d;
+        state.row_mut(l, 0).copy_from_slice(&buf.xn[last..last + d]);
+        matmul(&blk.att_receptance, &buf.xr, &mut buf.r, t_len);
+        matmul(&blk.att_key, &buf.xk, &mut buf.k, t_len);
+        matmul(&blk.att_value, &buf.xv, &mut buf.v, t_len);
+        for t in 0..t_len {
+            let o = t * d;
+            act_quant(&mut buf.k[o..o + d], self.act_bits);
+            act_quant(&mut buf.v[o..o + d], self.act_bits);
+        }
+
+        // the sequential WKV recurrence, in token order.  The effective
+        // decay −exp(decay) is t-invariant: hoist it so the chunk pays
+        // d exp() calls per layer instead of T×d (same f32 value reused
+        // each t, so bit-exactness with `step` is untouched).
+        let w_effs: Vec<f32> = blk.att_decay.iter().map(|&a| -a.exp()).collect();
+        for t in 0..t_len {
+            let o = t * d;
+            for i in 0..d {
+                let r = sigmoid(buf.r[o + i]);
+                let (k, v) = (buf.k[o + i], buf.v[o + i]);
+                let aa = state.row(l, 2)[i];
+                let bb = state.row(l, 3)[i];
+                let pp = state.row(l, 4)[i];
+                let w_eff = w_effs[i];
+                let u = blk.att_first[i];
+
+                // output branch
+                let ww = u + k;
+                let qq = pp.max(ww);
+                let e1 = (pp - qq).exp();
+                let e2 = (ww - qq).exp();
+                let wkv = (e1 * aa + e2 * v) / (e1 * bb + e2);
+
+                // state branch
+                let ww = pp + w_eff;
+                let qq = ww.max(k);
+                let e1 = (ww - qq).exp();
+                let e2 = (k - qq).exp();
+                state.row_mut(l, 2)[i] = e1 * aa + e2 * v;
+                state.row_mut(l, 3)[i] = e1 * bb + e2;
+                state.row_mut(l, 4)[i] = qq;
+
+                buf.gated_d[o + i] = r * wkv;
+            }
+            act_quant(&mut buf.gated_d[o..o + d], self.act_bits);
+        }
+        matmul(&blk.att_output, &buf.gated_d, &mut buf.dx, t_len);
+    }
+
+    /// Channel mixing over a `[T, d]` prompt panel (§Perf L3-4) — same
+    /// structure as [`RwkvModel::time_mixing_seq`] with the FFN weights
+    /// and the single-row token shift.
+    fn channel_mixing_seq(
+        &self,
+        blk: &Block,
+        l: usize,
+        state: &mut State,
+        t_len: usize,
+        buf: &mut BatchBuffers,
+    ) {
+        let d = self.d;
+        let f = self.f;
+        for t in 0..t_len {
+            let o = t * d;
+            layernorm(&buf.x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut buf.xn[o..o + d]);
+            act_quant(&mut buf.xn[o..o + d], self.act_bits);
+            for i in 0..d {
+                let xn = buf.xn[o + i];
+                let xp = if t == 0 { state.row(l, 1)[i] } else { buf.xn[o - d + i] };
+                buf.xk[o + i] = xn * blk.ffn_mix_k[i] + xp * (1.0 - blk.ffn_mix_k[i]);
+                buf.xr[o + i] = xn * blk.ffn_mix_r[i] + xp * (1.0 - blk.ffn_mix_r[i]);
+            }
+        }
+        let last = (t_len - 1) * d;
+        state.row_mut(l, 1).copy_from_slice(&buf.xn[last..last + d]);
+        matmul(&blk.ffn_receptance, &buf.xr, &mut buf.r, t_len);
+        matmul(&blk.ffn_key, &buf.xk, &mut buf.kf, t_len);
+        for v in buf.kf.iter_mut() {
+            let relu = v.max(0.0);
+            *v = relu * relu;
+        }
+        for t in 0..t_len {
+            let of = t * f;
+            act_quant(&mut buf.kf[of..of + f], self.act_bits);
+        }
+        matmul(&blk.ffn_value, &buf.kf, &mut buf.dx, t_len);
+        for i in 0..t_len * d {
+            buf.dx[i] *= sigmoid(buf.r[i]);
+        }
+    }
+
     /// Log-softmax of logits (for scoring).
     pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
         let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
@@ -912,6 +1108,66 @@ pub mod tests {
                 assert_eq!(seq_logits, batch_logits[j], "t={t} session {j}");
             }
         }
+    }
+
+    #[test]
+    fn prefill_chunk_bitexact_with_step_loop() {
+        // d/f chosen to exercise the non-multiple-of-8 kernel tails
+        let m = test_model(2, 36, 52, 41);
+        for t_len in [1usize, 2, 7, 33] {
+            let tokens: Vec<u32> = (0..t_len).map(|t| ((t * 13 + 5) % 41) as u32).collect();
+            let mut s_step = m.new_state();
+            let mut last = Vec::new();
+            for &t in &tokens {
+                last = m.step(&mut s_step, t);
+            }
+            let mut s_chunk = m.new_state();
+            let chunk_logits = m.prefill_chunk(&mut s_chunk, &tokens);
+            assert_eq!(last, chunk_logits, "T={t_len} logits");
+            assert_eq!(s_step, s_chunk, "T={t_len} state");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_splits_are_bitexact() {
+        // chunk boundaries must be invisible: 1×T == chunks of any split
+        let m = test_model(2, 32, 64, 50);
+        let tokens: Vec<u32> = (0..45).map(|t| ((t * 7 + 3) % 50) as u32).collect();
+        let mut s_whole = m.new_state();
+        let whole = m.prefill_chunk(&mut s_whole, &tokens);
+        for split in [1usize, 8, 16, 44] {
+            let mut s = m.new_state();
+            let mut last = Vec::new();
+            for c in tokens.chunks(split) {
+                last = m.prefill_chunk(&mut s, c);
+            }
+            assert_eq!(whole, last, "split={split} logits");
+            assert_eq!(s_whole, s, "split={split} state");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_quantized_activations_bitexact() {
+        let mut m = test_model(2, 32, 64, 50);
+        m.act_bits = Some(9);
+        let tokens: Vec<u32> = (0..19).map(|t| ((t * 11 + 2) % 50) as u32).collect();
+        let mut s_step = m.new_state();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = m.step(&mut s_step, t);
+        }
+        let mut s_chunk = m.new_state();
+        let chunk_logits = m.prefill_chunk(&mut s_chunk, &tokens);
+        assert_eq!(last, chunk_logits);
+        assert_eq!(s_step, s_chunk);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one token")]
+    fn prefill_chunk_rejects_empty() {
+        let m = test_model(1, 16, 32, 20);
+        let mut s = m.new_state();
+        m.prefill_chunk(&mut s, &[]);
     }
 
     #[test]

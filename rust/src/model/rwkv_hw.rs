@@ -20,14 +20,31 @@ use crate::arith::{Divu, ExpSigmoidUnit};
 use crate::quant::DpotTensor;
 
 /// Per-site activation scale table: (layer, site) -> max-abs seen.
+/// Used only during the calibration pass; the hot path reads the
+/// resolved [`LayerScales`] instead.
 type ScaleMap = HashMap<(usize, &'static str), f32>;
+
+/// Per-layer activation scales, one field per quantization site,
+/// resolved from the calibration [`ScaleMap`] at construction.  The old
+/// hot path did a HashMap lookup per site per layer per step; this is a
+/// direct indexed load (`self.scales[l].att_k`).
+#[derive(Clone, Copy, Debug)]
+struct LayerScales {
+    att_xn: f32,
+    att_k: f32,
+    att_v: f32,
+    att_gated: f32,
+    ffn_xn: f32,
+    ffn_k2: f32,
+    resid: f32,
+}
 
 /// The hardware-numerics model.
 pub struct HwModel {
     base: RwkvModel,
     /// decoded Δ-PoT matrices, same layout as the f32 ones
     q: QuantizedMats,
-    scales: ScaleMap,
+    scales: Vec<LayerScales>,
     exps: ExpSigmoidUnit,
     divu: Divu,
     /// count of activations that clipped at the 9-bit rails during the
@@ -118,13 +135,13 @@ impl HwModel {
         }
 
         // 3. calibration pass on the f32 path to collect per-site maxima
-        let mut scales = ScaleMap::new();
+        let mut site_max = ScaleMap::new();
         {
             let probe = base.clone();
             let mut st = probe.new_state();
             let mut collector = |l: usize, site: &'static str, xs: &[f32]| {
                 let m = xs.iter().fold(0f32, |a, &b| a.max(b.abs()));
-                let e = scales.entry((l, site)).or_insert(0.0);
+                let e = site_max.entry((l, site)).or_insert(0.0);
                 *e = e.max(m);
             };
             let mut x = vec![0f32; d];
@@ -135,10 +152,24 @@ impl HwModel {
                 probe_step(&probe, &mut st, tok, &mut x, &mut collector);
             }
             // safety margin
-            for v in scales.values_mut() {
+            for v in site_max.values_mut() {
                 *v *= 1.1;
             }
         }
+        // 4. resolve the site map into the per-layer struct the hot path
+        //    indexes directly (4.0 = uncalibrated-site fallback)
+        let site = |l: usize, name: &'static str| *site_max.get(&(l, name)).unwrap_or(&4.0);
+        let scales: Vec<LayerScales> = (0..base.n_layer)
+            .map(|l| LayerScales {
+                att_xn: site(l, "att_xn"),
+                att_k: site(l, "att_k"),
+                att_v: site(l, "att_v"),
+                att_gated: site(l, "att_gated"),
+                ffn_xn: site(l, "ffn_xn"),
+                ffn_k2: site(l, "ffn_k2"),
+                resid: site(l, "resid"),
+            })
+            .collect();
 
         HwModel { base, q, scales, exps: ExpSigmoidUnit::new(), divu: Divu::new(), clip_events: 0 }
     }
@@ -157,10 +188,6 @@ impl HwModel {
 
     pub fn d(&self) -> usize {
         self.base.d
-    }
-
-    fn scale(&self, l: usize, site: &'static str) -> f32 {
-        *self.scales.get(&(l, site)).unwrap_or(&4.0)
     }
 
     /// LayerNorm in the ATAC identity form with DIVU division.
@@ -223,10 +250,11 @@ impl HwModel {
         for l in 0..self.base.n_layer {
             let blk = &self.base.blocks[l];
             let qb = &self.q.blocks[l];
+            let sc = self.scales[l];
 
             // ---- time mixing ------------------------------------------------
             self.hw_layernorm(&x, &blk.ln1_w, &blk.ln1_b, &mut xn);
-            quant9(&mut xn, self.scale(l, "att_xn"), &mut clips);
+            quant9(&mut xn, sc.att_xn, &mut clips);
             {
                 let xp = state.row(l, 0);
                 for i in 0..d {
@@ -239,8 +267,8 @@ impl HwModel {
             matvec(&qb.att_receptance, &xr, &mut r);
             matvec(&qb.att_key, &xk, &mut k);
             matvec(&qb.att_value, &xv, &mut v);
-            quant9(&mut k, self.scale(l, "att_k"), &mut clips);
-            quant9(&mut v, self.scale(l, "att_v"), &mut clips);
+            quant9(&mut k, sc.att_k, &mut clips);
+            quant9(&mut v, sc.att_v, &mut clips);
 
             for i in 0..d {
                 let rr = self.hw_sigmoid(r[i]);
@@ -265,7 +293,7 @@ impl HwModel {
                 state.row_mut(l, 4)[i] = qq;
                 gated[i] = rr * wkv;
             }
-            quant9(&mut gated[..d], self.scale(l, "att_gated"), &mut clips);
+            quant9(&mut gated[..d], sc.att_gated, &mut clips);
             matvec(&qb.att_output, &gated[..d], &mut dx);
             for i in 0..d {
                 x[i] += dx[i];
@@ -273,7 +301,7 @@ impl HwModel {
 
             // ---- channel mixing ---------------------------------------------
             self.hw_layernorm(&x, &blk.ln2_w, &blk.ln2_b, &mut xn);
-            quant9(&mut xn, self.scale(l, "ffn_xn"), &mut clips);
+            quant9(&mut xn, sc.ffn_xn, &mut clips);
             {
                 let xp = state.row(l, 1);
                 for i in 0..d {
@@ -288,7 +316,7 @@ impl HwModel {
                 let relu = kv.max(0.0);
                 *kv = relu * relu;
             }
-            quant9(&mut kf, self.scale(l, "ffn_k2"), &mut clips);
+            quant9(&mut kf, sc.ffn_k2, &mut clips);
             matvec(&qb.ffn_value, &kf, &mut dx);
             for i in 0..d {
                 dx[i] = self.hw_sigmoid(r[i]) * dx[i];
@@ -296,7 +324,7 @@ impl HwModel {
             for i in 0..d {
                 x[i] += dx[i];
             }
-            quant9(&mut x, self.scale(l, "resid"), &mut clips);
+            quant9(&mut x, sc.resid, &mut clips);
         }
 
         self.hw_layernorm(&x, &self.base.ln_out_w, &self.base.ln_out_b, &mut xn);
@@ -349,12 +377,13 @@ impl HwModel {
         for l in 0..self.base.n_layer {
             let blk = &self.base.blocks[l];
             let qb = &self.q.blocks[l];
+            let sc = self.scales[l];
 
             // ---- time mixing --------------------------------------------
             for (j, st) in states.iter_mut().enumerate() {
                 let o = j * d;
                 self.hw_layernorm(&x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut xn[o..o + d]);
-                quant9(&mut xn[o..o + d], self.scale(l, "att_xn"), &mut clips);
+                quant9(&mut xn[o..o + d], sc.att_xn, &mut clips);
                 {
                     let xp = st.row(l, 0);
                     for i in 0..d {
@@ -371,8 +400,8 @@ impl HwModel {
             matmul(&qb.att_value, &xv, &mut *v, b);
             for j in 0..b {
                 let o = j * d;
-                quant9(&mut k[o..o + d], self.scale(l, "att_k"), &mut clips);
-                quant9(&mut v[o..o + d], self.scale(l, "att_v"), &mut clips);
+                quant9(&mut k[o..o + d], sc.att_k, &mut clips);
+                quant9(&mut v[o..o + d], sc.att_v, &mut clips);
             }
 
             for (j, st) in states.iter_mut().enumerate() {
@@ -400,7 +429,7 @@ impl HwModel {
                     st.row_mut(l, 4)[i] = qq;
                     gated[o + i] = rr * wkv;
                 }
-                quant9(&mut gated[o..o + d], self.scale(l, "att_gated"), &mut clips);
+                quant9(&mut gated[o..o + d], sc.att_gated, &mut clips);
             }
             matmul(&qb.att_output, &gated, &mut *dx, b);
             for i in 0..b * d {
@@ -411,7 +440,7 @@ impl HwModel {
             for (j, st) in states.iter_mut().enumerate() {
                 let o = j * d;
                 self.hw_layernorm(&x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut xn[o..o + d]);
-                quant9(&mut xn[o..o + d], self.scale(l, "ffn_xn"), &mut clips);
+                quant9(&mut xn[o..o + d], sc.ffn_xn, &mut clips);
                 {
                     let xp = st.row(l, 1);
                     for i in 0..d {
@@ -430,7 +459,7 @@ impl HwModel {
             }
             for j in 0..b {
                 let of = j * f;
-                quant9(&mut kf[of..of + f], self.scale(l, "ffn_k2"), &mut clips);
+                quant9(&mut kf[of..of + f], sc.ffn_k2, &mut clips);
             }
             matmul(&qb.ffn_value, &kf, &mut *dx, b);
             for i in 0..b * d {
@@ -439,7 +468,7 @@ impl HwModel {
             }
             for j in 0..b {
                 let o = j * d;
-                quant9(&mut x[o..o + d], self.scale(l, "resid"), &mut clips);
+                quant9(&mut x[o..o + d], sc.resid, &mut clips);
             }
         }
 
@@ -452,6 +481,152 @@ impl HwModel {
         matmul(&self.q.head, &xn, &mut logits, b);
         self.clip_events = clips;
         logits.chunks(self.base.vocab).map(|c| c.to_vec()).collect()
+    }
+
+    /// Sequence-parallel chunked prefill on the hardware datapath
+    /// (§Perf L3-4): the chunk's T prompt tokens share ONE [`matmul`]
+    /// per Δ-PoT matrix, while every per-site 9-bit quantization (at the
+    /// same column-wise per-layer scales), LUT/PWL nonlinearity, token
+    /// shift and the WKV recurrence run per token column in t order —
+    /// bit-exact with T calls to [`HwModel::step`].  `clip_events`
+    /// afterwards holds the clip total aggregated across the whole
+    /// chunk (each call overwrites the counter, like the other steps).
+    pub fn prefill_chunk(&mut self, state: &mut State, tokens: &[u32]) -> Vec<f32> {
+        HW_BATCH_SCRATCH.with(|cell| {
+            let mut panels = cell.borrow_mut();
+            self.prefill_chunk_panels(state, tokens, &mut panels)
+        })
+    }
+
+    fn prefill_chunk_panels(
+        &mut self,
+        state: &mut State,
+        tokens: &[u32],
+        panels: &mut BatchBuffers,
+    ) -> Vec<f32> {
+        let t_len = tokens.len();
+        assert!(t_len > 0, "prefill_chunk requires at least one token");
+        let d = self.base.d;
+        let f = self.base.f;
+        let mut clips = 0u64;
+        panels.ensure(d, f, t_len);
+        let BatchBuffers { x, xn, xk, xv, xr, r, k, v, kf, gated_d: gated, dx } = panels;
+
+        for (t, &tok) in tokens.iter().enumerate() {
+            let o = t * d;
+            let emb_row = &self.q.emb[tok as usize * d..(tok as usize + 1) * d];
+            self.hw_layernorm(emb_row, &self.base.ln0_w, &self.base.ln0_b, &mut x[o..o + d]);
+        }
+
+        for l in 0..self.base.n_layer {
+            let blk = &self.base.blocks[l];
+            let qb = &self.q.blocks[l];
+            let sc = self.scales[l];
+
+            // ---- time mixing --------------------------------------------
+            for t in 0..t_len {
+                let o = t * d;
+                self.hw_layernorm(&x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut xn[o..o + d]);
+                quant9(&mut xn[o..o + d], sc.att_xn, &mut clips);
+                for i in 0..d {
+                    let xni = xn[o + i];
+                    // token shift: the previous token's normed column
+                    // (the carried state row for the chunk's first token)
+                    let xp = if t == 0 { state.row(l, 0)[i] } else { xn[o - d + i] };
+                    xk[o + i] = xni * blk.att_mix_k[i] + xp * (1.0 - blk.att_mix_k[i]);
+                    xv[o + i] = xni * blk.att_mix_v[i] + xp * (1.0 - blk.att_mix_v[i]);
+                    xr[o + i] = xni * blk.att_mix_r[i] + xp * (1.0 - blk.att_mix_r[i]);
+                }
+            }
+            let last = (t_len - 1) * d;
+            state.row_mut(l, 0).copy_from_slice(&xn[last..last + d]);
+            matmul(&qb.att_receptance, &xr, &mut *r, t_len);
+            matmul(&qb.att_key, &xk, &mut *k, t_len);
+            matmul(&qb.att_value, &xv, &mut *v, t_len);
+            for t in 0..t_len {
+                let o = t * d;
+                quant9(&mut k[o..o + d], sc.att_k, &mut clips);
+                quant9(&mut v[o..o + d], sc.att_v, &mut clips);
+            }
+
+            // sequential WKV recurrence, in token order.  −exp(decay) is
+            // t-invariant: hoist it to d exp() calls per layer instead
+            // of T×d (same f32 value each t → still bit-exact with step)
+            let w_effs: Vec<f32> = blk.att_decay.iter().map(|&a| -a.exp()).collect();
+            for t in 0..t_len {
+                let o = t * d;
+                for i in 0..d {
+                    let rr = self.hw_sigmoid(r[o + i]);
+                    let aa = state.row(l, 2)[i];
+                    let bb = state.row(l, 3)[i];
+                    let pp = state.row(l, 4)[i];
+                    let w_eff = w_effs[i];
+                    let u = blk.att_first[i];
+
+                    let ww = u + k[o + i];
+                    let qq = pp.max(ww);
+                    let e1 = self.hw_exp(pp - qq);
+                    let e2 = self.hw_exp(ww - qq);
+                    let wkv = self.hw_div(e1 * aa + e2 * v[o + i], e1 * bb + e2);
+
+                    let ww = pp + w_eff;
+                    let qq = ww.max(k[o + i]);
+                    let e1 = self.hw_exp(ww - qq);
+                    let e2 = self.hw_exp(k[o + i] - qq);
+                    state.row_mut(l, 2)[i] = e1 * aa + e2 * v[o + i];
+                    state.row_mut(l, 3)[i] = e1 * bb + e2;
+                    state.row_mut(l, 4)[i] = qq;
+                    gated[o + i] = rr * wkv;
+                }
+                quant9(&mut gated[o..o + d], sc.att_gated, &mut clips);
+            }
+            matmul(&qb.att_output, &gated, &mut *dx, t_len);
+            for i in 0..t_len * d {
+                x[i] += dx[i];
+            }
+
+            // ---- channel mixing -----------------------------------------
+            for t in 0..t_len {
+                let o = t * d;
+                self.hw_layernorm(&x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut xn[o..o + d]);
+                quant9(&mut xn[o..o + d], sc.ffn_xn, &mut clips);
+                for i in 0..d {
+                    let xni = xn[o + i];
+                    let xp = if t == 0 { state.row(l, 1)[i] } else { xn[o - d + i] };
+                    xk[o + i] = xni * blk.ffn_mix_k[i] + xp * (1.0 - blk.ffn_mix_k[i]);
+                    xr[o + i] = xni * blk.ffn_mix_r[i] + xp * (1.0 - blk.ffn_mix_r[i]);
+                }
+            }
+            state.row_mut(l, 1).copy_from_slice(&xn[last..last + d]);
+            matmul(&qb.ffn_receptance, &xr, &mut *r, t_len);
+            matmul(&qb.ffn_key, &xk, &mut *kf, t_len);
+            for kv in kf.iter_mut() {
+                let relu = kv.max(0.0);
+                *kv = relu * relu;
+            }
+            for t in 0..t_len {
+                let of = t * f;
+                quant9(&mut kf[of..of + f], sc.ffn_k2, &mut clips);
+            }
+            matmul(&qb.ffn_value, &kf, &mut *dx, t_len);
+            for i in 0..t_len * d {
+                dx[i] = self.hw_sigmoid(r[i]) * dx[i];
+                x[i] += dx[i];
+            }
+            for t in 0..t_len {
+                let o = t * d;
+                quant9(&mut x[o..o + d], sc.resid, &mut clips);
+            }
+        }
+
+        // head projection on the LAST token only
+        let o = (t_len - 1) * d;
+        let (w, bias) = (&self.base.ln_out_w, &self.base.ln_out_b);
+        self.hw_layernorm(&x[o..o + d], w, bias, &mut xn[o..o + d]);
+        let mut logits = vec![0f32; self.base.vocab];
+        matvec(&self.q.head, &xn[o..o + d], &mut logits);
+        self.clip_events = clips;
+        logits
     }
 }
 
@@ -612,6 +787,30 @@ mod tests {
         // calibrated scales must keep clipping rare (< 1% of activations)
         let acts_per_step = 2 * 32 * 8; // rough
         assert!(total < (20 * acts_per_step) / 100, "{total}");
+    }
+
+    #[test]
+    fn hw_prefill_chunk_bitexact_with_step_loop() {
+        let m = test_model(2, 32, 64, 50);
+        let calib = calib_tokens();
+        let mut hw_step = HwModel::from_f32(m.clone(), &calib);
+        let mut hw_chunk = HwModel::from_f32(m, &calib);
+        for t_len in [1usize, 3, 17, 40] {
+            let tokens: Vec<u32> = (0..t_len).map(|t| ((t * 7 + 1) % 50) as u32).collect();
+            let mut s_step = hw_step.new_state();
+            let mut last = Vec::new();
+            let mut clips = 0u64;
+            for &t in &tokens {
+                last = hw_step.step(&mut s_step, t);
+                clips += hw_step.clip_events;
+            }
+            let mut s_chunk = hw_chunk.new_state();
+            let chunk_logits = hw_chunk.prefill_chunk(&mut s_chunk, &tokens);
+            assert_eq!(last, chunk_logits, "T={t_len} logits");
+            assert_eq!(s_step, s_chunk, "T={t_len} state");
+            // clip observability: chunk total == sum of per-step counts
+            assert_eq!(hw_chunk.clip_events, clips, "T={t_len} clip totals");
+        }
     }
 
     #[test]

@@ -122,14 +122,14 @@ fn sixteen_concurrent_requests_match_serial_greedy() {
     let serial: Vec<Vec<u32>> = {
         let c = Coordinator::spawn(
             test_model(2, 32, 64, 50),
-            CoordinatorConfig { max_active: 1 },
+            CoordinatorConfig { max_active: 1, ..Default::default() },
         );
         reqs.iter().map(|r| c.generate(r.clone()).unwrap().tokens).collect()
     };
     // all 16 in flight at once through the fused batch path
     let c = Coordinator::spawn(
         test_model(2, 32, 64, 50),
-        CoordinatorConfig { max_active: 16 },
+        CoordinatorConfig { max_active: 16, ..Default::default() },
     );
     let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
     for (i, rx) in rxs.into_iter().enumerate() {

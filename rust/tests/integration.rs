@@ -144,7 +144,7 @@ fn table2_fits_all_platforms() {
 fn coordinator_handles_mixed_workload() {
     let coord = Coordinator::spawn(
         test_model(2, 32, 64, 50),
-        CoordinatorConfig { max_active: 4 },
+        CoordinatorConfig { max_active: 4, ..Default::default() },
     );
     // mixed lengths and sampling settings
     let mut rxs = Vec::new();
@@ -174,14 +174,14 @@ fn staggered_finishes_preserve_outputs() {
         .map(|i| {
             let c = Coordinator::spawn(
                 test_model(2, 32, 64, 50),
-                CoordinatorConfig { max_active: 1 },
+                CoordinatorConfig { max_active: 1, ..Default::default() },
             );
             c.generate(mk_req(i)).unwrap().tokens
         })
         .collect();
     let c = Coordinator::spawn(
         test_model(2, 32, 64, 50),
-        CoordinatorConfig { max_active: 6 },
+        CoordinatorConfig { max_active: 6, ..Default::default() },
     );
     let rxs: Vec<_> = (0..6u64).map(|i| c.submit(mk_req(i))).collect();
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -195,7 +195,7 @@ fn coordinator_fifo_admission_under_saturation() {
     // equal submission order (FIFO, no starvation)
     let coord = Coordinator::spawn(
         test_model(1, 32, 64, 50),
-        CoordinatorConfig { max_active: 1 },
+        CoordinatorConfig { max_active: 1, ..Default::default() },
     );
     let rxs: Vec<_> = (0..6)
         .map(|i| coord.submit(GenRequest::greedy(vec![i as u32 + 1], 4)))

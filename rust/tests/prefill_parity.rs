@@ -1,0 +1,164 @@
+//! Chunk-boundary parity for sequence-parallel prefill (§Perf L3-4) +
+//! scheduler prefill/decode interleaving:
+//!
+//! * model:     `RwkvModel::prefill_chunk` is bit-exact with per-token
+//!   `step` for arbitrary prompt lengths and arbitrary chunk splits
+//!   (including remainders shorter than the chunk size),
+//! * hw model:  same for `HwModel::prefill_chunk` (exact equality, clip
+//!   totals preserved),
+//! * engine:    `EngineModel::prefill` equals the token-by-token default
+//!   for the native models,
+//! * scheduler: a 1k-token prompt admitted alongside active decoders
+//!   cannot head-of-line-block them — the decoders complete while the
+//!   long prompt is still consuming prefill chunks, with their tokens
+//!   unchanged.
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::HwModel;
+use hfrwkv::prop_assert;
+use hfrwkv::runtime::Variant;
+use hfrwkv::util::prop::{check, Gen};
+
+#[test]
+fn prop_prefill_chunk_matches_step_bitexact() {
+    // d=36/f=52 exercise the non-multiple-of-8 tails of every kernel
+    let m = test_model(2, 36, 52, 41);
+    check("prefill_chunk == step loop at 0 ULP", 24, |g: &mut Gen| {
+        let t_len = g.usize_in(1, 70);
+        let tokens: Vec<u32> = (0..t_len).map(|_| g.usize_in(0, 40) as u32).collect();
+        let mut s_step = m.new_state();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = m.step(&mut s_step, t);
+        }
+        let mut s_chunk = m.new_state();
+        let chunk_logits = m.prefill_chunk(&mut s_chunk, &tokens);
+        prop_assert!(last == chunk_logits, "T={t_len}: logits diverged");
+        prop_assert!(s_step == s_chunk, "T={t_len}: state diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_splits_are_invisible() {
+    // driving the same prompt through arbitrary chunk sizes (with a
+    // remainder shorter than the chunk) must be bit-exact with one
+    // maximal chunk — the scheduler's cycle boundary can never leak
+    let m = test_model(2, 32, 64, 50);
+    check("chunk splits invisible", 16, |g: &mut Gen| {
+        let t_len = g.usize_in(2, 90);
+        let chunk = g.usize_in(1, t_len);
+        let tokens: Vec<u32> = (0..t_len).map(|_| g.usize_in(0, 49) as u32).collect();
+        let mut s_whole = m.new_state();
+        let whole = m.prefill_chunk(&mut s_whole, &tokens);
+        let mut s_split = m.new_state();
+        let mut last = Vec::new();
+        for c in tokens.chunks(chunk) {
+            last = m.prefill_chunk(&mut s_split, c);
+        }
+        prop_assert!(whole == last, "T={t_len} chunk={chunk}: logits diverged");
+        prop_assert!(s_whole == s_split, "T={t_len} chunk={chunk}: state diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn hw_prefill_chunk_splits_bitexact() {
+    let m = test_model(2, 32, 64, 50);
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 11 + 3) % 50).collect();
+    let mut hw_whole = HwModel::from_f32(m.clone(), &calib);
+    let mut hw_split = HwModel::from_f32(m, &calib);
+    let tokens: Vec<u32> = (0..53).map(|t| ((t * 7 + 1) % 50) as u32).collect();
+    let mut s_whole = hw_whole.new_state();
+    let whole = hw_whole.prefill_chunk(&mut s_whole, &tokens);
+    for split in [1usize, 9, 32] {
+        let mut s = hw_split.new_state();
+        let mut last = Vec::new();
+        for c in tokens.chunks(split) {
+            last = hw_split.prefill_chunk(&mut s, c);
+        }
+        assert_eq!(whole, last, "split={split} logits");
+        assert_eq!(s_whole, s, "split={split} state");
+    }
+}
+
+#[test]
+fn engine_prefill_matches_token_by_token() {
+    // the trait-level wiring: RwkvModel's prefill override (sequence-
+    // parallel) must equal the trait's token-by-token default
+    let mut chunked = test_model(2, 32, 64, 50);
+    let mut token = test_model(2, 32, 64, 50);
+    let prompt: Vec<u32> = (0..37).map(|t| ((t * 5 + 2) % 50) as u32).collect();
+    let mut sa = EngineModel::init_state(&chunked);
+    let la = chunked.prefill(&mut sa, &prompt, Variant::Exact).unwrap();
+    let mut sb = EngineModel::init_state(&token);
+    let mut lb = Vec::new();
+    for &t in &prompt {
+        lb = token.forward(&mut sb, t, Variant::Exact).unwrap();
+    }
+    assert_eq!(la, lb);
+    assert_eq!(sa, sb);
+}
+
+#[test]
+fn engine_prefill_chunk_rejects_empty_slice() {
+    let mut m = test_model(1, 32, 64, 50);
+    let mut state = EngineModel::init_state(&m);
+    // fully-qualified: the inherent `RwkvModel::prefill_chunk` (State-
+    // based, panics on empty) shadows the trait method in call syntax
+    assert!(EngineModel::prefill_chunk(&mut m, &mut state, &[], Variant::Exact).is_err());
+}
+
+#[test]
+fn long_prompt_does_not_stall_decoders() {
+    // two short decoders + a 1k-token prompt submitted together: at
+    // prefill_chunk=8 the long prompt needs ~128 scheduling cycles of
+    // prefill while the decoders need ~8 decode cycles, so interleaving
+    // must complete both decoders long before the long session — with
+    // exactly their solo tokens.  (The old scheduler ran the whole
+    // 1k-token prefill inline at admission, stalling every decoder.)
+    // The ~120-cycle gap on a d=128 model keeps the completed==2 check
+    // far from any scheduling race.
+    let long_prompt: Vec<u32> = (0..1024u32).map(|t| (t * 11 + 5) % 64).collect();
+    let mk_model = || test_model(2, 128, 256, 64);
+    let req_a = GenRequest::greedy(vec![3, 1, 4], 8);
+    let req_b = GenRequest::greedy(vec![2, 7], 8);
+    let req_l = GenRequest::greedy(long_prompt, 4);
+
+    let solo = |req: &GenRequest| {
+        let c = Coordinator::spawn(
+            mk_model(),
+            CoordinatorConfig { max_active: 1, ..Default::default() },
+        );
+        c.generate(req.clone()).unwrap().tokens
+    };
+    let solo_a = solo(&req_a);
+    let solo_b = solo(&req_b);
+    let solo_l = solo(&req_l);
+
+    let c = Coordinator::spawn(
+        mk_model(),
+        CoordinatorConfig { max_active: 4, prefill_chunk: 8 },
+    );
+    let rx_a = c.submit(req_a);
+    let rx_b = c.submit(req_b);
+    let rx_l = c.submit(req_l);
+    let ra = rx_a.recv().unwrap().unwrap();
+    let rb = rx_b.recv().unwrap().unwrap();
+    // both decoders are done; the 1k prompt must still be prefilling
+    {
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.completed, 2, "long prefill stalled the decoders");
+    }
+    assert_eq!(ra.tokens, solo_a, "decoder A's tokens moved");
+    assert_eq!(rb.tokens, solo_b, "decoder B's tokens moved");
+    let rl = rx_l.recv().unwrap().unwrap();
+    assert_eq!(rl.tokens, solo_l, "long session's tokens moved");
+    // TTFT tells the same story server-side: the decoders sample their
+    // first token almost immediately, the long session only after its
+    // whole prompt has been consumed chunk by chunk
+    assert!(rl.ttft_seconds > 0.0);
+    assert!(ra.ttft_seconds < rl.ttft_seconds);
+    assert!(rl.prefill_seconds > ra.prefill_seconds);
+}

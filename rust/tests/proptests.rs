@@ -189,14 +189,20 @@ fn prop_interleaving_preserves_outputs() {
     // any admission capacity must produce identical tokens per request
     use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
     let reference: Vec<Vec<u32>> = {
-        let c = Coordinator::spawn(test_model(1, 32, 64, 50), CoordinatorConfig { max_active: 1 });
+        let c = Coordinator::spawn(
+            test_model(1, 32, 64, 50),
+            CoordinatorConfig { max_active: 1, ..Default::default() },
+        );
         (0..5)
             .map(|i| c.generate(GenRequest::greedy(vec![i + 1], 6)).unwrap().tokens)
             .collect()
     };
     check("batching preserves outputs", 4, |g: &mut Gen| {
         let cap = g.usize_in(1, 6);
-        let c = Coordinator::spawn(test_model(1, 32, 64, 50), CoordinatorConfig { max_active: cap });
+        let c = Coordinator::spawn(
+            test_model(1, 32, 64, 50),
+            CoordinatorConfig { max_active: cap, ..Default::default() },
+        );
         let rxs: Vec<_> = (0..5u32)
             .map(|i| c.submit(GenRequest::greedy(vec![i + 1], 6)))
             .collect();
@@ -214,7 +220,10 @@ fn prop_state_isolation_across_sessions() {
     use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
     check("state isolation", 3, |g: &mut Gen| {
         let cap = g.usize_in(2, 5);
-        let c = Coordinator::spawn(test_model(2, 32, 64, 50), CoordinatorConfig { max_active: cap });
+        let c = Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig { max_active: cap, ..Default::default() },
+        );
         // same request submitted twice amid noise must match itself
         let probe = GenRequest::greedy(vec![7, 3, 9], 8);
         let a = c.submit(probe.clone());
