@@ -21,25 +21,54 @@ pub trait EngineModel {
     fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>>;
 
     /// Batched decode: advance each (state, token) pair by one step,
-    /// returning one *per-session* logits outcome, in order — so one
-    /// failing session cannot poison its batchmates (each entry's state
-    /// is advanced exactly once, error or not).
+    /// writing one flat `[B * vocab]` logits panel into the caller-owned
+    /// `logits` buffer (session j's logits at `j*vocab..(j+1)*vocab`)
+    /// and returning one *per-session* outcome, in order (`None` = ok) —
+    /// so one failing session cannot poison its batchmates (each entry's
+    /// state is advanced exactly once, error or not; a failing session's
+    /// logits slice is unspecified and must not be read).
     ///
-    /// The default loops [`EngineModel::forward`]; batch-aware models
-    /// override it to fuse the B per-matrix matvecs into one matmul so
-    /// every weight row fetched does B columns of MAC work — the
-    /// software analog of the paper's on-chip weight reuse (§Perf L3-3).
+    /// The caller reuses `logits` across decode cycles, so the steady
+    /// state allocates nothing.  The default loops
+    /// [`EngineModel::forward`]; batch-aware models override it to fuse
+    /// the B per-matrix matvecs into one matmul so every weight row
+    /// fetched does B columns of MAC work — the software analog of the
+    /// paper's on-chip weight reuse (§Perf L3-3).
     fn forward_batch(
         &mut self,
         states: &mut [&mut Vec<f32>],
         tokens: &[u32],
         variant: Variant,
-    ) -> Vec<Result<Vec<f32>>> {
-        states
-            .iter_mut()
-            .zip(tokens)
-            .map(|(state, &tok)| self.forward(state, tok, variant))
-            .collect()
+        logits: &mut Vec<f32>,
+    ) -> Vec<Option<anyhow::Error>> {
+        let vocab = self.vocab();
+        if logits.len() != states.len() * vocab {
+            logits.clear();
+            logits.resize(states.len() * vocab, 0.0);
+        }
+        let mut outcomes = Vec::with_capacity(states.len());
+        for (j, (state, &tok)) in states.iter_mut().zip(tokens).enumerate() {
+            match self.forward(state, tok, variant) {
+                Ok(lg) if lg.len() == vocab => {
+                    logits[j * vocab..(j + 1) * vocab].copy_from_slice(&lg);
+                    outcomes.push(None);
+                }
+                Ok(lg) => outcomes.push(Some(anyhow!(
+                    "forward returned {} logits, expected {vocab}",
+                    lg.len()
+                ))),
+                Err(e) => outcomes.push(Some(e)),
+            }
+        }
+        outcomes
+    }
+
+    /// Drain accumulated observability counters — for the hardware
+    /// backend, the cumulative 9-bit activation clip total since the
+    /// last drain (the coordinator folds it into `Metrics`).  Models
+    /// without such counters report 0.
+    fn take_clip_events(&mut self) -> u64 {
+        0
     }
 
     /// Consume a bounded slice of prompt tokens, returning the logits of
@@ -102,23 +131,25 @@ fn prefill_via_state(
 }
 
 /// Shared `forward_batch` glue for the native models: marshal the flat
-/// engine states into [`State`]s, run the fused batch step, scatter the
-/// states back, and wrap the (infallible) per-session logits in Ok.
+/// engine states into [`State`]s, run the fused batch step (which
+/// writes the caller's flat logits panel directly — no per-session
+/// allocation), scatter the states back.  The native walks are
+/// infallible, so every per-session outcome is `None` (ok).
 fn batch_via_step(
     n_layer: usize,
     d: usize,
     states: &mut [&mut Vec<f32>],
-    step: impl FnOnce(&mut [State]) -> Vec<Vec<f32>>,
-) -> Vec<Result<Vec<f32>>> {
+    step: impl FnOnce(&mut [State]),
+) -> Vec<Option<anyhow::Error>> {
     let mut sts: Vec<State> = states
         .iter_mut()
         .map(|s| State { data: std::mem::take(&mut **s), n_layer, d })
         .collect();
-    let logits = step(&mut sts);
+    step(&mut sts);
     for (slot, st) in states.iter_mut().zip(sts) {
         **slot = st.data;
     }
-    logits.into_iter().map(Ok).collect()
+    states.iter().map(|_| None).collect()
 }
 
 impl EngineModel for RwkvRuntime {
@@ -193,8 +224,11 @@ impl EngineModel for RwkvModel {
         states: &mut [&mut Vec<f32>],
         tokens: &[u32],
         _variant: Variant,
-    ) -> Vec<Result<Vec<f32>>> {
-        batch_via_step(self.n_layer, self.d, states, |sts| self.step_batch(sts, tokens))
+        logits: &mut Vec<f32>,
+    ) -> Vec<Option<anyhow::Error>> {
+        batch_via_step(self.n_layer, self.d, states, |sts| {
+            self.step_batch_into(sts, tokens, logits)
+        })
     }
 
     fn prefill_chunk(
@@ -236,9 +270,12 @@ impl EngineModel for HwModel {
         states: &mut [&mut Vec<f32>],
         tokens: &[u32],
         _variant: Variant,
-    ) -> Vec<Result<Vec<f32>>> {
+        logits: &mut Vec<f32>,
+    ) -> Vec<Option<anyhow::Error>> {
         let (n_layer, d) = (self.n_layer(), self.d());
-        batch_via_step(n_layer, d, states, |sts| self.step_batch(sts, tokens))
+        batch_via_step(n_layer, d, states, |sts| {
+            self.step_batch_into(sts, tokens, logits)
+        })
     }
 
     fn prefill_chunk(
@@ -251,6 +288,10 @@ impl EngineModel for HwModel {
         prefill_via_state(n_layer, d, state, tokens, |st, toks| {
             HwModel::prefill_chunk(self, st, toks)
         })
+    }
+
+    fn take_clip_events(&mut self) -> u64 {
+        HwModel::take_clip_events(self)
     }
 }
 
@@ -300,11 +341,15 @@ impl ActiveSession {
 /// The engine drives sessions over any [`EngineModel`].
 pub struct Engine<M: EngineModel> {
     pub model: M,
+    /// Reusable flat `[B * vocab]` logits panel for batched decode —
+    /// together with the walk's thread-local scratch this makes the
+    /// native decode hot path allocation-free in steady state.
+    batch_logits: Vec<f32>,
 }
 
 impl<M: EngineModel> Engine<M> {
     pub fn new(model: M) -> Engine<M> {
-        Engine { model }
+        Engine { model, batch_logits: Vec::new() }
     }
 
     /// Admit a request WITHOUT doing any forward work: the session
@@ -440,33 +485,40 @@ impl<M: EngineModel> Engine<M> {
                 .iter()
                 .map(|&i| *sessions[i].generated.last().expect("pending token committed"))
                 .collect();
-            let results = {
+            let outcomes = {
                 let mut states: Vec<&mut Vec<f32>> = sessions
                     .iter_mut()
                     .filter(|s| s.req.variant == variant)
                     .map(|s| &mut s.state)
                     .collect();
-                self.model.forward_batch(&mut states, &tokens, variant)
+                self.model
+                    .forward_batch(&mut states, &tokens, variant, &mut self.batch_logits)
             };
             // defensive: a misbehaving override returning the wrong
-            // count means the result/session alignment is unknown —
-            // fail the whole group rather than misassign logits
-            if results.len() != idx.len() {
+            // outcome count or logits-panel size means the
+            // result/session alignment is unknown — fail the whole
+            // group rather than misassign logits
+            let vocab = self.model.vocab();
+            if outcomes.len() != idx.len() || self.batch_logits.len() != idx.len() * vocab {
                 for &i in &idx {
                     errors[i] = Some(anyhow!(
-                        "forward_batch returned {} results for {} sessions",
-                        results.len(),
+                        "forward_batch returned {} outcomes / {} logits for {} sessions",
+                        outcomes.len(),
+                        self.batch_logits.len(),
                         idx.len()
                     ));
                 }
                 continue;
             }
-            for (slot, res) in results.into_iter().enumerate() {
+            for (slot, outcome) in outcomes.into_iter().enumerate() {
                 let i = idx[slot];
                 let s = &mut *sessions[i];
-                match res {
-                    Ok(lg) => s.next_token = s.sampler.sample(&lg),
-                    Err(e) => errors[i] = Some(e),
+                match outcome {
+                    None => {
+                        let lg = &self.batch_logits[slot * vocab..(slot + 1) * vocab];
+                        s.next_token = s.sampler.sample(lg);
+                    }
+                    Some(e) => errors[i] = Some(e),
                 }
             }
         }
@@ -572,13 +624,73 @@ mod tests {
             .collect();
         let batch_logits: Vec<Vec<f32>> = {
             let mut refs: Vec<&mut Vec<f32>> = states_b.iter_mut().collect();
-            b.forward_batch(&mut refs, &tokens, Variant::Exact)
-                .into_iter()
-                .map(|r| r.unwrap())
-                .collect()
+            let mut flat = Vec::new();
+            let outcomes = b.forward_batch(&mut refs, &tokens, Variant::Exact, &mut flat);
+            assert!(outcomes.iter().all(|o| o.is_none()));
+            assert_eq!(flat.len(), 3 * b.vocab);
+            flat.chunks(b.vocab).map(|c| c.to_vec()).collect()
         };
         assert_eq!(loop_logits, batch_logits);
         assert_eq!(states_a, states_b);
+    }
+
+    #[test]
+    fn default_forward_batch_fills_flat_panel() {
+        // a model with no forward_batch override must produce the same
+        // flat panel layout as the fused native override
+        struct Plain(RwkvModel);
+        impl EngineModel for Plain {
+            fn vocab(&self) -> usize {
+                self.0.vocab
+            }
+            fn state_len(&self) -> usize {
+                EngineModel::state_len(&self.0)
+            }
+            fn init_state(&self) -> Vec<f32> {
+                EngineModel::init_state(&self.0)
+            }
+            fn forward(
+                &mut self,
+                state: &mut Vec<f32>,
+                token: u32,
+                variant: Variant,
+            ) -> Result<Vec<f32>> {
+                self.0.forward(state, token, variant)
+            }
+        }
+        let mut fused = test_model(2, 32, 64, 50);
+        let mut plain = Plain(test_model(2, 32, 64, 50));
+        let mut states_f: Vec<Vec<f32>> = (0..3).map(|_| fused.init_state()).collect();
+        let mut states_p = states_f.clone();
+        let tokens = [2u32, 11, 29];
+        let (mut flat_f, mut flat_p) = (Vec::new(), Vec::new());
+        {
+            let mut refs: Vec<&mut Vec<f32>> = states_f.iter_mut().collect();
+            fused.forward_batch(&mut refs, &tokens, Variant::Exact, &mut flat_f);
+        }
+        {
+            let mut refs: Vec<&mut Vec<f32>> = states_p.iter_mut().collect();
+            plain.forward_batch(&mut refs, &tokens, Variant::Exact, &mut flat_p);
+        }
+        assert_eq!(flat_f, flat_p);
+        assert_eq!(states_f, states_p);
+    }
+
+    #[test]
+    fn engine_model_surfaces_hw_clip_totals() {
+        let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+        let mut hw = HwModel::from_f32(test_model(2, 32, 64, 50), &calib);
+        let mut st = EngineModel::init_state(&hw);
+        hw.forward(&mut st, 3, Variant::Exact).unwrap();
+        let c1 = hw.clip_events;
+        hw.forward(&mut st, 5, Variant::Exact).unwrap();
+        let c2 = hw.clip_events;
+        // the trait drain reports the lossless cumulative total, then 0
+        assert_eq!(EngineModel::take_clip_events(&mut hw), c1 + c2);
+        assert_eq!(EngineModel::take_clip_events(&mut hw), 0);
+        // non-hw models have nothing to report
+        let mut plain = test_model(1, 16, 32, 20);
+        assert_eq!(EngineModel::take_clip_events(&mut plain), 0);
     }
 
     #[test]

@@ -17,6 +17,10 @@ pub struct Metrics {
     /// (enqueue → first sampled token, i.e. queueing + chunked prefill as
     /// actually interleaved with other sessions' decode).
     pub ttft_seconds_total: f64,
+    /// Activations that clipped at the hardware backend's 9-bit rails,
+    /// drained losslessly from the model every scheduling cycle (large
+    /// values mean a bad calibration).  Always 0 for non-hw models.
+    pub clip_events: u64,
 }
 
 impl Metrics {
@@ -53,7 +57,8 @@ impl Metrics {
              decode:   {:.1} tok/s (engine time)\n\
              prefill:  {:.3} s total\n\
              ttft:     {:.4} s mean (enqueue -> first token)\n\
-             queueing: {:.4} s mean wait",
+             queueing: {:.4} s mean wait\n\
+             clips:    {} activations at the 9-bit rails",
             self.enqueued,
             self.admitted,
             self.completed,
@@ -62,6 +67,7 @@ impl Metrics {
             self.prefill_seconds_total,
             self.mean_ttft_seconds(),
             self.mean_queue_seconds(),
+            self.clip_events,
         )
     }
 }
@@ -82,10 +88,11 @@ mod tests {
     fn report_contains_counts() {
         let m = Metrics { enqueued: 3, admitted: 2, completed: 1, tokens_generated: 42,
             prefill_seconds_total: 0.5, decode_seconds_total: 2.0, queue_seconds_total: 0.1,
-            first_tokens: 1, ttft_seconds_total: 0.25 };
+            first_tokens: 1, ttft_seconds_total: 0.25, clip_events: 7 };
         let r = m.report();
         assert!(r.contains("42 generated"));
         assert!(r.contains("21.0 tok/s"));
         assert!(r.contains("0.2500 s mean (enqueue -> first token)"));
+        assert!(r.contains("7 activations at the 9-bit rails"));
     }
 }

@@ -20,7 +20,10 @@
 //!    via a single fused [`Engine::step_batch`] forward that reuses
 //!    each weight matrix across all active sessions (§Perf L3-3);
 //! 4. **completes** finished sessions, recording per-session
-//!    time-to-first-token into [`Metrics`].
+//!    time-to-first-token into [`Metrics`] — after draining the model's
+//!    cumulative 9-bit clip counter into [`Metrics`] (the hardware
+//!    backend's calibration-health signal; lossless even though the
+//!    cycle splits into separate prefill and decode forward calls).
 //!
 //! Chunked and token-by-token prefill are bit-exact for the native
 //! models, as are batched and per-session decode, so neither scheduling
@@ -235,7 +238,17 @@ fn worker_loop<M: EngineModel>(
             }
         }
         finished.sort_by_key(|&(i, _)| i);
-        // 5. complete (reverse order keeps indices valid)
+        // 5. drain observability counters BEFORE completing, so a
+        //    client woken by its reply observes metrics that already
+        //    include its session's work: the hardware backend's
+        //    cumulative 9-bit clip total for this cycle's prefill +
+        //    decode (lossless across split cycles, unlike the per-call
+        //    counter) — surfaced in the serve report
+        let clips = engine.model.take_clip_events();
+        if clips > 0 {
+            metrics.lock().unwrap().clip_events += clips;
+        }
+        // 6. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
             let (sess, reply) = active.remove(i);
             {
@@ -342,5 +355,34 @@ mod tests {
         let c = coordinator(2);
         let _ = c.generate(GenRequest::greedy(vec![1], 2)).unwrap();
         c.shutdown();
+    }
+
+    #[test]
+    fn hw_clip_totals_drain_into_metrics() {
+        use crate::model::HwModel;
+        // per-session clip trajectories are batching-invariant (batched
+        // decode and chunked prefill are bit-exact with solo decode), so
+        // the coordinator's drained total must equal the sum of solo
+        // runs of the same requests
+        let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+        let mk = || HwModel::from_f32(test_model(2, 32, 64, 50), &calib);
+        let reqs: Vec<GenRequest> = (0..3u32)
+            .map(|i| GenRequest::greedy(vec![(i + 1) % 50, (i * 7 + 2) % 50], 6))
+            .collect();
+        let expected = {
+            let mut eng = Engine::new(mk());
+            for (i, r) in reqs.iter().enumerate() {
+                let mut s = eng.start(i as u64, r.clone(), Instant::now()).unwrap();
+                while eng.step_session(&mut s).unwrap().is_none() {}
+            }
+            eng.model.take_clip_events()
+        };
+        let c = Coordinator::spawn(mk(), CoordinatorConfig { max_active: 4, prefill_chunk: 4 });
+        let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.clip_events, expected);
     }
 }

@@ -88,6 +88,13 @@ pub fn run(artifacts: &Path, limit: Option<usize>, include_hw: bool) -> Result<V
         let calib: Vec<u32> = stream.iter().copied().take(512).collect();
         let mut hw = HwModel::from_f32(base.clone(), &calib);
         rows.push(eval_model("Proposed+HW", &mut hw, &stream, &docs, &suites));
+        // calibration-health observability: the cumulative clip drain is
+        // lossless across the row's many forward calls (the per-call
+        // counter would only show the last document's)
+        println!(
+            "Proposed+HW: {} activations clipped at the 9-bit rails during evaluation",
+            hw.take_clip_events()
+        );
     }
     Ok(rows)
 }

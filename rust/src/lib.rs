@@ -15,9 +15,10 @@
 //! * [`arith`]       — bit-accurate models of the FPGA function units:
 //!   LOD, barrel shifter, Δ-PoT multiplier/PMAC (§4.2), unsigned division
 //!   unit (§4.3), exponential–sigmoid unit (§4.4), ATAC adder tree (§4.5).
-//! * [`model`]       — RWKV-4 inference in Rust: weights container, f32
-//!   reference forward, and the hardware-numerics forward built on
-//!   [`arith`] + [`quant`].
+//! * [`model`]       — RWKV-4 inference in Rust: weights container and
+//!   ONE generic layer walk behind swappable numerics backends — the f32
+//!   exact backend and the hardware backend built on [`arith`] +
+//!   [`quant`].
 //! * [`runtime`]     — PJRT wrapper: load `artifacts/*.hlo.txt`, compile on
 //!   the CPU client, execute with device-resident weight buffers.
 //! * [`coordinator`] — the serving layer: sessions with recurrent state,

@@ -1,0 +1,492 @@
+//! The ONE RWKV layer walk, generic over a numerics backend.
+//!
+//! The paper's accelerator executes a single datapath — the PE array
+//! plus the EXP–σ and DIVU units — and merely swaps *numerics* between
+//! the exact and the W9A9 hybrid-precision configurations (§3–§4).
+//! This module is the software mirror of that fact: every execution
+//! shape the crate serves is the same `[*, width]`-panel walk,
+//!
+//! * decode step        = a batch panel of width 1,
+//! * batched decode     = a batch panel of width B ([`Columns::Batch`],
+//!   one independent session state per column, §Perf L3-3 weight reuse),
+//! * chunked prefill    = a sequence panel of width T ([`Columns::Seq`],
+//!   one session state threaded through the columns in token order,
+//!   §Perf L3-4 sequence parallelism),
+//! * calibration        = a sequence panel driven by a site-observer
+//!   backend that records activation maxima instead of quantizing,
+//!
+//! parameterized by a [`Numerics`] backend that supplies LayerNorm,
+//! per-site activation quantization, exp/sigmoid, division, and the
+//! weight-matrix set.  [`crate::model::RwkvModel`] implements the exact
+//! backend (f32, optional uniform activation fake-quant — the Table 1
+//! software rows); [`crate::model::HwModel`] implements the hardware
+//! backend (Δ-PoT matrices, per-site 9-bit activations at calibrated
+//! scales, EXP-LUT/PWL-σ/DIVU, ATAC LayerNorm — the "Proposed+HW" row).
+//!
+//! # Bit-exactness contract
+//!
+//! Per-column op order is identical across panel widths and modes: each
+//! column runs the exact [`matvec`] accumulation order through
+//! [`matmul`], token shift reads the same values whether they come from
+//! a carried state row (batch / first sequence column) or the previous
+//! panel column (later sequence columns), and the WKV recurrence body is
+//! written once.  Decode, batched decode and chunked prefill are
+//! therefore bit-exact with each other on BOTH backends — asserted in
+//! `rust/tests/batch_parity.rs`, `rust/tests/prefill_parity.rs` and
+//! `rust/tests/forward_core.rs` (which also anchors the walk against an
+//! independently written naive reference forward).
+
+use super::rwkv::{matmul, matvec, Block, State};
+
+/// Activation-quantization sites, one per hook point in the walk
+/// (§3.2's W9A9 protocol quantizes activations entering each PE-array
+/// pass plus the layer residual).  The exact backend applies its
+/// optional uniform fake-quant at every site except [`Site::Resid`];
+/// the hardware backend applies per-layer calibrated 9-bit quantization
+/// at all of them; the calibration tap records per-site maxima.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// normed input of time mixing (after ln1)
+    AttXn,
+    /// key projection output
+    AttK,
+    /// value projection output
+    AttV,
+    /// r·wkv entering the output projection
+    AttGated,
+    /// normed input of channel mixing (after ln2)
+    FfnXn,
+    /// squared-ReLU FFN hidden entering the value projection
+    FfnK2,
+    /// layer output after the channel-mixing residual add
+    Resid,
+}
+
+/// The per-layer weight-*matrix* set a backend feeds the PE array
+/// (f32 matrices for the exact backend, decoded Δ-PoT for hardware).
+pub struct Mats<'a> {
+    pub att_key: &'a [f32],
+    pub att_value: &'a [f32],
+    pub att_receptance: &'a [f32],
+    pub att_output: &'a [f32],
+    pub ffn_key: &'a [f32],
+    pub ffn_receptance: &'a [f32],
+    pub ffn_value: &'a [f32],
+}
+
+/// A numerics backend: everything the generic walk does not hard-code.
+///
+/// Model shape and the *vector* weights (LayerNorm affine, mix factors,
+/// decay/first) come from [`Numerics::block`] and friends; the seven
+/// per-layer matrices, the embedding and the head come from
+/// [`Numerics::mats`] / [`Numerics::emb`] / [`Numerics::head`] so a
+/// backend can substitute quantized copies; the five op hooks select
+/// the arithmetic (exact f32 vs the integer approximation units).
+///
+/// Hooks take `&self` so one walk invocation can interleave them
+/// freely; backends that accumulate observability state (clip counters,
+/// calibration maxima) use interior mutability.
+pub trait Numerics {
+    fn n_layer(&self) -> usize;
+    fn d(&self) -> usize;
+    fn f(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Vector weights of layer `l` (shared storage with the f32 model).
+    fn block(&self, l: usize) -> &Block;
+    /// Embedding-LayerNorm affine (w, b).
+    fn ln0(&self) -> (&[f32], &[f32]);
+    /// Output-LayerNorm affine (w, b).
+    fn ln_out(&self) -> (&[f32], &[f32]);
+    /// Embedding matrix `[vocab, d]`.
+    fn emb(&self) -> &[f32];
+    /// Head matrix `[vocab, d]`.
+    fn head(&self) -> &[f32];
+    /// Matrix set of layer `l`.
+    fn mats(&self, l: usize) -> Mats<'_>;
+
+    /// LayerNorm `x → out` with affine (w, b).
+    fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]);
+    /// Quantize (or observe) one activation vector at `site` of layer
+    /// `l`, in place.
+    fn quant(&self, l: usize, site: Site, xs: &mut [f32]);
+    /// WKV exponential (callers only feed `x <= 0`, running-max form).
+    fn exp(&self, x: f32) -> f32;
+    fn sigmoid(&self, x: f32) -> f32;
+    /// WKV division `num / den`.
+    fn div(&self, num: f32, den: f32) -> f32;
+}
+
+/// How the panel's columns map onto recurrent state.
+pub enum Columns<'a> {
+    /// B independent sessions, one column each, advanced one token
+    /// (batched decode; width 1 is the single autoregressive step).
+    Batch(&'a mut [State]),
+    /// One session, T token columns consumed in sequence order
+    /// (chunked prefill / calibration).
+    Seq(&'a mut State),
+}
+
+impl Columns<'_> {
+    /// Token-shift source for column `c`: the previous token's normed
+    /// activation — the per-session carried state row in batch mode; the
+    /// previous panel column in sequence mode (the carried row for the
+    /// chunk's first column).
+    fn shift_src<'b>(
+        &'b self,
+        c: usize,
+        l: usize,
+        row: usize,
+        xn: &'b [f32],
+        d: usize,
+    ) -> &'b [f32] {
+        match self {
+            Columns::Batch(states) => states[c].row(l, row),
+            Columns::Seq(state) => {
+                if c == 0 {
+                    state.row(l, row)
+                } else {
+                    &xn[(c - 1) * d..c * d]
+                }
+            }
+        }
+    }
+}
+
+/// What the head projection runs over.
+pub enum HeadMode {
+    /// Logits for every column (decode: each session needs its sample).
+    PerColumn,
+    /// Logits for the last column only (prefill: earlier prompt columns'
+    /// logits would be computed and thrown away).
+    LastColumn,
+    /// No head at all (calibration taps the layer stack only).
+    Skip,
+}
+
+/// Scratch panels for the generic walk — the ONE scratch struct behind
+/// every execution shape, sized by panel width on demand (so a single
+/// thread-local serves width-1 decode, width-B batches and width-T
+/// prefill chunks without per-call allocation).  Column `c` of a
+/// `d`-stride panel lives at `p[c*d..(c+1)*d]` (`c*f` for the FFN
+/// hidden).
+pub struct ScratchPanels {
+    pub(crate) x: Vec<f32>,
+    pub(crate) xn: Vec<f32>,
+    pub(crate) xk: Vec<f32>,
+    pub(crate) xv: Vec<f32>,
+    pub(crate) xr: Vec<f32>,
+    pub(crate) r: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) kf: Vec<f32>,
+    pub(crate) gated: Vec<f32>,
+    pub(crate) dx: Vec<f32>,
+    /// per-layer effective decay `-exp(att_decay)`, hoisted once per
+    /// layer (the same f32 value every column would compute inline, so
+    /// bit-exactness is untouched)
+    pub(crate) w_eff: Vec<f32>,
+}
+
+impl ScratchPanels {
+    pub fn new() -> ScratchPanels {
+        ScratchPanels {
+            x: Vec::new(),
+            xn: Vec::new(),
+            xk: Vec::new(),
+            xv: Vec::new(),
+            xr: Vec::new(),
+            r: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            kf: Vec::new(),
+            gated: Vec::new(),
+            dx: Vec::new(),
+            w_eff: Vec::new(),
+        }
+    }
+
+    /// Size every panel for a (d, f, width) walk.  Panels are pure
+    /// outputs (fully written before any read each call), so when the
+    /// size is already right this is free — no per-call re-zeroing.
+    fn ensure(&mut self, d: usize, f: usize, width: usize) {
+        for p in [
+            &mut self.x,
+            &mut self.xn,
+            &mut self.xk,
+            &mut self.xv,
+            &mut self.xr,
+            &mut self.r,
+            &mut self.k,
+            &mut self.v,
+            &mut self.gated,
+            &mut self.dx,
+        ] {
+            if p.len() != width * d {
+                p.clear();
+                p.resize(width * d, 0.0);
+            }
+        }
+        if self.kf.len() != width * f {
+            self.kf.clear();
+            self.kf.resize(width * f, 0.0);
+        }
+        if self.w_eff.len() != d {
+            self.w_eff.clear();
+            self.w_eff.resize(d, 0.0);
+        }
+    }
+}
+
+impl Default for ScratchPanels {
+    fn default() -> ScratchPanels {
+        ScratchPanels::new()
+    }
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<ScratchPanels> =
+        std::cell::RefCell::new(ScratchPanels::new());
+}
+
+/// Run `f` with the thread-local scratch panels (perf: the walk itself
+/// never allocates; see §Perf L3-2).  Not reentrant — the walk never
+/// nests, and callers must not call back into a model forward from `f`.
+pub fn with_scratch<R>(f: impl FnOnce(&mut ScratchPanels) -> R) -> R {
+    SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// THE layer walk.  Consumes `tokens` (one per column), advances the
+/// state(s) per `cols`, and writes logits into `logits` per `head`
+/// (resized to `width * vocab` for [`HeadMode::PerColumn`], `vocab` for
+/// [`HeadMode::LastColumn`], cleared for [`HeadMode::Skip`]).
+///
+/// See the module docs for the bit-exactness contract; per-column op
+/// order is the original [`matvec`]-based single-step order at every
+/// width, in both column modes, on every backend.
+pub fn forward_panel<N: Numerics>(
+    nm: &N,
+    cols: Columns,
+    tokens: &[u32],
+    head: HeadMode,
+    buf: &mut ScratchPanels,
+    logits: &mut Vec<f32>,
+) {
+    let mut cols = cols;
+    let d = nm.d();
+    let width = match &cols {
+        Columns::Batch(states) => {
+            assert_eq!(tokens.len(), states.len(), "one token per session");
+            states.len()
+        }
+        Columns::Seq(_) => {
+            assert!(!tokens.is_empty(), "prefill_chunk requires at least one token");
+            tokens.len()
+        }
+    };
+    if width == 0 {
+        logits.clear();
+        return;
+    }
+    buf.ensure(d, nm.f(), width);
+
+    // embedding + ln0, per column
+    {
+        let (w0, b0) = nm.ln0();
+        for (c, &tok) in tokens.iter().enumerate() {
+            let o = c * d;
+            let emb_row = &nm.emb()[tok as usize * d..(tok as usize + 1) * d];
+            nm.layernorm(emb_row, w0, b0, &mut buf.x[o..o + d]);
+        }
+    }
+
+    for l in 0..nm.n_layer() {
+        time_mixing(nm, l, &mut cols, width, buf);
+        for i in 0..width * d {
+            buf.x[i] += buf.dx[i];
+        }
+        channel_mixing(nm, l, &mut cols, width, buf);
+        for i in 0..width * d {
+            buf.dx[i] = nm.sigmoid(buf.r[i]) * buf.dx[i];
+            buf.x[i] += buf.dx[i];
+        }
+        for c in 0..width {
+            let o = c * d;
+            nm.quant(l, Site::Resid, &mut buf.x[o..o + d]);
+        }
+    }
+
+    // head projection
+    let (w, b) = nm.ln_out();
+    let vocab = nm.vocab();
+    match head {
+        HeadMode::PerColumn => {
+            for c in 0..width {
+                let o = c * d;
+                nm.layernorm(&buf.x[o..o + d], w, b, &mut buf.xn[o..o + d]);
+            }
+            if logits.len() != width * vocab {
+                logits.clear();
+                logits.resize(width * vocab, 0.0);
+            }
+            matmul(nm.head(), &buf.xn[..width * d], logits, width);
+        }
+        HeadMode::LastColumn => {
+            let o = (width - 1) * d;
+            nm.layernorm(&buf.x[o..o + d], w, b, &mut buf.xn[o..o + d]);
+            if logits.len() != vocab {
+                logits.clear();
+                logits.resize(vocab, 0.0);
+            }
+            matvec(nm.head(), &buf.xn[o..o + d], logits);
+        }
+        HeadMode::Skip => logits.clear(),
+    }
+}
+
+/// Time mixing over the panel: per column LayerNorm → quant → token
+/// shift, then ONE [`matmul`] per projection over all columns, with the
+/// elementwise WKV recurrence between them.  Writes the attention
+/// residual into `buf.dx`.
+fn time_mixing<N: Numerics>(
+    nm: &N,
+    l: usize,
+    cols: &mut Columns,
+    width: usize,
+    buf: &mut ScratchPanels,
+) {
+    let d = nm.d();
+    let blk = nm.block(l);
+    let ScratchPanels { x, xn, xk, xv, xr, r, k, v, gated, dx, w_eff, .. } = buf;
+
+    for c in 0..width {
+        let o = c * d;
+        nm.layernorm(&x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut xn[o..o + d]);
+        nm.quant(l, Site::AttXn, &mut xn[o..o + d]);
+        {
+            let xp = cols.shift_src(c, l, 0, xn, d);
+            for i in 0..d {
+                let xni = xn[o + i];
+                xk[o + i] = xni * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
+                xv[o + i] = xni * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
+                xr[o + i] = xni * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
+            }
+        }
+        if let Columns::Batch(states) = cols {
+            states[c].row_mut(l, 0).copy_from_slice(&xn[o..o + d]);
+        }
+    }
+    if let Columns::Seq(state) = cols {
+        let last = (width - 1) * d;
+        state.row_mut(l, 0).copy_from_slice(&xn[last..last + d]);
+    }
+
+    let m = nm.mats(l);
+    matmul(m.att_receptance, xr, r, width);
+    matmul(m.att_key, xk, k, width);
+    matmul(m.att_value, xv, v, width);
+    for c in 0..width {
+        let o = c * d;
+        nm.quant(l, Site::AttK, &mut k[o..o + d]);
+        nm.quant(l, Site::AttV, &mut v[o..o + d]);
+    }
+
+    // effective decay is column-invariant: hoist it so the panel pays d
+    // exp() calls per layer instead of width×d (same f32 value every
+    // column, so bit-exactness is untouched)
+    for i in 0..d {
+        w_eff[i] = -blk.att_decay[i].exp();
+    }
+
+    // the WKV recurrence: per independent session column in batch mode,
+    // sequentially through the shared state in sequence mode — the ONLY
+    // place the two modes' state threading differs, and it differs by
+    // which `State` each column resolves to, not by op order
+    for c in 0..width {
+        let o = c * d;
+        let st: &mut State = match cols {
+            Columns::Batch(states) => &mut states[c],
+            Columns::Seq(state) => &mut **state,
+        };
+        for i in 0..d {
+            let rr = nm.sigmoid(r[o + i]);
+            let (ki, vi) = (k[o + i], v[o + i]);
+            let aa = st.row(l, 2)[i];
+            let bb = st.row(l, 3)[i];
+            let pp = st.row(l, 4)[i];
+            let u = blk.att_first[i];
+
+            // output branch
+            let ww = u + ki;
+            let qq = pp.max(ww);
+            let e1 = nm.exp(pp - qq);
+            let e2 = nm.exp(ww - qq);
+            let wkv = nm.div(e1 * aa + e2 * vi, e1 * bb + e2);
+
+            // state branch
+            let ww = pp + w_eff[i];
+            let qq = ww.max(ki);
+            let e1 = nm.exp(ww - qq);
+            let e2 = nm.exp(ki - qq);
+            st.row_mut(l, 2)[i] = e1 * aa + e2 * vi;
+            st.row_mut(l, 3)[i] = e1 * bb + e2;
+            st.row_mut(l, 4)[i] = qq;
+
+            gated[o + i] = rr * wkv;
+        }
+        nm.quant(l, Site::AttGated, &mut gated[o..o + d]);
+    }
+    matmul(m.att_output, gated, dx, width);
+}
+
+/// Channel mixing over the panel — same structure as [`time_mixing`]
+/// with the FFN weights and the single-row token shift.  Writes the
+/// pre-gate FFN residual into `buf.dx`; the caller applies the
+/// receptance sigmoid gate and the residual add (one fused elementwise
+/// pass in [`forward_panel`]).
+fn channel_mixing<N: Numerics>(
+    nm: &N,
+    l: usize,
+    cols: &mut Columns,
+    width: usize,
+    buf: &mut ScratchPanels,
+) {
+    let d = nm.d();
+    let f = nm.f();
+    let blk = nm.block(l);
+    let ScratchPanels { x, xn, xk, xr, r, kf, dx, .. } = buf;
+
+    for c in 0..width {
+        let o = c * d;
+        nm.layernorm(&x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut xn[o..o + d]);
+        nm.quant(l, Site::FfnXn, &mut xn[o..o + d]);
+        {
+            let xp = cols.shift_src(c, l, 1, xn, d);
+            for i in 0..d {
+                let xni = xn[o + i];
+                xk[o + i] = xni * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
+                xr[o + i] = xni * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
+            }
+        }
+        if let Columns::Batch(states) = cols {
+            states[c].row_mut(l, 1).copy_from_slice(&xn[o..o + d]);
+        }
+    }
+    if let Columns::Seq(state) = cols {
+        let last = (width - 1) * d;
+        state.row_mut(l, 1).copy_from_slice(&xn[last..last + d]);
+    }
+
+    let m = nm.mats(l);
+    matmul(m.ffn_receptance, xr, r, width);
+    matmul(m.ffn_key, xk, kf, width);
+    for kv in kf.iter_mut() {
+        let relu = kv.max(0.0);
+        *kv = relu * relu;
+    }
+    for c in 0..width {
+        let of = c * f;
+        nm.quant(l, Site::FfnK2, &mut kf[of..of + f]);
+    }
+    matmul(m.ffn_value, kf, dx, width);
+}

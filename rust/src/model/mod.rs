@@ -1,25 +1,52 @@
-//! RWKV-4 inference in Rust: weights container (HFWT reader), the f32
-//! reference forward pass, the hardware-numerics forward pass built on
-//! [`crate::arith`] + [`crate::quant`], tokenizer and sampler.
+//! RWKV-4 inference in Rust: ONE generic layer walk behind swappable
+//! numerics backends, plus the weights container (HFWT reader),
+//! tokenizer and sampler.
 //!
-//! Two Rust forwards exist alongside the PJRT path:
+//! # Architecture: one walk, many numerics
 //!
-//! * [`rwkv::RwkvModel`] — plain f32, bit-for-bit the same math as the
-//!   JAX `exact` variant (validated against the HLO executable in
-//!   `rust/tests/golden_parity.rs`).  The Table 1 ablation runs here
-//!   (fake-quantized weights, f32 activations).
-//! * [`rwkv_hw::HwModel`] — the paper's datapath: Δ-PoT matrices, 9-bit
-//!   activations, EXP-LUT/PWL-sigmoid/DIVU nonlinearities, ATAC-identity
-//!   LayerNorm.  This measures the full W9A9 + approximation stack.
+//! The paper's accelerator has a single datapath — the PE array plus the
+//! EXP–σ and DIVU units — and realizes its configurations by swapping
+//! *numerics*, not control flow (§3–§4).  This module mirrors that:
+//! [`forward`] holds the only RWKV layer walk in the crate
+//! ([`forward::forward_panel`], a `[*, width]`-activation-panel walk
+//! whose width-1 batch is the decode step, width-B batch is batched
+//! decode, and width-T sequence is chunked prefill), generic over the
+//! [`forward::Numerics`] backend trait.  Backends:
+//!
+//! * [`rwkv::RwkvModel`] — the exact backend: plain f32 math, f32 weight
+//!   matrices, optional uniform activation fake-quant.  Bit-for-bit the
+//!   same math as the JAX `exact` variant (validated against the HLO
+//!   executable in `rust/tests/golden_parity.rs`); the Table 1 software
+//!   ablation rows (fake-quantized weights, W9A9 activations) run here
+//!   (§5.2).
+//! * [`rwkv_hw::HwModel`] — the hardware backend, i.e. the paper's full
+//!   datapath: Δ-PoT matrices (§3.2), per-site 9-bit activations at
+//!   calibrated per-layer scales, EXP-LUT / PWL-sigmoid / DIVU
+//!   nonlinearities (§4), ATAC-identity LayerNorm.  This is the
+//!   "Proposed+HW" Table 1 row, with 9-bit clip-event observability.
+//! * the calibration tap (internal to `rwkv_hw`) — a site-observer
+//!   backend whose quantization hook records per-site activation maxima
+//!   instead of rounding; `HwModel::from_f32` resolves its output into
+//!   the per-layer scale table.
+//!
+//! Because every execution shape on every backend is the same walk,
+//! decode / batched decode / chunked prefill are bit-exact with each
+//! other by construction (asserted in `rust/tests/{batch,prefill}_parity.rs`
+//! and `rust/tests/forward_core.rs`), and a new execution feature lands
+//! once in [`forward`] instead of once per shape per backend.  The PJRT
+//! runtime path (`crate::runtime`) sits alongside as the compiled-HLO
+//! cross-check.
 
+pub mod forward;
 pub mod rwkv;
 pub mod rwkv_hw;
 pub mod sampler;
 pub mod tokenizer;
 pub mod weights;
 
+pub use forward::{Columns, HeadMode, Numerics, Site};
 pub use rwkv::{RwkvModel, State};
-pub use rwkv_hw::HwModel;
+pub use rwkv_hw::{HwModel, LayerScales};
 pub use sampler::Sampler;
 pub use tokenizer::Tokenizer;
 pub use weights::WeightFile;

@@ -1,6 +1,14 @@
-//! RWKV-4 f32 forward pass — the Rust twin of the JAX `exact` variant
-//! (`python/compile/model.py::step`).  Validated against the AOT HLO
-//! executable in `rust/tests/golden_parity.rs`.
+//! RWKV-4 f32 model: weights, the exact-numerics backend of the ONE
+//! generic layer walk ([`crate::model::forward`]), and the shared
+//! [`matvec`]/[`matmul`] PE-array kernels.  Bit-for-bit the same math as
+//! the JAX `exact` variant (`python/compile/model.py::step`), validated
+//! against the AOT HLO executable in `rust/tests/golden_parity.rs`.
+//!
+//! Every execution shape ([`RwkvModel::step`], [`RwkvModel::step_batch`],
+//! [`RwkvModel::prefill_chunk`]) is a thin wrapper that runs
+//! [`forward_panel`](crate::model::forward::forward_panel) with this
+//! model as the [`Numerics`] backend — there is no per-shape forward
+//! body here.
 //!
 //! # Perf notes
 //!
@@ -35,6 +43,7 @@
 
 use anyhow::{bail, Result};
 
+use super::forward::{self, Columns, HeadMode, Mats, Numerics, Site};
 use super::weights::WeightFile;
 use crate::quant::Scheme;
 
@@ -264,7 +273,7 @@ pub fn matmul(w: &[f32], xs: &[f32], out: &mut [f32], b: usize) {
 }
 
 #[inline]
-fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
@@ -349,124 +358,25 @@ impl RwkvModel {
         }
     }
 
-    /// One autoregressive step: returns logits, updates `state` in place.
+    /// One autoregressive step: returns logits, updates `state` in
+    /// place.  A width-1 batch panel through the generic walk.
     ///
-    /// Perf note (§Perf L3-2): scratch buffers are reused via a
-    /// thread-local (10 allocations/step otherwise — ~8% of a step on
-    /// the tiny model).
+    /// Perf note (§Perf L3-2): scratch lives in the walk's thread-local
+    /// [`ScratchPanels`](crate::model::forward::ScratchPanels), so the
+    /// step allocates nothing but the returned logits vector.
     pub fn step(&self, state: &mut State, token: u32) -> Vec<f32> {
-        SCRATCH.with(|cell| {
-            let mut slot = cell.borrow_mut();
-            let buf = match slot.as_mut() {
-                Some(b) if b.fits(self.d, self.f) => slot.as_mut().unwrap(),
-                _ => {
-                    *slot = Some(Buffers::new(self.d, self.f));
-                    slot.as_mut().unwrap()
-                }
-            };
-            self.step_buf(state, token, buf)
-        })
-    }
-
-    /// Step with caller-provided scratch (allocation-free hot path).
-    pub fn step_buf(&self, state: &mut State, token: u32, buf: &mut Buffers) -> Vec<f32> {
-        let d = self.d;
-        let mut x = vec![0f32; d];
-        // embedding + ln0
-        let emb_row = &self.emb[token as usize * d..(token as usize + 1) * d];
-        layernorm(emb_row, &self.ln0_w, &self.ln0_b, &mut x);
-
-        for (l, blk) in self.blocks.iter().enumerate() {
-            self.time_mixing(blk, l, &x, state, buf);
-            for i in 0..d {
-                x[i] += buf.dx[i];
-            }
-            self.channel_mixing(blk, l, &x, state, buf);
-            for i in 0..d {
-                x[i] += buf.dx[i];
-            }
-        }
-
-        let mut xn = vec![0f32; d];
-        layernorm(&x, &self.ln_out_w, &self.ln_out_b, &mut xn);
-        let mut logits = vec![0f32; self.vocab];
-        matvec(&self.head, &xn, &mut logits);
+        let mut logits = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                self,
+                Columns::Batch(std::slice::from_mut(state)),
+                &[token],
+                HeadMode::PerColumn,
+                buf,
+                &mut logits,
+            )
+        });
         logits
-    }
-
-    fn time_mixing(&self, blk: &Block, l: usize, x: &[f32], state: &mut State, buf: &mut Buffers) {
-        let d = self.d;
-        layernorm(x, &blk.ln1_w, &blk.ln1_b, &mut buf.xn);
-        act_quant(&mut buf.xn, self.act_bits);
-        {
-            let xp = state.row(l, 0);
-            for i in 0..d {
-                buf.xk[i] = buf.xn[i] * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
-                buf.xv[i] = buf.xn[i] * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
-                buf.xr[i] = buf.xn[i] * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
-            }
-        }
-        state.row_mut(l, 0).copy_from_slice(&buf.xn);
-        matvec(&blk.att_receptance, &buf.xr, &mut buf.r);
-        matvec(&blk.att_key, &buf.xk, &mut buf.k);
-        matvec(&blk.att_value, &buf.xv, &mut buf.v);
-        act_quant(&mut buf.k, self.act_bits);
-        act_quant(&mut buf.v, self.act_bits);
-
-        for i in 0..d {
-            let r = sigmoid(buf.r[i]);
-            let (k, v) = (buf.k[i], buf.v[i]);
-            let aa = state.row(l, 2)[i];
-            let bb = state.row(l, 3)[i];
-            let pp = state.row(l, 4)[i];
-            let w_eff = -blk.att_decay[i].exp();
-            let u = blk.att_first[i];
-
-            // output branch
-            let ww = u + k;
-            let qq = pp.max(ww);
-            let e1 = (pp - qq).exp();
-            let e2 = (ww - qq).exp();
-            let wkv = (e1 * aa + e2 * v) / (e1 * bb + e2);
-
-            // state branch
-            let ww = pp + w_eff;
-            let qq = ww.max(k);
-            let e1 = (ww - qq).exp();
-            let e2 = (k - qq).exp();
-            state.row_mut(l, 2)[i] = e1 * aa + e2 * v;
-            state.row_mut(l, 3)[i] = e1 * bb + e2;
-            state.row_mut(l, 4)[i] = qq;
-
-            buf.gated_d[i] = r * wkv;
-        }
-        act_quant(&mut buf.gated_d, self.act_bits);
-        matvec(&blk.att_output, &buf.gated_d, &mut buf.dx);
-    }
-
-    fn channel_mixing(&self, blk: &Block, l: usize, x: &[f32], state: &mut State, buf: &mut Buffers) {
-        let d = self.d;
-        layernorm(x, &blk.ln2_w, &blk.ln2_b, &mut buf.xn);
-        act_quant(&mut buf.xn, self.act_bits);
-        {
-            let xp = state.row(l, 1);
-            for i in 0..d {
-                buf.xk[i] = buf.xn[i] * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
-                buf.xr[i] = buf.xn[i] * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
-            }
-        }
-        state.row_mut(l, 1).copy_from_slice(&buf.xn);
-        matvec(&blk.ffn_receptance, &buf.xr, &mut buf.r);
-        matvec(&blk.ffn_key, &buf.xk, &mut buf.kf);
-        for v in buf.kf.iter_mut() {
-            let relu = v.max(0.0);
-            *v = relu * relu;
-        }
-        act_quant(&mut buf.kf, self.act_bits);
-        matvec(&blk.ffn_value, &buf.kf, &mut buf.dx);
-        for i in 0..d {
-            buf.dx[i] *= sigmoid(buf.r[i]);
-        }
     }
 
     /// Batched autoregressive step: advance B independent sessions one
@@ -480,161 +390,34 @@ impl RwkvModel {
     /// times (§Perf L3-3).  Results are bit-exact with calling
     /// [`RwkvModel::step`] per session.
     pub fn step_batch(&self, states: &mut [State], tokens: &[u32]) -> Vec<Vec<f32>> {
-        BATCH_SCRATCH.with(|cell| {
-            let mut buf = cell.borrow_mut();
-            self.step_batch_buf(states, tokens, &mut buf)
+        forward::with_scratch(|buf| {
+            let mut flat = Vec::new();
+            forward::forward_panel(
+                self,
+                Columns::Batch(states),
+                tokens,
+                HeadMode::PerColumn,
+                buf,
+                &mut flat,
+            );
+            flat.chunks(self.vocab).map(|c| c.to_vec()).collect()
         })
     }
 
-    /// Batched step with caller-provided scratch (allocation-free hot
-    /// path; see [`RwkvModel::step_batch`]).
-    pub fn step_batch_buf(
-        &self,
-        states: &mut [State],
-        tokens: &[u32],
-        buf: &mut BatchBuffers,
-    ) -> Vec<Vec<f32>> {
-        let b = states.len();
-        assert_eq!(tokens.len(), b, "one token per session");
-        if b == 0 {
-            return Vec::new();
-        }
-        let d = self.d;
-        buf.ensure(d, self.f, b);
-
-        // embedding + ln0, per column
-        for (j, &tok) in tokens.iter().enumerate() {
-            let o = j * d;
-            let emb_row = &self.emb[tok as usize * d..(tok as usize + 1) * d];
-            layernorm(emb_row, &self.ln0_w, &self.ln0_b, &mut buf.x[o..o + d]);
-        }
-
-        for (l, blk) in self.blocks.iter().enumerate() {
-            self.time_mixing_batch(blk, l, states, buf);
-            for i in 0..b * d {
-                buf.x[i] += buf.dx[i];
-            }
-            self.channel_mixing_batch(blk, l, states, buf);
-            for i in 0..b * d {
-                buf.x[i] += buf.dx[i];
-            }
-        }
-
-        for j in 0..b {
-            let o = j * d;
-            layernorm(&buf.x[o..o + d], &self.ln_out_w, &self.ln_out_b, &mut buf.xn[o..o + d]);
-        }
-        let mut logits = vec![0f32; b * self.vocab];
-        matmul(&self.head, &buf.xn[..b * d], &mut logits, b);
-        logits.chunks(self.vocab).map(|c| c.to_vec()).collect()
-    }
-
-    fn time_mixing_batch(
-        &self,
-        blk: &Block,
-        l: usize,
-        states: &mut [State],
-        buf: &mut BatchBuffers,
-    ) {
-        let d = self.d;
-        let b = states.len();
-        for (j, st) in states.iter_mut().enumerate() {
-            let o = j * d;
-            layernorm(&buf.x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut buf.xn[o..o + d]);
-            act_quant(&mut buf.xn[o..o + d], self.act_bits);
-            {
-                let xp = st.row(l, 0);
-                for i in 0..d {
-                    let xn = buf.xn[o + i];
-                    buf.xk[o + i] = xn * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
-                    buf.xv[o + i] = xn * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
-                    buf.xr[o + i] = xn * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
-                }
-            }
-            st.row_mut(l, 0).copy_from_slice(&buf.xn[o..o + d]);
-        }
-        matmul(&blk.att_receptance, &buf.xr, &mut buf.r, b);
-        matmul(&blk.att_key, &buf.xk, &mut buf.k, b);
-        matmul(&blk.att_value, &buf.xv, &mut buf.v, b);
-        for j in 0..b {
-            let o = j * d;
-            act_quant(&mut buf.k[o..o + d], self.act_bits);
-            act_quant(&mut buf.v[o..o + d], self.act_bits);
-        }
-
-        // per-session elementwise WKV recurrence (state stays private)
-        for (j, st) in states.iter_mut().enumerate() {
-            let o = j * d;
-            for i in 0..d {
-                let r = sigmoid(buf.r[o + i]);
-                let (k, v) = (buf.k[o + i], buf.v[o + i]);
-                let aa = st.row(l, 2)[i];
-                let bb = st.row(l, 3)[i];
-                let pp = st.row(l, 4)[i];
-                let w_eff = -blk.att_decay[i].exp();
-                let u = blk.att_first[i];
-
-                // output branch
-                let ww = u + k;
-                let qq = pp.max(ww);
-                let e1 = (pp - qq).exp();
-                let e2 = (ww - qq).exp();
-                let wkv = (e1 * aa + e2 * v) / (e1 * bb + e2);
-
-                // state branch
-                let ww = pp + w_eff;
-                let qq = ww.max(k);
-                let e1 = (ww - qq).exp();
-                let e2 = (k - qq).exp();
-                st.row_mut(l, 2)[i] = e1 * aa + e2 * v;
-                st.row_mut(l, 3)[i] = e1 * bb + e2;
-                st.row_mut(l, 4)[i] = qq;
-
-                buf.gated_d[o + i] = r * wkv;
-            }
-            act_quant(&mut buf.gated_d[o..o + d], self.act_bits);
-        }
-        matmul(&blk.att_output, &buf.gated_d, &mut buf.dx, b);
-    }
-
-    fn channel_mixing_batch(
-        &self,
-        blk: &Block,
-        l: usize,
-        states: &mut [State],
-        buf: &mut BatchBuffers,
-    ) {
-        let d = self.d;
-        let f = self.f;
-        let b = states.len();
-        for (j, st) in states.iter_mut().enumerate() {
-            let o = j * d;
-            layernorm(&buf.x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut buf.xn[o..o + d]);
-            act_quant(&mut buf.xn[o..o + d], self.act_bits);
-            {
-                let xp = st.row(l, 1);
-                for i in 0..d {
-                    let xn = buf.xn[o + i];
-                    buf.xk[o + i] = xn * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
-                    buf.xr[o + i] = xn * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
-                }
-            }
-            st.row_mut(l, 1).copy_from_slice(&buf.xn[o..o + d]);
-        }
-        matmul(&blk.ffn_receptance, &buf.xr, &mut buf.r, b);
-        matmul(&blk.ffn_key, &buf.xk, &mut buf.kf, b);
-        for v in buf.kf.iter_mut() {
-            let relu = v.max(0.0);
-            *v = relu * relu;
-        }
-        for j in 0..b {
-            let of = j * f;
-            act_quant(&mut buf.kf[of..of + f], self.act_bits);
-        }
-        matmul(&blk.ffn_value, &buf.kf, &mut buf.dx, b);
-        for i in 0..b * d {
-            buf.dx[i] *= sigmoid(buf.r[i]);
-        }
+    /// [`RwkvModel::step_batch`] writing one flat `[B * vocab]` logits
+    /// panel into a caller-owned buffer — the allocation-free engine
+    /// decode path (the panel is reused across decode cycles).
+    pub fn step_batch_into(&self, states: &mut [State], tokens: &[u32], logits: &mut Vec<f32>) {
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                self,
+                Columns::Batch(states),
+                tokens,
+                HeadMode::PerColumn,
+                buf,
+                logits,
+            )
+        });
     }
 
     /// Sequence-parallel chunked prefill: consume `tokens` (a slice of
@@ -642,181 +425,29 @@ impl RwkvModel {
     /// [`RwkvModel::step`] would, and return the logits of the LAST
     /// token of the chunk.
     ///
-    /// The chunk is laid out as a `[T, d]` activation panel: per block,
-    /// each of the seven weight matrices runs as ONE [`matmul`] over all
-    /// T token columns (§Perf L3-4 weight reuse), while token shift and
-    /// the WKV recurrence — the only sequential parts of RWKV's dual
-    /// formulation — run as cheap elementwise loops over t between the
-    /// projections.  Per-column op order matches [`matvec`], so chunked
-    /// prefill is bit-exact with token-by-token prefill at any T.
-    /// Callers bound T (the serving layer feeds 32–128-token chunks) to
-    /// bound per-cycle latency and scratch memory.
+    /// The chunk is laid out as a `[T, d]` sequence panel through the
+    /// generic walk: per block, each of the seven weight matrices runs
+    /// as ONE [`matmul`] over all T token columns (§Perf L3-4 weight
+    /// reuse), while token shift and the WKV recurrence — the only
+    /// sequential parts of RWKV's dual formulation — run as cheap
+    /// elementwise loops over t between the projections, and the head
+    /// projects only the last token.  Per-column op order matches
+    /// [`matvec`], so chunked prefill is bit-exact with token-by-token
+    /// prefill at any T.  Callers bound T (the serving layer feeds
+    /// 32–128-token chunks) to bound per-cycle latency and scratch.
     pub fn prefill_chunk(&self, state: &mut State, tokens: &[u32]) -> Vec<f32> {
-        BATCH_SCRATCH.with(|cell| {
-            let mut buf = cell.borrow_mut();
-            self.prefill_chunk_buf(state, tokens, &mut buf)
-        })
-    }
-
-    /// [`RwkvModel::prefill_chunk`] with caller-provided scratch
-    /// (allocation-free except for the returned logits).
-    pub fn prefill_chunk_buf(
-        &self,
-        state: &mut State,
-        tokens: &[u32],
-        buf: &mut BatchBuffers,
-    ) -> Vec<f32> {
-        let t_len = tokens.len();
-        assert!(t_len > 0, "prefill_chunk requires at least one token");
-        let d = self.d;
-        buf.ensure(d, self.f, t_len);
-
-        // embedding + ln0, per token column
-        for (t, &tok) in tokens.iter().enumerate() {
-            let o = t * d;
-            let emb_row = &self.emb[tok as usize * d..(tok as usize + 1) * d];
-            layernorm(emb_row, &self.ln0_w, &self.ln0_b, &mut buf.x[o..o + d]);
-        }
-
-        for (l, blk) in self.blocks.iter().enumerate() {
-            self.time_mixing_seq(blk, l, state, t_len, buf);
-            for i in 0..t_len * d {
-                buf.x[i] += buf.dx[i];
-            }
-            self.channel_mixing_seq(blk, l, state, t_len, buf);
-            for i in 0..t_len * d {
-                buf.x[i] += buf.dx[i];
-            }
-        }
-
-        // head projection on the LAST token only — token-by-token
-        // prefill pays a full [vocab, d] matvec per prompt token and
-        // throws all but the last away
-        let o = (t_len - 1) * d;
-        let mut xn = vec![0f32; d];
-        layernorm(&buf.x[o..o + d], &self.ln_out_w, &self.ln_out_b, &mut xn);
-        let mut logits = vec![0f32; self.vocab];
-        matvec(&self.head, &xn, &mut logits);
+        let mut logits = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                self,
+                Columns::Seq(state),
+                tokens,
+                HeadMode::LastColumn,
+                buf,
+                &mut logits,
+            )
+        });
         logits
-    }
-
-    /// Time mixing over a `[T, d]` prompt panel (§Perf L3-4): LayerNorm
-    /// and token shift walk the panel in t order (token t's shift reads
-    /// token t-1's normed activation; the chunk's first token reads the
-    /// carried state row), then the three projections and the output
-    /// projection each run as ONE [`matmul`] over all T columns, with
-    /// the elementwise WKV recurrence between them.
-    fn time_mixing_seq(
-        &self,
-        blk: &Block,
-        l: usize,
-        state: &mut State,
-        t_len: usize,
-        buf: &mut BatchBuffers,
-    ) {
-        let d = self.d;
-        for t in 0..t_len {
-            let o = t * d;
-            layernorm(&buf.x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut buf.xn[o..o + d]);
-            act_quant(&mut buf.xn[o..o + d], self.act_bits);
-            for i in 0..d {
-                let xn = buf.xn[o + i];
-                let xp = if t == 0 { state.row(l, 0)[i] } else { buf.xn[o - d + i] };
-                buf.xk[o + i] = xn * blk.att_mix_k[i] + xp * (1.0 - blk.att_mix_k[i]);
-                buf.xv[o + i] = xn * blk.att_mix_v[i] + xp * (1.0 - blk.att_mix_v[i]);
-                buf.xr[o + i] = xn * blk.att_mix_r[i] + xp * (1.0 - blk.att_mix_r[i]);
-            }
-        }
-        let last = (t_len - 1) * d;
-        state.row_mut(l, 0).copy_from_slice(&buf.xn[last..last + d]);
-        matmul(&blk.att_receptance, &buf.xr, &mut buf.r, t_len);
-        matmul(&blk.att_key, &buf.xk, &mut buf.k, t_len);
-        matmul(&blk.att_value, &buf.xv, &mut buf.v, t_len);
-        for t in 0..t_len {
-            let o = t * d;
-            act_quant(&mut buf.k[o..o + d], self.act_bits);
-            act_quant(&mut buf.v[o..o + d], self.act_bits);
-        }
-
-        // the sequential WKV recurrence, in token order.  The effective
-        // decay −exp(decay) is t-invariant: hoist it so the chunk pays
-        // d exp() calls per layer instead of T×d (same f32 value reused
-        // each t, so bit-exactness with `step` is untouched).
-        let w_effs: Vec<f32> = blk.att_decay.iter().map(|&a| -a.exp()).collect();
-        for t in 0..t_len {
-            let o = t * d;
-            for i in 0..d {
-                let r = sigmoid(buf.r[o + i]);
-                let (k, v) = (buf.k[o + i], buf.v[o + i]);
-                let aa = state.row(l, 2)[i];
-                let bb = state.row(l, 3)[i];
-                let pp = state.row(l, 4)[i];
-                let w_eff = w_effs[i];
-                let u = blk.att_first[i];
-
-                // output branch
-                let ww = u + k;
-                let qq = pp.max(ww);
-                let e1 = (pp - qq).exp();
-                let e2 = (ww - qq).exp();
-                let wkv = (e1 * aa + e2 * v) / (e1 * bb + e2);
-
-                // state branch
-                let ww = pp + w_eff;
-                let qq = ww.max(k);
-                let e1 = (ww - qq).exp();
-                let e2 = (k - qq).exp();
-                state.row_mut(l, 2)[i] = e1 * aa + e2 * v;
-                state.row_mut(l, 3)[i] = e1 * bb + e2;
-                state.row_mut(l, 4)[i] = qq;
-
-                buf.gated_d[o + i] = r * wkv;
-            }
-            act_quant(&mut buf.gated_d[o..o + d], self.act_bits);
-        }
-        matmul(&blk.att_output, &buf.gated_d, &mut buf.dx, t_len);
-    }
-
-    /// Channel mixing over a `[T, d]` prompt panel (§Perf L3-4) — same
-    /// structure as [`RwkvModel::time_mixing_seq`] with the FFN weights
-    /// and the single-row token shift.
-    fn channel_mixing_seq(
-        &self,
-        blk: &Block,
-        l: usize,
-        state: &mut State,
-        t_len: usize,
-        buf: &mut BatchBuffers,
-    ) {
-        let d = self.d;
-        let f = self.f;
-        for t in 0..t_len {
-            let o = t * d;
-            layernorm(&buf.x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut buf.xn[o..o + d]);
-            act_quant(&mut buf.xn[o..o + d], self.act_bits);
-            for i in 0..d {
-                let xn = buf.xn[o + i];
-                let xp = if t == 0 { state.row(l, 1)[i] } else { buf.xn[o - d + i] };
-                buf.xk[o + i] = xn * blk.ffn_mix_k[i] + xp * (1.0 - blk.ffn_mix_k[i]);
-                buf.xr[o + i] = xn * blk.ffn_mix_r[i] + xp * (1.0 - blk.ffn_mix_r[i]);
-            }
-        }
-        let last = (t_len - 1) * d;
-        state.row_mut(l, 1).copy_from_slice(&buf.xn[last..last + d]);
-        matmul(&blk.ffn_receptance, &buf.xr, &mut buf.r, t_len);
-        matmul(&blk.ffn_key, &buf.xk, &mut buf.kf, t_len);
-        for v in buf.kf.iter_mut() {
-            let relu = v.max(0.0);
-            *v = relu * relu;
-        }
-        for t in 0..t_len {
-            let of = t * f;
-            act_quant(&mut buf.kf[of..of + f], self.act_bits);
-        }
-        matmul(&blk.ffn_value, &buf.kf, &mut buf.dx, t_len);
-        for i in 0..t_len * d {
-            buf.dx[i] *= sigmoid(buf.r[i]);
-        }
     }
 
     /// Log-softmax of logits (for scoring).
@@ -827,114 +458,81 @@ impl RwkvModel {
     }
 }
 
-thread_local! {
-    static SCRATCH: std::cell::RefCell<Option<Buffers>> = const { std::cell::RefCell::new(None) };
-    static BATCH_SCRATCH: std::cell::RefCell<BatchBuffers> =
-        std::cell::RefCell::new(BatchBuffers::new());
-}
+/// The exact-numerics backend (§5.2 software rows): plain f32 LayerNorm,
+/// exp, sigmoid and division; the f32 weight matrices; optional uniform
+/// activation fake-quant ([`RwkvModel::act_bits`], the "A9" half of the
+/// W9A9 protocol) at every site except the residual — the hardware
+/// datapath's extra residual re-quantization has no software-row analog.
+impl Numerics for RwkvModel {
+    fn n_layer(&self) -> usize {
+        self.n_layer
+    }
 
-/// Scratch panels for batched decode: every per-activation buffer from
-/// [`Buffers`], widened to B columns laid out session-major (column j of
-/// panel `p` lives at `p[j*d..(j+1)*d]`, or `j*f` for the FFN hidden).
-/// Resized on demand so one thread-local serves any batch width; the
-/// hw-numerics batch path (`rwkv_hw`) reuses the same struct.
-pub struct BatchBuffers {
-    pub(crate) x: Vec<f32>,
-    pub(crate) xn: Vec<f32>,
-    pub(crate) xk: Vec<f32>,
-    pub(crate) xv: Vec<f32>,
-    pub(crate) xr: Vec<f32>,
-    pub(crate) r: Vec<f32>,
-    pub(crate) k: Vec<f32>,
-    pub(crate) v: Vec<f32>,
-    pub(crate) kf: Vec<f32>,
-    pub(crate) gated_d: Vec<f32>,
-    pub(crate) dx: Vec<f32>,
-}
+    fn d(&self) -> usize {
+        self.d
+    }
 
-impl BatchBuffers {
-    pub fn new() -> BatchBuffers {
-        BatchBuffers {
-            x: Vec::new(),
-            xn: Vec::new(),
-            xk: Vec::new(),
-            xv: Vec::new(),
-            xr: Vec::new(),
-            r: Vec::new(),
-            k: Vec::new(),
-            v: Vec::new(),
-            kf: Vec::new(),
-            gated_d: Vec::new(),
-            dx: Vec::new(),
+    fn f(&self) -> usize {
+        self.f
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn block(&self, l: usize) -> &Block {
+        &self.blocks[l]
+    }
+
+    fn ln0(&self) -> (&[f32], &[f32]) {
+        (&self.ln0_w, &self.ln0_b)
+    }
+
+    fn ln_out(&self) -> (&[f32], &[f32]) {
+        (&self.ln_out_w, &self.ln_out_b)
+    }
+
+    fn emb(&self) -> &[f32] {
+        &self.emb
+    }
+
+    fn head(&self) -> &[f32] {
+        &self.head
+    }
+
+    fn mats(&self, l: usize) -> Mats<'_> {
+        let b = &self.blocks[l];
+        Mats {
+            att_key: &b.att_key,
+            att_value: &b.att_value,
+            att_receptance: &b.att_receptance,
+            att_output: &b.att_output,
+            ffn_key: &b.ffn_key,
+            ffn_receptance: &b.ffn_receptance,
+            ffn_value: &b.ffn_value,
         }
     }
 
-    /// Size every panel for a (d, f, B) batch.  Panels are pure outputs
-    /// (fully written before any read each step), so when the size is
-    /// already right this is free — no per-step re-zeroing.
-    pub(crate) fn ensure(&mut self, d: usize, f: usize, b: usize) {
-        for p in [
-            &mut self.x,
-            &mut self.xn,
-            &mut self.xk,
-            &mut self.xv,
-            &mut self.xr,
-            &mut self.r,
-            &mut self.k,
-            &mut self.v,
-            &mut self.gated_d,
-            &mut self.dx,
-        ] {
-            if p.len() != b * d {
-                p.clear();
-                p.resize(b * d, 0.0);
-            }
-        }
-        if self.kf.len() != b * f {
-            self.kf.clear();
-            self.kf.resize(b * f, 0.0);
-        }
+    fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+        layernorm(x, w, b, out);
     }
-}
 
-impl Default for BatchBuffers {
-    fn default() -> BatchBuffers {
-        BatchBuffers::new()
-    }
-}
-
-/// Scratch buffers reused across steps (perf: no per-step allocation).
-pub struct Buffers {
-    xn: Vec<f32>,
-    xk: Vec<f32>,
-    xv: Vec<f32>,
-    xr: Vec<f32>,
-    r: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    kf: Vec<f32>,
-    gated_d: Vec<f32>,
-    dx: Vec<f32>,
-}
-
-impl Buffers {
-    pub fn new(d: usize, f: usize) -> Buffers {
-        Buffers {
-            xn: vec![0.0; d],
-            xk: vec![0.0; d],
-            xv: vec![0.0; d],
-            xr: vec![0.0; d],
-            r: vec![0.0; d],
-            k: vec![0.0; d],
-            v: vec![0.0; d],
-            kf: vec![0.0; f],
-            gated_d: vec![0.0; d],
-            dx: vec![0.0; d],
+    fn quant(&self, _l: usize, site: Site, xs: &mut [f32]) {
+        if site != Site::Resid {
+            act_quant(xs, self.act_bits);
         }
     }
 
-    fn fits(&self, d: usize, f: usize) -> bool {
-        self.xn.len() == d && self.kf.len() == f
+    fn exp(&self, x: f32) -> f32 {
+        x.exp()
+    }
+
+    fn sigmoid(&self, x: f32) -> f32 {
+        sigmoid(x)
+    }
+
+    fn div(&self, num: f32, den: f32) -> f32 {
+        num / den
     }
 }
 

@@ -1,5 +1,6 @@
-//! Hardware-numerics RWKV forward: the full W9A9 + approximation stack
-//! the accelerator executes (§3 + §4).
+//! Hardware-numerics RWKV backend: the full W9A9 + approximation stack
+//! the accelerator executes (§3 + §4), plugged into the ONE generic
+//! layer walk ([`crate::model::forward`]).
 //!
 //! * matrix weights   → Δ-PoT codes (values exactly realizable by the
 //!   PMAC shift-add datapath; `quant::DpotTensor`)
@@ -10,34 +11,63 @@
 //! * division         → the integer DIVU (LOD + 4×4-bit 2D-LUT)
 //! * LayerNorm        → ATAC single-pass identity (eq 12) + DIVU
 //!
+//! [`HwModel`] implements [`Numerics`], so every execution shape —
+//! decode, batched decode, chunked prefill — is the same walk the exact
+//! backend runs, with these hooks swapped in; there is no hand-copied
+//! hardware forward.  The calibration pass is a site-observer backend
+//! ([`Numerics::quant`] records maxima instead of rounding) over the
+//! very same walk.
+//!
 //! This is the model whose accuracy the "Proposed+HW" Table 1 row
-//! reports; the fake-quant-only rows run on the f32 forward instead.
+//! reports; the fake-quant-only rows run on the f32 backend instead.
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
-use super::rwkv::{matmul, matvec, BatchBuffers, RwkvModel, State};
+use super::forward::{self, Columns, HeadMode, Mats, Numerics, Site};
+use super::rwkv::{Block, RwkvModel, State};
 use crate::arith::{Divu, ExpSigmoidUnit};
 use crate::quant::DpotTensor;
 
-/// Per-site activation scale table: (layer, site) -> max-abs seen.
-/// Used only during the calibration pass; the hot path reads the
-/// resolved [`LayerScales`] instead.
-type ScaleMap = HashMap<(usize, &'static str), f32>;
+/// Per-site activation maxima: (layer, site) -> max-abs seen.  Used only
+/// during the calibration pass; the hot path reads the resolved
+/// [`LayerScales`] instead.
+type ScaleMap = HashMap<(usize, Site), f32>;
 
-/// Per-layer activation scales, one field per quantization site,
-/// resolved from the calibration [`ScaleMap`] at construction.  The old
+/// Per-layer activation scales, one field per quantization [`Site`],
+/// resolved from the calibration site map at construction.  The old
 /// hot path did a HashMap lookup per site per layer per step; this is a
-/// direct indexed load (`self.scales[l].att_k`).
-#[derive(Clone, Copy, Debug)]
-struct LayerScales {
-    att_xn: f32,
-    att_k: f32,
-    att_v: f32,
-    att_gated: f32,
-    ffn_xn: f32,
-    ffn_k2: f32,
-    resid: f32,
+/// direct indexed load.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerScales {
+    pub att_xn: f32,
+    pub att_k: f32,
+    pub att_v: f32,
+    pub att_gated: f32,
+    pub ffn_xn: f32,
+    pub ffn_k2: f32,
+    pub resid: f32,
 }
+
+impl LayerScales {
+    /// The scale for one quantization site.
+    pub fn site(&self, s: Site) -> f32 {
+        match s {
+            Site::AttXn => self.att_xn,
+            Site::AttK => self.att_k,
+            Site::AttV => self.att_v,
+            Site::AttGated => self.att_gated,
+            Site::FfnXn => self.ffn_xn,
+            Site::FfnK2 => self.ffn_k2,
+            Site::Resid => self.resid,
+        }
+    }
+}
+
+/// Calibration sequence-chunk width (boundaries are invisible to the
+/// recorded maxima — asserted in the tests below — so this only bounds
+/// scratch memory).
+const CALIB_CHUNK: usize = 128;
 
 /// The hardware-numerics model.
 pub struct HwModel {
@@ -48,8 +78,17 @@ pub struct HwModel {
     exps: ExpSigmoidUnit,
     divu: Divu,
     /// count of activations that clipped at the 9-bit rails during the
-    /// last step (observability; large values mean a bad calibration)
+    /// LAST forward call (observability; large values mean a bad
+    /// calibration).  Each call overwrites this — engines that split a
+    /// decode cycle into several calls should drain the lossless
+    /// cumulative counter via [`HwModel::take_clip_events`] instead.
     pub clip_events: u64,
+    /// cumulative clips since the last [`HwModel::take_clip_events`]
+    clip_total: u64,
+    /// in-flight counter the `Numerics::quant` hook bumps during a walk
+    /// (`&self` there — interior mutability), folded into the two
+    /// counters above when the wrapping call finishes
+    clips: Cell<u64>,
 }
 
 struct QuantizedMats {
@@ -82,6 +121,29 @@ fn quant9(xs: &mut [f32], scale: f32, clips: &mut u64) {
         }
         *x = q.clamp(-qmax, qmax) * s / qmax;
     }
+}
+
+/// Calibration pass: drive the calib stream through the SAME generic
+/// walk with the site-observer backend ([`CalibTap`] records max-abs at
+/// every quantization site instead of rounding), in bounded sequence
+/// chunks.  Chunk boundaries are invisible to the walk, so the maxima
+/// are bit-identical to a token-by-token pass — i.e. exactly what the
+/// pre-refactor hand-replayed calibration forward collected.  Returns
+/// the per-site maxima with the 1.1 safety margin applied.
+fn calibrate(base: &RwkvModel, calib_tokens: &[u32], chunk: usize) -> ScaleMap {
+    let tap = CalibTap { m: base, site_max: RefCell::new(HashMap::new()) };
+    let mut st = base.new_state();
+    let mut sink = Vec::new();
+    forward::with_scratch(|buf| {
+        for c in calib_tokens.chunks(chunk.max(1)) {
+            forward::forward_panel(&tap, Columns::Seq(&mut st), c, HeadMode::Skip, buf, &mut sink);
+        }
+    });
+    let mut site_max = tap.site_max.into_inner();
+    for v in site_max.values_mut() {
+        *v *= 1.1;
+    }
+    site_max
 }
 
 impl HwModel {
@@ -134,44 +196,36 @@ impl HwModel {
             quant9(&mut b.att_decay, s, &mut clips);
         }
 
-        // 3. calibration pass on the f32 path to collect per-site maxima
-        let mut site_max = ScaleMap::new();
-        {
-            let probe = base.clone();
-            let mut st = probe.new_state();
-            let mut collector = |l: usize, site: &'static str, xs: &[f32]| {
-                let m = xs.iter().fold(0f32, |a, &b| a.max(b.abs()));
-                let e = site_max.entry((l, site)).or_insert(0.0);
-                *e = e.max(m);
-            };
-            let mut x = vec![0f32; d];
-            for &tok in calib_tokens.iter().take(512) {
-                // replicate the forward, recording maxima at the
-                // quantization sites (uses the f32 math — calibration
-                // happens before quantization in the real flow too)
-                probe_step(&probe, &mut st, tok, &mut x, &mut collector);
-            }
-            // safety margin
-            for v in site_max.values_mut() {
-                *v *= 1.1;
-            }
-        }
+        // 3. calibration: the site-observer tap over the generic walk
+        //    (f32 matrices + quantized vectors — calibration happens
+        //    before activation quantization in the real flow too)
+        let calib = &calib_tokens[..calib_tokens.len().min(512)];
+        let site_max = calibrate(&base, calib, CALIB_CHUNK);
         // 4. resolve the site map into the per-layer struct the hot path
         //    indexes directly (4.0 = uncalibrated-site fallback)
-        let site = |l: usize, name: &'static str| *site_max.get(&(l, name)).unwrap_or(&4.0);
+        let site = |l: usize, s: Site| *site_max.get(&(l, s)).unwrap_or(&4.0);
         let scales: Vec<LayerScales> = (0..base.n_layer)
             .map(|l| LayerScales {
-                att_xn: site(l, "att_xn"),
-                att_k: site(l, "att_k"),
-                att_v: site(l, "att_v"),
-                att_gated: site(l, "att_gated"),
-                ffn_xn: site(l, "ffn_xn"),
-                ffn_k2: site(l, "ffn_k2"),
-                resid: site(l, "resid"),
+                att_xn: site(l, Site::AttXn),
+                att_k: site(l, Site::AttK),
+                att_v: site(l, Site::AttV),
+                att_gated: site(l, Site::AttGated),
+                ffn_xn: site(l, Site::FfnXn),
+                ffn_k2: site(l, Site::FfnK2),
+                resid: site(l, Site::Resid),
             })
             .collect();
 
-        HwModel { base, q, scales, exps: ExpSigmoidUnit::new(), divu: Divu::new(), clip_events: 0 }
+        HwModel {
+            base,
+            q,
+            scales,
+            exps: ExpSigmoidUnit::new(),
+            divu: Divu::new(),
+            clip_events: 0,
+            clip_total: 0,
+            clips: Cell::new(0),
+        }
     }
 
     pub fn new_state(&self) -> State {
@@ -188,6 +242,29 @@ impl HwModel {
 
     pub fn d(&self) -> usize {
         self.base.d
+    }
+
+    /// Per-layer calibrated activation scales, one entry per layer.
+    pub fn scales(&self) -> &[LayerScales] {
+        &self.scales
+    }
+
+    /// Drain the cumulative 9-bit clip counter: the total across every
+    /// forward call since the last drain.  Unlike the per-call
+    /// [`HwModel::clip_events`] field — which each call overwrites, so
+    /// split decode cycles lose counts — the drained total is lossless;
+    /// the coordinator folds it into `Metrics::clip_events` and the
+    /// serve report.
+    pub fn take_clip_events(&mut self) -> u64 {
+        std::mem::take(&mut self.clip_total)
+    }
+
+    /// Fold the walk's in-flight clip count into the per-call and
+    /// cumulative counters (called once per public forward call).
+    fn finish_clips(&mut self) {
+        let c = self.clips.take();
+        self.clip_events = c;
+        self.clip_total += c;
     }
 
     /// LayerNorm in the ATAC identity form with DIVU division.
@@ -227,507 +304,243 @@ impl HwModel {
         s * self.divu.div_f64(n, d, 12) as f32
     }
 
-    /// One autoregressive step on the hardware datapath.
+    /// One autoregressive step on the hardware datapath: a width-1
+    /// batch panel through the generic walk.
     pub fn step(&mut self, state: &mut State, token: u32) -> Vec<f32> {
-        let d = self.base.d;
-        let f = self.base.f;
-        let mut clips = 0u64;
-        let mut x = vec![0f32; d];
-        let emb_row = &self.q.emb[token as usize * d..(token as usize + 1) * d];
-        self.hw_layernorm(emb_row, &self.base.ln0_w, &self.base.ln0_b, &mut x);
-
-        let mut xn = vec![0f32; d];
-        let mut xk = vec![0f32; d];
-        let mut xv = vec![0f32; d];
-        let mut xr = vec![0f32; d];
-        let mut r = vec![0f32; d];
-        let mut k = vec![0f32; d];
-        let mut v = vec![0f32; d];
-        let mut kf = vec![0f32; f];
-        let mut gated = vec![0f32; f.max(d)];
-        let mut dx = vec![0f32; d];
-
-        for l in 0..self.base.n_layer {
-            let blk = &self.base.blocks[l];
-            let qb = &self.q.blocks[l];
-            let sc = self.scales[l];
-
-            // ---- time mixing ------------------------------------------------
-            self.hw_layernorm(&x, &blk.ln1_w, &blk.ln1_b, &mut xn);
-            quant9(&mut xn, sc.att_xn, &mut clips);
-            {
-                let xp = state.row(l, 0);
-                for i in 0..d {
-                    xk[i] = xn[i] * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
-                    xv[i] = xn[i] * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
-                    xr[i] = xn[i] * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
-                }
-            }
-            state.row_mut(l, 0).copy_from_slice(&xn);
-            matvec(&qb.att_receptance, &xr, &mut r);
-            matvec(&qb.att_key, &xk, &mut k);
-            matvec(&qb.att_value, &xv, &mut v);
-            quant9(&mut k, sc.att_k, &mut clips);
-            quant9(&mut v, sc.att_v, &mut clips);
-
-            for i in 0..d {
-                let rr = self.hw_sigmoid(r[i]);
-                let aa = state.row(l, 2)[i];
-                let bb = state.row(l, 3)[i];
-                let pp = state.row(l, 4)[i];
-                let w_eff = -blk.att_decay[i].exp();
-                let u = blk.att_first[i];
-
-                let ww = u + k[i];
-                let qq = pp.max(ww);
-                let e1 = self.hw_exp(pp - qq);
-                let e2 = self.hw_exp(ww - qq);
-                let wkv = self.hw_div(e1 * aa + e2 * v[i], e1 * bb + e2);
-
-                let ww = pp + w_eff;
-                let qq = ww.max(k[i]);
-                let e1 = self.hw_exp(ww - qq);
-                let e2 = self.hw_exp(k[i] - qq);
-                state.row_mut(l, 2)[i] = e1 * aa + e2 * v[i];
-                state.row_mut(l, 3)[i] = e1 * bb + e2;
-                state.row_mut(l, 4)[i] = qq;
-                gated[i] = rr * wkv;
-            }
-            quant9(&mut gated[..d], sc.att_gated, &mut clips);
-            matvec(&qb.att_output, &gated[..d], &mut dx);
-            for i in 0..d {
-                x[i] += dx[i];
-            }
-
-            // ---- channel mixing ---------------------------------------------
-            self.hw_layernorm(&x, &blk.ln2_w, &blk.ln2_b, &mut xn);
-            quant9(&mut xn, sc.ffn_xn, &mut clips);
-            {
-                let xp = state.row(l, 1);
-                for i in 0..d {
-                    xk[i] = xn[i] * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
-                    xr[i] = xn[i] * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
-                }
-            }
-            state.row_mut(l, 1).copy_from_slice(&xn);
-            matvec(&qb.ffn_receptance, &xr, &mut r);
-            matvec(&qb.ffn_key, &xk, &mut kf);
-            for kv in kf.iter_mut() {
-                let relu = kv.max(0.0);
-                *kv = relu * relu;
-            }
-            quant9(&mut kf, sc.ffn_k2, &mut clips);
-            matvec(&qb.ffn_value, &kf, &mut dx);
-            for i in 0..d {
-                dx[i] = self.hw_sigmoid(r[i]) * dx[i];
-            }
-            for i in 0..d {
-                x[i] += dx[i];
-            }
-            quant9(&mut x, sc.resid, &mut clips);
-        }
-
-        self.hw_layernorm(&x, &self.base.ln_out_w, &self.base.ln_out_b, &mut xn);
-        let mut logits = vec![0f32; self.base.vocab];
-        matvec(&self.q.head, &xn, &mut logits);
-        self.clip_events = clips;
+        let mut logits = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Batch(std::slice::from_mut(state)),
+                &[token],
+                HeadMode::PerColumn,
+                buf,
+                &mut logits,
+            )
+        });
+        self.finish_clips();
         logits
     }
 
     /// Batched autoregressive step on the hardware datapath: the B
-    /// sessions share one [`matmul`] per Δ-PoT matrix (B-fold weight
-    /// reuse, §Perf L3-3) while every per-site 9-bit quantization,
-    /// LUT/PWL nonlinearity and the WKV recurrence run column-wise per
-    /// session — so each column is bit-exact with [`HwModel::step`].
-    /// `clip_events` afterwards holds the clip total across this call's
-    /// whole batch (the same observability signal, aggregated).  Note:
-    /// like the sequential [`HwModel::step`], each call overwrites the
-    /// counter — if an engine splits one decode cycle into several
-    /// variant groups, only the last group's total is visible.
+    /// sessions share one [`matmul`](crate::model::rwkv::matmul) per
+    /// Δ-PoT matrix (B-fold weight reuse, §Perf L3-3) while every
+    /// per-site 9-bit quantization, LUT/PWL nonlinearity and the WKV
+    /// recurrence run column-wise per session — bit-exact with
+    /// [`HwModel::step`] per session at any B.  `clip_events` afterwards
+    /// holds this call's whole-batch clip total; the cumulative drain
+    /// ([`HwModel::take_clip_events`]) additionally preserves it across
+    /// calls.
     pub fn step_batch(&mut self, states: &mut [State], tokens: &[u32]) -> Vec<Vec<f32>> {
-        HW_BATCH_SCRATCH.with(|cell| {
-            let mut panels = cell.borrow_mut();
-            self.step_batch_panels(states, tokens, &mut panels)
-        })
+        let mut flat = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Batch(states),
+                tokens,
+                HeadMode::PerColumn,
+                buf,
+                &mut flat,
+            )
+        });
+        self.finish_clips();
+        flat.chunks(self.base.vocab).map(|c| c.to_vec()).collect()
     }
 
-    fn step_batch_panels(
-        &mut self,
-        states: &mut [State],
-        tokens: &[u32],
-        panels: &mut BatchBuffers,
-    ) -> Vec<Vec<f32>> {
-        let b = states.len();
-        assert_eq!(tokens.len(), b, "one token per session");
-        if b == 0 {
-            return Vec::new();
-        }
-        let d = self.base.d;
-        let f = self.base.f;
-        let mut clips = 0u64;
-        panels.ensure(d, f, b);
-        let BatchBuffers { x, xn, xk, xv, xr, r, k, v, kf, gated_d: gated, dx } = panels;
-
-        for (j, &tok) in tokens.iter().enumerate() {
-            let o = j * d;
-            let emb_row = &self.q.emb[tok as usize * d..(tok as usize + 1) * d];
-            self.hw_layernorm(emb_row, &self.base.ln0_w, &self.base.ln0_b, &mut x[o..o + d]);
-        }
-
-        for l in 0..self.base.n_layer {
-            let blk = &self.base.blocks[l];
-            let qb = &self.q.blocks[l];
-            let sc = self.scales[l];
-
-            // ---- time mixing --------------------------------------------
-            for (j, st) in states.iter_mut().enumerate() {
-                let o = j * d;
-                self.hw_layernorm(&x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut xn[o..o + d]);
-                quant9(&mut xn[o..o + d], sc.att_xn, &mut clips);
-                {
-                    let xp = st.row(l, 0);
-                    for i in 0..d {
-                        let xni = xn[o + i];
-                        xk[o + i] = xni * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
-                        xv[o + i] = xni * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
-                        xr[o + i] = xni * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
-                    }
-                }
-                st.row_mut(l, 0).copy_from_slice(&xn[o..o + d]);
-            }
-            matmul(&qb.att_receptance, &xr, &mut *r, b);
-            matmul(&qb.att_key, &xk, &mut *k, b);
-            matmul(&qb.att_value, &xv, &mut *v, b);
-            for j in 0..b {
-                let o = j * d;
-                quant9(&mut k[o..o + d], sc.att_k, &mut clips);
-                quant9(&mut v[o..o + d], sc.att_v, &mut clips);
-            }
-
-            for (j, st) in states.iter_mut().enumerate() {
-                let o = j * d;
-                for i in 0..d {
-                    let rr = self.hw_sigmoid(r[o + i]);
-                    let aa = st.row(l, 2)[i];
-                    let bb = st.row(l, 3)[i];
-                    let pp = st.row(l, 4)[i];
-                    let w_eff = -blk.att_decay[i].exp();
-                    let u = blk.att_first[i];
-
-                    let ww = u + k[o + i];
-                    let qq = pp.max(ww);
-                    let e1 = self.hw_exp(pp - qq);
-                    let e2 = self.hw_exp(ww - qq);
-                    let wkv = self.hw_div(e1 * aa + e2 * v[o + i], e1 * bb + e2);
-
-                    let ww = pp + w_eff;
-                    let qq = ww.max(k[o + i]);
-                    let e1 = self.hw_exp(ww - qq);
-                    let e2 = self.hw_exp(k[o + i] - qq);
-                    st.row_mut(l, 2)[i] = e1 * aa + e2 * v[o + i];
-                    st.row_mut(l, 3)[i] = e1 * bb + e2;
-                    st.row_mut(l, 4)[i] = qq;
-                    gated[o + i] = rr * wkv;
-                }
-                quant9(&mut gated[o..o + d], sc.att_gated, &mut clips);
-            }
-            matmul(&qb.att_output, &gated, &mut *dx, b);
-            for i in 0..b * d {
-                x[i] += dx[i];
-            }
-
-            // ---- channel mixing -----------------------------------------
-            for (j, st) in states.iter_mut().enumerate() {
-                let o = j * d;
-                self.hw_layernorm(&x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut xn[o..o + d]);
-                quant9(&mut xn[o..o + d], sc.ffn_xn, &mut clips);
-                {
-                    let xp = st.row(l, 1);
-                    for i in 0..d {
-                        let xni = xn[o + i];
-                        xk[o + i] = xni * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
-                        xr[o + i] = xni * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
-                    }
-                }
-                st.row_mut(l, 1).copy_from_slice(&xn[o..o + d]);
-            }
-            matmul(&qb.ffn_receptance, &xr, &mut *r, b);
-            matmul(&qb.ffn_key, &xk, &mut *kf, b);
-            for kv in kf.iter_mut() {
-                let relu = kv.max(0.0);
-                *kv = relu * relu;
-            }
-            for j in 0..b {
-                let of = j * f;
-                quant9(&mut kf[of..of + f], sc.ffn_k2, &mut clips);
-            }
-            matmul(&qb.ffn_value, &kf, &mut *dx, b);
-            for i in 0..b * d {
-                dx[i] = self.hw_sigmoid(r[i]) * dx[i];
-                x[i] += dx[i];
-            }
-            for j in 0..b {
-                let o = j * d;
-                quant9(&mut x[o..o + d], sc.resid, &mut clips);
-            }
-        }
-
-        for j in 0..b {
-            let o = j * d;
-            let (w, bias) = (&self.base.ln_out_w, &self.base.ln_out_b);
-            self.hw_layernorm(&x[o..o + d], w, bias, &mut xn[o..o + d]);
-        }
-        let mut logits = vec![0f32; b * self.base.vocab];
-        matmul(&self.q.head, &xn, &mut logits, b);
-        self.clip_events = clips;
-        logits.chunks(self.base.vocab).map(|c| c.to_vec()).collect()
+    /// [`HwModel::step_batch`] writing one flat `[B * vocab]` logits
+    /// panel into a caller-owned buffer (the allocation-free engine
+    /// decode path).
+    pub fn step_batch_into(&mut self, states: &mut [State], tokens: &[u32], logits: &mut Vec<f32>) {
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Batch(states),
+                tokens,
+                HeadMode::PerColumn,
+                buf,
+                logits,
+            )
+        });
+        self.finish_clips();
     }
 
     /// Sequence-parallel chunked prefill on the hardware datapath
-    /// (§Perf L3-4): the chunk's T prompt tokens share ONE [`matmul`]
-    /// per Δ-PoT matrix, while every per-site 9-bit quantization (at the
-    /// same column-wise per-layer scales), LUT/PWL nonlinearity, token
-    /// shift and the WKV recurrence run per token column in t order —
-    /// bit-exact with T calls to [`HwModel::step`].  `clip_events`
-    /// afterwards holds the clip total aggregated across the whole
-    /// chunk (each call overwrites the counter, like the other steps).
+    /// (§Perf L3-4): a `[T, d]` sequence panel through the generic walk
+    /// — ONE matmul per Δ-PoT matrix per chunk, per-site 9-bit
+    /// quantization at the same column-wise per-layer scales, head on
+    /// the last token only.  Bit-exact with T calls to
+    /// [`HwModel::step`]; `clip_events` afterwards holds the whole
+    /// chunk's clip total.
     pub fn prefill_chunk(&mut self, state: &mut State, tokens: &[u32]) -> Vec<f32> {
-        HW_BATCH_SCRATCH.with(|cell| {
-            let mut panels = cell.borrow_mut();
-            self.prefill_chunk_panels(state, tokens, &mut panels)
-        })
-    }
-
-    fn prefill_chunk_panels(
-        &mut self,
-        state: &mut State,
-        tokens: &[u32],
-        panels: &mut BatchBuffers,
-    ) -> Vec<f32> {
-        let t_len = tokens.len();
-        assert!(t_len > 0, "prefill_chunk requires at least one token");
-        let d = self.base.d;
-        let f = self.base.f;
-        let mut clips = 0u64;
-        panels.ensure(d, f, t_len);
-        let BatchBuffers { x, xn, xk, xv, xr, r, k, v, kf, gated_d: gated, dx } = panels;
-
-        for (t, &tok) in tokens.iter().enumerate() {
-            let o = t * d;
-            let emb_row = &self.q.emb[tok as usize * d..(tok as usize + 1) * d];
-            self.hw_layernorm(emb_row, &self.base.ln0_w, &self.base.ln0_b, &mut x[o..o + d]);
-        }
-
-        for l in 0..self.base.n_layer {
-            let blk = &self.base.blocks[l];
-            let qb = &self.q.blocks[l];
-            let sc = self.scales[l];
-
-            // ---- time mixing --------------------------------------------
-            for t in 0..t_len {
-                let o = t * d;
-                self.hw_layernorm(&x[o..o + d], &blk.ln1_w, &blk.ln1_b, &mut xn[o..o + d]);
-                quant9(&mut xn[o..o + d], sc.att_xn, &mut clips);
-                for i in 0..d {
-                    let xni = xn[o + i];
-                    // token shift: the previous token's normed column
-                    // (the carried state row for the chunk's first token)
-                    let xp = if t == 0 { state.row(l, 0)[i] } else { xn[o - d + i] };
-                    xk[o + i] = xni * blk.att_mix_k[i] + xp * (1.0 - blk.att_mix_k[i]);
-                    xv[o + i] = xni * blk.att_mix_v[i] + xp * (1.0 - blk.att_mix_v[i]);
-                    xr[o + i] = xni * blk.att_mix_r[i] + xp * (1.0 - blk.att_mix_r[i]);
-                }
-            }
-            let last = (t_len - 1) * d;
-            state.row_mut(l, 0).copy_from_slice(&xn[last..last + d]);
-            matmul(&qb.att_receptance, &xr, &mut *r, t_len);
-            matmul(&qb.att_key, &xk, &mut *k, t_len);
-            matmul(&qb.att_value, &xv, &mut *v, t_len);
-            for t in 0..t_len {
-                let o = t * d;
-                quant9(&mut k[o..o + d], sc.att_k, &mut clips);
-                quant9(&mut v[o..o + d], sc.att_v, &mut clips);
-            }
-
-            // sequential WKV recurrence, in token order.  −exp(decay) is
-            // t-invariant: hoist it to d exp() calls per layer instead
-            // of T×d (same f32 value each t → still bit-exact with step)
-            let w_effs: Vec<f32> = blk.att_decay.iter().map(|&a| -a.exp()).collect();
-            for t in 0..t_len {
-                let o = t * d;
-                for i in 0..d {
-                    let rr = self.hw_sigmoid(r[o + i]);
-                    let aa = state.row(l, 2)[i];
-                    let bb = state.row(l, 3)[i];
-                    let pp = state.row(l, 4)[i];
-                    let w_eff = w_effs[i];
-                    let u = blk.att_first[i];
-
-                    let ww = u + k[o + i];
-                    let qq = pp.max(ww);
-                    let e1 = self.hw_exp(pp - qq);
-                    let e2 = self.hw_exp(ww - qq);
-                    let wkv = self.hw_div(e1 * aa + e2 * v[o + i], e1 * bb + e2);
-
-                    let ww = pp + w_eff;
-                    let qq = ww.max(k[o + i]);
-                    let e1 = self.hw_exp(ww - qq);
-                    let e2 = self.hw_exp(k[o + i] - qq);
-                    state.row_mut(l, 2)[i] = e1 * aa + e2 * v[o + i];
-                    state.row_mut(l, 3)[i] = e1 * bb + e2;
-                    state.row_mut(l, 4)[i] = qq;
-                    gated[o + i] = rr * wkv;
-                }
-                quant9(&mut gated[o..o + d], sc.att_gated, &mut clips);
-            }
-            matmul(&qb.att_output, &gated, &mut *dx, t_len);
-            for i in 0..t_len * d {
-                x[i] += dx[i];
-            }
-
-            // ---- channel mixing -----------------------------------------
-            for t in 0..t_len {
-                let o = t * d;
-                self.hw_layernorm(&x[o..o + d], &blk.ln2_w, &blk.ln2_b, &mut xn[o..o + d]);
-                quant9(&mut xn[o..o + d], sc.ffn_xn, &mut clips);
-                for i in 0..d {
-                    let xni = xn[o + i];
-                    let xp = if t == 0 { state.row(l, 1)[i] } else { xn[o - d + i] };
-                    xk[o + i] = xni * blk.ffn_mix_k[i] + xp * (1.0 - blk.ffn_mix_k[i]);
-                    xr[o + i] = xni * blk.ffn_mix_r[i] + xp * (1.0 - blk.ffn_mix_r[i]);
-                }
-            }
-            state.row_mut(l, 1).copy_from_slice(&xn[last..last + d]);
-            matmul(&qb.ffn_receptance, &xr, &mut *r, t_len);
-            matmul(&qb.ffn_key, &xk, &mut *kf, t_len);
-            for kv in kf.iter_mut() {
-                let relu = kv.max(0.0);
-                *kv = relu * relu;
-            }
-            for t in 0..t_len {
-                let of = t * f;
-                quant9(&mut kf[of..of + f], sc.ffn_k2, &mut clips);
-            }
-            matmul(&qb.ffn_value, &kf, &mut *dx, t_len);
-            for i in 0..t_len * d {
-                dx[i] = self.hw_sigmoid(r[i]) * dx[i];
-                x[i] += dx[i];
-            }
-            for t in 0..t_len {
-                let o = t * d;
-                quant9(&mut x[o..o + d], sc.resid, &mut clips);
-            }
-        }
-
-        // head projection on the LAST token only
-        let o = (t_len - 1) * d;
-        let (w, bias) = (&self.base.ln_out_w, &self.base.ln_out_b);
-        self.hw_layernorm(&x[o..o + d], w, bias, &mut xn[o..o + d]);
-        let mut logits = vec![0f32; self.base.vocab];
-        matvec(&self.q.head, &xn[o..o + d], &mut logits);
-        self.clip_events = clips;
+        let mut logits = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Seq(state),
+                tokens,
+                HeadMode::LastColumn,
+                buf,
+                &mut logits,
+            )
+        });
+        self.finish_clips();
         logits
     }
 }
 
-thread_local! {
-    // own thread-local (separate from rwkv's BATCH_SCRATCH, which is
-    // private to that module) reusing the same panel struct
-    static HW_BATCH_SCRATCH: std::cell::RefCell<BatchBuffers> =
-        std::cell::RefCell::new(BatchBuffers::new());
+/// The hardware-numerics backend hooks (§3–§4): ATAC LayerNorm, the
+/// EXP-LUT / PWL-σ / DIVU units, Δ-PoT matrices, and per-site 9-bit
+/// activation quantization at the calibrated [`LayerScales`] (clips
+/// counted through an interior-mutability cell, folded into the public
+/// counters after each call).
+impl Numerics for HwModel {
+    fn n_layer(&self) -> usize {
+        self.base.n_layer
+    }
+
+    fn d(&self) -> usize {
+        self.base.d
+    }
+
+    fn f(&self) -> usize {
+        self.base.f
+    }
+
+    fn vocab(&self) -> usize {
+        self.base.vocab
+    }
+
+    fn block(&self, l: usize) -> &Block {
+        &self.base.blocks[l]
+    }
+
+    fn ln0(&self) -> (&[f32], &[f32]) {
+        (&self.base.ln0_w, &self.base.ln0_b)
+    }
+
+    fn ln_out(&self) -> (&[f32], &[f32]) {
+        (&self.base.ln_out_w, &self.base.ln_out_b)
+    }
+
+    fn emb(&self) -> &[f32] {
+        &self.q.emb
+    }
+
+    fn head(&self) -> &[f32] {
+        &self.q.head
+    }
+
+    fn mats(&self, l: usize) -> Mats<'_> {
+        let b = &self.q.blocks[l];
+        Mats {
+            att_key: &b.att_key,
+            att_value: &b.att_value,
+            att_receptance: &b.att_receptance,
+            att_output: &b.att_output,
+            ffn_key: &b.ffn_key,
+            ffn_receptance: &b.ffn_receptance,
+            ffn_value: &b.ffn_value,
+        }
+    }
+
+    fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+        self.hw_layernorm(x, w, b, out);
+    }
+
+    fn quant(&self, l: usize, site: Site, xs: &mut [f32]) {
+        let mut clips = 0u64;
+        quant9(xs, self.scales[l].site(site), &mut clips);
+        self.clips.set(self.clips.get() + clips);
+    }
+
+    fn exp(&self, x: f32) -> f32 {
+        self.hw_exp(x)
+    }
+
+    fn sigmoid(&self, x: f32) -> f32 {
+        self.hw_sigmoid(x)
+    }
+
+    fn div(&self, num: f32, den: f32) -> f32 {
+        self.hw_div(num, den)
+    }
 }
 
-/// Calibration probe: replicate the f32 forward, reporting activations at
-/// every quantization site.
-fn probe_step(
-    m: &RwkvModel,
-    state: &mut State,
-    token: u32,
-    x: &mut Vec<f32>,
-    collect: &mut impl FnMut(usize, &'static str, &[f32]),
-) {
-    use super::rwkv::layernorm;
-    let d = m.d;
-    let f = m.f;
-    let emb_row = &m.emb[token as usize * d..(token as usize + 1) * d];
-    layernorm(emb_row, &m.ln0_w, &m.ln0_b, x);
-    let mut xn = vec![0f32; d];
-    let mut xk = vec![0f32; d];
-    let mut xv = vec![0f32; d];
-    let mut xr = vec![0f32; d];
-    let mut r = vec![0f32; d];
-    let mut k = vec![0f32; d];
-    let mut v = vec![0f32; d];
-    let mut kf = vec![0f32; f];
-    let mut gated = vec![0f32; f.max(d)];
-    let mut dx = vec![0f32; d];
-    for l in 0..m.n_layer {
-        let blk = &m.blocks[l];
-        layernorm(x, &blk.ln1_w, &blk.ln1_b, &mut xn);
-        collect(l, "att_xn", &xn);
-        {
-            let xp = state.row(l, 0);
-            for i in 0..d {
-                xk[i] = xn[i] * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
-                xv[i] = xn[i] * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
-                xr[i] = xn[i] * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
-            }
-        }
-        state.row_mut(l, 0).copy_from_slice(&xn);
-        matvec(&blk.att_receptance, &xr, &mut r);
-        matvec(&blk.att_key, &xk, &mut k);
-        matvec(&blk.att_value, &xv, &mut v);
-        collect(l, "att_k", &k);
-        collect(l, "att_v", &v);
-        for i in 0..d {
-            let rr = 1.0 / (1.0 + (-r[i]).exp());
-            let aa = state.row(l, 2)[i];
-            let bb = state.row(l, 3)[i];
-            let pp = state.row(l, 4)[i];
-            let w_eff = -blk.att_decay[i].exp();
-            let u = blk.att_first[i];
-            let ww = u + k[i];
-            let qq = pp.max(ww);
-            let e1 = (pp - qq).exp();
-            let e2 = (ww - qq).exp();
-            let wkv = (e1 * aa + e2 * v[i]) / (e1 * bb + e2);
-            let ww = pp + w_eff;
-            let qq = ww.max(k[i]);
-            let e1 = (ww - qq).exp();
-            let e2 = (k[i] - qq).exp();
-            state.row_mut(l, 2)[i] = e1 * aa + e2 * v[i];
-            state.row_mut(l, 3)[i] = e1 * bb + e2;
-            state.row_mut(l, 4)[i] = qq;
-            gated[i] = rr * wkv;
-        }
-        collect(l, "att_gated", &gated[..d]);
-        matvec(&blk.att_output, &gated[..d], &mut dx);
-        for i in 0..d {
-            x[i] += dx[i];
-        }
-        layernorm(x, &blk.ln2_w, &blk.ln2_b, &mut xn);
-        collect(l, "ffn_xn", &xn);
-        {
-            let xp = state.row(l, 1);
-            for i in 0..d {
-                xk[i] = xn[i] * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
-                xr[i] = xn[i] * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
-            }
-        }
-        state.row_mut(l, 1).copy_from_slice(&xn);
-        matvec(&blk.ffn_receptance, &xr, &mut r);
-        matvec(&blk.ffn_key, &xk, &mut kf);
-        for kv in kf.iter_mut() {
-            let relu = kv.max(0.0);
-            *kv = relu * relu;
-        }
-        collect(l, "ffn_k2", &kf);
-        matvec(&blk.ffn_value, &kf, &mut dx);
-        for i in 0..d {
-            dx[i] *= 1.0 / (1.0 + (-r[i]).exp());
-            x[i] += dx[i];
-        }
-        collect(l, "resid", x);
+/// Site-observer tap: the calibration backend.  Every hook DELEGATES to
+/// the wrapped model's own exact-backend [`Numerics`] impl — so the walk
+/// it observes is, by construction and not by copy, the f32 forward the
+/// pre-refactor replica replayed by hand — except [`Numerics::quant`],
+/// which records the max-abs activation per (layer, site) instead of
+/// rounding.  (Recording replaces the base's quant outright, so the tap
+/// observes unquantized f32 activations even if the base carries
+/// `act_bits` — exactly what the pre-refactor replica did.)
+struct CalibTap<'a> {
+    m: &'a RwkvModel,
+    site_max: RefCell<ScaleMap>,
+}
+
+impl Numerics for CalibTap<'_> {
+    fn n_layer(&self) -> usize {
+        Numerics::n_layer(self.m)
+    }
+
+    fn d(&self) -> usize {
+        Numerics::d(self.m)
+    }
+
+    fn f(&self) -> usize {
+        Numerics::f(self.m)
+    }
+
+    fn vocab(&self) -> usize {
+        Numerics::vocab(self.m)
+    }
+
+    fn block(&self, l: usize) -> &Block {
+        self.m.block(l)
+    }
+
+    fn ln0(&self) -> (&[f32], &[f32]) {
+        self.m.ln0()
+    }
+
+    fn ln_out(&self) -> (&[f32], &[f32]) {
+        self.m.ln_out()
+    }
+
+    fn emb(&self) -> &[f32] {
+        Numerics::emb(self.m)
+    }
+
+    fn head(&self) -> &[f32] {
+        Numerics::head(self.m)
+    }
+
+    fn mats(&self, l: usize) -> Mats<'_> {
+        self.m.mats(l)
+    }
+
+    fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+        Numerics::layernorm(self.m, x, w, b, out);
+    }
+
+    fn quant(&self, l: usize, site: Site, xs: &mut [f32]) {
+        let mx = xs.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let mut map = self.site_max.borrow_mut();
+        let e = map.entry((l, site)).or_insert(0.0);
+        *e = e.max(mx);
+    }
+
+    fn exp(&self, x: f32) -> f32 {
+        self.m.exp(x)
+    }
+
+    fn sigmoid(&self, x: f32) -> f32 {
+        Numerics::sigmoid(self.m, x)
+    }
+
+    fn div(&self, num: f32, den: f32) -> f32 {
+        self.m.div(num, den)
     }
 }
 
@@ -771,7 +584,7 @@ mod tests {
     }
 
     fn argmax(v: &[f32]) -> usize {
-        v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
     }
 
     #[test]
@@ -787,6 +600,53 @@ mod tests {
         // calibrated scales must keep clipping rare (< 1% of activations)
         let acts_per_step = 2 * 32 * 8; // rough
         assert!(total < (20 * acts_per_step) / 100, "{total}");
+    }
+
+    #[test]
+    fn clip_total_accumulates_and_drains() {
+        let m = test_model(2, 32, 64, 50);
+        let mut hw = HwModel::from_f32(m, &calib_tokens());
+        let mut s = hw.new_state();
+        let mut per_call_sum = 0u64;
+        for t in 0..12 {
+            hw.step(&mut s, (t % 50) as u32);
+            per_call_sum += hw.clip_events;
+        }
+        // the cumulative counter preserves what the per-call field
+        // loses across split decode cycles
+        assert_eq!(hw.take_clip_events(), per_call_sum);
+        assert_eq!(hw.take_clip_events(), 0, "drain must reset the total");
+    }
+
+    #[test]
+    fn calibration_tap_chunk_invariant_and_deterministic() {
+        // the pre-refactor calibration replica walked the calib stream
+        // token by token; the tap's sequence chunking must be invisible
+        // (bit-equal maxima at every site), which pins the tap to the
+        // replica's resolved LayerScales — the walk at width 1 is the
+        // single-step forward the replica replayed
+        let m = test_model(2, 32, 64, 50);
+        let calib = calib_tokens();
+        let by_token = calibrate(&m, &calib, 1);
+        let chunked = calibrate(&m, &calib, 128);
+        let ragged = calibrate(&m, &calib, 17);
+        // all 7 sites of both layers observed
+        assert_eq!(by_token.len(), 2 * 7);
+        assert_eq!(chunked.len(), by_token.len());
+        assert_eq!(ragged.len(), by_token.len());
+        for (k, v) in &by_token {
+            assert_eq!(v.to_bits(), chunked[k].to_bits(), "site {k:?}");
+            assert_eq!(v.to_bits(), ragged[k].to_bits(), "site {k:?}");
+        }
+        // and from_f32 resolves them deterministically
+        let a = HwModel::from_f32(m.clone(), &calib);
+        let b = HwModel::from_f32(m, &calib);
+        assert_eq!(a.scales, b.scales);
+        assert!(a.scales.iter().all(|sc| {
+            [sc.att_xn, sc.att_k, sc.att_v, sc.att_gated, sc.ffn_xn, sc.ffn_k2, sc.resid]
+                .iter()
+                .all(|&s| s.is_finite() && s > 0.0)
+        }));
     }
 
     #[test]

@@ -61,7 +61,9 @@ pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchStats {
         }
         samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (pathological timer) must not panic the
+    // whole bench run mid-sort
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     let stats = BenchStats {
         name: name.to_string(),

@@ -1,0 +1,355 @@
+//! The unified-walk test suite.  After PR 3 every execution shape on
+//! every backend runs the ONE generic layer walk (`model/forward.rs`),
+//! which makes the parity suites self-consistent — so this file anchors
+//! the walk against an INDEPENDENTLY WRITTEN naive reference forward
+//! (scalar, token-by-token, no panels), then property-tests the
+//! cross-shape bit-exactness contract on both numerics backends:
+//!
+//! * naive oracle:  `RwkvModel::step` == the hand-written single-step
+//!   forward at 0 ULP (with and without activation fake-quant) — this
+//!   is the replacement for the per-shape forwards the refactor deleted,
+//!   kept ONLY as a test oracle,
+//! * exact backend: step loop == chunked prefill (arbitrary splits) ==
+//!   batched decode (arbitrary widths), bit-exact,
+//! * hw backend:    the same three shapes, bit-exact,
+//! * calibration:   `HwModel::from_f32`'s site-observer tap resolves
+//!   exactly the per-layer scales a naive hand-tapped replica computes
+//!   (the golden equivalence with the pre-refactor calibration pass).
+
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::rwkv::{act_quant, layernorm, matvec, RwkvModel, State};
+use hfrwkv::model::{HwModel, Site};
+use hfrwkv::prop_assert;
+use hfrwkv::util::prop::{check, Gen};
+
+fn naive_sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Independent single-step oracle: the pre-refactor `step_buf` body,
+/// written with plain locals and per-site taps.  `collect` is called
+/// with (layer, site-index, activation) at the seven quantization sites
+/// — site order: att_xn, att_k, att_v, att_gated, ffn_xn, ffn_k2, resid.
+fn naive_step(
+    m: &RwkvModel,
+    state: &mut State,
+    token: u32,
+    collect: &mut impl FnMut(usize, usize, &[f32]),
+) -> Vec<f32> {
+    let d = m.d;
+    let f = m.f;
+    let mut x = vec![0f32; d];
+    let emb_row = &m.emb[token as usize * d..(token as usize + 1) * d];
+    layernorm(emb_row, &m.ln0_w, &m.ln0_b, &mut x);
+
+    let mut xn = vec![0f32; d];
+    let mut xk = vec![0f32; d];
+    let mut xv = vec![0f32; d];
+    let mut xr = vec![0f32; d];
+    let mut r = vec![0f32; d];
+    let mut k = vec![0f32; d];
+    let mut v = vec![0f32; d];
+    let mut kf = vec![0f32; f];
+    let mut gated = vec![0f32; d];
+    let mut dx = vec![0f32; d];
+
+    for l in 0..m.n_layer {
+        let blk = &m.blocks[l];
+
+        // ---- time mixing ----
+        layernorm(&x, &blk.ln1_w, &blk.ln1_b, &mut xn);
+        collect(l, 0, &xn);
+        act_quant(&mut xn, m.act_bits);
+        {
+            let xp = state.row(l, 0);
+            for i in 0..d {
+                xk[i] = xn[i] * blk.att_mix_k[i] + xp[i] * (1.0 - blk.att_mix_k[i]);
+                xv[i] = xn[i] * blk.att_mix_v[i] + xp[i] * (1.0 - blk.att_mix_v[i]);
+                xr[i] = xn[i] * blk.att_mix_r[i] + xp[i] * (1.0 - blk.att_mix_r[i]);
+            }
+        }
+        state.row_mut(l, 0).copy_from_slice(&xn);
+        matvec(&blk.att_receptance, &xr, &mut r);
+        matvec(&blk.att_key, &xk, &mut k);
+        matvec(&blk.att_value, &xv, &mut v);
+        collect(l, 1, &k);
+        collect(l, 2, &v);
+        act_quant(&mut k, m.act_bits);
+        act_quant(&mut v, m.act_bits);
+
+        for i in 0..d {
+            let rr = naive_sigmoid(r[i]);
+            let (ki, vi) = (k[i], v[i]);
+            let aa = state.row(l, 2)[i];
+            let bb = state.row(l, 3)[i];
+            let pp = state.row(l, 4)[i];
+            let w_eff = -blk.att_decay[i].exp();
+            let u = blk.att_first[i];
+
+            let ww = u + ki;
+            let qq = pp.max(ww);
+            let e1 = (pp - qq).exp();
+            let e2 = (ww - qq).exp();
+            let wkv = (e1 * aa + e2 * vi) / (e1 * bb + e2);
+
+            let ww = pp + w_eff;
+            let qq = ww.max(ki);
+            let e1 = (ww - qq).exp();
+            let e2 = (ki - qq).exp();
+            state.row_mut(l, 2)[i] = e1 * aa + e2 * vi;
+            state.row_mut(l, 3)[i] = e1 * bb + e2;
+            state.row_mut(l, 4)[i] = qq;
+
+            gated[i] = rr * wkv;
+        }
+        collect(l, 3, &gated);
+        act_quant(&mut gated, m.act_bits);
+        matvec(&blk.att_output, &gated, &mut dx);
+        for i in 0..d {
+            x[i] += dx[i];
+        }
+
+        // ---- channel mixing ----
+        layernorm(&x, &blk.ln2_w, &blk.ln2_b, &mut xn);
+        collect(l, 4, &xn);
+        act_quant(&mut xn, m.act_bits);
+        {
+            let xp = state.row(l, 1);
+            for i in 0..d {
+                xk[i] = xn[i] * blk.ffn_mix_k[i] + xp[i] * (1.0 - blk.ffn_mix_k[i]);
+                xr[i] = xn[i] * blk.ffn_mix_r[i] + xp[i] * (1.0 - blk.ffn_mix_r[i]);
+            }
+        }
+        state.row_mut(l, 1).copy_from_slice(&xn);
+        matvec(&blk.ffn_receptance, &xr, &mut r);
+        matvec(&blk.ffn_key, &xk, &mut kf);
+        for kv in kf.iter_mut() {
+            let relu = kv.max(0.0);
+            *kv = relu * relu;
+        }
+        collect(l, 5, &kf);
+        act_quant(&mut kf, m.act_bits);
+        matvec(&blk.ffn_value, &kf, &mut dx);
+        for i in 0..d {
+            dx[i] *= naive_sigmoid(r[i]);
+            x[i] += dx[i];
+        }
+        collect(l, 6, &x);
+    }
+
+    let mut xo = vec![0f32; d];
+    layernorm(&x, &m.ln_out_w, &m.ln_out_b, &mut xo);
+    let mut logits = vec![0f32; m.vocab];
+    matvec(&m.head, &xo, &mut logits);
+    logits
+}
+
+#[test]
+fn walk_matches_naive_reference_bit_exact() {
+    // d/f chosen to exercise the non-multiple-of-8 kernel tails
+    for act_bits in [None, Some(9)] {
+        let mut m = test_model(2, 36, 52, 41);
+        m.act_bits = act_bits;
+        let mut s_walk = m.new_state();
+        let mut s_naive = m.new_state();
+        let mut sink = |_: usize, _: usize, _: &[f32]| {};
+        for t in 0..25u32 {
+            let tok = (t * 7 + 1) % 41;
+            let lw = m.step(&mut s_walk, tok);
+            let ln = naive_step(&m, &mut s_naive, tok, &mut sink);
+            assert_eq!(lw, ln, "token {t} (act_bits {act_bits:?}): logits diverged");
+            assert_eq!(s_walk, s_naive, "token {t} (act_bits {act_bits:?}): state diverged");
+        }
+    }
+}
+
+#[test]
+fn prop_exact_shapes_bitexact() {
+    // one model, three execution shapes, 0 ULP: the walk's core contract
+    let m = test_model(2, 36, 52, 41);
+    check("exact walk: step loop == chunked prefill == batched decode", 16, |g: &mut Gen| {
+        let t_len = g.usize_in(1, 40);
+        let split = g.usize_in(1, t_len);
+        let tokens: Vec<u32> = (0..t_len).map(|_| g.usize_in(0, 40) as u32).collect();
+
+        // width-1 batch walk, token by token
+        let mut s_step = m.new_state();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = m.step(&mut s_step, t);
+        }
+        // sequence walk in arbitrary chunks
+        let mut s_chunk = m.new_state();
+        let mut last_chunk = Vec::new();
+        for c in tokens.chunks(split) {
+            last_chunk = m.prefill_chunk(&mut s_chunk, c);
+        }
+        prop_assert!(last == last_chunk, "T={t_len} split={split}: prefill logits diverged");
+        prop_assert!(s_step == s_chunk, "T={t_len} split={split}: prefill state diverged");
+
+        // width-B batch walk: the prefilled session decodes alongside
+        // B-1 decoys with different histories — its column must stay
+        // bit-exact with solo decode
+        let b = g.usize_in(2, 6);
+        let mut solo = s_step.clone();
+        let mut batch: Vec<State> = (0..b)
+            .map(|j| {
+                if j == 0 {
+                    s_chunk.clone()
+                } else {
+                    let mut s = m.new_state();
+                    m.step(&mut s, ((j * 13) % 41) as u32);
+                    s
+                }
+            })
+            .collect();
+        for step_i in 0..3 {
+            let toks: Vec<u32> = (0..b).map(|j| ((step_i * 7 + j * 3) % 41) as u32).collect();
+            let batch_logits = m.step_batch(&mut batch, &toks);
+            let solo_logits = m.step(&mut solo, toks[0]);
+            prop_assert!(
+                solo_logits == batch_logits[0],
+                "B={b} step {step_i}: batched decode diverged"
+            );
+            prop_assert!(solo == batch[0], "B={b} step {step_i}: batched state diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hw_shapes_bitexact() {
+    // the hardware backend honors the same cross-shape contract, at
+    // 0 ULP (per-site scales, LUT/PWL/DIVU and clip behavior are all
+    // column-local)
+    let base = test_model(2, 32, 64, 50);
+    let calib: Vec<u32> = (0..96u32).map(|i| (i * 7 + 3) % 50).collect();
+    check("hw walk: step loop == chunked prefill == batched decode", 6, |g: &mut Gen| {
+        let mut hw_step = HwModel::from_f32(base.clone(), &calib);
+        let mut hw_chunk = HwModel::from_f32(base.clone(), &calib);
+        let mut hw_batch = HwModel::from_f32(base.clone(), &calib);
+        let t_len = g.usize_in(1, 24);
+        let split = g.usize_in(1, t_len);
+        let tokens: Vec<u32> = (0..t_len).map(|_| g.usize_in(0, 49) as u32).collect();
+
+        let mut s_step = hw_step.new_state();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = hw_step.step(&mut s_step, t);
+        }
+        let mut s_chunk = hw_chunk.new_state();
+        let mut last_chunk = Vec::new();
+        for c in tokens.chunks(split) {
+            last_chunk = hw_chunk.prefill_chunk(&mut s_chunk, c);
+        }
+        prop_assert!(last == last_chunk, "T={t_len} split={split}: hw prefill logits diverged");
+        prop_assert!(s_step == s_chunk, "T={t_len} split={split}: hw prefill state diverged");
+
+        let b = g.usize_in(2, 5);
+        let mut batch: Vec<State> = (0..b)
+            .map(|j| {
+                if j == 0 {
+                    s_chunk.clone()
+                } else {
+                    let mut s = hw_batch.new_state();
+                    hw_batch.step(&mut s, ((j * 11) % 50) as u32);
+                    s
+                }
+            })
+            .collect();
+        for step_i in 0..2 {
+            let toks: Vec<u32> = (0..b).map(|j| ((step_i * 13 + j * 5) % 50) as u32).collect();
+            let batch_logits = hw_batch.step_batch(&mut batch, &toks);
+            let solo_logits = hw_step.step(&mut s_step, toks[0]);
+            prop_assert!(
+                solo_logits == batch_logits[0],
+                "B={b} step {step_i}: hw batched decode diverged"
+            );
+            prop_assert!(s_step == batch[0], "B={b} step {step_i}: hw batched state diverged");
+        }
+        Ok(())
+    });
+}
+
+/// Replica of `HwModel::from_f32`'s additive-vector 9-bit quantization
+/// (max-abs scale), for the calibration golden test below.
+fn naive_quant9_inplace(xs: &mut [f32]) {
+    let qmax = 255.0f32;
+    let scale = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let s = scale.max(1e-12);
+    for x in xs.iter_mut() {
+        let q = (*x / s * qmax).round();
+        *x = q.clamp(-qmax, qmax) * s / qmax;
+    }
+}
+
+#[test]
+fn hw_calibration_matches_naive_tap_golden() {
+    // The pre-refactor calibration pass hand-replayed the f32 forward
+    // (on the vector-quantized base) and recorded per-site maxima.
+    // Reproduce exactly that with the naive oracle's taps and require
+    // the refactored site-observer backend to resolve bit-identical
+    // LayerScales.
+    let base = test_model(2, 32, 64, 50);
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 11 + 3) % 50).collect();
+    let hw = HwModel::from_f32(base.clone(), &calib);
+
+    // replicate the pre-calibration additive-weight quantization
+    let mut vq = base;
+    for blk in &mut vq.blocks {
+        naive_quant9_inplace(&mut blk.att_first);
+        naive_quant9_inplace(&mut blk.att_mix_k);
+        naive_quant9_inplace(&mut blk.att_mix_v);
+        naive_quant9_inplace(&mut blk.att_mix_r);
+        naive_quant9_inplace(&mut blk.ffn_mix_k);
+        naive_quant9_inplace(&mut blk.ffn_mix_r);
+        naive_quant9_inplace(&mut blk.ln1_w);
+        naive_quant9_inplace(&mut blk.ln1_b);
+        naive_quant9_inplace(&mut blk.ln2_w);
+        naive_quant9_inplace(&mut blk.ln2_b);
+        naive_quant9_inplace(&mut blk.att_decay);
+    }
+    assert!(vq.act_bits.is_none(), "calibration taps the unquantized f32 activations");
+
+    // hand-tapped replica: maxima per (layer, site) over the calib
+    // stream, then the 1.1 safety margin
+    let n_layer = vq.n_layer;
+    let mut maxima = vec![[0f32; 7]; n_layer];
+    {
+        let mut st = vq.new_state();
+        let mut collect = |l: usize, si: usize, xs: &[f32]| {
+            let mx = xs.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            maxima[l][si] = maxima[l][si].max(mx);
+        };
+        for &tok in &calib {
+            naive_step(&vq, &mut st, tok, &mut collect);
+        }
+    }
+    for row in maxima.iter_mut() {
+        for v in row.iter_mut() {
+            *v *= 1.1;
+        }
+    }
+
+    const SITES: [Site; 7] = [
+        Site::AttXn,
+        Site::AttK,
+        Site::AttV,
+        Site::AttGated,
+        Site::FfnXn,
+        Site::FfnK2,
+        Site::Resid,
+    ];
+    assert_eq!(hw.scales().len(), n_layer);
+    for (l, sc) in hw.scales().iter().enumerate() {
+        for (si, &site) in SITES.iter().enumerate() {
+            assert_eq!(
+                sc.site(site).to_bits(),
+                maxima[l][si].to_bits(),
+                "layer {l} site {site:?}: {} vs naive {}",
+                sc.site(site),
+                maxima[l][si]
+            );
+        }
+    }
+}
