@@ -54,18 +54,34 @@ fn main() -> hfrwkv::Result<()> {
         .collect();
     let mut latencies = Vec::new();
     let mut decode_rates = Vec::new();
+    // the 24 requests cycle 6 prompts, so repeats resume from cached
+    // prefix states: split TTFT by cold vs cached to show the effect
+    let (mut ttft_cold, mut ttft_cached) = (Vec::new(), Vec::new());
     for (i, rx) in rxs.into_iter().enumerate() {
         let r = rx.recv().unwrap()?;
         latencies.push(r.queue_seconds + r.prefill_seconds + r.decode_seconds);
         decode_rates.push(r.decode_tokens_per_sec());
+        if r.cached_prefix_tokens > 0 {
+            ttft_cached.push(r.ttft_seconds);
+        } else {
+            ttft_cold.push(r.ttft_seconds);
+        }
         if i < 6 {
             println!("  [{i}] {}", tokenizer.decode(&r.tokens));
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(|a, b| a.total_cmp(b));
     let m = coord.metrics.lock().unwrap().clone();
     println!("\n{}", m.report());
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "ttft     {:.2} ms mean cold ({} reqs) vs {:.2} ms mean cache-resumed ({} reqs)",
+        mean(&ttft_cold) * 1e3,
+        ttft_cold.len(),
+        mean(&ttft_cached) * 1e3,
+        ttft_cached.len()
+    );
     println!(
         "latency  p50 {:.1} ms   p95 {:.1} ms   max {:.1} ms",
         pct(&latencies, 0.50) * 1e3,

@@ -1,0 +1,126 @@
+//! Shared-system-prompt serving benchmark: the prefix-sharing state
+//! cache's measured effect on time-to-first-token.
+//!
+//! Workload: one warming request, then a wave of 8 concurrent requests
+//! (`max_active = 4`) whose prompts share a system prefix of
+//! {64, 256, 1024} tokens and differ only in a short unique suffix —
+//! the production shape the cache targets.  Swept cache-on vs cache-off
+//! on both the exact f32 and hardware-numerics backends.
+//!
+//! Cache-off, every wave request prefills the whole shared prefix
+//! again; cache-on, it resumes from the deepest cached chunk boundary
+//! and prefills only its suffix, so TTFT collapses from O(prefix) to
+//! O(suffix) — bit-exactly (`rust/tests/statecache.rs`).
+//!
+//! Emits `BENCH_statecache.json` so future PRs can track the
+//! trajectory.
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::HwModel;
+use hfrwkv::util::bench::{section, BenchReport};
+
+const PREFIX_LENS: [usize; 3] = [64, 256, 1024];
+const WAVE: u32 = 8;
+const SUFFIX_LEN: u32 = 4;
+
+fn prompt(prefix_len: usize, vocab: usize, suffix_seed: u32) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..prefix_len as u32)
+        .map(|t| (t * 7 + 3) % vocab as u32)
+        .collect();
+    p.extend((0..SUFFIX_LEN).map(|t| (t * 5 + suffix_seed * 13 + 1) % vocab as u32));
+    p
+}
+
+/// One warming request then the concurrent wave; returns
+/// (mean wave TTFT seconds, mean cached prefix tokens).
+fn run_wave<M, F>(mk: F, prefix_len: usize, vocab: usize, cache_bytes: usize) -> (f64, f64)
+where
+    M: EngineModel + Send + 'static,
+    F: FnOnce() -> M,
+{
+    let coord = Coordinator::spawn(
+        mk(),
+        CoordinatorConfig {
+            max_active: 4,
+            prefill_chunk: 64,
+            state_cache_bytes: cache_bytes,
+        },
+    );
+    // warming request (distinct suffix): populates the prefix snapshots
+    // when the cache is on, fair control work when it is off
+    let _ = coord
+        .generate(GenRequest::greedy(prompt(prefix_len, vocab, 999), SUFFIX_LEN as usize))
+        .unwrap();
+    let rxs: Vec<_> = (0..WAVE)
+        .map(|i| {
+            let p = prompt(prefix_len, vocab, i);
+            coord.submit(GenRequest::greedy(p, SUFFIX_LEN as usize))
+        })
+        .collect();
+    let mut ttft_total = 0.0;
+    let mut cached_total = 0usize;
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        ttft_total += r.ttft_seconds;
+        cached_total += r.cached_prefix_tokens;
+    }
+    (ttft_total / WAVE as f64, cached_total as f64 / WAVE as f64)
+}
+
+fn sweep<M, F>(backend: &str, vocab: usize, mk: F, report: &mut BenchReport)
+where
+    M: EngineModel + Send + 'static,
+    F: Fn() -> M,
+{
+    for &len in &PREFIX_LENS {
+        let (off_s, _) = run_wave(&mk, len, vocab, 0);
+        let (on_s, cached) = run_wave(&mk, len, vocab, 64 << 20);
+        let speedup = off_s / on_s.max(1e-12);
+        println!(
+            "  {backend:<6} prefix {len:>5}: ttft {:>8.2} ms cold vs {:>8.3} ms cached \
+             = {speedup:>6.1}x  (mean {cached:.0} prefix tokens skipped)",
+            off_s * 1e3,
+            on_s * 1e3,
+        );
+        report.record(&format!("{backend}_ttft_off_ms_p{len}"), off_s * 1e3);
+        report.record(&format!("{backend}_ttft_on_ms_p{len}"), on_s * 1e3);
+        report.record(&format!("{backend}_ttft_speedup_p{len}"), speedup);
+        report.record(&format!("{backend}_cached_tokens_p{len}"), cached);
+        if len == 1024 && speedup < 5.0 {
+            // the acceptance bar (≥5x TTFT collapse for a 1024-token
+            // shared prefix, ~2 orders of magnitude of margin on an
+            // unloaded machine).  Hard-fail only when asked: shared CI
+            // runners can stall the worker thread mid-wave, and a
+            // wall-clock ratio must not gate unrelated merges there —
+            // the recorded JSON still carries the number either way.
+            let msg =
+                format!("{backend}: 1024-token shared-prefix speedup {speedup:.1}x < 5x");
+            if std::env::var_os("STATECACHE_BENCH_ASSERT").is_some() {
+                panic!("{msg}");
+            }
+            eprintln!("WARNING: {msg}");
+        }
+    }
+}
+
+fn main() {
+    let mut report = BenchReport::new("statecache");
+
+    section("prefix cache TTFT, exact f32 (4x128/512, wave of 8 @ max_active 4)");
+    sweep("exact", 128, || test_model(4, 128, 512, 128), &mut report);
+
+    section("prefix cache TTFT, hw numerics (2x32/64, wave of 8 @ max_active 4)");
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 11 + 3) % 50).collect();
+    sweep(
+        "hw",
+        50,
+        || HwModel::from_f32(test_model(2, 32, 64, 50), &calib),
+        &mut report,
+    );
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
+}

@@ -11,6 +11,7 @@ use super::{FinishReason, GenRequest};
 use crate::model::sampler::Sampler;
 use crate::model::{HwModel, RwkvModel, State};
 use crate::runtime::{RwkvRuntime, Variant};
+use crate::statecache::{CacheStats, SnapshotRef, StateCacheConfig, StateStore};
 
 /// Anything that can run RWKV one token at a time with explicit state.
 pub trait EngineModel {
@@ -101,6 +102,34 @@ pub trait EngineModel {
     /// directly (the scheduler does).
     fn prefill(&mut self, state: &mut Vec<f32>, tokens: &[u32], variant: Variant) -> Result<Vec<f32>> {
         self.prefill_chunk(state, tokens, variant)
+    }
+
+    /// Capture the session state as a cacheable snapshot — flat f32s the
+    /// prefix cache ([`crate::statecache`]) can hold and later hand to
+    /// [`EngineModel::restore_state`].  The defaults copy the flat
+    /// engine state verbatim (every current model keeps its state
+    /// host-resident in exactly that layout); a model holding state
+    /// device-resident would download/upload here instead.
+    fn snapshot_state(&mut self, state: &[f32]) -> Vec<f32> {
+        state.to_vec()
+    }
+
+    /// Restore a snapshot captured by [`EngineModel::snapshot_state`]
+    /// into a session state, replacing its contents.
+    fn restore_state(&mut self, snapshot: &[f32], state: &mut Vec<f32>) {
+        state.clear();
+        state.extend_from_slice(snapshot);
+    }
+}
+
+/// Cache-key namespace for a variant: states produced by different
+/// numerics must never cross-resume (the PJRT runtime runs genuinely
+/// different math per variant; the native models ignore the variant, so
+/// for them the split is merely conservative).
+fn variant_class(v: Variant) -> u32 {
+    match v {
+        Variant::Exact => 0,
+        Variant::HwApprox => 1,
     }
 }
 
@@ -322,6 +351,15 @@ pub struct ActiveSession {
     /// Sampled but not yet committed token — meaningless until the
     /// session reaches [`SessionPhase::Decoding`].
     pub next_token: u32,
+    /// Prompt tokens whose prefill was skipped by resuming from the
+    /// prefix cache (0 on a cache miss or with the cache disabled).
+    pub cached_prefix_tokens: usize,
+    /// Handle on the snapshot this session resumed from, held while the
+    /// session is still prefilling so the cache can't evict a borrowed
+    /// entry mid-resume; released at the decode transition — the state
+    /// was privately copied at admission, so a long decode must not
+    /// keep the entry unevictable.
+    pub snapshot_pin: Option<SnapshotRef>,
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
     /// Time from enqueue to the first sampled token (set when prefill
@@ -345,11 +383,30 @@ pub struct Engine<M: EngineModel> {
     /// together with the walk's thread-local scratch this makes the
     /// native decode hot path allocation-free in steady state.
     batch_logits: Vec<f32>,
+    /// Prefix-sharing state cache ([`crate::statecache`]): admission
+    /// resumes sessions from the deepest cached prompt-prefix state, and
+    /// every prefill chunk boundary captures a snapshot.  `None` = the
+    /// pre-cache behavior, bit for bit.
+    cache: Option<StateStore>,
 }
 
 impl<M: EngineModel> Engine<M> {
     pub fn new(model: M) -> Engine<M> {
-        Engine { model, batch_logits: Vec::new() }
+        Engine { model, batch_logits: Vec::new(), cache: None }
+    }
+
+    /// An engine with the prefix-sharing state cache enabled.  Resuming
+    /// is bit-exact with full prefill (asserted in
+    /// `rust/tests/statecache.rs`), so the cache changes latency, never
+    /// tokens.
+    pub fn with_cache(model: M, cfg: StateCacheConfig) -> Engine<M> {
+        Engine { model, batch_logits: Vec::new(), cache: Some(StateStore::new(cfg)) }
+    }
+
+    /// Cache counters + gauges, if the cache is enabled (the scheduler
+    /// mirrors them into [`super::Metrics`] every cycle).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// Admit a request WITHOUT doing any forward work: the session
@@ -357,20 +414,42 @@ impl<M: EngineModel> Engine<M> {
     /// through [`Engine::prefill_tick`] one bounded chunk at a time.
     /// An empty prompt is BOS-padded in place (one prompt copy per
     /// session, read by every tick — no duplicate allocation).
+    ///
+    /// With the prefix cache enabled, admission additionally runs a
+    /// longest-prefix lookup: on a hit the session's state is restored
+    /// from the deepest cached snapshot and prefill resumes *after* it —
+    /// a request behind a fully-cached shared prompt prefills only its
+    /// last token.  The lookup is capped at `prompt.len() - 1` because
+    /// the sampler needs the final prompt token's logits, which
+    /// snapshots don't carry; the matched depth is recorded in
+    /// [`ActiveSession::cached_prefix_tokens`] and the snapshot handle
+    /// stays pinned until the session's prefill completes.
     pub fn admit(&mut self, request_id: u64, mut req: GenRequest, enqueued_at: Instant) -> ActiveSession {
-        let state = self.model.init_state();
+        let mut state = self.model.init_state();
         let sampler = Sampler::new(req.temperature, req.top_k, req.seed);
         if req.prompt.is_empty() {
             req.prompt = vec![crate::model::tokenizer::BOS];
         }
+        let mut cached_prefix_tokens = 0;
+        let mut snapshot_pin = None;
+        if let Some(cache) = &mut self.cache {
+            let class = variant_class(req.variant);
+            if let Some(snap) = cache.lookup(class, &req.prompt, req.prompt.len() - 1) {
+                self.model.restore_state(snap.state(), &mut state);
+                cached_prefix_tokens = snap.tokens();
+                snapshot_pin = Some(snap);
+            }
+        }
         ActiveSession {
             request_id,
             req,
-            phase: SessionPhase::Prefilling { pos: 0 },
+            phase: SessionPhase::Prefilling { pos: cached_prefix_tokens },
             state,
             generated: Vec::new(),
             sampler,
             next_token: 0,
+            cached_prefix_tokens,
+            snapshot_pin,
             prefill_seconds: 0.0,
             decode_seconds: 0.0,
             ttft_seconds: 0.0,
@@ -397,11 +476,28 @@ impl<M: EngineModel> Engine<M> {
         let logits = self.model.prefill_chunk(&mut s.state, &prompt[*pos..end], s.req.variant)?;
         *pos = end;
         let done = *pos == prompt.len();
+        // capture a snapshot at the chunk boundary: prefill is bit-exact
+        // across chunkings, so this state is exactly what ANY future
+        // prefill of the same `prompt[..end]` would pass through.  The
+        // closure only materializes a copy when the prefix isn't already
+        // cached (a re-walked shared prefix just refreshes its recency).
+        if let Some(cache) = &mut self.cache {
+            let class = variant_class(s.req.variant);
+            let (model, state) = (&mut self.model, &s.state);
+            // state.len() prices the entry so dedup/rejection never
+            // materializes the snapshot copy
+            cache.insert_with(class, &prompt[..end], state.len(), || {
+                model.snapshot_state(state)
+            });
+        }
         s.prefill_seconds += t0.elapsed().as_secs_f64();
         if done {
             s.next_token = s.sampler.sample(&logits);
             s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
             s.phase = SessionPhase::Decoding;
+            // prefill over: release the resumed-from snapshot so decode
+            // time doesn't hold it unevictable (see the field docs)
+            s.snapshot_pin = None;
         }
         Ok(done)
     }
@@ -747,6 +843,68 @@ mod tests {
         for (p, b) in ps.iter().zip(&bs) {
             assert_eq!(p.generated, b.generated);
         }
+    }
+
+    #[test]
+    fn cached_resume_matches_cold_prefill_bitexact() {
+        // second session with the same prompt resumes from the deepest
+        // chunk-boundary snapshot and must land on the identical state
+        let mut cold = engine();
+        let mut warm = Engine::with_cache(
+            test_model(2, 32, 64, 50),
+            crate::statecache::StateCacheConfig::default(),
+        );
+        let prompt: Vec<u32> = (0..17u32).map(|t| (t * 3 + 1) % 50).collect();
+        let req = GenRequest::greedy(prompt, 5);
+
+        let sc = cold.start(1, req.clone(), Instant::now()).unwrap();
+
+        // first warm session populates boundaries at 4, 8, 12, 16, 17
+        let mut s1 = warm.admit(1, req.clone(), Instant::now());
+        assert_eq!(s1.cached_prefix_tokens, 0, "cold cache cannot hit");
+        while !warm.prefill_tick(&mut s1, 4).unwrap() {}
+        assert_eq!(s1.next_token, sc.next_token);
+        assert_eq!(s1.state, sc.state);
+
+        // second warm session resumes at 16 (the deepest boundary ≤ 16)
+        let mut s2 = warm.admit(2, req.clone(), Instant::now());
+        assert_eq!(s2.cached_prefix_tokens, 16);
+        assert!(s2.snapshot_pin.is_some(), "resumed session must pin its snapshot");
+        while !warm.prefill_tick(&mut s2, 4).unwrap() {}
+        assert!(s2.snapshot_pin.is_none(), "pin must release when prefill completes");
+        assert_eq!(s2.next_token, sc.next_token);
+        assert_eq!(s2.state, sc.state);
+
+        let stats = warm.cache_stats().unwrap();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.tokens_skipped, 16);
+        assert!(stats.inserts >= 5);
+    }
+
+    #[test]
+    fn cache_disabled_engine_reports_no_stats() {
+        let mut e = engine();
+        assert!(e.cache_stats().is_none());
+        let s = e.start(1, GenRequest::greedy(vec![1, 2, 3], 2), Instant::now()).unwrap();
+        assert_eq!(s.cached_prefix_tokens, 0);
+        assert!(s.snapshot_pin.is_none());
+    }
+
+    #[test]
+    fn single_token_prompts_never_hit() {
+        // a 1-token prompt caps the lookup at depth 0 — always a miss,
+        // and the post-prefill snapshot (depth 1) must not break that
+        let mut e = Engine::with_cache(
+            test_model(2, 32, 64, 50),
+            crate::statecache::StateCacheConfig::default(),
+        );
+        for _ in 0..2 {
+            let s = e.start(1, GenRequest::greedy(vec![7], 2), Instant::now()).unwrap();
+            assert_eq!(s.cached_prefix_tokens, 0);
+        }
+        let stats = e.cache_stats().unwrap();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 2);
     }
 
     #[test]

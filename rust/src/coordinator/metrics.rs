@@ -21,6 +21,21 @@ pub struct Metrics {
     /// drained losslessly from the model every scheduling cycle (large
     /// values mean a bad calibration).  Always 0 for non-hw models.
     pub clip_events: u64,
+    /// Admissions that resumed from a cached prompt-prefix state
+    /// (mirror of the engine's `statecache` counters, refreshed every
+    /// scheduling cycle; all 0 with the cache disabled).
+    pub prefix_cache_hits: u64,
+    /// Admissions that found no usable cached prefix.
+    pub prefix_cache_misses: u64,
+    /// Prompt tokens whose prefill was skipped entirely by resuming
+    /// from cached states — the cache's value, in tokens.
+    pub prefix_tokens_skipped: u64,
+    /// Gauge: bytes of state snapshots currently resident.
+    pub prefix_cache_bytes: u64,
+    /// Gauge: state snapshots currently resident.
+    pub prefix_cache_entries: u64,
+    /// Snapshots evicted by LRU under byte-budget pressure.
+    pub prefix_cache_evictions: u64,
 }
 
 impl Metrics {
@@ -50,6 +65,16 @@ impl Metrics {
         }
     }
 
+    /// Fraction of admissions that resumed from a cached prefix.
+    pub fn prefix_cache_hit_rate(&self) -> f64 {
+        let total = self.prefix_cache_hits + self.prefix_cache_misses;
+        if total > 0 {
+            self.prefix_cache_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {} enqueued / {} admitted / {} completed\n\
@@ -58,6 +83,8 @@ impl Metrics {
              prefill:  {:.3} s total\n\
              ttft:     {:.4} s mean (enqueue -> first token)\n\
              queueing: {:.4} s mean wait\n\
+             cache:    {} hits / {} misses ({:.0}% hit rate), \
+             {} prompt tokens skipped, {} snapshots / {} B resident, {} evictions\n\
              clips:    {} activations at the 9-bit rails",
             self.enqueued,
             self.admitted,
@@ -67,6 +94,13 @@ impl Metrics {
             self.prefill_seconds_total,
             self.mean_ttft_seconds(),
             self.mean_queue_seconds(),
+            self.prefix_cache_hits,
+            self.prefix_cache_misses,
+            self.prefix_cache_hit_rate() * 100.0,
+            self.prefix_tokens_skipped,
+            self.prefix_cache_entries,
+            self.prefix_cache_bytes,
+            self.prefix_cache_evictions,
             self.clip_events,
         )
     }
@@ -82,17 +116,37 @@ mod tests {
         assert_eq!(m.decode_tokens_per_sec(), 0.0);
         assert_eq!(m.mean_queue_seconds(), 0.0);
         assert_eq!(m.mean_ttft_seconds(), 0.0);
+        assert_eq!(m.prefix_cache_hit_rate(), 0.0);
     }
 
     #[test]
     fn report_contains_counts() {
-        let m = Metrics { enqueued: 3, admitted: 2, completed: 1, tokens_generated: 42,
-            prefill_seconds_total: 0.5, decode_seconds_total: 2.0, queue_seconds_total: 0.1,
-            first_tokens: 1, ttft_seconds_total: 0.25, clip_events: 7 };
+        let m = Metrics {
+            enqueued: 3,
+            admitted: 2,
+            completed: 1,
+            tokens_generated: 42,
+            prefill_seconds_total: 0.5,
+            decode_seconds_total: 2.0,
+            queue_seconds_total: 0.1,
+            first_tokens: 1,
+            ttft_seconds_total: 0.25,
+            clip_events: 7,
+            prefix_cache_hits: 3,
+            prefix_cache_misses: 1,
+            prefix_tokens_skipped: 3072,
+            prefix_cache_bytes: 40960,
+            prefix_cache_entries: 16,
+            prefix_cache_evictions: 2,
+        };
         let r = m.report();
         assert!(r.contains("42 generated"));
         assert!(r.contains("21.0 tok/s"));
         assert!(r.contains("0.2500 s mean (enqueue -> first token)"));
         assert!(r.contains("7 activations at the 9-bit rails"));
+        assert!(r.contains("3 hits / 1 misses (75% hit rate)"));
+        assert!(r.contains("3072 prompt tokens skipped"));
+        assert!(r.contains("16 snapshots / 40960 B resident, 2 evictions"));
+        assert_eq!(m.prefix_cache_hit_rate(), 0.75);
     }
 }

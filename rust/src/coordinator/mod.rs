@@ -14,13 +14,33 @@
 //! (§Perf L3-4) instead of running the whole prompt inline at
 //! admission, so a long prompt cannot head-of-line-block the decoders;
 //! time-to-first-token is surfaced per response and in [`Metrics`].
-//! Recurrent state (the RWKV advantage: O(d) per session, no KV cache
-//! growth) lives in the session table.
+//!
+//! # The admission path and the prefix cache
+//!
+//! Admission itself does no forward work; it does two cheap things:
+//! BOS-pad an empty prompt, and ask the prefix-sharing state cache
+//! ([`crate::statecache`]) for the deepest snapshot whose token prefix
+//! matches the prompt.  On a hit the session's recurrent state is
+//! restored from the snapshot (copy-on-write — the shared entry is
+//! pinned, the session mutates a private copy) and prefill starts at
+//! the matched depth; on a miss it starts at token 0.  Every prefill
+//! chunk boundary then captures a snapshot, so a 1k-token prompt leaves
+//! resumable states at `prefill_chunk` granularity behind it — the next
+//! request sharing that system prompt prefills only its unique suffix,
+//! collapsing its time-to-first-token.  This is the serving-layer
+//! dividend of the paper's core premise: RWKV state is O(1) bytes per
+//! session (`n_layer * 5 * d` floats, no KV growth), so caching *many*
+//! of them is feasible where a Transformer KV prefix cache is not.
+//! Per-response [`GenResponse::cached_prefix_tokens`] and the cache
+//! counters in [`Metrics`] make the effect observable; resume is
+//! bit-exact with full prefill (`rust/tests/statecache.rs`), so the
+//! cache changes latency, never tokens.
 //!
 //! * [`engine`]    — prefill (chunked through the `seq` executable) +
-//!   step decode against [`crate::runtime::RwkvRuntime`].
+//!   step decode against [`crate::runtime::RwkvRuntime`]; owns the
+//!   prefix cache.
 //! * [`scheduler`] — admission queue + round-robin step scheduler.
-//! * [`metrics`]   — latency/throughput counters.
+//! * [`metrics`]   — latency/throughput/cache counters.
 
 pub mod engine;
 pub mod metrics;
@@ -78,6 +98,11 @@ pub struct GenResponse {
     /// Time-to-first-token: enqueue → first sampled token, including
     /// queueing and chunked prefill as interleaved with other sessions.
     pub ttft_seconds: f64,
+    /// Prompt tokens whose prefill was skipped by resuming from a
+    /// cached prefix state (0 = cold prefill from token 0).  Comparing
+    /// `ttft_seconds` across requests with zero and nonzero values here
+    /// is the cache's measured benefit (`rust/benches/statecache.rs`).
+    pub cached_prefix_tokens: usize,
 }
 
 impl GenResponse {

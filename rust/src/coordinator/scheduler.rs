@@ -5,13 +5,18 @@
 //! exclusively.  Each scheduling cycle it
 //!
 //! 1. **admits** queued requests up to `max_active` — admission is
-//!    bookkeeping only (no forward work), so a request with a huge
-//!    prompt enters the table instantly;
+//!    bookkeeping plus a prefix-cache lookup (no forward work), so a
+//!    request with a huge prompt enters the table instantly, and a
+//!    request whose prompt prefix is cached ([`crate::statecache`])
+//!    starts prefill at the deepest cached chunk boundary instead of
+//!    token 0 — for a shared 1k-token system prompt that collapses
+//!    prefill to the unique suffix;
 //! 2. **prefills**: every `Prefilling` session consumes at most
 //!    `prefill_chunk` prompt tokens via ONE sequence-parallel
 //!    [`Engine::prefill_tick`] (one matmul per weight matrix over the
-//!    whole chunk, §Perf L3-4).  Bounding the chunk bounds the cycle
-//!    time, so a 1k-token prompt spreads over ~`len/chunk` cycles
+//!    whole chunk, §Perf L3-4), capturing a state snapshot at the chunk
+//!    boundary for future prefix reuse.  Bounding the chunk bounds the
+//!    cycle time, so a 1k-token prompt spreads over ~`len/chunk` cycles
 //!    instead of head-of-line-blocking every decoding session (asserted
 //!    by `long_prompt_does_not_stall_decoders` in
 //!    `rust/tests/prefill_parity.rs`);
@@ -21,15 +26,17 @@
 //!    each weight matrix across all active sessions (§Perf L3-3);
 //! 4. **completes** finished sessions, recording per-session
 //!    time-to-first-token into [`Metrics`] — after draining the model's
-//!    cumulative 9-bit clip counter into [`Metrics`] (the hardware
-//!    backend's calibration-health signal; lossless even though the
-//!    cycle splits into separate prefill and decode forward calls).
+//!    cumulative 9-bit clip counter and mirroring the prefix-cache
+//!    counters into [`Metrics`] (hit rate, tokens skipped, bytes
+//!    resident, evictions — the serve report's cache line).
 //!
 //! Chunked and token-by-token prefill are bit-exact for the native
-//! models, as are batched and per-session decode, so neither scheduling
-//! capacity nor chunk size ever changes a session's tokens (asserted by
+//! models, as are batched and per-session decode and cached-prefix
+//! resume (the cached state IS the state full prefill passes through),
+//! so neither scheduling capacity, chunk size nor cache state ever
+//! changes a session's tokens (asserted by
 //! `prop_interleaving_preserves_outputs` and the parity suites in
-//! `rust/tests/`).
+//! `rust/tests/`, cache-specifically in `rust/tests/statecache.rs`).
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -41,6 +48,7 @@ use anyhow::{anyhow, Result};
 use super::engine::{ActiveSession, Engine, EngineModel};
 use super::metrics::Metrics;
 use super::{FinishReason, GenRequest, GenResponse};
+use crate::statecache::StateCacheConfig;
 
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
@@ -49,13 +57,23 @@ pub struct CoordinatorConfig {
     /// maximum prompt tokens a `Prefilling` session consumes per
     /// scheduling cycle; bounds how long one cycle can stall decode.
     /// 32–128 is the useful range: big enough to amortize each weight
-    /// matrix over many tokens, small enough to keep decode latency flat
+    /// matrix over many tokens, small enough to keep decode latency flat.
+    /// Also the granularity of prefix-cache snapshots: every chunk
+    /// boundary is a resumable state.
     pub prefill_chunk: usize,
+    /// byte budget for the prefix-sharing state cache
+    /// ([`crate::statecache`]); 0 disables caching entirely.  Resuming
+    /// is bit-exact, so this only trades memory for prefill latency.
+    pub state_cache_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_active: 8, prefill_chunk: 64 }
+        CoordinatorConfig {
+            max_active: 8,
+            prefill_chunk: 64,
+            state_cache_bytes: StateCacheConfig::default().max_bytes,
+        }
     }
 }
 
@@ -93,7 +111,14 @@ impl Coordinator {
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || worker_loop(Engine::new(factory()), rx, cfg, m2));
+        let worker = std::thread::spawn(move || {
+            let engine = if cfg.state_cache_bytes > 0 {
+                Engine::with_cache(factory(), StateCacheConfig { max_bytes: cfg.state_cache_bytes })
+            } else {
+                Engine::new(factory())
+            };
+            worker_loop(engine, rx, cfg, m2)
+        });
         Coordinator {
             tx,
             next_id: std::sync::atomic::AtomicU64::new(1),
@@ -243,10 +268,23 @@ fn worker_loop<M: EngineModel>(
         //    include its session's work: the hardware backend's
         //    cumulative 9-bit clip total for this cycle's prefill +
         //    decode (lossless across split cycles, unlike the per-call
-        //    counter) — surfaced in the serve report
+        //    counter), and the prefix cache's counters/gauges (mirrored
+        //    wholesale — the worker owns the engine, so the engine-side
+        //    totals are authoritative) — both surfaced in the serve
+        //    report
         let clips = engine.model.take_clip_events();
-        if clips > 0 {
-            metrics.lock().unwrap().clip_events += clips;
+        let cache_stats = engine.cache_stats();
+        if clips > 0 || cache_stats.is_some() {
+            let mut m = metrics.lock().unwrap();
+            m.clip_events += clips;
+            if let Some(cs) = cache_stats {
+                m.prefix_cache_hits = cs.hits;
+                m.prefix_cache_misses = cs.misses;
+                m.prefix_tokens_skipped = cs.tokens_skipped;
+                m.prefix_cache_bytes = cs.bytes_resident;
+                m.prefix_cache_entries = cs.entries;
+                m.prefix_cache_evictions = cs.evictions;
+            }
         }
         // 6. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
@@ -273,6 +311,7 @@ fn worker_loop<M: EngineModel>(
                 decode_seconds: sess.decode_seconds,
                 queue_seconds: (sess.started_at - sess.enqueued_at).as_secs_f64(),
                 ttft_seconds: sess.ttft_seconds,
+                cached_prefix_tokens: sess.cached_prefix_tokens,
             });
             let _ = reply.send(resp);
         }
@@ -312,7 +351,7 @@ mod tests {
         };
         let c = Coordinator::spawn(
             test_model(2, 32, 64, 50),
-            CoordinatorConfig { max_active: 4, prefill_chunk: 8 },
+            CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() },
         );
         let r = c.generate(GenRequest::greedy(prompt, 6)).unwrap();
         assert_eq!(r.tokens, solo);
@@ -351,6 +390,46 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_requests_hit_cache_with_identical_tokens() {
+        // same 40-token prompt, served back to back: the second request
+        // must resume from a cached chunk boundary (prefilling only the
+        // tail) and still produce identical tokens; a third request
+        // extending the prompt reuses the full-prompt snapshot
+        let prompt: Vec<u32> = (0..40u32).map(|t| (t * 3 + 2) % 50).collect();
+        let cold = {
+            let c = Coordinator::spawn(
+                test_model(2, 32, 64, 50),
+                CoordinatorConfig { max_active: 4, prefill_chunk: 8, state_cache_bytes: 0 },
+            );
+            c.generate(GenRequest::greedy(prompt.clone(), 6)).unwrap()
+        };
+        assert_eq!(cold.cached_prefix_tokens, 0, "cache disabled must never resume");
+
+        let c = Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() },
+        );
+        let r1 = c.generate(GenRequest::greedy(prompt.clone(), 6)).unwrap();
+        let r2 = c.generate(GenRequest::greedy(prompt.clone(), 6)).unwrap();
+        let mut extended = prompt.clone();
+        extended.extend_from_slice(&[5, 6]);
+        let r3 = c.generate(GenRequest::greedy(extended, 6)).unwrap();
+        assert_eq!(r1.cached_prefix_tokens, 0);
+        assert_eq!(r1.tokens, cold.tokens);
+        // boundaries at 8,16,24,32,40; lookup capped at 39 → resume at 32
+        assert_eq!(r2.cached_prefix_tokens, 32);
+        assert_eq!(r2.tokens, cold.tokens);
+        // the extended prompt reuses the full 40-token snapshot
+        assert_eq!(r3.cached_prefix_tokens, 40);
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.prefix_cache_hits, 2);
+        assert_eq!(m.prefix_cache_misses, 1);
+        assert_eq!(m.prefix_tokens_skipped, 72);
+        assert!(m.prefix_cache_entries > 0);
+        assert!(m.prefix_cache_bytes > 0);
+    }
+
+    #[test]
     fn shutdown_joins_cleanly() {
         let c = coordinator(2);
         let _ = c.generate(GenRequest::greedy(vec![1], 2)).unwrap();
@@ -377,7 +456,10 @@ mod tests {
             }
             eng.model.take_clip_events()
         };
-        let c = Coordinator::spawn(mk(), CoordinatorConfig { max_active: 4, prefill_chunk: 4 });
+        let c = Coordinator::spawn(
+            mk(),
+            CoordinatorConfig { max_active: 4, prefill_chunk: 4, ..Default::default() },
+        );
         let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();

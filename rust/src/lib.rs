@@ -23,6 +23,10 @@
 //!   the CPU client, execute with device-resident weight buffers.
 //! * [`coordinator`] — the serving layer: sessions with recurrent state,
 //!   request queue, batching scheduler, generation engine, metrics.
+//! * [`statecache`]  — prefix-sharing state cache: radix-trie snapshot
+//!   store that lets sessions resume prefill from cached RWKV states
+//!   (O(1) bytes per entry — the RWKV advantage a Transformer KV cache
+//!   can't match).
 //! * [`sim`]         — cycle-accurate accelerator simulator: HBM bridge
 //!   with ping-pong double buffering, MV-array / complex-unit / LayerNorm
 //!   timing, resource model (Table 2), energy model (Fig 8).
@@ -42,6 +46,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
+pub mod statecache;
 pub mod util;
 
 pub use config::{AccelConfig, ModelShape, Platform};

@@ -36,6 +36,20 @@
 //! once in [`forward`] instead of once per shape per backend.  The PJRT
 //! runtime path (`crate::runtime`) sits alongside as the compiled-HLO
 //! cross-check.
+//!
+//! # State is snapshot-cheap
+//!
+//! [`State`] is `n_layer * 5 * d` f32s — fixed-size, independent of how
+//! many tokens produced it.  Both shape-invariance and that O(1) size
+//! are load-bearing for the serving layer's prefix cache
+//! (`crate::statecache`): any state captured at a prefill chunk
+//! boundary is bit-identical to the state a differently-chunked (or
+//! token-by-token) prefill passes through, so it can be snapshotted at
+//! tens of kilobytes and later resumed by another session with zero
+//! numeric drift.  The capture/restore seam is
+//! `EngineModel::{snapshot_state, restore_state}`
+//! (`crate::coordinator::engine`), defaulting to a verbatim copy of the
+//! flat state vector every backend here uses.
 
 pub mod forward;
 pub mod rwkv;

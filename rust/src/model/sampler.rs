@@ -23,9 +23,10 @@ impl Sampler {
         if self.temperature <= 0.0 {
             return argmax(logits) as u32;
         }
-        // top-k filter
+        // top-k filter — total_cmp: a NaN logit (misconfigured variant)
+        // must not panic the scheduler thread mid-sort
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         let k = if self.top_k == 0 { logits.len() } else { self.top_k.min(logits.len()) };
         let kept = &idx[..k];
         // softmax over kept at temperature
@@ -49,10 +50,14 @@ impl Sampler {
     }
 }
 
+/// Index of the largest element under IEEE total order (NaN-safe: a NaN
+/// logit yields a deterministic index instead of panicking — NaN sorts
+/// above every number, so callers still get *a* token and the serving
+/// thread survives a numerically-broken model variant).
 pub fn argmax(v: &[f32]) -> usize {
     v.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -93,6 +98,22 @@ mod tests {
         for seed in 0..5 {
             let mut s = Sampler::new(0.0, 3, seed);
             assert_eq!(s.sample(&logits), 2);
+        }
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic() {
+        // finishes the PR-3 total_cmp sweep (util/bench, eval): greedy
+        // argmax and the top-k sort both survive NaN logits
+        let logits = [0.5f32, f32::NAN, 1.5, f32::NAN];
+        let mut greedy = Sampler::greedy();
+        let g = greedy.sample(&logits);
+        assert!((g as usize) < logits.len());
+        assert_eq!(g, greedy.sample(&logits), "NaN handling must be deterministic");
+        let mut topk = Sampler::new(0.9, 2, 3);
+        for _ in 0..50 {
+            let t = topk.sample(&logits);
+            assert!((t as usize) < logits.len());
         }
     }
 

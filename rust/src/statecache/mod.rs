@@ -1,0 +1,72 @@
+//! Prefix-sharing state cache: RWKV's O(1) state makes shared prompts
+//! nearly free — this subsystem makes the serving layer collect.
+//!
+//! # Why this is cheap for RWKV and expensive for Transformers
+//!
+//! A Transformer resuming a T-token shared prefix must hold that
+//! prefix's KV cache: O(T · n_layer · d) floats *per cached prefix
+//! length*, linear in everything — caching a 1k-token system prompt for
+//! a 24-layer model is tens of megabytes, and caching it at chunk
+//! granularity multiplies that again.  RWKV folds the entire history
+//! into a *fixed-size* recurrent state of `n_layer * 5 * d` floats —
+//! tens of kilobytes, independent of how many tokens produced it (the
+//! same property HFRWKV exploits to keep all request-time state
+//! on-chip).  So an RWKV snapshot costs O(1) per entry no matter the
+//! prefix length, and snapshotting *every 64-token chunk boundary* of a
+//! 1k-token prompt costs 16 small states, not 16 growing KV prefixes.
+//!
+//! # What it does
+//!
+//! Production traffic is dominated by requests sharing long system
+//! prompts.  [`StateStore`] maps token prefixes to cached state
+//! snapshots through a radix trie (the private `trie` module — arena
+//! nodes, compressed edges, mid-edge splits): the engine captures a
+//! snapshot at every prefill chunk boundary, and admission does a
+//! longest-prefix lookup so a new session resumes prefill from the
+//! deepest cached state instead of token 0 — a second request behind a
+//! shared 1k-token prompt prefills only its unique suffix, collapsing
+//! its time-to-first-token (measured in `rust/benches/statecache.rs`,
+//! `BENCH_statecache.json`).
+//!
+//! # Guarantees
+//!
+//! * **Bit-exact**: the forward core's per-column op order is
+//!   shape-invariant across decode/batched-decode/chunked-prefill (the
+//!   `model::forward` walk), so a state captured at any chunk boundary
+//!   is *identical* to the state a full prefill would pass through —
+//!   resuming changes nothing but the work done.  Asserted at 0 ULP on
+//!   both the exact and hw backends in `rust/tests/statecache.rs`.
+//! * **Copy-on-write**: snapshots are immutable behind [`SnapshotRef`]
+//!   `Arc` handles; sessions clone the floats only when resuming, and a
+//!   held handle pins its entry against eviction.
+//! * **Bounded**: a configurable byte budget with exact accounting and
+//!   LRU eviction over unpinned entries ([`StateCacheConfig`]).
+//!
+//! Cache keys are namespaced by model-variant class, so states produced
+//! by different numerics (`Exact` vs `HwApprox` on the PJRT runtime)
+//! never cross-pollinate.
+
+mod trie;
+
+pub mod store;
+
+pub use store::{CacheStats, Snapshot, SnapshotRef, StateStore};
+
+/// Configuration for a [`StateStore`].
+#[derive(Clone, Copy, Debug)]
+pub struct StateCacheConfig {
+    /// Byte budget for resident snapshots (state floats + key tokens,
+    /// exactly accounted).  The store never exceeds it: LRU entries are
+    /// evicted to make room, and an insert that cannot fit (oversized,
+    /// or everything resident is pinned by live sessions) is rejected.
+    pub max_bytes: usize,
+}
+
+impl Default for StateCacheConfig {
+    fn default() -> Self {
+        // 64 MiB holds thousands of tiny-model snapshots and hundreds
+        // for a 24-layer/2k-d serving model — generous next to a single
+        // Transformer KV prefix, which is the point
+        StateCacheConfig { max_bytes: 64 << 20 }
+    }
+}

@@ -1,0 +1,474 @@
+//! The snapshot store: prefix trie + byte budget + LRU + pinning.
+
+use std::sync::Arc;
+
+use super::trie::Trie;
+use super::StateCacheConfig;
+
+/// An immutable cached RWKV state: the flat `[n_layer * 5 * d]` vector
+/// captured after `tokens` prompt tokens were folded in.  Shared
+/// copy-on-write via [`SnapshotRef`]: the store keeps one `Arc`, every
+/// borrowing session clones the handle (cheap) and materializes a
+/// private mutable copy of the floats only when its prefill resumes.
+#[derive(Debug)]
+pub struct Snapshot {
+    state: Vec<f32>,
+    tokens: usize,
+}
+
+impl Snapshot {
+    /// Bytes this snapshot holds resident: the state floats plus the
+    /// trie key tokens (both 4 bytes/element).  This is the exact
+    /// quantity the store's budget accounting sums.
+    pub fn cost_bytes(&self) -> usize {
+        (self.state.len() + self.tokens) * 4
+    }
+}
+
+/// Shared handle to a cached snapshot.  Holding one *pins* the entry:
+/// the store never evicts a snapshot whose `Arc` is still held outside
+/// the store (a live session may be about to — or already did — resume
+/// from it, and `Metrics` would misreport a borrowed entry as gone).
+#[derive(Clone, Debug)]
+pub struct SnapshotRef(Arc<Snapshot>);
+
+impl SnapshotRef {
+    /// The cached flat state, immutable (copy before mutating).
+    pub fn state(&self) -> &[f32] {
+        &self.0.state
+    }
+
+    /// How many prompt tokens this state has folded in.
+    pub fn tokens(&self) -> usize {
+        self.0.tokens
+    }
+}
+
+/// Monotonic counters + gauges, folded into the serving `Metrics` every
+/// scheduling cycle and surfaced in the serve report.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Admissions that resumed from a cached prefix.
+    pub hits: u64,
+    /// Admissions that found no usable prefix (including prompts too
+    /// short to ever hit: prefill work was needed either way).
+    pub misses: u64,
+    /// Prompt tokens whose prefill was skipped by resuming — the cache's
+    /// whole value, in tokens.
+    pub tokens_skipped: u64,
+    /// Snapshots newly captured (dedup re-captures don't count).
+    pub inserts: u64,
+    /// Snapshots evicted by LRU under byte pressure.
+    pub evictions: u64,
+    /// Snapshots rejected because they exceed the whole budget or every
+    /// resident byte is pinned by live sessions.
+    pub rejected: u64,
+    /// Gauge: bytes currently resident (exactly the sum of live entries'
+    /// [`Snapshot::cost_bytes`]).
+    pub bytes_resident: u64,
+    /// Gauge: live cached snapshots.
+    pub entries: u64,
+}
+
+struct Entry {
+    snap: Arc<Snapshot>,
+    /// Which class trie and node this entry is attached to.
+    class_slot: usize,
+    node: usize,
+    /// LRU stamp: larger = more recently used.
+    last_used: u64,
+}
+
+/// Prefix-sharing state cache.
+///
+/// Keys are `(class, token prefix)` — `class` discriminates state
+/// spaces that share a token vocabulary but not a numerics trajectory
+/// (the engine passes the model variant, so an `Exact` state is never
+/// resumed by a `HwApprox` session).  Values are [`Snapshot`]s behind
+/// `Arc` handles; capacity is a byte budget with LRU eviction that
+/// skips pinned entries.
+pub struct StateStore {
+    cfg: StateCacheConfig,
+    /// One trie per class, linearly scanned (two classes in practice).
+    classes: Vec<(u32, Trie)>,
+    entries: Vec<Option<Entry>>,
+    free: Vec<usize>,
+    bytes: usize,
+    /// Live entry count, maintained incrementally — `stats()` runs on
+    /// the scheduler's per-cycle path, so no O(entries) scans here.
+    live: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl StateStore {
+    pub fn new(cfg: StateCacheConfig) -> StateStore {
+        StateStore {
+            cfg,
+            classes: Vec::new(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            bytes: 0,
+            live: 0,
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn class_slot(&mut self, class: u32) -> usize {
+        if let Some(i) = self.classes.iter().position(|(c, _)| *c == class) {
+            return i;
+        }
+        self.classes.push((class, Trie::new()));
+        self.classes.len() - 1
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Live snapshot count (O(1) — maintained on insert/evict).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently resident.
+    pub fn bytes_resident(&self) -> usize {
+        self.bytes
+    }
+
+    /// Counters + refreshed gauges.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = self.stats;
+        s.bytes_resident = self.bytes as u64;
+        s.entries = self.len() as u64;
+        s
+    }
+
+    /// Deepest cached state for `prompt` at depth ≤ `max_tokens`,
+    /// bumping its recency.  The engine caps `max_tokens` at
+    /// `prompt.len() - 1` so at least one token is always prefilled —
+    /// the sampler needs the last prompt token's logits, which snapshots
+    /// deliberately don't carry.
+    pub fn lookup(&mut self, class: u32, prompt: &[u32], max_tokens: usize) -> Option<SnapshotRef> {
+        let found = self
+            .classes
+            .iter()
+            .find(|(c, _)| *c == class)
+            .and_then(|(_, trie)| trie.longest_entry(prompt, max_tokens));
+        let Some((entry_id, _, depth)) = found else {
+            self.stats.misses += 1;
+            return None;
+        };
+        let stamp = self.tick();
+        let e = self.entries[entry_id].as_mut().expect("trie entry ids are live");
+        e.last_used = stamp;
+        self.stats.hits += 1;
+        self.stats.tokens_skipped += depth as u64;
+        Some(SnapshotRef(Arc::clone(&e.snap)))
+    }
+
+    /// Cache the state reached after `prefix` tokens.  `snapshot` is
+    /// only invoked when the snapshot will actually become resident —
+    /// dedup (prefix already cached: recency refresh only) and budget
+    /// rejection both skip the copy, so `snapshot_len` (the flat length
+    /// the closure's vector will have, i.e. the model's state length)
+    /// prices the entry up front.  Returns true if a new snapshot
+    /// became resident.
+    pub fn insert_with(
+        &mut self,
+        class: u32,
+        prefix: &[u32],
+        snapshot_len: usize,
+        snapshot: impl FnOnce() -> Vec<f32>,
+    ) -> bool {
+        if prefix.is_empty() {
+            return false; // the init state is free — never cache it
+        }
+        let class_slot = self.class_slot(class);
+        let node = self.classes[class_slot].1.insert_key(prefix);
+        if let Some(entry_id) = self.classes[class_slot].1.entry_at(node) {
+            let stamp = self.tick();
+            self.entries[entry_id].as_mut().expect("live entry").last_used = stamp;
+            return false;
+        }
+        let cost = (snapshot_len + prefix.len()) * 4;
+        if cost > self.cfg.max_bytes || !self.evict_down_to(self.cfg.max_bytes - cost) {
+            // undo the structural node we just created (it has no entry)
+            self.classes[class_slot].1.prune_from(node);
+            self.stats.rejected += 1;
+            return false;
+        }
+        let snap = Snapshot { state: snapshot(), tokens: prefix.len() };
+        debug_assert_eq!(
+            snap.state.len(),
+            snapshot_len,
+            "snapshot_len hint must match the materialized snapshot"
+        );
+        debug_assert_eq!(snap.cost_bytes(), cost);
+        let entry = Entry { snap: Arc::new(snap), class_slot, node, last_used: self.tick() };
+        let entry_id = match self.free.pop() {
+            Some(id) => {
+                self.entries[id] = Some(entry);
+                id
+            }
+            None => {
+                self.entries.push(Some(entry));
+                self.entries.len() - 1
+            }
+        };
+        self.bytes += cost;
+        self.live += 1;
+        self.classes[class_slot].1.set_entry(node, entry_id);
+        self.stats.inserts += 1;
+        true
+    }
+
+    /// Evict least-recently-used unpinned entries until at most `target`
+    /// bytes are resident.  Returns false — evicting NOTHING — if pinned
+    /// entries make the target unreachable: a doomed insert must not
+    /// flush still-hot evictable snapshots on its way to rejection.
+    /// Otherwise each round removes the global LRU victim, so the
+    /// eviction *order* is exact LRU over unpinned entries.
+    fn evict_down_to(&mut self, target: usize) -> bool {
+        if self.bytes <= target {
+            return true; // steady state: no scan, no eviction
+        }
+        // feasibility next: can unpinned bytes alone get us there?
+        let evictable: usize = self
+            .entries
+            .iter()
+            .flatten()
+            .filter(|e| Arc::strong_count(&e.snap) == 1)
+            .map(|e| e.snap.cost_bytes())
+            .sum();
+        if self.bytes.saturating_sub(evictable) > target {
+            return false;
+        }
+        while self.bytes > target {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| e.as_ref().map(|e| (i, e)))
+                // pinned = an Arc handle lives outside the store
+                .filter(|(_, e)| Arc::strong_count(&e.snap) == 1)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(i) = victim else {
+                return false;
+            };
+            let e = self.entries[i].take().expect("victim is live");
+            self.free.push(i);
+            self.bytes -= e.snap.cost_bytes();
+            self.live -= 1;
+            let removed = self.classes[e.class_slot].1.remove_entry(e.node);
+            debug_assert_eq!(removed, Some(i));
+            self.stats.evictions += 1;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_bytes: usize) -> StateCacheConfig {
+        StateCacheConfig { max_bytes }
+    }
+
+    fn state(fill: f32, len: usize) -> Vec<f32> {
+        vec![fill; len]
+    }
+
+    /// cost of a snapshot with `s` state floats over a `t`-token key
+    fn cost(s: usize, t: usize) -> usize {
+        (s + t) * 4
+    }
+
+    #[test]
+    fn lookup_returns_deepest_cached_prefix() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        assert!(st.insert_with(0, &[1, 2], 8, || state(0.2, 8)));
+        assert!(st.insert_with(0, &[1, 2, 3, 4], 8, || state(0.4, 8)));
+        let hit = st.lookup(0, &[1, 2, 3, 4, 5, 6], 5).unwrap();
+        assert_eq!(hit.tokens(), 4);
+        assert_eq!(hit.state(), &state(0.4, 8)[..]);
+        // the cap excludes the deep snapshot
+        let hit = st.lookup(0, &[1, 2, 3, 4, 5, 6], 3).unwrap();
+        assert_eq!(hit.tokens(), 2);
+        assert!(st.lookup(0, &[9, 9], 2).is_none());
+        let s = st.stats();
+        assert_eq!((s.hits, s.misses, s.tokens_skipped), (2, 1, 6));
+    }
+
+    #[test]
+    fn classes_are_isolated() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        assert!(st.insert_with(0, &[1, 2, 3], 4, || state(1.0, 4)));
+        assert!(st.lookup(1, &[1, 2, 3, 4], 3).is_none());
+        assert!(st.insert_with(1, &[1, 2, 3], 4, || state(2.0, 4)));
+        assert_eq!(st.lookup(0, &[1, 2, 3, 4], 3).unwrap().state()[0], 1.0);
+        assert_eq!(st.lookup(1, &[1, 2, 3, 4], 3).unwrap().state()[0], 2.0);
+    }
+
+    #[test]
+    fn dedup_insert_refreshes_recency_without_cloning() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        assert!(st.insert_with(0, &[7, 8], 4, || state(1.0, 4)));
+        let mut cloned = false;
+        assert!(!st.insert_with(0, &[7, 8], 4, || {
+            cloned = true;
+            state(9.0, 4)
+        }));
+        assert!(!cloned, "dedup insert must not materialize a snapshot");
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.stats().inserts, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order_is_exact() {
+        // budget fits exactly two 4-float/2-token snapshots
+        let mut st = StateStore::new(cfg(2 * cost(4, 2)));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        // touch [1,1] so [2,2] is the LRU victim
+        assert!(st.lookup(0, &[1, 1, 5], 2).is_some());
+        assert!(st.insert_with(0, &[3, 3], 4, || state(3.0, 4)));
+        assert!(st.lookup(0, &[1, 1, 5], 2).is_some(), "recently used must survive");
+        assert!(st.lookup(0, &[2, 2, 5], 2).is_none(), "LRU victim must be gone");
+        assert!(st.lookup(0, &[3, 3, 5], 2).is_some());
+        assert_eq!(st.stats().evictions, 1);
+    }
+
+    #[test]
+    fn byte_accounting_is_exact() {
+        let mut st = StateStore::new(cfg(10 * cost(16, 3)));
+        let mut expect = 0usize;
+        for i in 0..24u32 {
+            let key = [i % 7, i % 5, i];
+            if st.insert_with(0, &key, 16, || state(i as f32, 16)) {
+                expect += cost(16, 3);
+            }
+        }
+        // evictions happened; recompute expectation from the gauges
+        let s = st.stats();
+        assert!(s.evictions > 0, "pressure must evict");
+        assert_eq!(s.entries, 10);
+        assert_eq!(st.bytes_resident(), 10 * cost(16, 3));
+        assert_eq!(s.bytes_resident, st.bytes_resident() as u64);
+        assert!(st.bytes_resident() <= 10 * cost(16, 3));
+        let _ = expect;
+    }
+
+    #[test]
+    fn oversized_snapshot_is_rejected() {
+        let mut st = StateStore::new(cfg(cost(4, 2) - 1));
+        assert!(!st.insert_with(0, &[1, 2], 4, || state(0.0, 4)));
+        assert_eq!(st.len(), 0);
+        assert_eq!(st.bytes_resident(), 0);
+        assert_eq!(st.stats().rejected, 1);
+        // the structural node was undone: the trie is empty again
+        assert!(st.lookup(0, &[1, 2, 3], 2).is_none());
+    }
+
+    #[test]
+    fn pinned_entries_are_never_evicted() {
+        let mut st = StateStore::new(cfg(2 * cost(4, 2)));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        // pin the LRU entry by holding its handle, as a live session does
+        let pin = st.lookup(0, &[1, 1, 9], 2).unwrap();
+        // make [1,1] LRU again by touching [2,2]
+        assert!(st.lookup(0, &[2, 2, 9], 2).is_some());
+        assert!(st.insert_with(0, &[3, 3], 4, || state(3.0, 4)));
+        // the unpinned [2,2] was evicted instead of the pinned LRU [1,1]
+        assert!(st.lookup(0, &[1, 1, 9], 2).is_some());
+        assert!(st.lookup(0, &[2, 2, 9], 2).is_none());
+        assert_eq!(pin.state(), &state(1.0, 4)[..]);
+        // with both residents pinned, a new insert is rejected, not
+        // forced over budget
+        let pin3 = st.lookup(0, &[3, 3, 9], 2).unwrap();
+        assert!(!st.insert_with(0, &[4, 4], 4, || state(4.0, 4)));
+        assert_eq!(st.stats().rejected, 1);
+        drop((pin, pin3));
+        // unpinned now: the next insert evicts normally
+        assert!(st.insert_with(0, &[4, 4], 4, || state(4.0, 4)));
+        assert!(st.bytes_resident() <= 2 * cost(4, 2));
+    }
+
+    #[test]
+    fn doomed_insert_does_not_flush_evictable_entries() {
+        // budget 2c, [1,1] pinned + [2,2] evictable; a 2c-cost insert
+        // can never fit past the pin — it must be rejected WITHOUT
+        // sacrificing the still-hot evictable entry on the way
+        let mut st = StateStore::new(cfg(2 * cost(4, 2)));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        let pin = st.lookup(0, &[1, 1, 9], 2).unwrap();
+        assert!(!st.insert_with(0, &[3, 3, 3, 3], 6, || state(3.0, 6)));
+        assert_eq!(st.stats().rejected, 1);
+        assert_eq!(st.stats().evictions, 0, "doomed insert must not evict");
+        assert!(st.lookup(0, &[2, 2, 9], 2).is_some(), "[2,2] must survive");
+        drop(pin);
+    }
+
+    #[test]
+    fn prop_trie_lookup_matches_naive_oracle() {
+        // random insert/lookup streams vs a HashMap scanning oracle —
+        // covers edge splits, dedup and LRU churn in one sweep
+        use crate::util::prop::{check, Gen};
+        use std::collections::HashMap;
+        check("statecache lookup == oracle", 30, |g: &mut Gen| {
+            let mut st = StateStore::new(StateCacheConfig { max_bytes: usize::MAX });
+            let mut oracle: HashMap<Vec<u32>, f32> = HashMap::new();
+            let ops = g.usize_in(1, 60);
+            for i in 0..ops {
+                let len = g.usize_in(1, 12);
+                // tiny alphabet forces shared prefixes and splits
+                let key: Vec<u32> = (0..len).map(|_| g.usize_in(0, 2) as u32).collect();
+                if g.usize_in(0, 2) < 2 {
+                    let fill = i as f32;
+                    if st.insert_with(0, &key, 4, || vec![fill; 4]) {
+                        oracle.insert(key, fill);
+                    }
+                } else {
+                    let cap = g.usize_in(0, len);
+                    let got = st.lookup(0, &key, cap);
+                    let want = oracle
+                        .iter()
+                        .filter(|(k, _)| k.len() <= cap && key.starts_with(k))
+                        .max_by_key(|(k, _)| k.len());
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some(h), Some((k, &fill))) => {
+                            if h.tokens() != k.len() || h.state()[0] != fill {
+                                return Err(format!(
+                                    "key {key:?} cap {cap}: got depth {} fill {}, want {} {}",
+                                    h.tokens(),
+                                    h.state()[0],
+                                    k.len(),
+                                    fill
+                                ));
+                            }
+                        }
+                        (got, want) => {
+                            return Err(format!(
+                                "key {key:?} cap {cap}: got {:?}, want {:?}",
+                                got.map(|h| h.tokens()),
+                                want.map(|(k, _)| k.len())
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,341 @@
+//! Radix (compressed prefix) trie over token streams.
+//!
+//! Keys are `&[u32]` token prefixes; each edge carries a token
+//! *fragment* rather than a single token, so a cached 1k-token system
+//! prompt costs a handful of nodes instead of a thousand.  The trie is
+//! purely structural: it maps a key to an opaque entry id (the
+//! [`store`](super::store) owns the snapshots, budget and LRU order) and
+//! supports the three operations the store needs:
+//!
+//! * [`Trie::insert_key`] — locate-or-create the node at an exact key,
+//!   splitting edges where the key diverges mid-fragment;
+//! * [`Trie::longest_entry`] — deepest node holding an entry whose path
+//!   is a prefix of the query, capped at `max_len` tokens;
+//! * [`Trie::remove_entry`] — detach an entry and prune/merge the now
+//!   path-only nodes so the structure stays proportional to the number
+//!   of live entries.
+//!
+//! Nodes live in an arena (`Vec<Node>` + free list) and refer to each
+//! other by index, so there is no `Rc` juggling and eviction never moves
+//! a node id that still carries an entry (merging always folds a dead
+//! node *into* its child, keeping the child's id stable).
+
+/// Arena index of a node. The root is always index 0.
+pub type NodeId = usize;
+
+const ROOT: NodeId = 0;
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Edge fragment from the parent to this node (empty for the root).
+    label: Vec<u32>,
+    parent: NodeId,
+    /// Children ids; looked up linearly by the first token of their
+    /// label (first tokens are unique among siblings by construction).
+    children: Vec<NodeId>,
+    /// Opaque store entry id attached at this exact prefix, if any.
+    entry: Option<usize>,
+}
+
+#[derive(Debug)]
+pub struct Trie {
+    nodes: Vec<Node>,
+    free: Vec<NodeId>,
+}
+
+impl Trie {
+    pub fn new() -> Trie {
+        Trie { nodes: vec![Node::default()], free: Vec::new() }
+    }
+
+    fn alloc(&mut self, node: Node) -> NodeId {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn child_by_first(&self, n: NodeId, tok: u32) -> Option<NodeId> {
+        self.nodes[n]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].label.first() == Some(&tok))
+    }
+
+    /// Number of live (non-freed) nodes, root included (test-only:
+    /// asserts pruning/merging reclaims structure).
+    #[cfg(test)]
+    pub fn node_count(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    /// The entry id at `node`, if any.
+    pub fn entry_at(&self, node: NodeId) -> Option<usize> {
+        self.nodes[node].entry
+    }
+
+    /// Attach an entry id to a node (the node must not already hold one;
+    /// the store checks via [`Trie::entry_at`] first).
+    pub fn set_entry(&mut self, node: NodeId, entry: usize) {
+        debug_assert!(self.nodes[node].entry.is_none());
+        self.nodes[node].entry = Some(entry);
+    }
+
+    /// Token depth of a node = total label length along its path
+    /// (test-only: lookups carry depth themselves).
+    #[cfg(test)]
+    pub fn depth(&self, mut node: NodeId) -> usize {
+        let mut d = 0;
+        loop {
+            d += self.nodes[node].label.len();
+            if node == ROOT {
+                return d;
+            }
+            node = self.nodes[node].parent;
+        }
+    }
+
+    /// Locate or create the node at exactly `key`, splitting edges as
+    /// needed.  `key` must be non-empty (the root never holds an entry).
+    pub fn insert_key(&mut self, key: &[u32]) -> NodeId {
+        assert!(!key.is_empty(), "empty keys are not cacheable");
+        let mut node = ROOT;
+        let mut pos = 0;
+        while pos < key.len() {
+            let Some(child) = self.child_by_first(node, key[pos]) else {
+                // no edge starts with key[pos]: new leaf under `node`
+                let leaf = self.alloc(Node {
+                    label: key[pos..].to_vec(),
+                    parent: node,
+                    children: Vec::new(),
+                    entry: None,
+                });
+                self.nodes[node].children.push(leaf);
+                return leaf;
+            };
+            let lab_len = self.nodes[child].label.len();
+            let rem = &key[pos..];
+            let common = self.nodes[child]
+                .label
+                .iter()
+                .zip(rem)
+                .take_while(|(a, b)| a == b)
+                .count();
+            if common == lab_len {
+                // whole edge matched: descend
+                node = child;
+                pos += lab_len;
+                continue;
+            }
+            // the key diverges (or ends) mid-edge: split the edge at
+            // `common` — `child` keeps its id (and entry) below a new
+            // middle node carrying the shared fragment
+            let mid = self.alloc(Node {
+                label: self.nodes[child].label[..common].to_vec(),
+                parent: node,
+                children: vec![child],
+                entry: None,
+            });
+            let tail = self.nodes[child].label.split_off(common);
+            self.nodes[child].label = tail;
+            self.nodes[child].parent = mid;
+            let slot = self.nodes[node]
+                .children
+                .iter()
+                .position(|&c| c == child)
+                .expect("child listed under parent");
+            self.nodes[node].children[slot] = mid;
+            if common == rem.len() {
+                // key ends exactly at the split point
+                return mid;
+            }
+            // key continues past the split: new leaf under `mid`
+            let leaf = self.alloc(Node {
+                label: key[pos + common..].to_vec(),
+                parent: mid,
+                children: Vec::new(),
+                entry: None,
+            });
+            self.nodes[mid].children.push(leaf);
+            return leaf;
+        }
+        node
+    }
+
+    /// Deepest node on the path of `key` that holds an entry, at token
+    /// depth ≤ `max_len`.  Returns `(entry id, node, depth)`.
+    pub fn longest_entry(&self, key: &[u32], max_len: usize) -> Option<(usize, NodeId, usize)> {
+        let mut best = None;
+        let mut node = ROOT;
+        let mut pos = 0;
+        loop {
+            if pos > max_len {
+                return best;
+            }
+            if let Some(e) = self.nodes[node].entry {
+                best = Some((e, node, pos));
+            }
+            if pos == key.len() {
+                return best;
+            }
+            let Some(child) = self.child_by_first(node, key[pos]) else {
+                return best;
+            };
+            let lab = &self.nodes[child].label;
+            if lab.len() > key.len() - pos
+                || pos + lab.len() > max_len
+                || lab != &key[pos..pos + lab.len()]
+            {
+                return best;
+            }
+            pos += lab.len();
+            node = child;
+        }
+    }
+
+    /// Detach the entry at `node` and prune: childless entry-less nodes
+    /// are freed bottom-up, and an entry-less node left with exactly one
+    /// child is folded *into* that child (the child's id — and therefore
+    /// any entry id attached to it — is preserved; only its label grows
+    /// at the front).  Returns the detached entry id.
+    pub fn remove_entry(&mut self, node: NodeId) -> Option<usize> {
+        let entry = self.nodes[node].entry.take();
+        self.prune_from(node);
+        entry
+    }
+
+    /// Prune upward from a possibly-dead node (also used to undo a
+    /// structural `insert_key` whose entry was never attached, e.g. when
+    /// the budget rejects the snapshot).
+    pub fn prune_from(&mut self, mut node: NodeId) {
+        loop {
+            if node == ROOT || self.nodes[node].entry.is_some() {
+                return;
+            }
+            match self.nodes[node].children.len() {
+                0 => {
+                    let parent = self.nodes[node].parent;
+                    let slot = self.nodes[parent]
+                        .children
+                        .iter()
+                        .position(|&c| c == node)
+                        .expect("node listed under parent");
+                    self.nodes[parent].children.swap_remove(slot);
+                    self.nodes[node] = Node::default();
+                    self.free.push(node);
+                    node = parent;
+                }
+                1 => {
+                    // fold `node` into its only child: the child absorbs
+                    // the label prefix and reattaches to the grandparent
+                    let child = self.nodes[node].children[0];
+                    let parent = self.nodes[node].parent;
+                    let mut label = std::mem::take(&mut self.nodes[node].label);
+                    label.extend_from_slice(&self.nodes[child].label);
+                    self.nodes[child].label = label;
+                    self.nodes[child].parent = parent;
+                    let slot = self.nodes[parent]
+                        .children
+                        .iter()
+                        .position(|&c| c == node)
+                        .expect("node listed under parent");
+                    self.nodes[parent].children[slot] = child;
+                    self.nodes[node] = Node::default();
+                    self.free.push(node);
+                    return;
+                }
+                _ => return,
+            }
+        }
+    }
+}
+
+impl Default for Trie {
+    fn default() -> Self {
+        Trie::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_then_longest_prefix() {
+        let mut t = Trie::new();
+        let a = t.insert_key(&[1, 2, 3, 4]);
+        t.set_entry(a, 10);
+        let b = t.insert_key(&[1, 2, 3, 4, 5, 6]);
+        t.set_entry(b, 11);
+        // full-depth hit
+        assert_eq!(t.longest_entry(&[1, 2, 3, 4, 5, 6, 7], usize::MAX), Some((11, b, 6)));
+        // cap forces the shallower entry
+        assert_eq!(t.longest_entry(&[1, 2, 3, 4, 5, 6, 7], 5), Some((10, a, 4)));
+        assert_eq!(t.longest_entry(&[1, 2, 3, 4, 5, 6, 7], 3), None);
+        // divergent query stops at the last matching entry
+        assert_eq!(t.longest_entry(&[1, 2, 3, 4, 9], usize::MAX), Some((10, a, 4)));
+        assert_eq!(t.longest_entry(&[2, 2], usize::MAX), None);
+    }
+
+    #[test]
+    fn mid_edge_split_preserves_entries() {
+        let mut t = Trie::new();
+        let deep = t.insert_key(&[7, 8, 9, 10]);
+        t.set_entry(deep, 1);
+        // a shorter key that ends mid-edge splits it
+        let mid = t.insert_key(&[7, 8]);
+        t.set_entry(mid, 2);
+        assert_eq!(t.longest_entry(&[7, 8, 9, 10], usize::MAX), Some((1, deep, 4)));
+        assert_eq!(t.longest_entry(&[7, 8, 9], usize::MAX), Some((2, mid, 2)));
+        // a diverging key splits and branches
+        let div = t.insert_key(&[7, 8, 9, 99]);
+        t.set_entry(div, 3);
+        assert_eq!(t.longest_entry(&[7, 8, 9, 99], usize::MAX), Some((3, div, 4)));
+        assert_eq!(t.longest_entry(&[7, 8, 9, 10], usize::MAX), Some((1, deep, 4)));
+    }
+
+    #[test]
+    fn insert_same_key_returns_same_node() {
+        let mut t = Trie::new();
+        let a = t.insert_key(&[5, 6, 7]);
+        t.set_entry(a, 0);
+        assert_eq!(t.insert_key(&[5, 6, 7]), a);
+        assert_eq!(t.entry_at(a), Some(0));
+    }
+
+    #[test]
+    fn remove_prunes_and_merges() {
+        let mut t = Trie::new();
+        let a = t.insert_key(&[1, 2]);
+        t.set_entry(a, 0);
+        let b = t.insert_key(&[1, 2, 3, 4]);
+        t.set_entry(b, 1);
+        let base = t.node_count();
+        // removing the middle entry merges its node into the deep child
+        assert_eq!(t.remove_entry(a), Some(0));
+        assert_eq!(t.node_count(), base - 1);
+        assert_eq!(t.longest_entry(&[1, 2, 3, 4], usize::MAX), Some((1, b, 4)));
+        assert_eq!(t.longest_entry(&[1, 2, 3], usize::MAX), None);
+        // removing the last entry collapses the trie back to the root
+        assert_eq!(t.remove_entry(b), Some(1));
+        assert_eq!(t.node_count(), 1);
+        assert_eq!(t.longest_entry(&[1, 2, 3, 4], usize::MAX), None);
+    }
+
+    #[test]
+    fn depth_tracks_path_length() {
+        let mut t = Trie::new();
+        let a = t.insert_key(&[4, 4, 4, 4, 4]);
+        assert_eq!(t.depth(a), 5);
+        let b = t.insert_key(&[4, 4]);
+        assert_eq!(t.depth(b), 2);
+        assert_eq!(t.depth(a), 5, "split must not change depths");
+    }
+}

@@ -139,7 +139,7 @@ fn long_prompt_does_not_stall_decoders() {
 
     let c = Coordinator::spawn(
         mk_model(),
-        CoordinatorConfig { max_active: 4, prefill_chunk: 8 },
+        CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() },
     );
     let rx_a = c.submit(req_a);
     let rx_b = c.submit(req_b);

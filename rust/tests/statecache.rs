@@ -1,0 +1,237 @@
+//! Prefix-sharing state cache: end-to-end invariants.
+//!
+//! * **Bit-exactness** — for any prompt split into (cached prefix,
+//!   suffix), resuming from the cached snapshot produces logits and
+//!   state identical at 0 ULP to a cold full prefill, on both the exact
+//!   and hardware backends (the forward core's per-column op order is
+//!   shape-invariant, so a chunk-boundary state IS the full-prefill
+//!   state).
+//! * **Eviction under pressure** — a byte budget small enough to churn
+//!   never compromises correctness, only hit rate.
+//! * **Concurrency** — sessions admitted together share one pinned
+//!   snapshot and still emit exactly their solo tokens.
+//! * **Clip accounting** — on the hw backend, a resumed session's
+//!   drained 9-bit clip total is exactly the suffix's clips: the
+//!   cache skips work, it never invents or loses clip events.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, Engine, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::HwModel;
+use hfrwkv::prop_assert;
+use hfrwkv::statecache::StateCacheConfig;
+use hfrwkv::util::prop::{check, Gen};
+
+/// Largest chunk boundary the first warm session leaves at depth
+/// ≤ len-1 (the lookup cap): the resumed session must match at least
+/// this deep.
+fn deepest_boundary(len: usize, chunk: usize) -> usize {
+    if chunk >= len {
+        0
+    } else {
+        (len - 1) / chunk * chunk
+    }
+}
+
+#[test]
+fn prop_resume_from_cache_bitexact_exact() {
+    // odd dims exercise the non-multiple-of-8 kernel tails
+    let m = test_model(2, 36, 52, 41);
+    let cold = RefCell::new(Engine::new(m.clone()));
+    let warm = RefCell::new(Engine::with_cache(m, StateCacheConfig::default()));
+    check("cached resume == cold prefill (exact, 0 ULP)", 24, |g: &mut Gen| {
+        let len = g.usize_in(2, 60);
+        let chunk_a = g.usize_in(1, len);
+        let chunk_b = g.usize_in(1, len);
+        let prompt: Vec<u32> = (0..len).map(|_| g.usize_in(0, 40) as u32).collect();
+        let req = GenRequest::greedy(prompt, 4);
+
+        let sc = cold.borrow_mut().start(0, req.clone(), Instant::now()).unwrap();
+
+        // populate boundaries at chunk_a granularity
+        let mut w = warm.borrow_mut();
+        let mut s1 = w.admit(1, req.clone(), Instant::now());
+        while !w.prefill_tick(&mut s1, chunk_a).unwrap() {}
+        prop_assert!(s1.next_token == sc.next_token, "len={len} a={chunk_a}: warm1 token");
+        prop_assert!(s1.state == sc.state, "len={len} a={chunk_a}: warm1 state");
+
+        // resume (possibly from an earlier case's deeper entry — any
+        // matching entry must be equally bit-exact)
+        let mut s2 = w.admit(2, req, Instant::now());
+        let floor = deepest_boundary(len, chunk_a);
+        prop_assert!(
+            s2.cached_prefix_tokens >= floor,
+            "len={len} a={chunk_a}: resumed at {} < boundary floor {floor}",
+            s2.cached_prefix_tokens
+        );
+        prop_assert!(s2.cached_prefix_tokens < len, "resume must leave ≥1 token to prefill");
+        while !w.prefill_tick(&mut s2, chunk_b).unwrap() {}
+        prop_assert!(
+            s2.next_token == sc.next_token,
+            "len={len} a={chunk_a} b={chunk_b} resumed@{}: token diverged",
+            s2.cached_prefix_tokens
+        );
+        prop_assert!(
+            s2.state == sc.state,
+            "len={len} a={chunk_a} b={chunk_b} resumed@{}: state diverged",
+            s2.cached_prefix_tokens
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resume_from_cache_bitexact_hw() {
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 11 + 3) % 50).collect();
+    let mk = || HwModel::from_f32(test_model(2, 32, 64, 50), &calib);
+    let cold = RefCell::new(Engine::new(mk()));
+    let warm = RefCell::new(Engine::with_cache(mk(), StateCacheConfig::default()));
+    check("cached resume == cold prefill (hw, 0 ULP)", 8, |g: &mut Gen| {
+        let len = g.usize_in(2, 48);
+        let chunk_a = g.usize_in(1, len);
+        let chunk_b = g.usize_in(1, len);
+        let prompt: Vec<u32> = (0..len).map(|_| g.usize_in(0, 49) as u32).collect();
+        let req = GenRequest::greedy(prompt, 4);
+
+        let sc = cold.borrow_mut().start(0, req.clone(), Instant::now()).unwrap();
+
+        let mut w = warm.borrow_mut();
+        let mut s1 = w.admit(1, req.clone(), Instant::now());
+        while !w.prefill_tick(&mut s1, chunk_a).unwrap() {}
+        prop_assert!(s1.state == sc.state, "len={len} a={chunk_a}: hw warm1 state");
+
+        let mut s2 = w.admit(2, req, Instant::now());
+        prop_assert!(
+            s2.cached_prefix_tokens >= deepest_boundary(len, chunk_a),
+            "len={len} a={chunk_a}: hw resume depth {}",
+            s2.cached_prefix_tokens
+        );
+        while !w.prefill_tick(&mut s2, chunk_b).unwrap() {}
+        prop_assert!(
+            s2.next_token == sc.next_token,
+            "len={len} a={chunk_a} b={chunk_b} resumed@{}: hw token diverged",
+            s2.cached_prefix_tokens
+        );
+        prop_assert!(
+            s2.state == sc.state,
+            "len={len} a={chunk_a} b={chunk_b} resumed@{}: hw state diverged",
+            s2.cached_prefix_tokens
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_under_pressure_stays_bitexact() {
+    // budget ≈ 3 snapshots of the 2x32 test model (state = 320 floats,
+    // keys ≤ 40 tokens) → constant churn across 24 distinct prompts
+    let m = test_model(2, 32, 64, 50);
+    let snapshot_cost = (320 + 40) * 4;
+    let mut cold = Engine::new(m.clone());
+    let mut warm = Engine::with_cache(m, StateCacheConfig { max_bytes: 3 * snapshot_cost });
+    let shared: Vec<u32> = (0..24u32).map(|t| (t * 7 + 3) % 50).collect();
+    for i in 0..24u32 {
+        // every prompt opens with ≥8 shared tokens (kept hot by each
+        // admission's lookup), then diverges — so churn evicts the deep
+        // unique boundaries while the shared prefix keeps hitting
+        let cut = 8 + (i as usize * 3) % 17;
+        let mut prompt = shared[..cut].to_vec();
+        prompt.extend((0..8u32).map(|t| (t * 5 + i * 11 + 1) % 50));
+        let req = GenRequest::greedy(prompt, 3);
+        let sc = cold.start(0, req.clone(), Instant::now()).unwrap();
+        let mut s = warm.admit(1, req, Instant::now());
+        while !warm.prefill_tick(&mut s, 8).unwrap() {}
+        assert_eq!(s.next_token, sc.next_token, "prompt {i}: token under eviction churn");
+        assert_eq!(s.state, sc.state, "prompt {i}: state under eviction churn");
+    }
+    let stats = warm.cache_stats().unwrap();
+    assert!(stats.evictions > 0, "budget must have forced evictions: {stats:?}");
+    assert!(
+        stats.bytes_resident as usize <= 3 * snapshot_cost,
+        "budget exceeded: {stats:?}"
+    );
+    assert!(stats.hits > 0, "shared low-entropy prefixes must still hit: {stats:?}");
+}
+
+#[test]
+fn concurrent_sessions_share_one_snapshot() {
+    // one warming request, then a simultaneous wave behind the same
+    // 64-token prefix: every wave session resumes from the same pinned
+    // snapshot and must emit exactly its solo (cache-off) tokens
+    let prefix: Vec<u32> = (0..64u32).map(|t| (t * 7 + 5) % 50).collect();
+    let mk_prompt = |suffix: u32| {
+        let mut p = prefix.clone();
+        p.extend_from_slice(&[suffix % 50, (suffix * 3 + 1) % 50]);
+        p
+    };
+    let solo: Vec<Vec<u32>> = (0..6u32)
+        .map(|i| {
+            let c = Coordinator::spawn(
+                test_model(2, 32, 64, 50),
+                CoordinatorConfig { max_active: 1, prefill_chunk: 16, state_cache_bytes: 0 },
+            );
+            c.generate(GenRequest::greedy(mk_prompt(i), 5)).unwrap().tokens
+        })
+        .collect();
+
+    let c = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 4, prefill_chunk: 16, ..Default::default() },
+    );
+    let warm = c.generate(GenRequest::greedy(mk_prompt(99), 5)).unwrap();
+    assert_eq!(warm.cached_prefix_tokens, 0);
+    let rxs: Vec<_> = (0..6u32)
+        .map(|i| c.submit(GenRequest::greedy(mk_prompt(i), 5)))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap().unwrap();
+        assert!(
+            r.cached_prefix_tokens >= 64,
+            "wave request {i} resumed at {} < the shared 64-token prefix",
+            r.cached_prefix_tokens
+        );
+        assert_eq!(r.tokens, solo[i], "wave request {i}: tokens diverged from solo");
+    }
+    let m = c.metrics.lock().unwrap();
+    assert!(m.prefix_cache_hits >= 6, "all wave sessions must hit: {}", m.prefix_cache_hits);
+    assert!(m.prefix_tokens_skipped >= 6 * 64);
+}
+
+#[test]
+fn hw_clip_accounting_under_resume() {
+    // the cache must skip exactly the prefix's clip events: a resumed
+    // session drains the suffix's clips, no more, no less
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 11 + 3) % 50).collect();
+    let mk = || HwModel::from_f32(test_model(2, 32, 64, 50), &calib);
+    let prompt: Vec<u32> = (0..40u32).map(|t| (t * 13 + 2) % 50).collect();
+    let req = GenRequest::greedy(prompt.clone(), 1);
+
+    // reference totals straight off the model: clips(prefix) +
+    // clips(suffix | prefix state) — chunk splits preserve clip totals
+    // (rust/tests/prefill_parity.rs), so one maximal chunk each is fair
+    let (c_pre, c_suf) = {
+        let mut hw = mk();
+        let mut st = hw.new_state();
+        hw.prefill_chunk(&mut st, &prompt[..32]);
+        let c_pre = hw.take_clip_events();
+        hw.prefill_chunk(&mut st, &prompt[32..]);
+        (c_pre, hw.take_clip_events())
+    };
+
+    let mut warm = Engine::with_cache(mk(), StateCacheConfig::default());
+    // cold session through the engine: full prompt in 8-token ticks
+    let mut s1 = warm.admit(1, req.clone(), Instant::now());
+    while !warm.prefill_tick(&mut s1, 8).unwrap() {}
+    let c1 = warm.model.take_clip_events();
+    assert_eq!(c1, c_pre + c_suf, "cold engine prefill must clip like the model");
+
+    // resumed session: boundaries at 8..40, cap 39 → resume at 32
+    let mut s2 = warm.admit(2, req, Instant::now());
+    assert_eq!(s2.cached_prefix_tokens, 32);
+    while !warm.prefill_tick(&mut s2, 8).unwrap() {}
+    let c2 = warm.model.take_clip_events();
+    assert_eq!(c2, c_suf, "resumed session must drain exactly the suffix's clips");
+    assert_eq!(s1.state, s2.state, "resume must land on the cold state");
+}
