@@ -1,16 +1,19 @@
 //! E7 — end-to-end validation (DESIGN.md §6): serve a batch of
 //! generation requests over the *trained* tiny RWKV through the full
 //! stack (coordinator → PJRT → HLO with Pallas kernels lowered in),
-//! reporting latency percentiles and aggregate throughput, then verify
-//! model quality on the held-out suites.
+//! streaming the first session's tokens live, reporting latency
+//! percentiles and aggregate throughput, demonstrating 1-prefill/8-branch
+//! best-of-n decode off one shared RWKV state, then verifying model
+//! quality on the held-out suites.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo
 //! ```
 
+use std::io::Write;
 use std::time::Instant;
 
-use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenEvent, GenRequest};
 use hfrwkv::eval;
 use hfrwkv::model::{RwkvModel, Tokenizer, WeightFile};
 use hfrwkv::runtime::{Manifest, RwkvRuntime};
@@ -25,15 +28,46 @@ fn main() -> hfrwkv::Result<()> {
     let eval_json = manifest.load_eval_data()?;
     let tokenizer = Tokenizer::from_json(eval_json.req("vocab")?)?;
 
-    // ---- phase 1: batched serving through PJRT -----------------------------
-    println!("== serving (coordinator -> PJRT CPU, batch-1 model, 4-way continuous batching) ==");
+    // ---- phase 0: live token streaming ------------------------------------
+    println!("== streaming (one session, tokens rendered as they arrive) ==");
+    // max_active 8 so the best-of-8 fork below gets a slot per branch
+    // (submit clamps n_best to max_active) — phase 1's 24 queued
+    // requests therefore decode up to 8-way, not the historical 4-way
     let coord = Coordinator::spawn_with(
         || RwkvRuntime::load(std::path::Path::new("artifacts")).expect("runtime"),
-        CoordinatorConfig { max_active: 4, ..Default::default() },
+        CoordinatorConfig { max_active: 8, ..Default::default() },
     );
     // warm-up (compilation happens inside the worker)
     let _ = coord.generate(GenRequest::greedy(vec![1], 1))?;
 
+    let encode = |text: &str| -> Vec<u32> {
+        let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
+        prompt.extend(tokenizer.encode(text).unwrap());
+        prompt
+    };
+    let mut stream = coord.submit(GenRequest::greedy(
+        encode("alice has a red hat . the hat of alice is"),
+        24,
+    ))?;
+    print!("  ");
+    while let Some(ev) = stream.recv() {
+        match ev {
+            GenEvent::Started { cached_prefix_tokens, .. } => {
+                print!("[started, {cached_prefix_tokens} cached] ");
+            }
+            GenEvent::Token { token, .. } => {
+                print!("{} ", tokenizer.decode(&[token]));
+                let _ = std::io::stdout().flush();
+            }
+            GenEvent::Finished(r) => {
+                println!("\n  [finished: {:?}, {:.1} tok/s]", r.finish, r.decode_tokens_per_sec());
+            }
+            GenEvent::Error { message, .. } => println!("\n  [error: {message}]"),
+        }
+    }
+
+    // ---- phase 1: batched serving through PJRT -----------------------------
+    println!("\n== serving (coordinator -> PJRT CPU, batch-1 model, continuous batching) ==");
     let prompts = [
         "alice has a red hat . the hat of alice is",
         "three plus four is",
@@ -44,21 +78,17 @@ fn main() -> hfrwkv::Result<()> {
     ];
     let n_requests = 24;
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|i| {
-            // BOS-prefix: documents are BOS-led in the training corpus
-            let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
-            prompt.extend(tokenizer.encode(prompts[i % prompts.len()]).unwrap());
-            coord.submit(GenRequest::greedy(prompt, 24))
-        })
-        .collect();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        rxs.push(coord.submit(GenRequest::greedy(encode(prompts[i % prompts.len()]), 24))?);
+    }
     let mut latencies = Vec::new();
     let mut decode_rates = Vec::new();
     // the 24 requests cycle 6 prompts, so repeats resume from cached
     // prefix states: split TTFT by cold vs cached to show the effect
     let (mut ttft_cold, mut ttft_cached) = (Vec::new(), Vec::new());
     for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv().unwrap()?;
+        let r = rx.wait_one()?;
         latencies.push(r.queue_seconds + r.prefill_seconds + r.decode_seconds);
         decode_rates.push(r.decode_tokens_per_sec());
         if r.cached_prefix_tokens > 0 {
@@ -93,6 +123,36 @@ fn main() -> hfrwkv::Result<()> {
         m.tokens_generated as f64 / wall,
         wall,
         n_requests
+    );
+
+    // ---- phase 1b: best-of-n off one shared state --------------------------
+    // one prompt prefill, 8 sampled continuations forked off the
+    // post-prompt snapshot (seeds seed+0..seed+7) — the RWKV state is
+    // O(1) bytes, so the fork costs 8 small state copies, not 8 prompt
+    // prefills (the `prefilled` delta below is the proof)
+    println!("\n== best-of-8 (ONE prefill, 8 branches off one shared state) ==");
+    let prefilled_before = coord.metrics.lock().unwrap().prompt_tokens_prefilled;
+    let req = GenRequest::builder(encode("bob likes carol . so carol"), 16)
+        .temperature(0.9)
+        .top_k(20)
+        .seed(42)
+        .n_best(8)
+        .build();
+    let prompt_len = req.prompt.len() as u64;
+    let t0 = Instant::now();
+    let branches = coord.generate_all(req)?;
+    let fork_wall = t0.elapsed().as_secs_f64();
+    for r in &branches {
+        println!("  branch {}: {}", r.branch, tokenizer.decode(&r.tokens));
+    }
+    let prefilled = coord.metrics.lock().unwrap().prompt_tokens_prefilled - prefilled_before;
+    println!(
+        "  {} branches in {:.1} ms; prompt tokens prefilled: {} (= {} once{})",
+        branches.len(),
+        fork_wall * 1e3,
+        prefilled,
+        prompt_len,
+        if prefilled <= prompt_len { ", shared across all branches" } else { " PER BRANCH?!" },
     );
 
     // ---- phase 2: model quality on held-out data ---------------------------

@@ -61,11 +61,15 @@ where
             let cfg = CoordinatorConfig { max_active: cap, ..Default::default() };
             let coord = Coordinator::spawn(mk(), cfg);
             let rxs: Vec<_> = (0..N_REQUESTS)
-                .map(|i| coord.submit(GenRequest::greedy(vec![i % 128], TOKENS_PER_REQUEST)))
+                .map(|i| {
+                    coord
+                        .submit(GenRequest::greedy(vec![i % 128], TOKENS_PER_REQUEST))
+                        .expect("bench stays under max_queue")
+                })
                 .collect();
             let mut total = 0usize;
             for rx in rxs {
-                total += rx.recv().unwrap().unwrap().tokens.len();
+                total += rx.wait_one().unwrap().tokens.len();
             }
             let wall = t0.elapsed().as_secs_f64();
             let tps = total as f64 / wall;
@@ -115,7 +119,7 @@ fn main() {
                 // submitter starves the worker thread
                 std::thread::sleep(std::time::Duration::from_secs_f64(next_arrival - now));
             }
-            rxs.push(coord.submit(GenRequest::greedy(vec![1 + i % 100], 16)));
+            rxs.push(coord.submit(GenRequest::greedy(vec![1 + i % 100], 16)).unwrap());
         }
         // server-side end-to-end latency (queue + prefill + decode): the
         // client recv()s lag submission, so client-side clocks would
@@ -123,7 +127,7 @@ fn main() {
         let mut lats: Vec<f64> = Vec::new();
         let mut ttfts: Vec<f64> = Vec::new();
         for rx in rxs {
-            let r = rx.recv().unwrap().unwrap();
+            let r = rx.wait_one().unwrap();
             lats.push((r.queue_seconds + r.prefill_seconds + r.decode_seconds) * 1e3);
             ttfts.push(r.ttft_seconds * 1e3);
         }

@@ -1,0 +1,129 @@
+//! Best-of-N decode benchmark: shared-state fork vs naive N requests.
+//!
+//! For N ∈ {1, 2, 4, 8}, serve the same best-of-N workload two ways:
+//!
+//! * **fork** — ONE request with `n_best = N`: the prompt is prefilled
+//!   once, the post-prompt RWKV state (O(1) bytes) is snapshotted, and
+//!   N branches decode off the shared pin with seeds `seed + b`;
+//! * **naive** — N independent requests with seeds `seed + b`, each
+//!   prefilling the whole prompt itself (state cache disabled so the
+//!   prefix cache can't mask the comparison).
+//!
+//! Branch outputs are asserted bit-identical between the two modes
+//! (always — it is deterministic), and under `FORK_BENCH_ASSERT=1` the
+//! measured prefill work must be exactly `prompt_len` for fork vs
+//! `N * prompt_len` for naive — the 1/N prefill-work claim, read
+//! straight off the coordinator's `prompt_tokens_prefilled` metric.
+//! Both gates are token-exact (never wall-clock), so CI sets the env
+//! safely; wall-clock speedups are recorded in the JSON but never gate.
+//!
+//! Emits `BENCH_fork.json` so future PRs can track the trajectory.
+
+use std::time::Instant;
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::util::bench::{section, BenchReport};
+
+const PROMPT_LEN: usize = 256;
+const DECODE: usize = 32;
+const NS: [usize; 4] = [1, 2, 4, 8];
+const SEED: u64 = 7;
+
+fn prompt() -> Vec<u32> {
+    (0..PROMPT_LEN as u32).map(|t| (t * 7 + 3) % 128).collect()
+}
+
+fn mk_coord() -> Coordinator {
+    Coordinator::spawn(
+        test_model(4, 128, 512, 128),
+        // cache OFF: the naive baseline must genuinely re-prefill, and
+        // the prefilled-token metric must count exactly the submitted
+        // prompts — this isolates the fork's saving from the prefix
+        // cache's (benched separately in statecache.rs)
+        CoordinatorConfig { max_active: 8, state_cache_bytes: 0, ..Default::default() },
+    )
+}
+
+fn req(n_best: usize, seed: u64) -> GenRequest {
+    GenRequest::builder(prompt(), DECODE)
+        .temperature(0.9)
+        .top_k(40)
+        .seed(seed)
+        .n_best(n_best)
+        .build()
+}
+
+fn main() {
+    let mut report = BenchReport::new("fork");
+    let hard_assert = matches!(std::env::var("FORK_BENCH_ASSERT").as_deref(), Ok("1"));
+
+    section("best-of-N: shared-state fork vs naive N requests (4x128 model, 256-token prompt)");
+    for &n in &NS {
+        // fork mode: ONE request with n_best = n
+        let coord = mk_coord();
+        let t0 = Instant::now();
+        let forked = coord.generate_all(req(n, SEED)).expect("fork mode");
+        let fork_wall = t0.elapsed().as_secs_f64();
+        let fork_prefilled = coord.metrics.lock().unwrap().prompt_tokens_prefilled;
+        drop(coord);
+
+        // naive mode: n independent requests at seeds SEED + b
+        let coord = mk_coord();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|b| coord.submit(req(1, SEED + b as u64)).expect("under max_queue"))
+            .collect();
+        let naive: Vec<_> = rxs
+            .into_iter()
+            .map(|s| s.wait_one().expect("naive mode"))
+            .collect();
+        let naive_wall = t0.elapsed().as_secs_f64();
+        let naive_prefilled = coord.metrics.lock().unwrap().prompt_tokens_prefilled;
+        drop(coord);
+
+        // branch b of the fork must be bit-identical to naive request b
+        assert_eq!(forked.len(), naive.len());
+        for (b, (f, s)) in forked.iter().zip(&naive).enumerate() {
+            assert_eq!(
+                f.tokens, s.tokens,
+                "N={n} branch {b}: fork diverged from its sequential seed run"
+            );
+        }
+
+        let speedup = naive_wall / fork_wall.max(1e-12);
+        let work_ratio = fork_prefilled as f64 / naive_prefilled.max(1) as f64;
+        println!(
+            "  N={n}: fork {:>7.1} ms vs naive {:>7.1} ms ({speedup:>5.2}x wall)  \
+             prefill work {fork_prefilled} vs {naive_prefilled} tokens ({work_ratio:.3} = 1/{n})",
+            fork_wall * 1e3,
+            naive_wall * 1e3,
+        );
+        report.record(&format!("fork_wall_ms_n{n}"), fork_wall * 1e3);
+        report.record(&format!("naive_wall_ms_n{n}"), naive_wall * 1e3);
+        report.record(&format!("wall_speedup_n{n}"), speedup);
+        report.record(&format!("fork_prefilled_tokens_n{n}"), fork_prefilled as f64);
+        report.record(&format!("naive_prefilled_tokens_n{n}"), naive_prefilled as f64);
+        report.record(&format!("prefill_work_ratio_n{n}"), work_ratio);
+
+        if hard_assert {
+            // the acceptance bar: n_best = N performs exactly ONE prompt
+            // prefill, i.e. 1/N of the naive mode's prefill work
+            assert_eq!(
+                fork_prefilled,
+                PROMPT_LEN as u64,
+                "N={n}: fork mode must prefill the prompt exactly once"
+            );
+            assert_eq!(
+                naive_prefilled,
+                (n * PROMPT_LEN) as u64,
+                "N={n}: naive mode must prefill the prompt N times"
+            );
+        }
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
+}

@@ -45,6 +45,7 @@ where
             max_active: 4,
             prefill_chunk: 64,
             state_cache_bytes: cache_bytes,
+            ..Default::default()
         },
     );
     // warming request (distinct suffix): populates the prefix snapshots
@@ -55,13 +56,15 @@ where
     let rxs: Vec<_> = (0..WAVE)
         .map(|i| {
             let p = prompt(prefix_len, vocab, i);
-            coord.submit(GenRequest::greedy(p, SUFFIX_LEN as usize))
+            coord
+                .submit(GenRequest::greedy(p, SUFFIX_LEN as usize))
+                .expect("wave stays under max_queue")
         })
         .collect();
     let mut ttft_total = 0.0;
     let mut cached_total = 0usize;
     for rx in rxs {
-        let r = rx.recv().unwrap().unwrap();
+        let r = rx.wait_one().unwrap();
         ttft_total += r.ttft_seconds;
         cached_total += r.cached_prefix_tokens;
     }

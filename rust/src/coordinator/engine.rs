@@ -133,6 +133,13 @@ fn variant_class(v: Variant) -> u32 {
     }
 }
 
+/// High bit partitioning the cache's class space into the *decode-state*
+/// namespace: post-prompt snapshots that additionally carry the last
+/// prompt token's logits, written and consumed only by the fork
+/// (best-of-n) path.  Prefix snapshots (no logits) keep the plain
+/// variant class, so the two kinds can never cross-resume.
+const DECODE_NS: u32 = 1 << 31;
+
 /// The one empty-prompt guard every prefill path shares: empty logits
 /// would send the caller's sampler out of bounds, so reject here.
 fn reject_empty_prompt(tokens: &[u32]) -> Result<()> {
@@ -335,6 +342,13 @@ pub enum SessionPhase {
     /// in place at admission, never empty) are already folded into the
     /// state.
     Prefilling { pos: usize },
+    /// Prompt fully consumed by a fork request (`n_best > 1`): the last
+    /// prompt token's logits are held for the scheduler to call
+    /// [`Engine::fork`] — no token has been sampled yet (each branch
+    /// samples with its own seeded sampler).  `logits` is empty iff the
+    /// session resumed from a decode-state snapshot, whose pin
+    /// (`snapshot_pin`) carries the logits instead.
+    ForkReady { logits: Vec<f32> },
     /// Prompt fully consumed; `next_token` holds the pending sample.
     Decoding,
 }
@@ -343,6 +357,9 @@ pub enum SessionPhase {
 /// consumed or decode in progress (see [`SessionPhase`]).
 pub struct ActiveSession {
     pub request_id: u64,
+    /// Best-of-n branch index (0 for ordinary sessions and fork
+    /// parents; [`Engine::fork`] numbers the branches 0..n_best).
+    pub branch: usize,
     pub req: GenRequest,
     pub phase: SessionPhase,
     pub state: Vec<f32>,
@@ -358,7 +375,10 @@ pub struct ActiveSession {
     /// session is still prefilling so the cache can't evict a borrowed
     /// entry mid-resume; released at the decode transition — the state
     /// was privately copied at admission, so a long decode must not
-    /// keep the entry unevictable.
+    /// keep the entry unevictable.  Exception: fork branches hold their
+    /// shared decode-state pin for their whole lifetime (that sharing is
+    /// the point — it is released when the branch completes or is
+    /// reaped).
     pub snapshot_pin: Option<SnapshotRef>,
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
@@ -374,6 +394,17 @@ impl ActiveSession {
     pub fn is_decoding(&self) -> bool {
         matches!(self.phase, SessionPhase::Decoding)
     }
+
+    /// True while prompt tokens remain to be consumed.
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.phase, SessionPhase::Prefilling { .. })
+    }
+
+    /// True when a fork parent's prompt is done and [`Engine::fork`]
+    /// must spawn its branches.
+    pub fn is_fork_ready(&self) -> bool {
+        matches!(self.phase, SessionPhase::ForkReady { .. })
+    }
 }
 
 /// The engine drives sessions over any [`EngineModel`].
@@ -388,11 +419,17 @@ pub struct Engine<M: EngineModel> {
     /// every prefill chunk boundary captures a snapshot.  `None` = the
     /// pre-cache behavior, bit for bit.
     cache: Option<StateStore>,
+    /// Prompt tokens actually consumed by prefill forwards, cumulative
+    /// over the engine's lifetime (cached resumes and decode-state fork
+    /// hits skip tokens without counting here) — the ground truth the
+    /// fork bench's one-prefill assertion reads via
+    /// [`super::Metrics::prompt_tokens_prefilled`].
+    prefilled_tokens: u64,
 }
 
 impl<M: EngineModel> Engine<M> {
     pub fn new(model: M) -> Engine<M> {
-        Engine { model, batch_logits: Vec::new(), cache: None }
+        Engine { model, batch_logits: Vec::new(), cache: None, prefilled_tokens: 0 }
     }
 
     /// An engine with the prefix-sharing state cache enabled.  Resuming
@@ -400,13 +437,24 @@ impl<M: EngineModel> Engine<M> {
     /// `rust/tests/statecache.rs`), so the cache changes latency, never
     /// tokens.
     pub fn with_cache(model: M, cfg: StateCacheConfig) -> Engine<M> {
-        Engine { model, batch_logits: Vec::new(), cache: Some(StateStore::new(cfg)) }
+        Engine {
+            model,
+            batch_logits: Vec::new(),
+            cache: Some(StateStore::new(cfg)),
+            prefilled_tokens: 0,
+        }
     }
 
     /// Cache counters + gauges, if the cache is enabled (the scheduler
     /// mirrors them into [`super::Metrics`] every cycle).
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Cumulative prompt tokens consumed by prefill forwards (see the
+    /// field doc).
+    pub fn prefilled_tokens(&self) -> u64 {
+        self.prefilled_tokens
     }
 
     /// Admit a request WITHOUT doing any forward work: the session
@@ -432,18 +480,40 @@ impl<M: EngineModel> Engine<M> {
         }
         let mut cached_prefix_tokens = 0;
         let mut snapshot_pin = None;
+        let mut phase = SessionPhase::Prefilling { pos: 0 };
         if let Some(cache) = &mut self.cache {
             let class = variant_class(req.variant);
-            if let Some(snap) = cache.lookup(class, &req.prompt, req.prompt.len() - 1) {
-                self.model.restore_state(snap.state(), &mut state);
-                cached_prefix_tokens = snap.tokens();
-                snapshot_pin = Some(snap);
+            // fork requests first probe the decode-state namespace: a
+            // full-prompt hit carries the last token's logits, so the
+            // whole prefill is skipped and the scheduler can fork at the
+            // next cycle boundary.  The probe is opportunistic — a miss
+            // must not double-count against the prefix hit rate.
+            if req.n_best > 1 {
+                if let Some(snap) = cache.lookup_exact(class | DECODE_NS, &req.prompt) {
+                    debug_assert!(!snap.logits().is_empty(), "decode-ns entries carry logits");
+                    // no restore and no logits copy: [`Engine::fork`]
+                    // builds every branch straight off the pinned
+                    // snapshot, and nothing else ever reads a fork
+                    // parent's state — copying here would be pure waste
+                    cached_prefix_tokens = snap.tokens();
+                    phase = SessionPhase::ForkReady { logits: Vec::new() };
+                    snapshot_pin = Some(snap);
+                }
+            }
+            if snapshot_pin.is_none() {
+                if let Some(snap) = cache.lookup(class, &req.prompt, req.prompt.len() - 1) {
+                    self.model.restore_state(snap.state(), &mut state);
+                    cached_prefix_tokens = snap.tokens();
+                    phase = SessionPhase::Prefilling { pos: cached_prefix_tokens };
+                    snapshot_pin = Some(snap);
+                }
             }
         }
         ActiveSession {
             request_id,
+            branch: 0,
             req,
-            phase: SessionPhase::Prefilling { pos: cached_prefix_tokens },
+            phase,
             state,
             generated: Vec::new(),
             sampler,
@@ -474,6 +544,7 @@ impl<M: EngineModel> Engine<M> {
         let prompt = &s.req.prompt;
         let end = pos.saturating_add(max_chunk.max(1)).min(prompt.len());
         let logits = self.model.prefill_chunk(&mut s.state, &prompt[*pos..end], s.req.variant)?;
+        self.prefilled_tokens += (end - *pos) as u64;
         *pos = end;
         let done = *pos == prompt.len();
         // capture a snapshot at the chunk boundary: prefill is bit-exact
@@ -492,24 +563,120 @@ impl<M: EngineModel> Engine<M> {
         }
         s.prefill_seconds += t0.elapsed().as_secs_f64();
         if done {
-            s.next_token = s.sampler.sample(&logits);
-            s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
-            s.phase = SessionPhase::Decoding;
             // prefill over: release the resumed-from snapshot so decode
             // time doesn't hold it unevictable (see the field docs)
             s.snapshot_pin = None;
+            if s.req.n_best > 1 {
+                // fork parent: hold the logits for [`Engine::fork`] —
+                // each branch samples its own first token with its own
+                // seeded sampler, so nothing is sampled here
+                s.phase = SessionPhase::ForkReady { logits };
+            } else {
+                s.next_token = s.sampler.sample(&logits);
+                s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
+                s.phase = SessionPhase::Decoding;
+            }
         }
         Ok(done)
     }
 
     /// Admit a request and run its whole prefill to completion (one
     /// maximal chunk): the blocking convenience path for tests, examples
-    /// and non-scheduler callers.
+    /// and non-scheduler callers.  Single-branch requests only — a fork
+    /// request (`n_best > 1`) ends in [`SessionPhase::ForkReady`] and
+    /// must go through [`Engine::fork`] (the scheduler's path).
     pub fn start(&mut self, request_id: u64, req: GenRequest, enqueued_at: Instant) -> Result<ActiveSession> {
+        debug_assert!(req.n_best <= 1, "start() cannot fork; drive admit + prefill_tick + fork");
         let mut sess = self.admit(request_id, req, enqueued_at);
         self.prefill_tick(&mut sess, usize::MAX)?;
         debug_assert!(sess.is_decoding(), "maximal prefill_tick must finish the prompt");
         Ok(sess)
+    }
+
+    /// Fork a [`SessionPhase::ForkReady`] parent into its `n_best`
+    /// decoding branches.  The prompt was prefilled ONCE; its
+    /// post-prompt state becomes one shared pinned snapshot (offered to
+    /// the cache's decode namespace together with the last token's
+    /// logits, so an identical later fork request skips prefill
+    /// entirely), and branch `b` resumes copy-on-write from it with
+    /// sampler seed `seed + b`.  Each branch holds the pin until it
+    /// completes or is reaped.  Branch outputs are bit-exact with
+    /// `n_best` sequential single-session runs of the same request at
+    /// those seeds (`rust/tests/streaming.rs`, `rust/benches/fork.rs`).
+    pub fn fork(&mut self, parent: ActiveSession) -> Vec<ActiveSession> {
+        let ActiveSession {
+            request_id,
+            req,
+            phase,
+            state,
+            snapshot_pin,
+            cached_prefix_tokens,
+            prefill_seconds,
+            enqueued_at,
+            started_at,
+            ..
+        } = parent;
+        let SessionPhase::ForkReady { logits } = phase else {
+            panic!("fork requires a ForkReady session");
+        };
+        let n = req.n_best.max(1);
+        // one shared pinned snapshot for every branch: reuse the
+        // decode-ns entry the parent resumed from if there is one,
+        // otherwise capture the post-prompt state now and offer it to
+        // the decode namespace (adopt shares the Arc — no extra copy;
+        // with the cache disabled the detached handle is the pin)
+        let snap = match snapshot_pin {
+            Some(s) if s.tokens() == req.prompt.len() && !s.logits().is_empty() => s,
+            _ => {
+                // prefill path: the phase carried the real logits (the
+                // decode-ns-hit path always takes the arm above)
+                debug_assert!(!logits.is_empty(), "prefill-path ForkReady must carry logits");
+                let fresh = SnapshotRef::detached(
+                    self.model.snapshot_state(&state),
+                    req.prompt.len(),
+                    logits,
+                );
+                match &mut self.cache {
+                    Some(cache) => {
+                        let class = variant_class(req.variant) | DECODE_NS;
+                        cache.adopt(class, &req.prompt, fresh)
+                    }
+                    None => fresh,
+                }
+            }
+        };
+        let ttft = enqueued_at.elapsed().as_secs_f64();
+        // per branch: one state copy (the fundamental fork cost) plus a
+        // req clone — the prompt Vec in it is dominated by the state
+        // floats, so sharing it behind an Arc isn't worth the API churn
+        (0..n)
+            .map(|b| {
+                let mut st = Vec::new();
+                self.model.restore_state(snap.state(), &mut st);
+                let mut sampler =
+                    Sampler::new(req.temperature, req.top_k, req.seed.wrapping_add(b as u64));
+                let next_token = sampler.sample(snap.logits());
+                ActiveSession {
+                    request_id,
+                    branch: b,
+                    req: req.clone(),
+                    phase: SessionPhase::Decoding,
+                    state: st,
+                    generated: Vec::new(),
+                    sampler,
+                    next_token,
+                    cached_prefix_tokens,
+                    snapshot_pin: Some(snap.clone()),
+                    // the one prompt prefill is accounted to branch 0 so
+                    // the Metrics prefill-seconds sum stays truthful
+                    prefill_seconds: if b == 0 { prefill_seconds } else { 0.0 },
+                    decode_seconds: 0.0,
+                    ttft_seconds: ttft,
+                    enqueued_at,
+                    started_at,
+                }
+            })
+            .collect()
     }
 
     /// First half of a decode step: commit the pending sampled token and
@@ -905,6 +1072,118 @@ mod tests {
         let stats = e.cache_stats().unwrap();
         assert_eq!(stats.hits, 0);
         assert_eq!(stats.misses, 2);
+    }
+
+    #[test]
+    fn fork_branches_match_sequential_seeded_runs_bitexact() {
+        // THE fork invariant: branch b of one n_best=N request must be
+        // bit-identical (tokens AND final state, 0 ULP) to a sequential
+        // single-session run of the same request with seed `seed + b`
+        let mut e = engine();
+        let prompt: Vec<u32> = (0..24u32).map(|t| (t * 7 + 3) % 50).collect();
+        let n = 4;
+        let mk = |seed: u64, n_best: usize| {
+            GenRequest::builder(prompt.clone(), 8)
+                .temperature(0.9)
+                .top_k(12)
+                .seed(seed)
+                .n_best(n_best)
+                .build()
+        };
+        let mut solo = Vec::new();
+        for b in 0..n as u64 {
+            let mut s = e.start(b, mk(40 + b, 1), Instant::now()).unwrap();
+            while e.step_session(&mut s).unwrap().is_none() {}
+            solo.push(s);
+        }
+        let mut parent = e.admit(9, mk(40, n), Instant::now());
+        while !e.prefill_tick(&mut parent, 5).unwrap() {}
+        assert!(parent.is_fork_ready(), "n_best > 1 must end prefill ForkReady");
+        let mut branches = e.fork(parent);
+        assert_eq!(branches.len(), n);
+        for (b, s) in branches.iter_mut().enumerate() {
+            assert_eq!(s.branch, b);
+            assert!(s.snapshot_pin.is_some(), "branches share the pinned snapshot");
+            while e.step_session(s).unwrap().is_none() {}
+        }
+        for (b, (br, so)) in branches.iter().zip(&solo).enumerate() {
+            assert_eq!(br.generated, so.generated, "branch {b}: tokens diverged");
+            assert_eq!(br.state, so.state, "branch {b}: state diverged (0 ULP)");
+        }
+    }
+
+    #[test]
+    fn fork_branches_match_sequential_seeded_runs_hw() {
+        // same invariant on the hardware-numerics backend
+        let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+        let mut e = Engine::new(HwModel::from_f32(test_model(2, 32, 64, 50), &calib));
+        let prompt: Vec<u32> = (0..16u32).map(|t| (t * 13 + 2) % 50).collect();
+        let n = 3;
+        let mk = |seed: u64, n_best: usize| {
+            GenRequest::builder(prompt.clone(), 6)
+                .temperature(0.8)
+                .top_k(10)
+                .seed(seed)
+                .n_best(n_best)
+                .build()
+        };
+        let mut solo = Vec::new();
+        for b in 0..n as u64 {
+            let mut s = e.start(b, mk(7 + b, 1), Instant::now()).unwrap();
+            while e.step_session(&mut s).unwrap().is_none() {}
+            solo.push(s);
+        }
+        let mut parent = e.admit(9, mk(7, n), Instant::now());
+        while !e.prefill_tick(&mut parent, 4).unwrap() {}
+        let mut branches = e.fork(parent);
+        for s in branches.iter_mut() {
+            while e.step_session(s).unwrap().is_none() {}
+        }
+        for (b, (br, so)) in branches.iter().zip(&solo).enumerate() {
+            assert_eq!(br.generated, so.generated, "hw branch {b}: tokens diverged");
+            assert_eq!(br.state, so.state, "hw branch {b}: state diverged (0 ULP)");
+        }
+    }
+
+    #[test]
+    fn fork_decode_namespace_skips_repeat_prefill() {
+        // a second identical fork request admits straight to ForkReady
+        // off the cached decode-state snapshot (zero prefill work), and
+        // its branches start bit-identical to the first fork's
+        let mut e = Engine::with_cache(
+            test_model(2, 32, 64, 50),
+            crate::statecache::StateCacheConfig::default(),
+        );
+        let prompt: Vec<u32> = (0..20u32).map(|t| (t * 3 + 1) % 50).collect();
+        let req = GenRequest::builder(prompt.clone(), 4)
+            .temperature(0.7)
+            .top_k(8)
+            .seed(11)
+            .n_best(2)
+            .build();
+        let mut p1 = e.admit(1, req.clone(), Instant::now());
+        assert_eq!(p1.cached_prefix_tokens, 0);
+        while !e.prefill_tick(&mut p1, 4).unwrap() {}
+        let work_after_first = e.prefilled_tokens();
+        assert_eq!(work_after_first, prompt.len() as u64);
+        let b1 = e.fork(p1);
+        // branches pin the adopted decode-state entry
+        let stats = e.cache_stats().unwrap();
+        assert!(stats.pinned >= 1, "fork branches must pin the decode entry: {stats:?}");
+
+        let p2 = e.admit(2, req, Instant::now());
+        assert!(p2.is_fork_ready(), "decode-ns hit must skip prefill entirely");
+        assert_eq!(p2.cached_prefix_tokens, prompt.len());
+        assert_eq!(e.prefilled_tokens(), work_after_first, "repeat fork did prefill work");
+        let b2 = e.fork(p2);
+        for (x, y) in b1.iter().zip(&b2) {
+            assert_eq!(x.next_token, y.next_token);
+            assert_eq!(x.state, y.state);
+        }
+        // all pins dropped: the decode entry becomes evictable again
+        drop(b1);
+        drop(b2);
+        assert_eq!(e.cache_stats().unwrap().pinned, 0);
     }
 
     #[test]

@@ -2,8 +2,15 @@
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Requests accepted by `submit` (one per request, regardless of
+    /// `n_best`).
     pub enqueued: u64,
+    /// Requests that took an active slot (one per request; the fork
+    /// into branches happens after admission).
     pub admitted: u64,
+    /// *Sessions* that reached a terminal event.  Every best-of-n
+    /// branch counts, so compare against `admitted` × `n_best` (or
+    /// `first_tokens`), never against `enqueued`.
     pub completed: u64,
     pub tokens_generated: u64,
     pub prefill_seconds_total: f64,
@@ -21,6 +28,30 @@ pub struct Metrics {
     /// drained losslessly from the model every scheduling cycle (large
     /// values mean a bad calibration).  Always 0 for non-hw models.
     pub clip_events: u64,
+    /// Submissions rejected at the bounded admission queue
+    /// (`SubmitError::QueueFull`) — sustained growth means the service
+    /// is saturated and callers should back off.
+    pub rejected: u64,
+    /// Sessions reaped by client `cancel()` or stream drop, whether
+    /// still queued or already active (partial tokens are returned with
+    /// `FinishReason::Cancelled`).  Per *session*, like `completed`:
+    /// cancelling a best-of-n request mid-decode reaps every live
+    /// branch, counting each.
+    pub cancelled: u64,
+    /// Sessions that ran out their wall-clock deadline before finishing
+    /// (`FinishReason::DeadlineExceeded`); per session, like `completed`.
+    pub deadline_exceeded: u64,
+    /// Prompt tokens actually consumed by prefill forwards.  Cached
+    /// resumes and shared-state forks skip work, so this counter is the
+    /// ground truth for "how much prefill did we really do" — the fork
+    /// bench's 1/N assertion reads it.
+    pub prompt_tokens_prefilled: u64,
+    /// Gauge: requests submitted but not yet admitted (bounded by
+    /// `CoordinatorConfig::max_queue`).
+    pub queue_depth: u64,
+    /// Gauge: sessions currently holding an active slot (prefilling,
+    /// fork-pending or decoding; every fork branch counts).
+    pub active_sessions: u64,
     /// Admissions that resumed from a cached prompt-prefix state
     /// (mirror of the engine's `statecache` counters, refreshed every
     /// scheduling cycle; all 0 with the cache disabled).
@@ -36,6 +67,9 @@ pub struct Metrics {
     pub prefix_cache_entries: u64,
     /// Snapshots evicted by LRU under byte-budget pressure.
     pub prefix_cache_evictions: u64,
+    /// Gauge: cache entries pinned by live sessions (resuming prefills
+    /// and fork branches sharing a decode-state snapshot).
+    pub prefix_cache_pinned: u64,
 }
 
 impl Metrics {
@@ -77,21 +111,29 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests: {} enqueued / {} admitted / {} completed\n\
+            "requests: {} enqueued / {} admitted, {} sessions completed\n\
+             pressure: {} queued / {} active now, {} rejected (queue full), \
+             {} cancelled, {} deadline-exceeded\n\
              tokens:   {} generated\n\
              decode:   {:.1} tok/s (engine time)\n\
-             prefill:  {:.3} s total\n\
+             prefill:  {:.3} s total ({} prompt tokens forwarded)\n\
              ttft:     {:.4} s mean (enqueue -> first token)\n\
              queueing: {:.4} s mean wait\n\
              cache:    {} hits / {} misses ({:.0}% hit rate), \
-             {} prompt tokens skipped, {} snapshots / {} B resident, {} evictions\n\
+             {} prompt tokens skipped, {} snapshots / {} B resident ({} pinned), {} evictions\n\
              clips:    {} activations at the 9-bit rails",
             self.enqueued,
             self.admitted,
             self.completed,
+            self.queue_depth,
+            self.active_sessions,
+            self.rejected,
+            self.cancelled,
+            self.deadline_exceeded,
             self.tokens_generated,
             self.decode_tokens_per_sec(),
             self.prefill_seconds_total,
+            self.prompt_tokens_prefilled,
             self.mean_ttft_seconds(),
             self.mean_queue_seconds(),
             self.prefix_cache_hits,
@@ -100,6 +142,7 @@ impl Metrics {
             self.prefix_tokens_skipped,
             self.prefix_cache_entries,
             self.prefix_cache_bytes,
+            self.prefix_cache_pinned,
             self.prefix_cache_evictions,
             self.clip_events,
         )
@@ -132,21 +175,30 @@ mod tests {
             first_tokens: 1,
             ttft_seconds_total: 0.25,
             clip_events: 7,
+            rejected: 4,
+            cancelled: 5,
+            deadline_exceeded: 6,
+            prompt_tokens_prefilled: 512,
+            queue_depth: 9,
+            active_sessions: 3,
             prefix_cache_hits: 3,
             prefix_cache_misses: 1,
             prefix_tokens_skipped: 3072,
             prefix_cache_bytes: 40960,
             prefix_cache_entries: 16,
             prefix_cache_evictions: 2,
+            prefix_cache_pinned: 5,
         };
         let r = m.report();
         assert!(r.contains("42 generated"));
         assert!(r.contains("21.0 tok/s"));
         assert!(r.contains("0.2500 s mean (enqueue -> first token)"));
         assert!(r.contains("7 activations at the 9-bit rails"));
+        assert!(r.contains("9 queued / 3 active now, 4 rejected (queue full), 5 cancelled, 6 deadline-exceeded"));
+        assert!(r.contains("512 prompt tokens forwarded"));
         assert!(r.contains("3 hits / 1 misses (75% hit rate)"));
         assert!(r.contains("3072 prompt tokens skipped"));
-        assert!(r.contains("16 snapshots / 40960 B resident, 2 evictions"));
+        assert!(r.contains("16 snapshots / 40960 B resident (5 pinned), 2 evictions"));
         assert_eq!(m.prefix_cache_hit_rate(), 0.75);
     }
 }

@@ -1,46 +1,75 @@
-//! L3 serving coordinator — the request path.
+//! L3 serving coordinator — the streaming request path.
 //!
-//! The paper's system serves sustained single-token decode (batch 1); a
-//! production deployment still needs admission, fair scheduling across
-//! concurrent sessions, state management and metrics, so the coordinator
-//! implements vLLM-style *continuous batching at the session level*: a
-//! worker thread owns the PJRT runtime exclusively and advances every
-//! active session by one decode step per scheduling cycle — fused into a
-//! single batched forward so each weight matrix is streamed once per
-//! cycle and reused across all B sessions (the software analog of the
-//! paper's on-chip weight reuse) — admitting queued requests as slots
-//! free up.  Prefill is interleaved the same way: an admitted session
-//! consumes one bounded sequence-parallel chunk of its prompt per cycle
-//! (§Perf L3-4) instead of running the whole prompt inline at
-//! admission, so a long prompt cannot head-of-line-block the decoders;
-//! time-to-first-token is surfaced per response and in [`Metrics`].
+//! # Session lifecycle: submit → events → finish/cancel
 //!
-//! # The admission path and the prefix cache
+//! The API is a **streaming session** per request.  [`Coordinator::submit`]
+//! reserves a slot in a *bounded* admission queue (or rejects with
+//! [`SubmitError::QueueFull`] — backpressure is explicit, the queue never
+//! grows without bound) and returns a [`scheduler::GenStream`] handle that
+//! yields [`GenEvent`]s as the worker makes progress:
 //!
-//! Admission itself does no forward work; it does two cheap things:
-//! BOS-pad an empty prompt, and ask the prefix-sharing state cache
-//! ([`crate::statecache`]) for the deepest snapshot whose token prefix
-//! matches the prompt.  On a hit the session's recurrent state is
-//! restored from the snapshot (copy-on-write — the shared entry is
-//! pinned, the session mutates a private copy) and prefill starts at
-//! the matched depth; on a miss it starts at token 0.  Every prefill
-//! chunk boundary then captures a snapshot, so a 1k-token prompt leaves
-//! resumable states at `prefill_chunk` granularity behind it — the next
-//! request sharing that system prompt prefills only its unique suffix,
-//! collapsing its time-to-first-token.  This is the serving-layer
-//! dividend of the paper's core premise: RWKV state is O(1) bytes per
-//! session (`n_layer * 5 * d` floats, no KV growth), so caching *many*
-//! of them is feasible where a Transformer KV prefix cache is not.
-//! Per-response [`GenResponse::cached_prefix_tokens`] and the cache
-//! counters in [`Metrics`] make the effect observable; resume is
-//! bit-exact with full prefill (`rust/tests/statecache.rs`), so the
-//! cache changes latency, never tokens.
+//! 1. [`GenEvent::Started`] — the session was admitted (branch 0) or a
+//!    best-of-n branch was forked (branches 1..n), reporting how many
+//!    prompt tokens were skipped via cached state;
+//! 2. one [`GenEvent::Token`] per sampled token, in order, *as it is
+//!    committed* — a client renders tokens live instead of waiting for
+//!    the whole generation;
+//! 3. one terminal event per branch: [`GenEvent::Finished`] with the
+//!    aggregated [`GenResponse`], or [`GenEvent::Error`].  One caveat: a
+//!    request reaped *before its branches exist* (cancelled or expired
+//!    while still queued, or before the fork) terminates on branch 0
+//!    only and the stream then ends — raw `recv()` consumers must treat
+//!    stream exhaustion (`None`) as terminal for any remaining
+//!    branches; [`scheduler::GenStream::wait`] already mirrors the
+//!    branch-0 terminal onto them.
 //!
-//! * [`engine`]    — prefill (chunked through the `seq` executable) +
-//!   step decode against [`crate::runtime::RwkvRuntime`]; owns the
-//!   prefix cache.
-//! * [`scheduler`] — admission queue + round-robin step scheduler.
-//! * [`metrics`]   — latency/throughput/cache counters.
+//! A stream can be ended early: [`scheduler::GenStream::cancel`] (or simply
+//! dropping the stream) flags the session, and the worker reaps it at the
+//! next scheduling-cycle boundary — the `max_active` slot frees, pinned
+//! snapshots release, batchmates are untouched, and the partial output
+//! comes back with [`FinishReason::Cancelled`].  A request can also carry
+//! a wall-clock deadline ([`GenRequestBuilder::deadline`]) enforced by the
+//! scheduler at the same boundaries, queued or active, finishing with
+//! [`FinishReason::DeadlineExceeded`].  [`Coordinator::generate`] remains
+//! a thin blocking wrapper over the stream for callers that only want the
+//! final response.
+//!
+//! # Best-of-n: forking decode off one shared RWKV state
+//!
+//! A request built with [`GenRequestBuilder::n_best`]` = N` prefills its
+//! prompt **once**, snapshots the post-prompt recurrent state (O(1)
+//! bytes — `n_layer * 5 * d` floats, the RWKV property this crate is
+//! about), and forks N decoding branches off that one pinned snapshot,
+//! each with sampler seed `seed + branch`.  Every branch streams as an
+//! independent sub-session (its own `Started`/`Token`/`Finished` events,
+//! tagged by `branch`) and is bit-exact with a sequential single-session
+//! run of the same request at that seed (`rust/tests/streaming.rs`,
+//! `rust/benches/fork.rs`).  Where a Transformer would clone an O(T) KV
+//! cache per branch, forking an RWKV state is a fixed-size copy; the
+//! snapshot also lands in the state cache's *decode namespace* (state +
+//! last-token logits), so an identical later fork request skips prefill
+//! entirely.
+//!
+//! # Scheduling underneath
+//!
+//! One worker thread owns the engine exclusively and runs vLLM-style
+//! continuous batching: each cycle it reaps cancelled/expired sessions,
+//! admits queued requests (highest [`GenRequestBuilder::priority`] first,
+//! FIFO within a level) up to `max_active`, advances every prefilling
+//! session by one bounded sequence-parallel chunk (§Perf L3-4 — long
+//! prompts cannot head-of-line-block decoders), forks any prompt that
+//! just completed with `n_best > 1`, and advances all decoding sessions
+//! with ONE fused batched forward (§Perf L3-3 weight reuse).  Admission
+//! consults the prefix-sharing state cache ([`crate::statecache`]) so
+//! shared prompts resume from the deepest cached snapshot; resume and
+//! batching are bit-exact, so none of this machinery ever changes a
+//! session's tokens.
+//!
+//! * [`engine`]    — prefill/decode/fork over any [`EngineModel`]; owns
+//!   the prefix + decode-state cache.
+//! * [`scheduler`] — bounded queue, cancellation/deadlines, event
+//!   streaming, the worker loop.
+//! * [`metrics`]   — latency/throughput/cache/pressure counters.
 
 pub mod engine;
 pub mod metrics;
@@ -48,11 +77,14 @@ pub mod scheduler;
 
 pub use engine::{Engine, EngineModel, SessionPhase};
 pub use metrics::Metrics;
-pub use scheduler::{Coordinator, CoordinatorConfig};
+pub use scheduler::{Coordinator, CoordinatorConfig, GenStream, SubmitError};
+
+use std::time::Duration;
 
 use crate::runtime::Variant;
 
-/// A generation request.
+/// A generation request.  Construct simple greedy requests with
+/// [`GenRequest::greedy`]; everything else through [`GenRequest::builder`].
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub prompt: Vec<u32>,
@@ -63,6 +95,18 @@ pub struct GenRequest {
     pub variant: Variant,
     /// stop generation when this token is produced (e.g. BOS)
     pub stop_token: Option<u32>,
+    /// Wall-clock budget measured from submission; the scheduler reaps
+    /// the session (queued or active) once it expires, finishing with
+    /// [`FinishReason::DeadlineExceeded`] and whatever tokens exist.
+    pub deadline: Option<Duration>,
+    /// Admission priority: higher admits first; FIFO within a level.
+    pub priority: i32,
+    /// Best-of-n: fork this many decoding branches off ONE prompt
+    /// prefill, each with sampler seed `seed + branch`.  1 = ordinary
+    /// single-branch request.  [`Coordinator::submit`] clamps this to
+    /// `1..=max_active` — every branch occupies an active slot, so a
+    /// wider fork would break the concurrency bound.
+    pub n_best: usize,
 }
 
 impl GenRequest {
@@ -75,7 +119,72 @@ impl GenRequest {
             seed: 0,
             variant: Variant::Exact,
             stop_token: None,
+            deadline: None,
+            priority: 0,
+            n_best: 1,
         }
+    }
+
+    /// Builder over [`GenRequest::greedy`] defaults.
+    pub fn builder(prompt: Vec<u32>, max_new_tokens: usize) -> GenRequestBuilder {
+        GenRequestBuilder { req: GenRequest::greedy(prompt, max_new_tokens) }
+    }
+}
+
+/// Fluent construction for the non-default request knobs:
+/// `GenRequest::builder(prompt, 32).deadline(d).priority(3).n_best(8).build()`.
+#[derive(Clone, Debug)]
+pub struct GenRequestBuilder {
+    req: GenRequest,
+}
+
+impl GenRequestBuilder {
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.req.temperature = t;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.req.top_k = k;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.req.seed = seed;
+        self
+    }
+
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.req.variant = v;
+        self
+    }
+
+    pub fn stop_token(mut self, t: u32) -> Self {
+        self.req.stop_token = Some(t);
+        self
+    }
+
+    /// Wall-clock deadline from submission (see [`GenRequest::deadline`]).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.req.deadline = Some(d);
+        self
+    }
+
+    /// Admission priority: higher admits first (see [`GenRequest::priority`]).
+    pub fn priority(mut self, p: i32) -> Self {
+        self.req.priority = p;
+        self
+    }
+
+    /// Fork `n` best-of-n branches off one prompt prefill (clamped ≥ 1
+    /// here; [`Coordinator::submit`] additionally clamps to `max_active`).
+    pub fn n_best(mut self, n: usize) -> Self {
+        self.req.n_best = n.max(1);
+        self
+    }
+
+    pub fn build(self) -> GenRequest {
+        self.req
     }
 }
 
@@ -84,12 +193,36 @@ impl GenRequest {
 pub enum FinishReason {
     MaxTokens,
     StopToken,
+    /// Client called [`GenStream::cancel`] or dropped the stream; the
+    /// response carries the tokens generated up to the reap boundary.
+    Cancelled,
+    /// The request's wall-clock [`GenRequest::deadline`] expired.
+    DeadlineExceeded,
 }
 
-/// A finished generation.
+/// Incremental progress of one streaming session, delivered through
+/// [`GenStream`].  `branch` is 0 for ordinary requests; best-of-n
+/// requests interleave events of all `n_best` branches on one stream.
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    /// The session was admitted (branch 0) or forked (branches 1..n);
+    /// prefill begins after `cached_prefix_tokens` skipped tokens.
+    Started { branch: usize, cached_prefix_tokens: usize },
+    /// One sampled token was committed as output: `seq_idx` is its
+    /// 0-based position in the branch's generated sequence.
+    Token { branch: usize, token: u32, seq_idx: usize },
+    /// Terminal: the branch finished; the aggregated per-branch response.
+    Finished(GenResponse),
+    /// Terminal: the branch failed.
+    Error { branch: usize, message: String },
+}
+
+/// A finished generation (one best-of-n branch = one response).
 #[derive(Clone, Debug)]
 pub struct GenResponse {
     pub request_id: u64,
+    /// Which best-of-n branch this is (0 for ordinary requests).
+    pub branch: usize,
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
     pub prefill_seconds: f64,

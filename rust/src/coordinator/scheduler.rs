@@ -1,43 +1,52 @@
-//! Admission queue + prefill/decode-interleaved continuous batching +
-//! worker thread.
+//! Bounded admission queue + streaming sessions + the worker loop.
 //!
 //! One worker thread owns the engine (and therefore the PJRT client)
 //! exclusively.  Each scheduling cycle it
 //!
-//! 1. **admits** queued requests up to `max_active` — admission is
-//!    bookkeeping plus a prefix-cache lookup (no forward work), so a
-//!    request with a huge prompt enters the table instantly, and a
-//!    request whose prompt prefix is cached ([`crate::statecache`])
-//!    starts prefill at the deepest cached chunk boundary instead of
-//!    token 0 — for a shared 1k-token system prompt that collapses
-//!    prefill to the unique suffix;
-//! 2. **prefills**: every `Prefilling` session consumes at most
+//! 1. **reaps** queued jobs and active sessions flagged by
+//!    [`GenStream::cancel`] / stream drop or an expired wall-clock
+//!    deadline: a queued job terminates without ever taking a slot; an
+//!    active session frees its `max_active` slot at this cycle boundary
+//!    (pinned snapshots release, partial output returns with
+//!    [`super::FinishReason::Cancelled`] or
+//!    [`super::FinishReason::DeadlineExceeded`]) — batchmates are
+//!    untouched (per-session state isolation is the batching
+//!    invariant);
+//! 2. **admits** queued requests while `slot_weight`ed capacity
+//!    remains under `max_active` (a fork request reserves all its
+//!    future branch slots up front), highest [`GenRequest::priority`]
+//!    first (FIFO within a level) — admission is bookkeeping plus a
+//!    prefix-cache lookup (no forward work), and emits
+//!    [`GenEvent::Started`] on the session's stream;
+//! 3. **prefills**: every `Prefilling` session consumes at most
 //!    `prefill_chunk` prompt tokens via ONE sequence-parallel
-//!    [`Engine::prefill_tick`] (one matmul per weight matrix over the
-//!    whole chunk, §Perf L3-4), capturing a state snapshot at the chunk
-//!    boundary for future prefix reuse.  Bounding the chunk bounds the
-//!    cycle time, so a 1k-token prompt spreads over ~`len/chunk` cycles
-//!    instead of head-of-line-blocking every decoding session (asserted
-//!    by `long_prompt_does_not_stall_decoders` in
-//!    `rust/tests/prefill_parity.rs`);
-//! 3. **decodes**: advances every `Decoding` session by exactly one
-//!    step in admission order — round-robin fairness, no starvation —
-//!    via a single fused [`Engine::step_batch`] forward that reuses
-//!    each weight matrix across all active sessions (§Perf L3-3);
-//! 4. **completes** finished sessions, recording per-session
-//!    time-to-first-token into [`Metrics`] — after draining the model's
-//!    cumulative 9-bit clip counter and mirroring the prefix-cache
-//!    counters into [`Metrics`] (hit rate, tokens skipped, bytes
-//!    resident, evictions — the serve report's cache line).
+//!    [`Engine::prefill_tick`] (§Perf L3-4), so a long prompt cannot
+//!    head-of-line-block the decoders;
+//! 4. **forks**: a prompt that completed with `n_best > 1` spawns its
+//!    branches via [`Engine::fork`] — one prefill, one shared pinned
+//!    snapshot, N decoding sessions with seeds `seed + branch`, each
+//!    announced with its own [`GenEvent::Started`];
+//! 5. **decodes**: commits every decoding session's pending token in
+//!    admission order — streaming each as a [`GenEvent::Token`] — then
+//!    advances all continuing sessions with a single fused
+//!    [`Engine::step_batch`] forward (§Perf L3-3 weight reuse);
+//! 6. **completes** finished sessions, emitting the terminal
+//!    [`GenEvent::Finished`]/[`GenEvent::Error`] per branch after
+//!    folding the session's totals (and the engine's clip/cache/prefill
+//!    counters) into [`Metrics`].
 //!
 //! Chunked and token-by-token prefill are bit-exact for the native
-//! models, as are batched and per-session decode and cached-prefix
-//! resume (the cached state IS the state full prefill passes through),
-//! so neither scheduling capacity, chunk size nor cache state ever
-//! changes a session's tokens (asserted by
-//! `prop_interleaving_preserves_outputs` and the parity suites in
-//! `rust/tests/`, cache-specifically in `rust/tests/statecache.rs`).
+//! models, as are batched and per-session decode, cached-prefix resume
+//! and fork-vs-sequential branches, so neither scheduling capacity,
+//! chunk size, cache state nor forking ever changes a session's tokens
+//! (asserted by the parity suites in `rust/tests/`).
+//!
+//! Backpressure is explicit: [`Coordinator::submit`] reserves a slot in
+//! a queue bounded by [`CoordinatorConfig::max_queue`] and rejects with
+//! [`SubmitError::QueueFull`] instead of buffering without bound.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -47,12 +56,13 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{ActiveSession, Engine, EngineModel};
 use super::metrics::Metrics;
-use super::{FinishReason, GenRequest, GenResponse};
+use super::{FinishReason, GenEvent, GenRequest, GenResponse};
 use crate::statecache::StateCacheConfig;
 
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
-    /// maximum concurrently-active sessions (prefilling + decoding)
+    /// maximum concurrently-active sessions (prefilling + decoding;
+    /// every best-of-n branch counts while it lives)
     pub max_active: usize,
     /// maximum prompt tokens a `Prefilling` session consumes per
     /// scheduling cycle; bounds how long one cycle can stall decode.
@@ -65,6 +75,11 @@ pub struct CoordinatorConfig {
     /// ([`crate::statecache`]); 0 disables caching entirely.  Resuming
     /// is bit-exact, so this only trades memory for prefill latency.
     pub state_cache_bytes: usize,
+    /// Bound on requests submitted but not yet admitted: one more and
+    /// [`Coordinator::submit`] rejects with [`SubmitError::QueueFull`].
+    /// Backpressure must be visible at the API boundary — an unbounded
+    /// queue just converts overload into silent latency.
+    pub max_queue: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,22 +88,194 @@ impl Default for CoordinatorConfig {
             max_active: 8,
             prefill_chunk: 64,
             state_cache_bytes: StateCacheConfig::default().max_bytes,
+            max_queue: 1024,
         }
     }
 }
+
+/// Why [`Coordinator::submit`] refused a request.  Everything that can
+/// go wrong *after* admission arrives as [`GenEvent`]s on the stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at [`CoordinatorConfig::max_queue`]:
+    /// the service is saturated, back off and retry.
+    QueueFull { limit: usize },
+    /// The coordinator has shut down; no worker will ever serve this.
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { limit } => {
+                write!(f, "admission queue full ({limit} requests waiting)")
+            }
+            SubmitError::ShutDown => write!(f, "coordinator is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 struct Job {
     id: u64,
     req: GenRequest,
     enqueued_at: Instant,
-    reply: Sender<Result<GenResponse>>,
+    /// Absolute expiry computed at submission from [`GenRequest::deadline`].
+    deadline_at: Option<Instant>,
+    events: Sender<GenEvent>,
+    cancel: Arc<AtomicBool>,
 }
 
-/// Handle to a running coordinator.  Cloneable; `generate` is blocking,
-/// `submit` is async-style (returns a receiver).
+/// One active slot in the worker: the session plus its client-facing
+/// channel ends.  Fork branches share `events`/`cancel`/`deadline_at`
+/// with their siblings (cancel reaps the whole request).
+struct Slot {
+    sess: ActiveSession,
+    events: Sender<GenEvent>,
+    cancel: Arc<AtomicBool>,
+    deadline_at: Option<Instant>,
+}
+
+/// Client handle to one streaming session (see the module docs of
+/// [`super`] for the event protocol).  Dropping the stream cancels the
+/// session unless it already finished — an abandoned generation must
+/// not keep burning its `max_active` slot.
+#[derive(Debug)]
+pub struct GenStream {
+    request_id: u64,
+    n_best: usize,
+    rx: Receiver<GenEvent>,
+    cancel: Arc<AtomicBool>,
+    terminals: usize,
+    closed: bool,
+}
+
+impl GenStream {
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    /// How many branch sub-sessions this stream carries (the request's
+    /// clamped `n_best`).
+    pub fn n_best(&self) -> usize {
+        self.n_best
+    }
+
+    /// Ask the worker to stop this request (all branches).  The slot
+    /// frees and the partial output is returned with
+    /// [`FinishReason::Cancelled`] at the next scheduling-cycle
+    /// boundary; cancelling an already-finished stream is a no-op.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    /// Next event, blocking.  Returns `None` once every branch has
+    /// terminated (or the worker disappeared) — the stream is then
+    /// exhausted and drop will NOT cancel anything.
+    pub fn recv(&mut self) -> Option<GenEvent> {
+        if self.closed {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                if matches!(ev, GenEvent::Finished(_) | GenEvent::Error { .. }) {
+                    self.terminals += 1;
+                    if self.terminals >= self.n_best {
+                        self.closed = true;
+                    }
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.closed = true;
+                None
+            }
+        }
+    }
+
+    /// Drain the stream to completion, returning one result per branch
+    /// (index = branch).  A branch the worker never finished (e.g. the
+    /// request was reaped while still queued) reports an error carrying
+    /// the terminal the request did get, if any.
+    pub fn wait(mut self) -> Vec<Result<GenResponse>> {
+        let n = self.n_best;
+        let mut out: Vec<Option<Result<GenResponse>>> = (0..n).map(|_| None).collect();
+        while let Some(ev) = self.recv() {
+            match ev {
+                GenEvent::Finished(r) => {
+                    if r.branch < n {
+                        out[r.branch] = Some(Ok(r));
+                    }
+                }
+                GenEvent::Error { branch, message } => {
+                    if branch < n {
+                        out[branch] = Some(Err(anyhow!(message)));
+                    }
+                }
+                GenEvent::Started { .. } | GenEvent::Token { .. } => {}
+            }
+        }
+        // a request reaped before forking terminates on branch 0 only;
+        // mirror that terminal onto the branches that never existed so
+        // callers see a uniform per-branch outcome
+        let mirror: Option<GenResponse> = match out.first() {
+            Some(Some(Ok(r0)))
+                if r0.finish == FinishReason::Cancelled
+                    || r0.finish == FinishReason::DeadlineExceeded =>
+            {
+                Some(r0.clone())
+            }
+            _ => None,
+        };
+        if let Some(r0) = mirror {
+            for (b, slot) in out.iter_mut().enumerate().skip(1) {
+                if slot.is_none() {
+                    let mut r = r0.clone();
+                    r.branch = b;
+                    *slot = Some(Ok(r));
+                }
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow!("stream closed before the branch finished"))))
+            .collect()
+    }
+
+    /// Drain the stream and return branch 0's response — the blocking
+    /// single-result path [`Coordinator::generate`] wraps.
+    pub fn wait_one(self) -> Result<GenResponse> {
+        self.wait().into_iter().next().expect("n_best is clamped >= 1")
+    }
+}
+
+impl Drop for GenStream {
+    fn drop(&mut self) {
+        // cancel-on-drop: if the client walks away mid-generation the
+        // worker reaps the session at the next cycle boundary.  `closed`
+        // is only true once every branch terminated, so this never
+        // cancels finished work.
+        if !self.closed {
+            self.cancel.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// Handle to a running coordinator.  `submit` returns a streaming
+/// [`GenStream`]; `generate` is the blocking wrapper over it.
 pub struct Coordinator {
-    tx: Sender<Job>,
-    next_id: std::sync::atomic::AtomicU64,
+    /// `None` only once `shutdown`/`Drop` has closed the channel — the
+    /// ONE close-and-join path both share.
+    tx: Option<Sender<Job>>,
+    next_id: AtomicU64,
+    /// Requests submitted but not yet admitted (channel + worker-local
+    /// queue); bounds admission via `max_queue`.
+    queue_depth: Arc<AtomicUsize>,
+    max_queue: usize,
+    /// Mirror of `cfg.max_active`: the fork-width clamp for `n_best`
+    /// (every branch occupies an active slot, so a wider fork would
+    /// break the concurrency/memory bound `max_active` exists to hold).
+    max_active: usize,
     pub metrics: Arc<Mutex<Metrics>>,
     worker: Option<JoinHandle<()>>,
 }
@@ -103,56 +290,111 @@ impl Coordinator {
     /// for models that are not `Send` (the PJRT runtime holds `Rc`s and
     /// raw pointers; constructing it on the owning thread sidesteps any
     /// cross-thread transfer).
-    pub fn spawn_with<M, F>(factory: F, cfg: CoordinatorConfig) -> Coordinator
+    pub fn spawn_with<M, F>(factory: F, mut cfg: CoordinatorConfig) -> Coordinator
     where
         M: EngineModel + 'static,
         F: FnOnce() -> M + Send + 'static,
     {
+        // max_active = 0 would accept submissions the worker could never
+        // admit (clients block forever while the worker spins); clamp
+        // once so the submit-side mirror and the worker always agree
+        cfg.max_active = cfg.max_active.max(1);
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let queue_depth = Arc::new(AtomicUsize::new(0));
         let m2 = metrics.clone();
+        let d2 = queue_depth.clone();
         let worker = std::thread::spawn(move || {
             let engine = if cfg.state_cache_bytes > 0 {
                 Engine::with_cache(factory(), StateCacheConfig { max_bytes: cfg.state_cache_bytes })
             } else {
                 Engine::new(factory())
             };
-            worker_loop(engine, rx, cfg, m2)
+            worker_loop(engine, rx, cfg, m2, d2)
         });
         Coordinator {
-            tx,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            tx: Some(tx),
+            next_id: AtomicU64::new(1),
+            queue_depth,
+            max_queue: cfg.max_queue.max(1),
+            max_active: cfg.max_active,
             metrics,
             worker: Some(worker),
         }
     }
 
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, req: GenRequest) -> Receiver<Result<GenResponse>> {
-        let (reply, rx) = channel();
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    /// Submit a request, returning the streaming session handle — or a
+    /// typed rejection when the bounded queue is full (backpressure) or
+    /// the coordinator is gone.
+    ///
+    /// `n_best` is clamped to `1..=max_active` here: every fork branch
+    /// occupies an active slot, so a wider fork would silently break the
+    /// concurrency bound.  The returned stream's
+    /// [`GenStream::n_best`] reports the clamped width.
+    pub fn submit(&self, mut req: GenRequest) -> std::result::Result<GenStream, SubmitError> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::ShutDown);
+        };
+        // reserve a queue slot or reject: CAS so concurrent submitters
+        // cannot blow past the bound between load and increment
+        let mut depth = self.queue_depth.load(Ordering::Relaxed);
+        loop {
+            if depth >= self.max_queue {
+                self.metrics.lock().unwrap().rejected += 1;
+                return Err(SubmitError::QueueFull { limit: self.max_queue });
+            }
+            match self.queue_depth.compare_exchange_weak(
+                depth,
+                depth + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => depth = now,
+            }
+        }
+        // unique-id counter only — no ordering with anything else
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let n_best = req.n_best.clamp(1, self.max_active);
+        req.n_best = n_best;
+        let enqueued_at = Instant::now();
+        let deadline_at = req.deadline.and_then(|d| enqueued_at.checked_add(d));
+        let (etx, erx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let job = Job { id, req, enqueued_at, deadline_at, events: etx, cancel: cancel.clone() };
+        if tx.send(job).is_err() {
+            self.queue_depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(SubmitError::ShutDown);
+        }
         self.metrics.lock().unwrap().enqueued += 1;
-        let job = Job { id, req, enqueued_at: Instant::now(), reply };
-        // if the worker is gone the receiver will simply disconnect
-        let _ = self.tx.send(job);
-        rx
+        Ok(GenStream { request_id: id, n_best, rx: erx, cancel, terminals: 0, closed: false })
     }
 
-    /// Blocking generate.
+    /// Blocking generate: submit, drain the stream, return branch 0.
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
-        self.submit(req)
-            .recv()
-            .map_err(|_| anyhow!("coordinator worker terminated"))?
+        self.submit(req)?.wait_one()
     }
 
-    /// Graceful shutdown: drop the queue and join the worker.
+    /// Blocking best-of-n: submit, drain, return every branch's
+    /// response (first branch error propagates).
+    pub fn generate_all(&self, req: GenRequest) -> Result<Vec<GenResponse>> {
+        self.submit(req)?.wait().into_iter().collect()
+    }
+
+    /// Graceful shutdown: close the queue and join the worker (also what
+    /// `Drop` does — this just makes the join explicit and synchronous
+    /// at a call site of the caller's choosing).
     pub fn shutdown(mut self) {
-        drop(self.tx.clone());
-        // dropping self.tx happens in Drop; explicitly take the worker
+        self.close_and_join();
+    }
+
+    /// The single close path: dropping the one `Sender` disconnects the
+    /// worker's queue, which exits after draining in-flight sessions.
+    /// Idempotent — `shutdown` runs it eagerly, `Drop` runs it again as
+    /// a no-op.
+    fn close_and_join(&mut self) {
+        self.tx = None;
         if let Some(w) = self.worker.take() {
-            // close the channel by replacing tx with a dead one
-            let (dead, _) = channel();
-            self.tx = dead;
             let _ = w.join();
         }
     }
@@ -160,11 +402,67 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // closing tx ends the worker loop once the queue drains
-        let (dead, _) = channel();
-        self.tx = dead;
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.close_and_join();
+    }
+}
+
+/// How many `max_active` slots a session occupies.  A not-yet-forked
+/// fork parent reserves all `n_best` slots its branches will take, so
+/// the fork in phase 5 can never push the active set past the bound —
+/// the moment it forks, the parent's weight n is replaced by n branches
+/// of weight 1 and the total is unchanged.
+fn slot_weight(sess: &ActiveSession) -> usize {
+    if sess.is_decoding() {
+        1
+    } else {
+        sess.req.n_best.max(1)
+    }
+}
+
+/// What a reap check decided for one queued job or active session.
+fn reap_reason(cancel: &AtomicBool, deadline_at: Option<Instant>) -> Option<FinishReason> {
+    if cancel.load(Ordering::Acquire) {
+        Some(FinishReason::Cancelled)
+    } else if matches!(deadline_at, Some(d) if Instant::now() >= d) {
+        Some(FinishReason::DeadlineExceeded)
+    } else {
+        None
+    }
+}
+
+/// Fold a finished session into `Metrics` and emit its terminal event.
+fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metrics>>) {
+    let Slot { sess, events, .. } = slot;
+    {
+        let mut m = metrics.lock().unwrap();
+        m.completed += 1;
+        m.tokens_generated += sess.generated.len() as u64;
+        m.decode_seconds_total += sess.decode_seconds;
+        m.prefill_seconds_total += sess.prefill_seconds;
+        // TTFT only for sessions that sampled a first token — a prefill
+        // failure or pre-decode reap completes without one and must not
+        // drag the mean toward zero
+        if sess.is_decoding() {
+            m.first_tokens += 1;
+            m.ttft_seconds_total += sess.ttft_seconds;
+        }
+    }
+    match outcome {
+        Ok(reason) => {
+            let _ = events.send(GenEvent::Finished(GenResponse {
+                request_id: sess.request_id,
+                branch: sess.branch,
+                tokens: sess.generated,
+                finish: reason,
+                prefill_seconds: sess.prefill_seconds,
+                decode_seconds: sess.decode_seconds,
+                queue_seconds: (sess.started_at - sess.enqueued_at).as_secs_f64(),
+                ttft_seconds: sess.ttft_seconds,
+                cached_prefix_tokens: sess.cached_prefix_tokens,
+            }));
+        }
+        Err(e) => {
+            let _ = events.send(GenEvent::Error { branch: sess.branch, message: format!("{e:#}") });
         }
     }
 }
@@ -174,11 +472,12 @@ fn worker_loop<M: EngineModel>(
     rx: Receiver<Job>,
     cfg: CoordinatorConfig,
     metrics: Arc<Mutex<Metrics>>,
+    queue_depth: Arc<AtomicUsize>,
 ) {
-    let mut active: Vec<(ActiveSession, Sender<Result<GenResponse>>)> = Vec::new();
-    let mut queue: std::collections::VecDeque<Job> = Default::default();
+    let mut active: Vec<Slot> = Vec::new();
+    let mut queue: VecDeque<Job> = Default::default();
     loop {
-        // 1. pull everything currently queued (block only when idle)
+        // 1a. pull everything currently queued (block only when idle)
         loop {
             match rx.try_recv() {
                 Ok(job) => queue.push_back(job),
@@ -199,11 +498,87 @@ fn worker_loop<M: EngineModel>(
             }
         }
 
-        // 2. admit in FIFO order up to max_active — bookkeeping only
-        //    (prefill happens chunk-by-chunk in phase 3), so admission
-        //    can never stall the sessions already in flight
-        while active.len() < cfg.max_active {
-            let Some(job) = queue.pop_front() else { break };
+        // 1b. reap queued jobs whose stream was cancelled/dropped or
+        //     whose deadline expired before admission: terminate with
+        //     the proper reason, zero tokens, never taking a slot
+        {
+            let mut i = 0;
+            while i < queue.len() {
+                let reason = reap_reason(&queue[i].cancel, queue[i].deadline_at);
+                let Some(reason) = reason else {
+                    i += 1;
+                    continue;
+                };
+                let job = queue.remove(i).expect("index in bounds");
+                queue_depth.fetch_sub(1, Ordering::AcqRel);
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.completed += 1;
+                    match reason {
+                        FinishReason::Cancelled => m.cancelled += 1,
+                        _ => m.deadline_exceeded += 1,
+                    }
+                }
+                let _ = job.events.send(GenEvent::Finished(GenResponse {
+                    request_id: job.id,
+                    branch: 0,
+                    tokens: Vec::new(),
+                    finish: reason,
+                    prefill_seconds: 0.0,
+                    decode_seconds: 0.0,
+                    queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
+                    ttft_seconds: 0.0,
+                    cached_prefix_tokens: 0,
+                }));
+            }
+        }
+
+        // 2. reap active sessions: cancellation and deadlines take
+        //    effect at this cycle boundary — the slot frees, pinned
+        //    snapshots release with the session, partial tokens return.
+        //    Reaping precedes admission so a freed slot is refilled in
+        //    the SAME cycle, not one cycle late.
+        {
+            let mut i = 0;
+            while i < active.len() {
+                let reason = reap_reason(&active[i].cancel, active[i].deadline_at);
+                let Some(reason) = reason else {
+                    i += 1;
+                    continue;
+                };
+                {
+                    let mut m = metrics.lock().unwrap();
+                    match reason {
+                        FinishReason::Cancelled => m.cancelled += 1,
+                        _ => m.deadline_exceeded += 1,
+                    }
+                }
+                let slot = active.remove(i);
+                complete(slot, Ok(reason), &metrics);
+            }
+        }
+
+        // 3. admit while slots remain — highest priority first, FIFO
+        //    within a level; bookkeeping only (prefill happens
+        //    chunk-by-chunk in phase 4), so admission can never stall
+        //    the sessions already in flight.  Slots are counted by
+        //    [`slot_weight`]: a fork request reserves all n_best of its
+        //    future branch slots at admission, so the active set never
+        //    exceeds max_active even mid-fork.  Admission stops at the
+        //    first candidate that doesn't fit (no thinner-job bypass:
+        //    that would starve wide forks behind a stream of singles).
+        let mut used: usize = active.iter().map(|sl| slot_weight(&sl.sess)).sum();
+        while !queue.is_empty() {
+            let best = (0..queue.len())
+                .max_by_key(|&i| (queue[i].req.priority, std::cmp::Reverse(i)))
+                .expect("queue is non-empty");
+            let weight = queue[best].req.n_best.max(1);
+            if used + weight > cfg.max_active {
+                break;
+            }
+            used += weight;
+            let job = queue.remove(best).expect("index in bounds");
+            queue_depth.fetch_sub(1, Ordering::AcqRel);
             let queue_s = job.enqueued_at.elapsed().as_secs_f64();
             let sess = engine.admit(job.id, job.req, job.enqueued_at);
             {
@@ -211,40 +586,91 @@ fn worker_loop<M: EngineModel>(
                 m.admitted += 1;
                 m.queue_seconds_total += queue_s;
             }
-            active.push((sess, job.reply));
+            let _ = job.events.send(GenEvent::Started {
+                branch: 0,
+                cached_prefix_tokens: sess.cached_prefix_tokens,
+            });
+            active.push(Slot {
+                sess,
+                events: job.events,
+                cancel: job.cancel,
+                deadline_at: job.deadline_at,
+            });
         }
 
-        let mut finished: Vec<(usize, Result<FinishReason>)> = Vec::new();
-
-        // 3. prefill cycle: every Prefilling session consumes one
+        // 4. prefill cycle: every Prefilling session consumes one
         //    bounded sequence-parallel chunk of its prompt (§Perf L3-4).
         //    A session whose prompt completes this cycle samples its
         //    first token and joins the decode batch below immediately.
-        for (i, (sess, _)) in active.iter_mut().enumerate() {
-            if sess.is_decoding() {
-                continue;
+        {
+            let mut failed: Vec<(usize, anyhow::Error)> = Vec::new();
+            for (i, slot) in active.iter_mut().enumerate() {
+                if !slot.sess.is_prefilling() {
+                    continue;
+                }
+                if let Err(e) = engine.prefill_tick(&mut slot.sess, cfg.prefill_chunk) {
+                    failed.push((i, e));
+                }
             }
-            if let Err(e) = engine.prefill_tick(sess, cfg.prefill_chunk) {
-                finished.push((i, Err(e)));
+            for (i, e) in failed.into_iter().rev() {
+                let slot = active.remove(i);
+                complete(slot, Err(e), &metrics);
             }
         }
 
-        // 4. decode cycle: commit every decoding session's pending token
-        //    in admission order, then advance all continuing sessions
-        //    with ONE batched forward — each weight matrix is streamed
-        //    once per cycle and reused across all B sessions instead of
-        //    being refetched B times (§Perf L3-3 weight-reuse
-        //    amortization).  Sessions still prefilling (or failed above)
-        //    are skipped.
+        // 5. fork cycle: prompts that completed with n_best > 1 spawn
+        //    their decoding branches — ONE prefill total, one shared
+        //    pinned snapshot, distinct sampler seeds.  Branches join at
+        //    the tail of the active list and decode this same cycle.
         {
-            let mut live: Vec<(usize, &mut ActiveSession)> = Vec::new();
-            for (i, (sess, _)) in active.iter_mut().enumerate() {
-                if !sess.is_decoding() {
+            let mut i = 0;
+            while i < active.len() {
+                if !active[i].sess.is_fork_ready() {
+                    i += 1;
                     continue;
                 }
-                match engine.commit_pending(sess) {
+                let Slot { sess, events, cancel, deadline_at } = active.remove(i);
+                let cached = sess.cached_prefix_tokens;
+                for branch in engine.fork(sess) {
+                    if branch.branch > 0 {
+                        // branch 0 inherited the parent's Started event
+                        let _ = events.send(GenEvent::Started {
+                            branch: branch.branch,
+                            cached_prefix_tokens: cached,
+                        });
+                    }
+                    active.push(Slot {
+                        sess: branch,
+                        events: events.clone(),
+                        cancel: cancel.clone(),
+                        deadline_at,
+                    });
+                }
+            }
+        }
+
+        // 6. decode cycle: commit every decoding session's pending token
+        //    in admission order — each commit streams a Token event —
+        //    then advance all continuing sessions with ONE batched
+        //    forward (§Perf L3-3 weight-reuse amortization).  Sessions
+        //    still prefilling are skipped.
+        let mut finished: Vec<(usize, Result<FinishReason>)> = Vec::new();
+        {
+            let mut live: Vec<(usize, &mut ActiveSession)> = Vec::new();
+            for (i, slot) in active.iter_mut().enumerate() {
+                if !slot.sess.is_decoding() {
+                    continue;
+                }
+                let outcome = engine.commit_pending(&mut slot.sess);
+                let tok = *slot.sess.generated.last().expect("commit_pending pushed a token");
+                let _ = slot.events.send(GenEvent::Token {
+                    branch: slot.sess.branch,
+                    token: tok,
+                    seq_idx: slot.sess.generated.len() - 1,
+                });
+                match outcome {
                     Some(reason) => finished.push((i, Ok(reason))),
-                    None => live.push((i, sess)),
+                    None => live.push((i, &mut slot.sess)),
                 }
             }
             if !live.is_empty() {
@@ -263,57 +689,33 @@ fn worker_loop<M: EngineModel>(
             }
         }
         finished.sort_by_key(|&(i, _)| i);
-        // 5. drain observability counters BEFORE completing, so a
-        //    client woken by its reply observes metrics that already
-        //    include its session's work: the hardware backend's
-        //    cumulative 9-bit clip total for this cycle's prefill +
-        //    decode (lossless across split cycles, unlike the per-call
-        //    counter), and the prefix cache's counters/gauges (mirrored
-        //    wholesale — the worker owns the engine, so the engine-side
-        //    totals are authoritative) — both surfaced in the serve
-        //    report
-        let clips = engine.model.take_clip_events();
-        let cache_stats = engine.cache_stats();
-        if clips > 0 || cache_stats.is_some() {
+        // 7. drain observability counters BEFORE completing, so a client
+        //    woken by its terminal event observes metrics that already
+        //    include its session's work: the hw backend's cumulative
+        //    9-bit clip total, the engine's ground-truth prefilled-token
+        //    count, the prefix/decode cache counters (mirrored wholesale
+        //    — the worker owns the engine, so the engine-side totals are
+        //    authoritative), and the pressure gauges
+        {
             let mut m = metrics.lock().unwrap();
-            m.clip_events += clips;
-            if let Some(cs) = cache_stats {
+            m.clip_events += engine.model.take_clip_events();
+            m.prompt_tokens_prefilled = engine.prefilled_tokens();
+            if let Some(cs) = engine.cache_stats() {
                 m.prefix_cache_hits = cs.hits;
                 m.prefix_cache_misses = cs.misses;
                 m.prefix_tokens_skipped = cs.tokens_skipped;
                 m.prefix_cache_bytes = cs.bytes_resident;
                 m.prefix_cache_entries = cs.entries;
                 m.prefix_cache_evictions = cs.evictions;
+                m.prefix_cache_pinned = cs.pinned;
             }
+            m.queue_depth = queue_depth.load(Ordering::Acquire) as u64;
+            m.active_sessions = (active.len() - finished.len()) as u64;
         }
-        // 6. complete (reverse order keeps indices valid)
+        // 8. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
-            let (sess, reply) = active.remove(i);
-            {
-                let mut m = metrics.lock().unwrap();
-                m.completed += 1;
-                m.tokens_generated += sess.generated.len() as u64;
-                m.decode_seconds_total += sess.decode_seconds;
-                m.prefill_seconds_total += sess.prefill_seconds;
-                // TTFT only for sessions that sampled a first token — a
-                // prefill failure completes without one and must not
-                // drag the mean toward zero
-                if sess.is_decoding() {
-                    m.first_tokens += 1;
-                    m.ttft_seconds_total += sess.ttft_seconds;
-                }
-            }
-            let resp = outcome.map(|reason| GenResponse {
-                request_id: sess.request_id,
-                tokens: sess.generated,
-                finish: reason,
-                prefill_seconds: sess.prefill_seconds,
-                decode_seconds: sess.decode_seconds,
-                queue_seconds: (sess.started_at - sess.enqueued_at).as_secs_f64(),
-                ttft_seconds: sess.ttft_seconds,
-                cached_prefix_tokens: sess.cached_prefix_tokens,
-            });
-            let _ = reply.send(resp);
+            let slot = active.remove(i);
+            complete(slot, outcome, &metrics);
         }
     }
 }
@@ -336,8 +738,44 @@ mod tests {
         let r = c.generate(GenRequest::greedy(vec![1, 2], 6)).unwrap();
         assert_eq!(r.tokens.len(), 6);
         assert_eq!(r.finish, super::super::FinishReason::MaxTokens);
+        assert_eq!(r.branch, 0);
         assert!(r.ttft_seconds > 0.0, "ttft must be recorded");
         assert!(r.ttft_seconds <= r.queue_seconds + r.prefill_seconds + r.decode_seconds + 1.0);
+    }
+
+    #[test]
+    fn stream_delivers_every_token_before_finished() {
+        let c = coordinator(2);
+        let mut stream = c.submit(GenRequest::greedy(vec![1, 2, 3], 7)).unwrap();
+        let mut started = false;
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut finished: Option<GenResponse> = None;
+        while let Some(ev) = stream.recv() {
+            match ev {
+                GenEvent::Started { branch, cached_prefix_tokens } => {
+                    assert_eq!(branch, 0);
+                    assert_eq!(cached_prefix_tokens, 0);
+                    assert!(!started, "exactly one Started");
+                    started = true;
+                }
+                GenEvent::Token { branch, token, seq_idx } => {
+                    assert_eq!(branch, 0);
+                    assert!(finished.is_none(), "no tokens after Finished");
+                    assert_eq!(seq_idx, streamed.len(), "tokens arrive in order");
+                    streamed.push(token);
+                }
+                GenEvent::Finished(r) => {
+                    assert!(finished.is_none());
+                    finished = Some(r);
+                }
+                GenEvent::Error { message, .. } => panic!("unexpected error: {message}"),
+            }
+        }
+        assert!(started);
+        let r = finished.expect("stream must finish");
+        assert_eq!(r.tokens.len(), 7);
+        assert_eq!(streamed, r.tokens, "every sampled token was streamed before Finished");
+        assert!(stream.recv().is_none(), "stream is exhausted");
     }
 
     #[test]
@@ -357,21 +795,24 @@ mod tests {
         assert_eq!(r.tokens, solo);
         let m = c.metrics.lock().unwrap();
         assert!(m.ttft_seconds_total > 0.0);
+        assert_eq!(m.prompt_tokens_prefilled, 45);
     }
 
     #[test]
     fn concurrent_requests_all_complete() {
         let c = coordinator(3);
         let rxs: Vec<_> = (0..10)
-            .map(|i| c.submit(GenRequest::greedy(vec![1 + i as u32], 5)))
+            .map(|i| c.submit(GenRequest::greedy(vec![1 + i as u32], 5)).unwrap())
             .collect();
         for rx in rxs {
-            let r = rx.recv().unwrap().unwrap();
+            let r = rx.wait_one().unwrap();
             assert_eq!(r.tokens.len(), 5);
         }
         let m = c.metrics.lock().unwrap();
         assert_eq!(m.completed, 10);
         assert_eq!(m.tokens_generated, 50);
+        assert_eq!(m.active_sessions, 0);
+        assert_eq!(m.queue_depth, 0);
     }
 
     #[test]
@@ -383,8 +824,8 @@ mod tests {
         };
         let c = coordinator(4);
         // fill the batch with interference
-        let _noise1 = c.submit(GenRequest::greedy(vec![9], 8));
-        let _noise2 = c.submit(GenRequest::greedy(vec![11, 12], 8));
+        let _noise1 = c.submit(GenRequest::greedy(vec![9], 8)).unwrap();
+        let _noise2 = c.submit(GenRequest::greedy(vec![11, 12], 8)).unwrap();
         let got = c.generate(GenRequest::greedy(vec![5, 6, 7], 8)).unwrap().tokens;
         assert_eq!(got, solo);
     }
@@ -399,7 +840,12 @@ mod tests {
         let cold = {
             let c = Coordinator::spawn(
                 test_model(2, 32, 64, 50),
-                CoordinatorConfig { max_active: 4, prefill_chunk: 8, state_cache_bytes: 0 },
+                CoordinatorConfig {
+                    max_active: 4,
+                    prefill_chunk: 8,
+                    state_cache_bytes: 0,
+                    ..Default::default()
+                },
             );
             c.generate(GenRequest::greedy(prompt.clone(), 6)).unwrap()
         };
@@ -437,6 +883,70 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_worker_death_is_impossible_by_construction() {
+        // the sender lives exactly as long as the Coordinator: dropping
+        // it is the one close path, so ShutDown is unreachable through a
+        // live handle — this pins the close-and-join refactor
+        let c = coordinator(1);
+        let s = c.submit(GenRequest::greedy(vec![1], 2)).unwrap();
+        let r = s.wait_one().unwrap();
+        assert_eq!(r.tokens.len(), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn best_of_n_through_coordinator_matches_sequential() {
+        let prompt: Vec<u32> = (0..12u32).map(|t| (t * 5 + 1) % 50).collect();
+        let n = 4usize;
+        let mk = |seed: u64, n_best: usize| {
+            GenRequest::builder(prompt.clone(), 6)
+                .temperature(0.9)
+                .top_k(16)
+                .seed(seed)
+                .n_best(n_best)
+                .build()
+        };
+        let solo: Vec<Vec<u32>> = (0..n as u64)
+            .map(|b| coordinator(1).generate(mk(30 + b, 1)).unwrap().tokens)
+            .collect();
+        let c = coordinator(8);
+        let rs = c.generate_all(mk(30, n)).unwrap();
+        assert_eq!(rs.len(), n);
+        for (b, r) in rs.iter().enumerate() {
+            assert_eq!(r.branch, b);
+            assert_eq!(r.tokens, solo[b], "branch {b} diverged from its sequential run");
+        }
+        // exactly one prompt prefill for all n branches
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.prompt_tokens_prefilled, prompt.len() as u64);
+        assert_eq!(m.first_tokens, n as u64);
+    }
+
+    #[test]
+    fn n_best_is_clamped_to_max_active() {
+        // a fork wider than max_active would break the concurrency and
+        // memory bound the slot limit exists to hold — submit clamps it
+        let c = coordinator(2);
+        let req = GenRequest::builder(vec![1, 2, 3], 3)
+            .temperature(0.5)
+            .top_k(4)
+            .seed(1)
+            .n_best(64)
+            .build();
+        let stream = c.submit(req).unwrap();
+        assert_eq!(stream.n_best(), 2, "fork width must clamp to max_active");
+        let rs: Vec<GenResponse> = stream
+            .wait()
+            .into_iter()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[1].branch, 1);
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.first_tokens, 2, "exactly the clamped branch count decodes");
+    }
+
+    #[test]
     fn hw_clip_totals_drain_into_metrics() {
         use crate::model::HwModel;
         // per-session clip trajectories are batching-invariant (batched
@@ -460,9 +970,9 @@ mod tests {
             mk(),
             CoordinatorConfig { max_active: 4, prefill_chunk: 4, ..Default::default() },
         );
-        let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone()).unwrap()).collect();
         for rx in rxs {
-            rx.recv().unwrap().unwrap();
+            rx.wait_one().unwrap();
         }
         let m = c.metrics.lock().unwrap();
         assert_eq!(m.clip_events, expected);

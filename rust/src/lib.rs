@@ -21,12 +21,15 @@
 //!   [`quant`].
 //! * [`runtime`]     — PJRT wrapper: load `artifacts/*.hlo.txt`, compile on
 //!   the CPU client, execute with device-resident weight buffers.
-//! * [`coordinator`] — the serving layer: sessions with recurrent state,
-//!   request queue, batching scheduler, generation engine, metrics.
+//! * [`coordinator`] — the serving layer: streaming sessions
+//!   (submit → incremental token events → finish), cancellation and
+//!   wall-clock deadlines, a bounded admission queue with priorities,
+//!   best-of-n decode forked off one shared RWKV state, the batching
+//!   scheduler, generation engine and metrics.
 //! * [`statecache`]  — prefix-sharing state cache: radix-trie snapshot
 //!   store that lets sessions resume prefill from cached RWKV states
 //!   (O(1) bytes per entry — the RWKV advantage a Transformer KV cache
-//!   can't match).
+//!   can't match), plus the decode-state namespace fork requests reuse.
 //! * [`sim`]         — cycle-accurate accelerator simulator: HBM bridge
 //!   with ping-pong double buffering, MV-array / complex-unit / LayerNorm
 //!   timing, resource model (Table 2), energy model (Fig 8).

@@ -107,18 +107,16 @@ fn cmd_serve(args: &Args) -> hfrwkv::Result<()> {
         "dave has a blue cup . the cup of dave is",
     ];
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|i| {
-            // BOS-prefix: documents are BOS-led in the training corpus
-            let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
-            prompt.extend(tokenizer.encode(prompts[i % prompts.len()]).unwrap());
-            let mut req = GenRequest::greedy(prompt, 16);
-            req.variant = variant;
-            coord.submit(req)
-        })
-        .collect();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        // BOS-prefix: documents are BOS-led in the training corpus
+        let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
+        prompt.extend(tokenizer.encode(prompts[i % prompts.len()]).unwrap());
+        let req = GenRequest::builder(prompt, 16).variant(variant).build();
+        rxs.push(coord.submit(req)?);
+    }
     for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv().unwrap()?;
+        let r = rx.wait_one()?;
         println!(
             "[{i}] {:>6.1} tok/s decode, {:.1} ms prefill, {:.1} ms ttft: {}",
             r.decode_tokens_per_sec(),

@@ -44,7 +44,11 @@
 //!
 //! Cache keys are namespaced by model-variant class, so states produced
 //! by different numerics (`Exact` vs `HwApprox` on the PJRT runtime)
-//! never cross-pollinate.
+//! never cross-pollinate.  The engine additionally partitions the class
+//! space with a decode-namespace bit: *decode-state* snapshots
+//! (post-prompt state + last-token logits, captured by best-of-n fork
+//! requests) live apart from prefix snapshots, letting an identical
+//! later fork request skip its prompt prefill entirely.
 
 mod trie;
 

@@ -14,14 +14,20 @@ use super::StateCacheConfig;
 pub struct Snapshot {
     state: Vec<f32>,
     tokens: usize,
+    /// Last-token logits, carried only by *decode-state* snapshots (the
+    /// fork/best-of-n path): a prefix snapshot's future prefill
+    /// recomputes the logits anyway, but a fork has to sample each
+    /// branch's first token without re-running any of the prompt.
+    /// Empty for ordinary prefix snapshots.
+    logits: Vec<f32>,
 }
 
 impl Snapshot {
-    /// Bytes this snapshot holds resident: the state floats plus the
-    /// trie key tokens (both 4 bytes/element).  This is the exact
-    /// quantity the store's budget accounting sums.
+    /// Bytes this snapshot holds resident: the state floats, carried
+    /// logits (if any) and the trie key tokens (all 4 bytes/element).
+    /// This is the exact quantity the store's budget accounting sums.
     pub fn cost_bytes(&self) -> usize {
-        (self.state.len() + self.tokens) * 4
+        (self.state.len() + self.logits.len() + self.tokens) * 4
     }
 }
 
@@ -41,6 +47,21 @@ impl SnapshotRef {
     /// How many prompt tokens this state has folded in.
     pub fn tokens(&self) -> usize {
         self.0.tokens
+    }
+
+    /// Last-token logits, non-empty only for decode-state snapshots
+    /// (see [`Snapshot`]).
+    pub fn logits(&self) -> &[f32] {
+        &self.0.logits
+    }
+
+    /// A snapshot handle not owned by any store.  The fork path builds
+    /// one even with the cache disabled, so the N branches of a
+    /// best-of-n request always share ONE pinned copy of the
+    /// post-prompt state; [`StateStore::adopt`] can later make the same
+    /// `Arc` resident without another copy.
+    pub fn detached(state: Vec<f32>, tokens: usize, logits: Vec<f32>) -> SnapshotRef {
+        SnapshotRef(Arc::new(Snapshot { state, tokens, logits }))
     }
 }
 
@@ -68,6 +89,11 @@ pub struct CacheStats {
     pub bytes_resident: u64,
     /// Gauge: live cached snapshots.
     pub entries: u64,
+    /// Gauge: resident snapshots currently pinned by a live
+    /// [`SnapshotRef`] held outside the store (resuming sessions,
+    /// fork branches sharing a decode state) — these are skipped by
+    /// eviction, so `bytes_resident` can only shrink to the pinned sum.
+    pub pinned: u64,
 }
 
 struct Entry {
@@ -79,14 +105,29 @@ struct Entry {
     last_used: u64,
 }
 
+/// What [`StateStore::insert_entry`] did with a candidate snapshot.
+enum InsertOutcome {
+    /// Newly resident (the returned `Arc` is the stored one).
+    Inserted(Arc<Snapshot>),
+    /// The key was already cached: recency refreshed, resident `Arc`
+    /// returned, candidate never materialized.
+    Dedup(Arc<Snapshot>),
+    /// Over budget (or everything resident is pinned): not stored.
+    Rejected,
+}
+
 /// Prefix-sharing state cache.
 ///
 /// Keys are `(class, token prefix)` — `class` discriminates state
 /// spaces that share a token vocabulary but not a numerics trajectory
 /// (the engine passes the model variant, so an `Exact` state is never
-/// resumed by a `HwApprox` session).  Values are [`Snapshot`]s behind
-/// `Arc` handles; capacity is a byte budget with LRU eviction that
-/// skips pinned entries.
+/// resumed by a `HwApprox` session).  The engine additionally
+/// partitions the class space with a high *decode-namespace* bit:
+/// decode-state snapshots (post-prompt state + last-token logits, the
+/// fork/best-of-n path) live in their own tries and never collide with
+/// prefix snapshots.  Values are [`Snapshot`]s behind `Arc` handles;
+/// capacity is a byte budget with LRU eviction that skips pinned
+/// entries.
 pub struct StateStore {
     cfg: StateCacheConfig,
     /// One trie per class, linearly scanned (two classes in practice).
@@ -95,7 +136,8 @@ pub struct StateStore {
     free: Vec<usize>,
     bytes: usize,
     /// Live entry count, maintained incrementally — `stats()` runs on
-    /// the scheduler's per-cycle path, so no O(entries) scans here.
+    /// the scheduler's per-cycle path, so everything except the pinned
+    /// gauge (which must read `Arc` counts) avoids O(entries) scans.
     live: usize,
     clock: u64,
     stats: CacheStats,
@@ -142,35 +184,74 @@ impl StateStore {
         self.bytes
     }
 
-    /// Counters + refreshed gauges.
+    /// Counters + refreshed gauges.  The pinned gauge is the one
+    /// O(entries) walk here (pin state lives in `Arc` counts, which the
+    /// store cannot observe incrementally); entry counts are bounded by
+    /// the byte budget, so the walk is trivial next to a forward pass.
     pub fn stats(&self) -> CacheStats {
         let mut s = self.stats;
         s.bytes_resident = self.bytes as u64;
         s.entries = self.len() as u64;
+        s.pinned = self
+            .entries
+            .iter()
+            .flatten()
+            .filter(|e| Arc::strong_count(&e.snap) > 1)
+            .count() as u64;
         s
     }
 
-    /// Deepest cached state for `prompt` at depth ≤ `max_tokens`,
-    /// bumping its recency.  The engine caps `max_tokens` at
-    /// `prompt.len() - 1` so at least one token is always prefilled —
-    /// the sampler needs the last prompt token's logits, which snapshots
-    /// deliberately don't carry.
-    pub fn lookup(&mut self, class: u32, prompt: &[u32], max_tokens: usize) -> Option<SnapshotRef> {
-        let found = self
-            .classes
+    /// Shared lookup body: deepest entry for `prompt` at depth
+    /// ≤ `max_tokens` — pure search, no recency bump, no stats (a probe
+    /// the caller then rejects must leave the LRU order untouched, or
+    /// never-used entries would be freshened by failed probes).
+    fn find(&self, class: u32, prompt: &[u32], max_tokens: usize) -> Option<(usize, usize)> {
+        self.classes
             .iter()
             .find(|(c, _)| *c == class)
-            .and_then(|(_, trie)| trie.longest_entry(prompt, max_tokens));
-        let Some((entry_id, _, depth)) = found else {
-            self.stats.misses += 1;
-            return None;
-        };
+            .and_then(|(_, trie)| trie.longest_entry(prompt, max_tokens))
+            .map(|(entry_id, _, depth)| (entry_id, depth))
+    }
+
+    /// Consume a successful [`StateStore::find`]: bump recency, count
+    /// the hit and the skipped tokens, hand out the shared handle.
+    fn take_hit(&mut self, entry_id: usize, depth: usize) -> SnapshotRef {
         let stamp = self.tick();
         let e = self.entries[entry_id].as_mut().expect("trie entry ids are live");
         e.last_used = stamp;
         self.stats.hits += 1;
         self.stats.tokens_skipped += depth as u64;
-        Some(SnapshotRef(Arc::clone(&e.snap)))
+        SnapshotRef(Arc::clone(&e.snap))
+    }
+
+    /// Deepest cached state for `prompt` at depth ≤ `max_tokens`,
+    /// bumping its recency.  The engine caps `max_tokens` at
+    /// `prompt.len() - 1` so at least one token is always prefilled —
+    /// the sampler needs the last prompt token's logits, which prefix
+    /// snapshots deliberately don't carry.
+    pub fn lookup(&mut self, class: u32, prompt: &[u32], max_tokens: usize) -> Option<SnapshotRef> {
+        match self.find(class, prompt, max_tokens) {
+            Some((entry_id, depth)) => Some(self.take_hit(entry_id, depth)),
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Exact-key probe for a secondary namespace: hits only an entry at
+    /// exactly `key` (a shallower prefix entry is useless to the decode
+    /// fast path, which needs the *post-prompt* state).  On success it
+    /// counts a hit and credits the whole key as skipped; a miss is
+    /// free — no counters, no recency perturbation — because the engine
+    /// probes the decode-state namespace *before* the prefix namespace
+    /// on fork requests, and that extra probe must not double-count
+    /// misses against the hit rate.
+    pub fn lookup_exact(&mut self, class: u32, key: &[u32]) -> Option<SnapshotRef> {
+        match self.find(class, key, key.len()) {
+            Some((entry_id, depth)) if depth == key.len() => Some(self.take_hit(entry_id, depth)),
+            _ => None,
+        }
     }
 
     /// Cache the state reached after `prefix` tokens.  `snapshot` is
@@ -187,31 +268,67 @@ impl StateStore {
         snapshot_len: usize,
         snapshot: impl FnOnce() -> Vec<f32>,
     ) -> bool {
+        let cost = (snapshot_len + prefix.len()) * 4;
+        let tokens = prefix.len();
+        matches!(
+            self.insert_entry(class, prefix, cost, || {
+                Arc::new(Snapshot { state: snapshot(), tokens, logits: Vec::new() })
+            }),
+            InsertOutcome::Inserted(_)
+        )
+    }
+
+    /// Adopt an externally-built snapshot (the fork path's detached
+    /// post-prompt decode state) into the store under `(class,
+    /// prefix)`, sharing the same `Arc` — no float copy.  Returns the
+    /// handle every caller should pin: on dedup the already-resident
+    /// entry (so pin accounting tracks the resident `Arc`), otherwise
+    /// `snap` itself — also when the budget rejects residency (the
+    /// caller's branches still share the detached copy; it just isn't
+    /// reusable by future requests).
+    pub fn adopt(&mut self, class: u32, prefix: &[u32], snap: SnapshotRef) -> SnapshotRef {
+        let cost = snap.0.cost_bytes();
+        match self.insert_entry(class, prefix, cost, || Arc::clone(&snap.0)) {
+            InsertOutcome::Inserted(a) | InsertOutcome::Dedup(a) => SnapshotRef(a),
+            InsertOutcome::Rejected => snap,
+        }
+    }
+
+    /// Shared insert machinery: `cost` prices the entry before `make`
+    /// materializes (or clones a handle to) the snapshot, so dedup and
+    /// budget rejection never touch the floats.
+    fn insert_entry(
+        &mut self,
+        class: u32,
+        prefix: &[u32],
+        cost: usize,
+        make: impl FnOnce() -> Arc<Snapshot>,
+    ) -> InsertOutcome {
         if prefix.is_empty() {
-            return false; // the init state is free — never cache it
+            return InsertOutcome::Rejected; // the init state is free — never cache it
         }
         let class_slot = self.class_slot(class);
         let node = self.classes[class_slot].1.insert_key(prefix);
         if let Some(entry_id) = self.classes[class_slot].1.entry_at(node) {
             let stamp = self.tick();
-            self.entries[entry_id].as_mut().expect("live entry").last_used = stamp;
-            return false;
+            let e = self.entries[entry_id].as_mut().expect("live entry");
+            e.last_used = stamp;
+            return InsertOutcome::Dedup(Arc::clone(&e.snap));
         }
-        let cost = (snapshot_len + prefix.len()) * 4;
         if cost > self.cfg.max_bytes || !self.evict_down_to(self.cfg.max_bytes - cost) {
             // undo the structural node we just created (it has no entry)
             self.classes[class_slot].1.prune_from(node);
             self.stats.rejected += 1;
-            return false;
+            return InsertOutcome::Rejected;
         }
-        let snap = Snapshot { state: snapshot(), tokens: prefix.len() };
+        let snap = make();
         debug_assert_eq!(
-            snap.state.len(),
-            snapshot_len,
-            "snapshot_len hint must match the materialized snapshot"
+            snap.cost_bytes(),
+            cost,
+            "cost hint must match the materialized snapshot"
         );
-        debug_assert_eq!(snap.cost_bytes(), cost);
-        let entry = Entry { snap: Arc::new(snap), class_slot, node, last_used: self.tick() };
+        let shared = Arc::clone(&snap);
+        let entry = Entry { snap, class_slot, node, last_used: self.tick() };
         let entry_id = match self.free.pop() {
             Some(id) => {
                 self.entries[id] = Some(entry);
@@ -226,7 +343,7 @@ impl StateStore {
         self.live += 1;
         self.classes[class_slot].1.set_entry(node, entry_id);
         self.stats.inserts += 1;
-        true
+        InsertOutcome::Inserted(shared)
     }
 
     /// Evict least-recently-used unpinned entries until at most `target`
@@ -417,6 +534,84 @@ mod tests {
         assert_eq!(st.stats().evictions, 0, "doomed insert must not evict");
         assert!(st.lookup(0, &[2, 2, 9], 2).is_some(), "[2,2] must survive");
         drop(pin);
+    }
+
+    #[test]
+    fn adopt_shares_the_arc_and_prices_logits() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        let snap = SnapshotRef::detached(state(1.5, 8), 3, vec![0.25; 5]);
+        assert_eq!(snap.logits(), &[0.25; 5][..]);
+        let resident = st.adopt(7, &[1, 2, 3], snap.clone());
+        // same Arc: adoption never copies the floats
+        assert!(Arc::ptr_eq(&resident.0, &snap.0));
+        assert_eq!(st.len(), 1);
+        // cost covers state + logits + key tokens
+        assert_eq!(st.bytes_resident(), (8 + 5 + 3) * 4);
+        // lookups in the adopting class see the logits
+        let hit = st.lookup(7, &[1, 2, 3], 3).unwrap();
+        assert_eq!(hit.tokens(), 3);
+        assert_eq!(hit.logits(), &[0.25; 5][..]);
+        // adopting the same key again dedups onto the resident Arc
+        let other = SnapshotRef::detached(state(9.0, 8), 3, vec![0.5; 5]);
+        let back = st.adopt(7, &[1, 2, 3], other);
+        assert!(Arc::ptr_eq(&back.0, &resident.0), "dedup must return the resident entry");
+        assert_eq!(st.stats().inserts, 1);
+    }
+
+    #[test]
+    fn adopt_rejected_over_budget_returns_the_detached_handle() {
+        let mut st = StateStore::new(cfg(8));
+        let snap = SnapshotRef::detached(state(0.0, 64), 4, vec![0.0; 8]);
+        let back = st.adopt(0, &[1, 2, 3, 4], snap.clone());
+        assert!(Arc::ptr_eq(&back.0, &snap.0), "rejection hands the detached copy back");
+        assert_eq!(st.len(), 0);
+        assert_eq!(st.stats().rejected, 1);
+    }
+
+    #[test]
+    fn exact_lookup_counts_hits_not_misses() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        assert!(st.lookup_exact(0, &[1, 2]).is_none());
+        let s = st.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "a probe miss must be free");
+        assert!(st.insert_with(0, &[1, 2], 4, || state(1.0, 4)));
+        // a shallower prefix entry must NOT satisfy an exact probe
+        assert!(st.lookup_exact(0, &[1, 2, 3]).is_none());
+        let s = st.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        assert!(st.lookup_exact(0, &[1, 2]).is_some());
+        let s = st.stats();
+        assert_eq!((s.hits, s.misses, s.tokens_skipped), (1, 0, 2));
+    }
+
+    #[test]
+    fn failed_exact_probe_does_not_refresh_recency() {
+        // budget of two entries; [1,1] is the LRU: an exact probe that
+        // *finds* it as a shallower prefix but then rejects it must not
+        // freshen it — failed probes must leave LRU order untouched
+        let mut st = StateStore::new(cfg(2 * cost(4, 2)));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        assert!(st.lookup_exact(0, &[1, 1, 5]).is_none(), "shallower entry must not hit");
+        assert!(st.insert_with(0, &[3, 3], 4, || state(3.0, 4)));
+        assert!(st.lookup(0, &[1, 1, 5], 2).is_none(), "[1,1] stays the LRU victim");
+        assert!(st.lookup(0, &[2, 2, 5], 2).is_some());
+    }
+
+    #[test]
+    fn pinned_gauge_tracks_held_handles() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        assert_eq!(st.stats().pinned, 0);
+        let pin = st.lookup(0, &[1, 1, 9], 2).unwrap();
+        assert_eq!(st.stats().pinned, 1);
+        let pin2 = st.lookup(0, &[2, 2, 9], 2).unwrap();
+        assert_eq!(st.stats().pinned, 2);
+        drop(pin);
+        assert_eq!(st.stats().pinned, 1);
+        drop(pin2);
+        assert_eq!(st.stats().pinned, 0);
     }
 
     #[test]

@@ -131,9 +131,9 @@ fn sixteen_concurrent_requests_match_serial_greedy() {
         test_model(2, 32, 64, 50),
         CoordinatorConfig { max_active: 16, ..Default::default() },
     );
-    let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| c.submit(r.clone()).unwrap()).collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let got = rx.recv().unwrap().unwrap().tokens;
+        let got = rx.wait_one().unwrap().tokens;
         assert_eq!(got, serial[i], "request {i} diverged from serial decode");
     }
     let m = c.metrics.lock().unwrap();

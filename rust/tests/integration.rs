@@ -155,10 +155,10 @@ fn coordinator_handles_mixed_workload() {
             req.top_k = 10;
             req.seed = i;
         }
-        rxs.push((i, coord.submit(req)));
+        rxs.push((i, coord.submit(req).unwrap()));
     }
     for (i, rx) in rxs {
-        let r = rx.recv().unwrap().unwrap();
+        let r = rx.wait_one().unwrap();
         assert_eq!(r.tokens.len(), 3 + (i % 7) as usize);
     }
     let m = coord.metrics.lock().unwrap();
@@ -183,9 +183,9 @@ fn staggered_finishes_preserve_outputs() {
         test_model(2, 32, 64, 50),
         CoordinatorConfig { max_active: 6, ..Default::default() },
     );
-    let rxs: Vec<_> = (0..6u64).map(|i| c.submit(mk_req(i))).collect();
+    let rxs: Vec<_> = (0..6u64).map(|i| c.submit(mk_req(i)).unwrap()).collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        assert_eq!(rx.recv().unwrap().unwrap().tokens, solo[i], "request {i}");
+        assert_eq!(rx.wait_one().unwrap().tokens, solo[i], "request {i}");
     }
 }
 
@@ -198,11 +198,11 @@ fn coordinator_fifo_admission_under_saturation() {
         CoordinatorConfig { max_active: 1, ..Default::default() },
     );
     let rxs: Vec<_> = (0..6)
-        .map(|i| coord.submit(GenRequest::greedy(vec![i as u32 + 1], 4)))
+        .map(|i| coord.submit(GenRequest::greedy(vec![i as u32 + 1], 4)).unwrap())
         .collect();
     let mut ids = Vec::new();
     for rx in rxs {
-        ids.push(rx.recv().unwrap().unwrap().request_id);
+        ids.push(rx.wait_one().unwrap().request_id);
     }
     let mut sorted = ids.clone();
     sorted.sort();

@@ -141,11 +141,11 @@ fn long_prompt_does_not_stall_decoders() {
         mk_model(),
         CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() },
     );
-    let rx_a = c.submit(req_a);
-    let rx_b = c.submit(req_b);
-    let rx_l = c.submit(req_l);
-    let ra = rx_a.recv().unwrap().unwrap();
-    let rb = rx_b.recv().unwrap().unwrap();
+    let rx_a = c.submit(req_a).unwrap();
+    let rx_b = c.submit(req_b).unwrap();
+    let rx_l = c.submit(req_l).unwrap();
+    let ra = rx_a.wait_one().unwrap();
+    let rb = rx_b.wait_one().unwrap();
     // both decoders are done; the 1k prompt must still be prefilling
     {
         let m = c.metrics.lock().unwrap();
@@ -153,7 +153,7 @@ fn long_prompt_does_not_stall_decoders() {
     }
     assert_eq!(ra.tokens, solo_a, "decoder A's tokens moved");
     assert_eq!(rb.tokens, solo_b, "decoder B's tokens moved");
-    let rl = rx_l.recv().unwrap().unwrap();
+    let rl = rx_l.wait_one().unwrap();
     assert_eq!(rl.tokens, solo_l, "long session's tokens moved");
     // TTFT tells the same story server-side: the decoders sample their
     // first token almost immediately, the long session only after its

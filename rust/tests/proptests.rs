@@ -204,10 +204,10 @@ fn prop_interleaving_preserves_outputs() {
             CoordinatorConfig { max_active: cap, ..Default::default() },
         );
         let rxs: Vec<_> = (0..5u32)
-            .map(|i| c.submit(GenRequest::greedy(vec![i + 1], 6)))
+            .map(|i| c.submit(GenRequest::greedy(vec![i + 1], 6)).unwrap())
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let got = rx.recv().unwrap().map_err(|e| e.to_string())?.tokens;
+            let got = rx.wait_one().map_err(|e| e.to_string())?.tokens;
             prop_assert!(got == reference[i], "cap={cap} req={i}: {got:?}");
         }
         Ok(())
@@ -226,15 +226,15 @@ fn prop_state_isolation_across_sessions() {
         );
         // same request submitted twice amid noise must match itself
         let probe = GenRequest::greedy(vec![7, 3, 9], 8);
-        let a = c.submit(probe.clone());
+        let a = c.submit(probe.clone()).unwrap();
         let noise: Vec<_> = (0..cap as u32)
-            .map(|i| c.submit(GenRequest::greedy(vec![i + 20], 10)))
+            .map(|i| c.submit(GenRequest::greedy(vec![i + 20], 10)).unwrap())
             .collect();
-        let b = c.submit(probe);
-        let ta = a.recv().unwrap().map_err(|e| e.to_string())?.tokens;
-        let tb = b.recv().unwrap().map_err(|e| e.to_string())?.tokens;
+        let b = c.submit(probe).unwrap();
+        let ta = a.wait_one().map_err(|e| e.to_string())?.tokens;
+        let tb = b.wait_one().map_err(|e| e.to_string())?.tokens;
         for rx in noise {
-            let _ = rx.recv().unwrap().map_err(|e| e.to_string())?;
+            let _ = rx.wait_one().map_err(|e| e.to_string())?;
         }
         prop_assert!(ta == tb, "probe diverged: {ta:?} vs {tb:?}");
         Ok(())

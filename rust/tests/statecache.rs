@@ -170,7 +170,12 @@ fn concurrent_sessions_share_one_snapshot() {
         .map(|i| {
             let c = Coordinator::spawn(
                 test_model(2, 32, 64, 50),
-                CoordinatorConfig { max_active: 1, prefill_chunk: 16, state_cache_bytes: 0 },
+                CoordinatorConfig {
+                    max_active: 1,
+                    prefill_chunk: 16,
+                    state_cache_bytes: 0,
+                    ..Default::default()
+                },
             );
             c.generate(GenRequest::greedy(mk_prompt(i), 5)).unwrap().tokens
         })
@@ -183,10 +188,10 @@ fn concurrent_sessions_share_one_snapshot() {
     let warm = c.generate(GenRequest::greedy(mk_prompt(99), 5)).unwrap();
     assert_eq!(warm.cached_prefix_tokens, 0);
     let rxs: Vec<_> = (0..6u32)
-        .map(|i| c.submit(GenRequest::greedy(mk_prompt(i), 5)))
+        .map(|i| c.submit(GenRequest::greedy(mk_prompt(i), 5)).unwrap())
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv().unwrap().unwrap();
+        let r = rx.wait_one().unwrap();
         assert!(
             r.cached_prefix_tokens >= 64,
             "wave request {i} resumed at {} < the shared 64-token prefix",

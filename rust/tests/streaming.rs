@@ -1,0 +1,401 @@
+//! Streaming session API: end-to-end invariants.
+//!
+//! * **Streaming** — every sampled token arrives as a `Token` event, in
+//!   order, before the branch's `Finished`.
+//! * **Cancellation** — `cancel()`/drop mid-prefill and mid-decode frees
+//!   the `max_active` slot within one scheduling cycle and never
+//!   corrupts batchmates (parity-checked against solo runs).
+//! * **Deadlines** — queued and active sessions that run out their
+//!   wall-clock budget finish with `FinishReason::DeadlineExceeded`.
+//! * **Backpressure** — a bounded admission queue rejects with
+//!   `SubmitError::QueueFull` instead of growing without bound.
+//! * **Fork determinism** — `n_best = N` branches with fixed seeds are
+//!   bit-identical to N sequential runs from the same prompt, on both
+//!   the exact and hardware backends, off exactly ONE prompt prefill.
+
+use std::time::Duration;
+
+use hfrwkv::coordinator::{
+    Coordinator, CoordinatorConfig, EngineModel, FinishReason, GenEvent, GenRequest, SubmitError,
+};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::{HwModel, RwkvModel};
+use hfrwkv::runtime::Variant;
+
+/// Wrapper that slows every forward so tests can deterministically catch
+/// sessions mid-flight (cancel/deadline/queue tests).  Math is untouched
+/// — parity assertions against the plain model stay valid.
+struct Slow<M>(M, Duration);
+
+impl<M: EngineModel> EngineModel for Slow<M> {
+    fn vocab(&self) -> usize {
+        self.0.vocab()
+    }
+
+    fn state_len(&self) -> usize {
+        self.0.state_len()
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.0.init_state()
+    }
+
+    fn forward(
+        &mut self,
+        state: &mut Vec<f32>,
+        token: u32,
+        variant: Variant,
+    ) -> hfrwkv::Result<Vec<f32>> {
+        std::thread::sleep(self.1);
+        self.0.forward(state, token, variant)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        variant: Variant,
+    ) -> hfrwkv::Result<Vec<f32>> {
+        std::thread::sleep(self.1);
+        self.0.prefill_chunk(state, tokens, variant)
+    }
+}
+
+fn slow_model(ms: u64) -> Slow<RwkvModel> {
+    Slow(test_model(2, 32, 64, 50), Duration::from_millis(ms))
+}
+
+#[test]
+fn cancel_mid_decode_frees_slot_and_preserves_batchmates() {
+    // victim A (long) + batchmate B share the batch; cancelling A must
+    // return A's partial tokens with FinishReason::Cancelled, leave B's
+    // tokens exactly its solo tokens, and free A's slot so a queued C
+    // can run to completion
+    let req_b = GenRequest::greedy(vec![2, 7, 9], 10);
+    let solo_b = {
+        let c = Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig { max_active: 1, ..Default::default() },
+        );
+        c.generate(req_b.clone()).unwrap().tokens
+    };
+
+    let c = Coordinator::spawn(
+        slow_model(2),
+        CoordinatorConfig { max_active: 2, ..Default::default() },
+    );
+    let mut a = c.submit(GenRequest::greedy(vec![5, 6], 10_000)).unwrap();
+    let b = c.submit(req_b).unwrap();
+    // wait until A is demonstrably mid-decode (a few tokens streamed)
+    let mut seen = 0;
+    while seen < 3 {
+        match a.recv().expect("A cannot finish 10k tokens this fast") {
+            GenEvent::Token { .. } => seen += 1,
+            GenEvent::Started { .. } => {}
+            ev => panic!("unexpected event before cancel: {ev:?}"),
+        }
+    }
+    a.cancel();
+    // drain A to its terminal: partial output, Cancelled
+    let ra = a.wait_one().unwrap();
+    assert_eq!(ra.finish, FinishReason::Cancelled);
+    assert!(!ra.tokens.is_empty() && ra.tokens.len() < 10_000, "{} tokens", ra.tokens.len());
+    // the batchmate is untouched
+    let rb = b.wait_one().unwrap();
+    assert_eq!(rb.finish, FinishReason::MaxTokens);
+    assert_eq!(rb.tokens, solo_b, "cancelling A corrupted batchmate B");
+    // the freed slot serves new work (max_active=2, A gone, B done)
+    let rc = c.generate(GenRequest::greedy(vec![1], 3)).unwrap();
+    assert_eq!(rc.tokens.len(), 3);
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.active_sessions, 0);
+}
+
+#[test]
+fn cancel_mid_prefill_frees_slot_and_preserves_batchmates() {
+    let req_b = GenRequest::greedy(vec![4, 4], 8);
+    let solo_b = {
+        let c = Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig { max_active: 1, ..Default::default() },
+        );
+        c.generate(req_b.clone()).unwrap().tokens
+    };
+
+    // 400-token prompt at chunk 4 and ≥2 ms per chunk: ~100 prefill
+    // cycles ≈ 200+ ms — the cancel below lands mid-prefill
+    let c = Coordinator::spawn(
+        slow_model(2),
+        CoordinatorConfig { max_active: 2, prefill_chunk: 4, ..Default::default() },
+    );
+    let long_prompt: Vec<u32> = (0..400u32).map(|t| (t * 11 + 5) % 50).collect();
+    let mut a = c.submit(GenRequest::greedy(long_prompt, 4)).unwrap();
+    let b = c.submit(req_b).unwrap();
+    // A admitted → it is prefilling; give it a few cycles then cancel
+    match a.recv().unwrap() {
+        GenEvent::Started { branch: 0, .. } => {}
+        ev => panic!("expected Started, got {ev:?}"),
+    }
+    std::thread::sleep(Duration::from_millis(20));
+    a.cancel();
+    let ra = a.wait_one().unwrap();
+    assert_eq!(ra.finish, FinishReason::Cancelled);
+    assert!(ra.tokens.is_empty(), "a prefilling session has no output tokens");
+    let rb = b.wait_one().unwrap();
+    assert_eq!(rb.tokens, solo_b, "cancelling A mid-prefill corrupted batchmate B");
+    // slot is free again
+    let rc = c.generate(GenRequest::greedy(vec![3], 2)).unwrap();
+    assert_eq!(rc.tokens.len(), 2);
+    assert_eq!(c.metrics.lock().unwrap().cancelled, 1);
+}
+
+#[test]
+fn dropping_the_stream_cancels() {
+    let c = Coordinator::spawn(
+        slow_model(3),
+        CoordinatorConfig { max_active: 1, ..Default::default() },
+    );
+    {
+        let _abandoned = c.submit(GenRequest::greedy(vec![1, 2], 10_000)).unwrap();
+        // dropped here, mid-generation
+    }
+    // with max_active = 1 this can only complete once the abandoned
+    // session was reaped and its slot freed
+    let r = c.generate(GenRequest::greedy(vec![7], 3)).unwrap();
+    assert_eq!(r.tokens.len(), 3);
+    assert_eq!(c.metrics.lock().unwrap().cancelled, 1);
+}
+
+#[test]
+fn deadline_exceeded_mid_decode_returns_partial_tokens() {
+    let c = Coordinator::spawn(
+        slow_model(3),
+        CoordinatorConfig { max_active: 2, ..Default::default() },
+    );
+    let req = GenRequest::builder(vec![1, 2], 10_000)
+        .deadline(Duration::from_millis(60))
+        .build();
+    let r = c.generate(req).unwrap();
+    assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+    assert!(r.tokens.len() < 10_000);
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.deadline_exceeded, 1);
+}
+
+#[test]
+fn deadline_expires_in_queue_without_a_slot() {
+    let c = Coordinator::spawn(
+        slow_model(3),
+        CoordinatorConfig { max_active: 1, ..Default::default() },
+    );
+    let hog = c.submit(GenRequest::greedy(vec![5], 10_000)).unwrap();
+    let req = GenRequest::builder(vec![1], 5)
+        .deadline(Duration::from_millis(30))
+        .build();
+    let r = c.generate(req).unwrap();
+    assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+    assert!(r.tokens.is_empty(), "never admitted → no tokens");
+    assert!(r.queue_seconds >= 0.03, "spent its whole life queued");
+    hog.cancel();
+    let _ = hog.wait_one().unwrap();
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.cancelled, 1);
+}
+
+#[test]
+fn bounded_queue_rejects_with_queue_full() {
+    let c = Coordinator::spawn(
+        slow_model(5),
+        CoordinatorConfig { max_active: 1, max_queue: 2, ..Default::default() },
+    );
+    // occupy the one slot and confirm admission (queue back to empty)
+    let mut hog = c.submit(GenRequest::greedy(vec![1], 10_000)).unwrap();
+    match hog.recv().unwrap() {
+        GenEvent::Started { .. } => {}
+        ev => panic!("expected Started, got {ev:?}"),
+    }
+    // fill the bounded queue
+    let q1 = c.submit(GenRequest::greedy(vec![2], 2)).unwrap();
+    let q2 = c.submit(GenRequest::greedy(vec![3], 2)).unwrap();
+    // one more must be rejected, typed
+    match c.submit(GenRequest::greedy(vec![4], 2)) {
+        Err(SubmitError::QueueFull { limit }) => assert_eq!(limit, 2),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    {
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.enqueued, 3, "the rejected request was never enqueued");
+    }
+    // free everything: the queued requests then complete normally
+    hog.cancel();
+    assert_eq!(hog.wait_one().unwrap().finish, FinishReason::Cancelled);
+    assert_eq!(q1.wait_one().unwrap().tokens.len(), 2);
+    assert_eq!(q2.wait_one().unwrap().tokens.len(), 2);
+}
+
+#[test]
+fn priority_admits_before_fifo() {
+    let c = Coordinator::spawn(
+        slow_model(5),
+        CoordinatorConfig { max_active: 1, ..Default::default() },
+    );
+    let mut hog = c.submit(GenRequest::greedy(vec![1], 10_000)).unwrap();
+    match hog.recv().unwrap() {
+        GenEvent::Started { .. } => {}
+        ev => panic!("expected Started, got {ev:?}"),
+    }
+    // low-priority B queued first, high-priority C second
+    let b = c.submit(GenRequest::builder(vec![2], 2).priority(0).build()).unwrap();
+    let hi = c.submit(GenRequest::builder(vec![3], 2).priority(5).build()).unwrap();
+    hog.cancel();
+    let _ = hog.wait_one().unwrap();
+    let r_hi = hi.wait_one().unwrap();
+    let r_b = b.wait_one().unwrap();
+    // C was submitted after B but admitted first: it waited less
+    assert!(
+        r_hi.queue_seconds < r_b.queue_seconds,
+        "priority ignored: hi waited {:.4}s, lo waited {:.4}s",
+        r_hi.queue_seconds,
+        r_b.queue_seconds
+    );
+}
+
+#[test]
+fn fork_streams_all_branches_with_one_prefill() {
+    let prompt: Vec<u32> = (0..32u32).map(|t| (t * 7 + 3) % 50).collect();
+    let n = 8usize;
+    let c = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 16, ..Default::default() },
+    );
+    let req = GenRequest::builder(prompt.clone(), 5)
+        .temperature(0.8)
+        .top_k(12)
+        .seed(123)
+        .n_best(n)
+        .build();
+    let mut stream = c.submit(req).unwrap();
+    let mut started = vec![false; n];
+    let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut finished: Vec<Option<FinishReason>> = vec![None; n];
+    while let Some(ev) = stream.recv() {
+        match ev {
+            GenEvent::Started { branch, .. } => {
+                assert!(!started[branch], "duplicate Started for branch {branch}");
+                started[branch] = true;
+            }
+            GenEvent::Token { branch, token, seq_idx } => {
+                assert_eq!(seq_idx, tokens[branch].len(), "branch {branch} out of order");
+                tokens[branch].push(token);
+            }
+            GenEvent::Finished(r) => {
+                assert_eq!(tokens[r.branch], r.tokens, "branch {} stream/response mismatch", r.branch);
+                finished[r.branch] = Some(r.finish);
+            }
+            GenEvent::Error { branch, message } => panic!("branch {branch} errored: {message}"),
+        }
+    }
+    assert!(started.iter().all(|&s| s), "every branch must announce itself");
+    assert!(finished.iter().all(|f| f == &Some(FinishReason::MaxTokens)));
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(
+        m.prompt_tokens_prefilled,
+        prompt.len() as u64,
+        "n_best = {n} must prefill the prompt exactly once"
+    );
+}
+
+#[test]
+fn fork_branches_match_sequential_runs_exact_and_hw() {
+    let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+    let prompt: Vec<u32> = (0..20u32).map(|t| (t * 13 + 2) % 50).collect();
+    let n = 4usize;
+    let mk_req = |seed: u64, n_best: usize| {
+        GenRequest::builder(prompt.clone(), 6)
+            .temperature(0.9)
+            .top_k(10)
+            .seed(seed)
+            .n_best(n_best)
+            .build()
+    };
+
+    // exact backend
+    let solo: Vec<Vec<u32>> = (0..n as u64)
+        .map(|b| {
+            let c = Coordinator::spawn(
+                test_model(2, 32, 64, 50),
+                CoordinatorConfig { max_active: 1, ..Default::default() },
+            );
+            c.generate(mk_req(50 + b, 1)).unwrap().tokens
+        })
+        .collect();
+    let c = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 8, ..Default::default() },
+    );
+    let rs = c.generate_all(mk_req(50, n)).unwrap();
+    for (b, r) in rs.iter().enumerate() {
+        assert_eq!(r.tokens, solo[b], "exact branch {b} diverged");
+    }
+
+    // hardware-numerics backend
+    let mk_hw = || HwModel::from_f32(test_model(2, 32, 64, 50), &calib);
+    let solo_hw: Vec<Vec<u32>> = (0..n as u64)
+        .map(|b| {
+            let c = Coordinator::spawn(
+                mk_hw(),
+                CoordinatorConfig { max_active: 1, ..Default::default() },
+            );
+            c.generate(mk_req(50 + b, 1)).unwrap().tokens
+        })
+        .collect();
+    let c = Coordinator::spawn(
+        mk_hw(),
+        CoordinatorConfig { max_active: 8, ..Default::default() },
+    );
+    let rs = c.generate_all(mk_req(50, n)).unwrap();
+    for (b, r) in rs.iter().enumerate() {
+        assert_eq!(r.tokens, solo_hw[b], "hw branch {b} diverged");
+    }
+}
+
+#[test]
+fn cancelling_a_fork_reaps_every_branch() {
+    let prompt: Vec<u32> = (0..8u32).collect();
+    let c = Coordinator::spawn(
+        slow_model(3),
+        CoordinatorConfig { max_active: 8, ..Default::default() },
+    );
+    let req = GenRequest::builder(prompt, 10_000)
+        .temperature(0.7)
+        .top_k(8)
+        .seed(3)
+        .n_best(4)
+        .build();
+    let mut stream = c.submit(req).unwrap();
+    // wait until at least one branch streams a token (fork happened)
+    loop {
+        match stream.recv().unwrap() {
+            GenEvent::Token { .. } => break,
+            GenEvent::Started { .. } => {}
+            ev => panic!("unexpected {ev:?}"),
+        }
+    }
+    stream.cancel();
+    let results = stream.wait();
+    assert_eq!(results.len(), 4);
+    for (b, r) in results.into_iter().enumerate() {
+        let r = r.unwrap();
+        assert_eq!(r.finish, FinishReason::Cancelled, "branch {b}");
+    }
+    // one more full request: its terminal event is emitted after the
+    // gauge mirror, so the gauges below are guaranteed current
+    let _ = c.generate(GenRequest::greedy(vec![1], 1)).unwrap();
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.cancelled, 4, "every branch reaps");
+    assert_eq!(m.active_sessions, 0);
+    assert_eq!(m.prefix_cache_pinned, 0, "reaped branches release their pins");
+}
