@@ -1,0 +1,259 @@
+//! Chaos soak sweep: the fault-tolerant serving stack under a seeded
+//! fault-injection grid (fault rate × batch capacity), plus the cost of
+//! the health guards themselves at zero fault rate.
+//!
+//! Each cell drives a fixed request mix through a coordinator wrapping
+//! [`hfrwkv::chaos::ChaosModel`] and accounts every terminal: clean
+//! finishes must be **bit-exact** with the fault-free run (rollback
+//! recovery is a replay, not an approximation), typed faults must carry
+//! a healthy token prefix, and the gauges must drain to zero.  The
+//! structural invariants always run; under `CHAOS_SOAK_ASSERT=1` any
+//! violation hard-fails the bench (what CI sets).
+//!
+//! Emits `BENCH_chaos.json` so future PRs can track recovery rates and
+//! guard overhead.
+
+use std::time::Instant;
+
+use hfrwkv::chaos::{ChaosConfig, ChaosModel};
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, FaultPolicy, FinishReason, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::RwkvModel;
+use hfrwkv::util::bench::{section, BenchReport};
+
+const N_REQUESTS: u32 = 24;
+const TOKENS_PER_REQUEST: usize = 8;
+const RATES: [f64; 3] = [0.0, 0.05, 0.2];
+const CAPS: [usize; 2] = [2, 8];
+
+fn model() -> RwkvModel {
+    test_model(2, 32, 64, 50)
+}
+
+fn requests() -> Vec<GenRequest> {
+    (0..N_REQUESTS)
+        .map(|i| GenRequest::greedy(vec![(i * 7 + 1) % 50, (i * 3 + 2) % 50], TOKENS_PER_REQUEST))
+        .collect()
+}
+
+fn policy(health_guards: bool) -> FaultPolicy {
+    // deep retry budget + zero backoff: the soak measures recovery, not
+    // sleep time
+    FaultPolicy { health_guards, max_retries: 12, retry_backoff_ms: 0 }
+}
+
+struct CellOutcome {
+    clean: usize,
+    numeric_faulted: usize,
+    errored: usize,
+    mismatched: usize,
+    wall_s: f64,
+    retries: u64,
+    rollbacks: u64,
+    panics_caught: u64,
+    injected: u64,
+    gauges_zero: bool,
+    cache_poisoned: u64,
+    restarts: u64,
+}
+
+/// One sweep cell: N requests through a chaos coordinator; terminals
+/// accounted against the fault-free expected tokens.
+fn run_cell(rate: f64, cap: usize, seed: u64, expected: &[Vec<u32>]) -> CellOutcome {
+    let chaotic = ChaosModel::new(
+        model(),
+        ChaosConfig { seed, fault_rate: rate, ..ChaosConfig::default() },
+    );
+    let log = chaotic.log_handle();
+    let cfg = CoordinatorConfig { max_active: cap, fault: policy(true), ..Default::default() };
+    let t0 = Instant::now();
+    let c = Coordinator::spawn(chaotic, cfg);
+    let streams: Vec<_> = requests()
+        .into_iter()
+        .map(|r| c.submit(r).expect("soak stays under max_queue"))
+        .collect();
+    let (mut clean, mut numeric_faulted, mut errored, mut mismatched) = (0, 0, 0, 0);
+    for (i, s) in streams.into_iter().enumerate() {
+        // wait_one always returns — panic isolation means a faulting
+        // model can never hang a stream (regression-tested in
+        // rust/tests/chaos.rs)
+        match s.wait_one() {
+            Ok(r) => match r.finish {
+                FinishReason::MaxTokens => {
+                    if r.tokens == expected[i] {
+                        clean += 1;
+                    } else {
+                        mismatched += 1;
+                    }
+                }
+                FinishReason::NumericFault => {
+                    if r.tokens.len() < expected[i].len()
+                        && r.tokens == expected[i][..r.tokens.len()]
+                    {
+                        numeric_faulted += 1;
+                    } else {
+                        mismatched += 1;
+                    }
+                }
+                _ => mismatched += 1,
+            },
+            Err(_) => errored += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = c.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let injected = log.lock().unwrap_or_else(|e| e.into_inner()).corruptions();
+    CellOutcome {
+        clean,
+        numeric_faulted,
+        errored,
+        mismatched,
+        wall_s,
+        retries: m.fault_retries,
+        rollbacks: m.fault_rollbacks,
+        panics_caught: m.panics_caught,
+        injected,
+        gauges_zero: m.active_sessions == 0 && m.queue_depth == 0,
+        cache_poisoned: m.prefix_cache_quarantined,
+        restarts: m.worker_restarts,
+    }
+}
+
+/// Aggregate throughput of the request mix through a plain (un-wrapped)
+/// model coordinator under the given fault policy — guards-on vs
+/// guards-off is the cost of the per-cycle NaN scans and last-good
+/// snapshots on the hot path.
+fn throughput(health_guards: bool, cap: usize) -> f64 {
+    let cfg = CoordinatorConfig {
+        max_active: cap,
+        fault: policy(health_guards),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let c = Coordinator::spawn(model(), cfg);
+    let streams: Vec<_> = requests()
+        .into_iter()
+        .map(|r| c.submit(r).expect("soak stays under max_queue"))
+        .collect();
+    let mut total = 0usize;
+    for s in streams {
+        total += s.wait_one().unwrap().tokens.len();
+    }
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let hard_assert = matches!(std::env::var("CHAOS_SOAK_ASSERT").as_deref(), Ok("1"));
+    let mut report = BenchReport::new("chaos");
+    let mut violations: Vec<String> = Vec::new();
+
+    // the injected panics would each print a full default-hook backtrace
+    // — silence exactly those (this binary is single-purpose, and real
+    // assertion failures still report through the kept default hook)
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<&str>()
+            .is_some_and(|s| s.contains("chaos: injected panic"));
+        if !injected {
+            default_hook(info);
+        }
+    }));
+
+    // fault-free ground truth (tokens are independent of batching and
+    // of the chaos wrapper at rate 0)
+    let expected: Vec<Vec<u32>> = {
+        let c = Coordinator::spawn(model(), CoordinatorConfig::default());
+        requests()
+            .into_iter()
+            .map(|r| c.generate(r).expect("fault-free run cannot fail").tokens)
+            .collect()
+    };
+
+    section("chaos soak: fault rate x max_active (24 req x 8 tok, seeded)");
+    for &rate in &RATES {
+        for &cap in &CAPS {
+            let seed = (rate * 100.0) as u64 * 100 + cap as u64;
+            let o = run_cell(rate, cap, seed, &expected);
+            let key = format!("rate{:02}_b{cap}", (rate * 100.0) as u64);
+            println!(
+                "  rate={rate:<4} B={cap}: {:>2} clean / {} numeric / {} errored \
+                 ({} injected, {} retries, {} rollbacks, {} panics caught) in {:.2}s",
+                o.clean,
+                o.numeric_faulted,
+                o.errored,
+                o.injected,
+                o.retries,
+                o.rollbacks,
+                o.panics_caught,
+                o.wall_s
+            );
+            report.record(&format!("{key}_clean"), o.clean as f64);
+            report.record(&format!("{key}_numeric_faulted"), o.numeric_faulted as f64);
+            report.record(&format!("{key}_errored"), o.errored as f64);
+            report.record(&format!("{key}_injected"), o.injected as f64);
+            report.record(&format!("{key}_retries"), o.retries as f64);
+            report.record(&format!("{key}_rollbacks"), o.rollbacks as f64);
+            report.record(&format!("{key}_wall_s"), o.wall_s);
+
+            // invariants — structural, independent of timing
+            if o.mismatched > 0 {
+                violations.push(format!(
+                    "{key}: {} terminals carried non-bit-exact tokens",
+                    o.mismatched
+                ));
+            }
+            if o.clean + o.numeric_faulted + o.errored != N_REQUESTS as usize {
+                violations.push(format!("{key}: a request lost its terminal"));
+            }
+            if !o.gauges_zero {
+                violations.push(format!("{key}: gauges did not drain to zero"));
+            }
+            if o.cache_poisoned > 0 {
+                violations.push(format!(
+                    "{key}: {} poisoned snapshots reached the cache door with guards on",
+                    o.cache_poisoned
+                ));
+            }
+            if o.restarts > 0 {
+                violations.push(format!("{key}: in-guard faults escalated to the supervisor"));
+            }
+            if rate == 0.0 && (o.clean != N_REQUESTS as usize || o.injected != 0) {
+                violations.push(format!("{key}: zero-rate cell must be all-clean"));
+            }
+        }
+    }
+
+    section("health-guard overhead at zero fault rate (plain model)");
+    for &cap in &CAPS {
+        let off = throughput(false, cap);
+        let on = throughput(true, cap);
+        let overhead = off / on - 1.0;
+        println!(
+            "  B={cap}: guards off {off:>9.0} tok/s, on {on:>9.0} tok/s \
+             ({:+.1}% overhead)",
+            overhead * 100.0
+        );
+        report.record(&format!("guards_off_tok_s_b{cap}"), off);
+        report.record(&format!("guards_on_tok_s_b{cap}"), on);
+        report.record(&format!("guard_overhead_b{cap}"), overhead);
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
+
+    if violations.is_empty() {
+        println!("all soak invariants held");
+    } else {
+        for v in &violations {
+            eprintln!("VIOLATION: {v}");
+        }
+        if hard_assert {
+            panic!("{} chaos-soak invariant violations", violations.len());
+        }
+        eprintln!("WARNING: set CHAOS_SOAK_ASSERT=1 to hard-fail on these");
+    }
+}

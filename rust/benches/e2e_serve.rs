@@ -1,14 +1,16 @@
 //! End-to-end serving benchmark: batched-vs-sequential coordinator
 //! decode sweep over batch capacities (the §Perf L3-3 weight-reuse
-//! claim, measured), open-loop Poisson load, plus PJRT step/prefill
-//! latency on the trained artifacts when present (the E7 numbers).
+//! claim, measured), the fault-guard overhead at max_active=8 (must
+//! stay under 3%; hard-fails under `E2E_BENCH_ASSERT=1`), open-loop
+//! Poisson load, plus PJRT step/prefill latency on the trained
+//! artifacts when present (the E7 numbers).
 //!
 //! Emits `BENCH_e2e_serve.json` so future PRs can track the trajectory.
 
 use std::path::Path;
 use std::time::Instant;
 
-use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, GenRequest};
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, FaultPolicy, GenRequest};
 use hfrwkv::model::rwkv::testing::test_model;
 use hfrwkv::model::RwkvModel;
 use hfrwkv::runtime::{RwkvRuntime, Variant};
@@ -95,6 +97,58 @@ fn main() {
         report.record(&format!("sequential_tok_s_b{cap}"), *seq_tps);
         report.record(&format!("batched_tok_s_b{cap}"), *bat_tps);
         report.record(&format!("speedup_b{cap}"), speedup);
+    }
+
+    section("fault-guard overhead (guards on vs off, 32 req x 32 tok, max_active=8)");
+    // the price of the robustness layer on the fault-free hot path:
+    // per-cycle NaN/Inf panel scans plus the last-good rollback
+    // snapshots.  Best-of-3 per mode to tame scheduler noise; the < 3%
+    // bound hard-fails only under E2E_BENCH_ASSERT=1 (wall-clock ratios
+    // on shared runners must not gate merges).
+    let guard_run = |guards: bool| -> f64 {
+        (0..3)
+            .map(|_| {
+                let cfg = CoordinatorConfig {
+                    max_active: 8,
+                    fault: FaultPolicy {
+                        health_guards: guards,
+                        max_retries: if guards { 2 } else { 0 },
+                        retry_backoff_ms: 0,
+                    },
+                    ..Default::default()
+                };
+                let t0 = Instant::now();
+                let coord = Coordinator::spawn(test_model(4, 128, 512, 128), cfg);
+                let rxs: Vec<_> = (0..N_REQUESTS)
+                    .map(|i| {
+                        coord
+                            .submit(GenRequest::greedy(vec![i % 128], TOKENS_PER_REQUEST))
+                            .expect("bench stays under max_queue")
+                    })
+                    .collect();
+                let total: usize =
+                    rxs.into_iter().map(|rx| rx.wait_one().unwrap().tokens.len()).sum();
+                total as f64 / t0.elapsed().as_secs_f64()
+            })
+            .fold(0.0, f64::max)
+    };
+    let guards_off = guard_run(false);
+    let guards_on = guard_run(true);
+    let overhead = guards_off / guards_on - 1.0;
+    println!(
+        "  guards off {guards_off:>9.0} tok/s, on {guards_on:>9.0} tok/s \
+         ({:+.1}% overhead)",
+        overhead * 100.0
+    );
+    report.record("guards_off_tok_s_b8", guards_off);
+    report.record("guards_on_tok_s_b8", guards_on);
+    report.record("guard_overhead_b8", overhead);
+    if overhead >= 0.03 {
+        let msg = format!("fault-guard overhead {:.1}% >= 3% at max_active=8", overhead * 100.0);
+        if matches!(std::env::var("E2E_BENCH_ASSERT").as_deref(), Ok("1")) {
+            panic!("{msg}");
+        }
+        eprintln!("WARNING: {msg}");
     }
 
     section("open-loop load (Poisson arrivals, native model, max_active=4)");

@@ -1,0 +1,391 @@
+//! Deterministic fault injection: make any [`EngineModel`] misbehave on
+//! a seeded schedule.
+//!
+//! [`ChaosModel`] wraps a real model and, per guarded call (`forward`,
+//! `forward_batch`, `prefill_chunk`), draws from a private [`Rng64`]
+//! whether to inject a fault and which kind: a **panic** (thrown *after*
+//! the real call, so session state has genuinely advanced and only
+//! rollback can undo it), **NaN logits** (one victim slot of the
+//! returned/written panel), **NaN state** (scribbled into one victim's
+//! recurrent state), or **latency** (a sleep before the call, exercising
+//! timeout/deadline paths without corrupting anything).
+//!
+//! The draw sequence is a pure function of the seed and the call
+//! sequence: one uniform draw per call, plus one kind-draw (and for
+//! batch calls one victim-draw) when the call faults.  Engine-level
+//! tests drive a fully deterministic call sequence, so the whole fault
+//! schedule — and therefore every retry and rollback — replays exactly
+//! (`rust/tests/chaos.rs`).  Under the threaded coordinator the *cycle
+//! boundaries* depend on timing, so coordinator soaks assert the
+//! fault-tolerance invariants (every request reaches exactly one
+//! terminal, gauges drain to zero, the cache holds no poison) rather
+//! than exact counts.
+//!
+//! The injection log is shared behind an `Arc` so a test can keep a
+//! handle while the coordinator owns the model on its worker thread.
+
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::EngineModel;
+use crate::runtime::Variant;
+use crate::Rng64;
+
+/// What to inject, how often, on what schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Seed of the injection schedule (same seed + same call sequence =
+    /// same faults, bit for bit).
+    pub seed: u64,
+    /// Per-call probability of injecting a fault, in [0, 1].  0 makes
+    /// the wrapper a bit-exact passthrough.
+    pub fault_rate: f64,
+    /// Enable panic injection.
+    pub panics: bool,
+    /// Enable NaN-in-logits injection.
+    pub nan_logits: bool,
+    /// Enable NaN-in-state injection.
+    pub nan_state: bool,
+    /// Enable latency injection (sleep `latency_ms` before the call).
+    pub latency: bool,
+    pub latency_ms: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            fault_rate: 0.0,
+            panics: true,
+            nan_logits: true,
+            nan_state: true,
+            latency: false,
+            latency_ms: 1,
+        }
+    }
+}
+
+/// Cumulative injection counters (shared — see [`ChaosModel::log`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InjectionLog {
+    /// Guarded calls seen (faulted or not).
+    pub calls: u64,
+    pub panics: u64,
+    pub nan_logits: u64,
+    pub nan_state: u64,
+    pub latency: u64,
+}
+
+impl InjectionLog {
+    /// Total corrupting injections (latency excluded — it delays but
+    /// never corrupts).
+    pub fn corruptions(&self) -> u64 {
+        self.panics + self.nan_logits + self.nan_state
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    Panic,
+    NanLogits,
+    NanState,
+    Latency,
+}
+
+/// A fault-injecting [`EngineModel`] wrapper (see the module docs).
+pub struct ChaosModel<M: EngineModel> {
+    inner: M,
+    cfg: ChaosConfig,
+    rng: Rng64,
+    log: Arc<Mutex<InjectionLog>>,
+}
+
+fn locked(log: &Arc<Mutex<InjectionLog>>) -> std::sync::MutexGuard<'_, InjectionLog> {
+    // the log is plain counters — always valid even if a panicking
+    // injection poisoned the mutex
+    log.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl<M: EngineModel> ChaosModel<M> {
+    pub fn new(inner: M, cfg: ChaosConfig) -> ChaosModel<M> {
+        ChaosModel { inner, cfg, rng: Rng64::new(cfg.seed), log: Arc::default() }
+    }
+
+    /// Snapshot of the injection counters.
+    pub fn log(&self) -> InjectionLog {
+        *locked(&self.log)
+    }
+
+    /// Shared handle to the counters — keep one before handing the
+    /// model to a coordinator, which owns it on the worker thread.
+    pub fn log_handle(&self) -> Arc<Mutex<InjectionLog>> {
+        Arc::clone(&self.log)
+    }
+
+    /// One schedule step: decide this call's fault.  Exactly one
+    /// uniform draw per call (plus one kind-draw when faulting), so the
+    /// schedule stays aligned with the call index no matter what fired
+    /// before.
+    fn draw(&mut self) -> Option<Fault> {
+        locked(&self.log).calls += 1;
+        let faulted = self.rng.next_f64() < self.cfg.fault_rate;
+        let mut kinds: Vec<Fault> = Vec::with_capacity(4);
+        if self.cfg.panics {
+            kinds.push(Fault::Panic);
+        }
+        if self.cfg.nan_logits {
+            kinds.push(Fault::NanLogits);
+        }
+        if self.cfg.nan_state {
+            kinds.push(Fault::NanState);
+        }
+        if self.cfg.latency {
+            kinds.push(Fault::Latency);
+        }
+        if !faulted || kinds.is_empty() {
+            return None;
+        }
+        Some(kinds[self.rng.below(kinds.len())])
+    }
+
+    /// Pre-call side of a fault (latency fires here; everything else
+    /// fires after the real call so the state has genuinely advanced).
+    fn before(&mut self, fault: Option<Fault>) {
+        if fault == Some(Fault::Latency) {
+            locked(&self.log).latency += 1;
+            std::thread::sleep(Duration::from_millis(self.cfg.latency_ms));
+        }
+    }
+
+    /// Post-call side: corrupt the outputs.  The log is bumped BEFORE a
+    /// panic is thrown, so counters stay truthful across unwinds.
+    fn after(
+        &mut self,
+        fault: Option<Fault>,
+        logits: &mut [f32],
+        state: &mut [f32],
+    ) {
+        match fault {
+            Some(Fault::Panic) => {
+                locked(&self.log).panics += 1;
+                panic!("chaos: injected panic");
+            }
+            Some(Fault::NanLogits) => {
+                locked(&self.log).nan_logits += 1;
+                if let Some(x) = logits.first_mut() {
+                    *x = f32::NAN;
+                }
+            }
+            Some(Fault::NanState) => {
+                locked(&self.log).nan_state += 1;
+                if !state.is_empty() {
+                    let i = self.rng.below(state.len());
+                    state[i] = f32::NAN;
+                }
+            }
+            Some(Fault::Latency) | None => {}
+        }
+    }
+}
+
+impl<M: EngineModel> EngineModel for ChaosModel<M> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn state_len(&self) -> usize {
+        self.inner.state_len()
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.inner.init_state()
+    }
+
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>> {
+        let fault = self.draw();
+        self.before(fault);
+        let mut logits = self.inner.forward(state, token, variant)?;
+        self.after(fault, &mut logits, state);
+        Ok(logits)
+    }
+
+    fn forward_batch(
+        &mut self,
+        states: &mut [&mut Vec<f32>],
+        tokens: &[u32],
+        variant: Variant,
+        logits: &mut Vec<f32>,
+    ) -> Vec<Option<anyhow::Error>> {
+        let fault = self.draw();
+        self.before(fault);
+        let outcomes = self.inner.forward_batch(states, tokens, variant, logits);
+        // one victim slot per faulting batch call — the batchmates'
+        // outputs stay pristine, which is exactly what the engine's
+        // per-session isolation must preserve
+        if fault == Some(Fault::NanLogits) || fault == Some(Fault::NanState) {
+            let vocab = self.inner.vocab();
+            let victim = self.rng.below(states.len().max(1));
+            match fault {
+                Some(Fault::NanLogits) => {
+                    locked(&self.log).nan_logits += 1;
+                    if let Some(x) = logits.get_mut(victim * vocab) {
+                        *x = f32::NAN;
+                    }
+                }
+                _ => {
+                    locked(&self.log).nan_state += 1;
+                    if let Some(s) = states.get_mut(victim) {
+                        if let Some(x) = s.first_mut() {
+                            *x = f32::NAN;
+                        }
+                    }
+                }
+            }
+        } else {
+            self.after(fault, &mut [], &mut []);
+        }
+        outcomes
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        variant: Variant,
+    ) -> Result<Vec<f32>> {
+        let fault = self.draw();
+        self.before(fault);
+        let mut logits = self.inner.prefill_chunk(state, tokens, variant)?;
+        self.after(fault, &mut logits, state);
+        Ok(logits)
+    }
+
+    fn take_clip_events(&mut self) -> u64 {
+        self.inner.take_clip_events()
+    }
+
+    fn snapshot_state(&mut self, state: &[f32]) -> Vec<f32> {
+        self.inner.snapshot_state(state)
+    }
+
+    fn restore_state(&mut self, snapshot: &[f32], state: &mut Vec<f32>) {
+        self.inner.restore_state(snapshot, state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::rwkv::testing::test_model;
+
+    fn chaos(rate: f64, seed: u64) -> ChaosModel<crate::model::RwkvModel> {
+        ChaosModel::new(
+            test_model(2, 32, 64, 50),
+            ChaosConfig { seed, fault_rate: rate, ..ChaosConfig::default() },
+        )
+    }
+
+    #[test]
+    fn zero_rate_is_bitexact_passthrough() {
+        let mut raw = test_model(2, 32, 64, 50);
+        let mut wrapped = chaos(0.0, 9);
+        let mut sr = EngineModel::init_state(&raw);
+        let mut sw = wrapped.init_state();
+        for t in [1u32, 5, 9, 2] {
+            let lr = raw.forward(&mut sr, t, Variant::Exact).unwrap();
+            let lw = wrapped.forward(&mut sw, t, Variant::Exact).unwrap();
+            assert_eq!(lr, lw);
+        }
+        assert_eq!(sr, sw);
+        let log = wrapped.log();
+        assert_eq!(log.calls, 4);
+        assert_eq!(log.corruptions(), 0);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_at_fixed_seed() {
+        // NaN-only faults so the call sequence itself never diverges
+        let cfg = ChaosConfig {
+            seed: 42,
+            fault_rate: 0.5,
+            panics: false,
+            nan_logits: true,
+            nan_state: false,
+            ..ChaosConfig::default()
+        };
+        let run = || {
+            let mut m = ChaosModel::new(test_model(2, 32, 64, 50), cfg);
+            let mut st = m.init_state();
+            let logits: Vec<Vec<f32>> = (0..20u32)
+                .map(|t| m.forward(&mut st, t % 50, Variant::Exact).unwrap())
+                .collect();
+            (logits, st, m.log())
+        };
+        let (la, sa, ga) = run();
+        let (lb, sb, gb) = run();
+        // bitwise comparison must include the NaNs, so compare bits
+        let bits = |ls: &[Vec<f32>]| -> Vec<u32> {
+            ls.iter().flatten().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&la), bits(&lb));
+        assert_eq!(sa, sb);
+        assert_eq!(ga, gb);
+        assert!(ga.nan_logits > 0, "rate 0.5 over 20 calls must fault: {ga:?}");
+    }
+
+    #[test]
+    fn injected_panic_is_counted_before_unwinding() {
+        let mut m = ChaosModel::new(
+            test_model(2, 32, 64, 50),
+            ChaosConfig {
+                seed: 3,
+                fault_rate: 1.0, // every call faults
+                panics: true,
+                nan_logits: false,
+                nan_state: false,
+                ..ChaosConfig::default()
+            },
+        );
+        let handle = m.log_handle();
+        let mut st = m.init_state();
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.forward(&mut st, 1, Variant::Exact)
+        }));
+        assert!(out.is_err(), "rate 1.0 with only panics enabled must panic");
+        let log = *handle.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        assert_eq!((log.calls, log.panics), (1, 1));
+    }
+
+    #[test]
+    fn nan_state_injection_poisons_exactly_one_slot() {
+        let mut m = ChaosModel::new(
+            test_model(2, 32, 64, 50),
+            ChaosConfig {
+                seed: 5,
+                fault_rate: 1.0,
+                panics: false,
+                nan_logits: false,
+                nan_state: true,
+                ..ChaosConfig::default()
+            },
+        );
+        let mut a = m.init_state();
+        let mut b = m.init_state();
+        let mut logits = Vec::new();
+        let outcomes = {
+            let mut refs = vec![&mut a, &mut b];
+            let tokens = [1u32, 2];
+            m.forward_batch(&mut refs, &tokens, Variant::Exact, &mut logits)
+        };
+        assert!(outcomes.iter().all(|o| o.is_none()));
+        let poisoned = [&a, &b]
+            .iter()
+            .filter(|s| s.iter().any(|x| !x.is_finite()))
+            .count();
+        assert_eq!(poisoned, 1, "exactly one victim state");
+        assert!(logits.iter().all(|x| x.is_finite()), "logits untouched by NanState");
+        assert_eq!(m.log().nan_state, 1);
+    }
+}

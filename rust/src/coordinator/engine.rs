@@ -3,15 +3,121 @@
 //! exact PJRT, hwapprox PJRT, native f32, native hardware-numerics —
 //! serves through the same coordinator).
 
-use std::time::Instant;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::{FinishReason, GenRequest};
 use crate::model::sampler::Sampler;
-use crate::model::{HwModel, RwkvModel, State};
+use crate::model::{panel_all_finite, HwModel, RwkvModel, State};
 use crate::runtime::{RwkvRuntime, Variant};
 use crate::statecache::{CacheStats, SnapshotRef, StateCacheConfig, StateStore};
+
+/// How the engine treats model-level faults (panics and non-finite
+/// output) in its scheduler-driven calls ([`Engine::prefill_tick`],
+/// [`Engine::step_batch`]).  See the crate-level "Failure model"
+/// section ([`crate::coordinator`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// Scan logits and recurrent-state panels for NaN/±Inf after every
+    /// guarded model call ([`panel_all_finite`]).  Off = the pre-guard
+    /// behavior: non-finite values flow through (and the only cache
+    /// protection is the store's own insert-time quarantine).
+    pub health_guards: bool,
+    /// Rollback-retry budget per faulting call: a panic or poisoned
+    /// panel restores the affected sessions' last cycle-boundary state
+    /// (an O(1)-byte copy) and re-runs, up to this many times, before
+    /// the fault surfaces as a typed terminal.  0 = fail fast (also
+    /// disables the per-cycle state snapshot, saving its memcpy).
+    pub max_retries: u32,
+    /// Base of the exponential backoff between retries, in milliseconds
+    /// (attempt k sleeps `base << (k-1)`, capped at 64× base).  0 = no
+    /// sleep — what tests and benches use.
+    pub retry_backoff_ms: u64,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy { health_guards: true, max_retries: 2, retry_backoff_ms: 1 }
+    }
+}
+
+/// Cumulative fault-handling counters for one engine (mirrored into
+/// [`super::Metrics`] by the scheduler every cycle).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Guarded calls re-run after a transient fault.
+    pub retries: u64,
+    /// Session states restored from their last-good snapshot.
+    pub rollbacks: u64,
+    /// Model panics caught by the per-call `catch_unwind` guards.
+    pub panics_caught: u64,
+    /// Non-finite logits/state panels detected by the health guards.
+    pub numeric_faults: u64,
+}
+
+/// A fault that ended one session's guarded engine call after the
+/// retry budget (see [`FaultPolicy`]).  The scheduler maps these onto
+/// terminal events: [`SessionFault::Numeric`] →
+/// [`FinishReason::NumericFault`] (typed, carries partial tokens),
+/// the other two → [`super::GenEvent::Error`].
+#[derive(Debug)]
+pub enum SessionFault {
+    /// The model *returned* an error — deliberate, never retried.
+    Error(anyhow::Error),
+    /// NaN/±Inf in the logits or state, reproduced on every retry.
+    Numeric,
+    /// The model panicked on every retry; the payload message.
+    Panicked(String),
+}
+
+impl std::fmt::Display for SessionFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionFault::Error(e) => write!(f, "model error: {e}"),
+            SessionFault::Numeric => {
+                write!(f, "model produced non-finite logits or state (retries exhausted)")
+            }
+            SessionFault::Panicked(msg) => write!(f, "model panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionFault {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SessionFault::Error(e) => {
+                let src: &(dyn std::error::Error + 'static) = e.as_ref();
+                Some(src)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Best-effort human-readable panic payload (the common `&str`/`String`
+/// cases; anything else gets a placeholder).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Exponential backoff before retry `attempt` (1-based): `base << (k-1)`
+/// milliseconds, capped at 64× base so a deep retry chain cannot stall
+/// the whole worker for seconds.
+fn backoff_sleep(base_ms: u64, attempt: u32) {
+    if base_ms == 0 {
+        return;
+    }
+    let factor = 1u64 << attempt.saturating_sub(1).min(6);
+    std::thread::sleep(Duration::from_millis(base_ms.saturating_mul(factor)));
+}
 
 /// Anything that can run RWKV one token at a time with explicit state.
 pub trait EngineModel {
@@ -380,6 +486,12 @@ pub struct ActiveSession {
     /// the point — it is released when the branch completes or is
     /// reaped).
     pub snapshot_pin: Option<SnapshotRef>,
+    /// Rollback anchor: the session's state as of the last guarded-call
+    /// boundary, captured only while [`FaultPolicy::max_retries`] > 0
+    /// (empty otherwise).  A faulting chunk/cycle restores from here and
+    /// retries — prefill and decode are bit-exact replays from a state,
+    /// so a successful retry is indistinguishable from never faulting.
+    pub last_good: Vec<f32>,
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
     /// Time from enqueue to the first sampled token (set when prefill
@@ -425,11 +537,26 @@ pub struct Engine<M: EngineModel> {
     /// fork bench's one-prefill assertion reads via
     /// [`super::Metrics::prompt_tokens_prefilled`].
     prefilled_tokens: u64,
+    /// The cache's construction config, kept so [`Engine::recover`] can
+    /// rebuild a fresh store after a worker-scope failure.
+    cache_cfg: Option<StateCacheConfig>,
+    /// Fault handling for the guarded calls (see [`FaultPolicy`]).
+    policy: FaultPolicy,
+    /// Cumulative fault counters (see [`FaultStats`]).
+    faults: FaultStats,
 }
 
 impl<M: EngineModel> Engine<M> {
     pub fn new(model: M) -> Engine<M> {
-        Engine { model, batch_logits: Vec::new(), cache: None, prefilled_tokens: 0 }
+        Engine {
+            model,
+            batch_logits: Vec::new(),
+            cache: None,
+            prefilled_tokens: 0,
+            cache_cfg: None,
+            policy: FaultPolicy::default(),
+            faults: FaultStats::default(),
+        }
     }
 
     /// An engine with the prefix-sharing state cache enabled.  Resuming
@@ -442,13 +569,73 @@ impl<M: EngineModel> Engine<M> {
             batch_logits: Vec::new(),
             cache: Some(StateStore::new(cfg)),
             prefilled_tokens: 0,
+            cache_cfg: Some(cfg),
+            policy: FaultPolicy::default(),
+            faults: FaultStats::default(),
         }
+    }
+
+    /// Set how guarded calls treat faults (see [`FaultPolicy`]; the
+    /// scheduler forwards [`super::CoordinatorConfig::fault`] here).
+    pub fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn fault_policy(&self) -> FaultPolicy {
+        self.policy
+    }
+
+    /// Cumulative fault-handling counters (see the field docs).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults
+    }
+
+    /// Reset the engine's serving-side state after a worker-scope
+    /// failure: the batch panel is dropped (a panic can leave it
+    /// half-written) and the state cache is rebuilt **empty** — a
+    /// supervisor cannot know which residents the dying cycle touched,
+    /// so every snapshot is conservatively assumed tainted.  The model
+    /// and the cumulative counters survive; per-session state belonged
+    /// to the sessions the supervisor just terminated.
+    pub fn recover(&mut self) {
+        self.batch_logits = Vec::new();
+        if let Some(cfg) = self.cache_cfg {
+            self.cache = Some(StateStore::new(cfg));
+        }
+    }
+
+    /// Purge any non-finite snapshot from the cache — called whenever a
+    /// health guard trips, so a poisoned state detected *anywhere* also
+    /// evicts whatever poison may have already been cached this cycle.
+    fn quarantine_cache(&mut self) {
+        if let Some(cache) = &mut self.cache {
+            cache.purge_non_finite();
+        }
+    }
+
+    /// Restore `s` to its last-good snapshot (no-op when none was
+    /// captured, i.e. `max_retries == 0` fail-fast mode).
+    fn rollback_session(&mut self, s: &mut ActiveSession) {
+        if s.last_good.is_empty() {
+            return;
+        }
+        let snap = std::mem::take(&mut s.last_good);
+        self.model.restore_state(&snap, &mut s.state);
+        s.last_good = snap;
+        self.faults.rollbacks += 1;
     }
 
     /// Cache counters + gauges, if the cache is enabled (the scheduler
     /// mirrors them into [`super::Metrics`] every cycle).
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Resident snapshots currently carrying NaN/±Inf — always 0 under
+    /// the statecache quarantine rule; the chaos soak asserts exactly
+    /// that ([`crate::statecache::StateStore::scan_non_finite`]).
+    pub fn cache_scan_non_finite(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.scan_non_finite())
     }
 
     /// Cumulative prompt tokens consumed by prefill forwards (see the
@@ -520,6 +707,7 @@ impl<M: EngineModel> Engine<M> {
             next_token: 0,
             cached_prefix_tokens,
             snapshot_pin,
+            last_good: Vec::new(),
             prefill_seconds: 0.0,
             decode_seconds: 0.0,
             ttft_seconds: 0.0,
@@ -536,17 +724,76 @@ impl<M: EngineModel> Engine<M> {
     ///
     /// Returns true once the session is decoding (immediately true for
     /// sessions already there).
-    pub fn prefill_tick(&mut self, s: &mut ActiveSession, max_chunk: usize) -> Result<bool> {
-        let SessionPhase::Prefilling { pos } = &mut s.phase else {
-            return Ok(true);
+    ///
+    /// The model call runs under the fault guards ([`FaultPolicy`]): a
+    /// panic or (with `health_guards`) a non-finite logits/state panel
+    /// rolls the session back to its pre-chunk state and retries up to
+    /// `max_retries` times before surfacing as a [`SessionFault`].  On
+    /// a fault the session's phase is untouched, so a caller that
+    /// chooses to keep it could tick it again.
+    pub fn prefill_tick(
+        &mut self,
+        s: &mut ActiveSession,
+        max_chunk: usize,
+    ) -> Result<bool, SessionFault> {
+        let pos = match s.phase {
+            SessionPhase::Prefilling { pos } => pos,
+            _ => return Ok(true),
         };
         let t0 = Instant::now();
-        let prompt = &s.req.prompt;
-        let end = pos.saturating_add(max_chunk.max(1)).min(prompt.len());
-        let logits = self.model.prefill_chunk(&mut s.state, &prompt[*pos..end], s.req.variant)?;
-        self.prefilled_tokens += (end - *pos) as u64;
-        *pos = end;
-        let done = *pos == prompt.len();
+        let end = pos.saturating_add(max_chunk.max(1)).min(s.req.prompt.len());
+        let done = end == s.req.prompt.len();
+        if self.policy.max_retries > 0 {
+            s.last_good.clear();
+            s.last_good.extend_from_slice(&s.state);
+        }
+        let mut attempt = 0u32;
+        let logits = loop {
+            let outcome = {
+                let model = &mut self.model;
+                let state = &mut s.state;
+                let chunk = &s.req.prompt[pos..end];
+                let variant = s.req.variant;
+                catch_unwind(AssertUnwindSafe(move || {
+                    model.prefill_chunk(state, chunk, variant)
+                }))
+            };
+            let fault = match outcome {
+                Ok(Ok(lg)) => {
+                    if !self.policy.health_guards
+                        || (panel_all_finite(&lg) && panel_all_finite(&s.state))
+                    {
+                        break lg;
+                    }
+                    self.faults.numeric_faults += 1;
+                    self.quarantine_cache();
+                    SessionFault::Numeric
+                }
+                // an error the model *returned* is deliberate (e.g. a
+                // dead runtime): surface immediately, never retry
+                Ok(Err(e)) => {
+                    s.prefill_seconds += t0.elapsed().as_secs_f64();
+                    return Err(SessionFault::Error(e));
+                }
+                Err(payload) => {
+                    self.faults.panics_caught += 1;
+                    SessionFault::Panicked(panic_message(payload))
+                }
+            };
+            // a panic can abandon the state mid-marshal and a NaN has
+            // definitely poisoned it — roll back either way (no-op in
+            // fail-fast mode, where the faulting session dies anyway)
+            self.rollback_session(s);
+            if attempt >= self.policy.max_retries {
+                s.prefill_seconds += t0.elapsed().as_secs_f64();
+                return Err(fault);
+            }
+            attempt += 1;
+            self.faults.retries += 1;
+            backoff_sleep(self.policy.retry_backoff_ms, attempt);
+        };
+        self.prefilled_tokens += (end - pos) as u64;
+        s.phase = SessionPhase::Prefilling { pos: end };
         // capture a snapshot at the chunk boundary: prefill is bit-exact
         // across chunkings, so this state is exactly what ANY future
         // prefill of the same `prompt[..end]` would pass through.  The
@@ -554,7 +801,7 @@ impl<M: EngineModel> Engine<M> {
         // cached (a re-walked shared prefix just refreshes its recency).
         if let Some(cache) = &mut self.cache {
             let class = variant_class(s.req.variant);
-            let (model, state) = (&mut self.model, &s.state);
+            let (model, state, prompt) = (&mut self.model, &s.state, &s.req.prompt);
             // state.len() prices the entry so dedup/rejection never
             // materializes the snapshot copy
             cache.insert_with(class, &prompt[..end], state.len(), || {
@@ -667,6 +914,7 @@ impl<M: EngineModel> Engine<M> {
                     next_token,
                     cached_prefix_tokens,
                     snapshot_pin: Some(snap.clone()),
+                    last_good: Vec::new(),
                     // the one prompt prefill is accounted to branch 0 so
                     // the Metrics prefill-seconds sum stays truthful
                     prefill_seconds: if b == 0 { prefill_seconds } else { 0.0 },
@@ -724,12 +972,21 @@ impl<M: EngineModel> Engine<M> {
     /// decode metrics.
     ///
     /// Outcomes are per session, aligned with `sessions` (None =
-    /// advanced fine): a failing session reports its own error and its
-    /// batchmates keep generating — the same isolation the pre-fusion
-    /// per-session scheduler had.
-    pub fn step_batch(&mut self, sessions: &mut [&mut ActiveSession]) -> Vec<Option<anyhow::Error>> {
+    /// advanced fine): a failing session reports its own
+    /// [`SessionFault`] and its batchmates keep generating — the same
+    /// isolation the pre-fusion per-session scheduler had.
+    ///
+    /// The fused call runs under the fault guards ([`FaultPolicy`]):
+    /// healthy members sample from their logits slice *before* any
+    /// retry overwrites the shared panel, so they advance exactly once
+    /// and stay bit-exact with a fault-free run; only the panicked /
+    /// poisoned members are rolled back to their pre-cycle state and
+    /// re-run (retry time is therefore confined to the faulting
+    /// subset — at batch width 1 the guarded path degenerates to the
+    /// per-session one).
+    pub fn step_batch(&mut self, sessions: &mut [&mut ActiveSession]) -> Vec<Option<SessionFault>> {
         let n = sessions.len();
-        let mut errors: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        let mut errors: Vec<Option<SessionFault>> = (0..n).map(|_| None).collect();
         if n == 0 {
             return errors;
         }
@@ -740,48 +997,133 @@ impl<M: EngineModel> Engine<M> {
                 variants.push(s.req.variant);
             }
         }
+        let vocab = self.model.vocab();
         for variant in variants {
             let idx: Vec<usize> = (0..n)
                 .filter(|&i| sessions[i].req.variant == variant)
                 .collect();
-            let tokens: Vec<u32> = idx
-                .iter()
-                .map(|&i| *sessions[i].generated.last().expect("pending token committed"))
-                .collect();
-            let outcomes = {
-                let mut states: Vec<&mut Vec<f32>> = sessions
-                    .iter_mut()
-                    .filter(|s| s.req.variant == variant)
-                    .map(|s| &mut s.state)
-                    .collect();
-                self.model
-                    .forward_batch(&mut states, &tokens, variant, &mut self.batch_logits)
-            };
-            // defensive: a misbehaving override returning the wrong
-            // outcome count or logits-panel size means the
-            // result/session alignment is unknown — fail the whole
-            // group rather than misassign logits
-            let vocab = self.model.vocab();
-            if outcomes.len() != idx.len() || self.batch_logits.len() != idx.len() * vocab {
+            if self.policy.max_retries > 0 {
                 for &i in &idx {
-                    errors[i] = Some(anyhow!(
+                    let s = &mut *sessions[i];
+                    s.last_good.clear();
+                    s.last_good.extend_from_slice(&s.state);
+                }
+            }
+            // the members still owed a healthy step, in admission order
+            // (order is preserved across retries, so the panel layout
+            // stays deterministic)
+            let mut pending = idx;
+            let mut attempt = 0u32;
+            while !pending.is_empty() {
+                let tokens: Vec<u32> = pending
+                    .iter()
+                    .map(|&i| *sessions[i].generated.last().expect("pending token committed"))
+                    .collect();
+                let outcome = {
+                    let model = &mut self.model;
+                    let batch_logits = &mut self.batch_logits;
+                    let mut states: Vec<&mut Vec<f32>> = sessions
+                        .iter_mut()
+                        .enumerate()
+                        .filter(|(i, _)| pending.contains(i))
+                        .map(|(_, s)| &mut s.state)
+                        .collect();
+                    catch_unwind(AssertUnwindSafe(move || {
+                        model.forward_batch(&mut states, &tokens, variant, batch_logits)
+                    }))
+                };
+                let outcomes = match outcome {
+                    Err(payload) => {
+                        // a panic abandons the whole fused call: which
+                        // states/panel slots were written is unknown, so
+                        // every still-pending member rolls back together
+                        self.faults.panics_caught += 1;
+                        let msg = panic_message(payload);
+                        for slot in 0..pending.len() {
+                            let i = pending[slot];
+                            // split the borrow: rollback_session needs
+                            // &mut self and one session at a time
+                            let s = &mut *sessions[i];
+                            self.rollback_session(s);
+                        }
+                        if attempt >= self.policy.max_retries {
+                            for &i in &pending {
+                                errors[i] = Some(SessionFault::Panicked(msg.clone()));
+                            }
+                            pending.clear();
+                        } else {
+                            attempt += 1;
+                            self.faults.retries += 1;
+                            backoff_sleep(self.policy.retry_backoff_ms, attempt);
+                        }
+                        continue;
+                    }
+                    Ok(outcomes) => outcomes,
+                };
+                // defensive: a misbehaving override returning the wrong
+                // outcome count or logits-panel size means the
+                // result/session alignment is unknown — fail the whole
+                // group rather than misassign logits
+                if outcomes.len() != pending.len()
+                    || self.batch_logits.len() != pending.len() * vocab
+                {
+                    let msg = anyhow!(
                         "forward_batch returned {} outcomes / {} logits for {} sessions",
                         outcomes.len(),
                         self.batch_logits.len(),
-                        idx.len()
-                    ));
-                }
-                continue;
-            }
-            for (slot, outcome) in outcomes.into_iter().enumerate() {
-                let i = idx[slot];
-                let s = &mut *sessions[i];
-                match outcome {
-                    None => {
-                        let lg = &self.batch_logits[slot * vocab..(slot + 1) * vocab];
-                        s.next_token = s.sampler.sample(lg);
+                        pending.len()
+                    );
+                    for &i in &pending {
+                        errors[i] = Some(SessionFault::Error(anyhow!("{msg}")));
                     }
-                    Some(e) => errors[i] = Some(e),
+                    pending.clear();
+                    continue;
+                }
+                let mut next_pending: Vec<usize> = Vec::new();
+                let mut poisoned = false;
+                for (slot, outcome) in outcomes.into_iter().enumerate() {
+                    let i = pending[slot];
+                    match outcome {
+                        // a model-returned error is deliberate: the
+                        // member's state advanced exactly once (the
+                        // forward_batch contract), no retry
+                        Some(e) => errors[i] = Some(SessionFault::Error(e)),
+                        None => {
+                            let healthy = {
+                                let lg = &self.batch_logits[slot * vocab..(slot + 1) * vocab];
+                                !self.policy.health_guards
+                                    || (panel_all_finite(lg)
+                                        && panel_all_finite(&sessions[i].state))
+                            };
+                            if healthy {
+                                let s = &mut *sessions[i];
+                                let lg = &self.batch_logits[slot * vocab..(slot + 1) * vocab];
+                                s.next_token = s.sampler.sample(lg);
+                            } else {
+                                self.faults.numeric_faults += 1;
+                                poisoned = true;
+                                let s = &mut *sessions[i];
+                                self.rollback_session(s);
+                                next_pending.push(i);
+                            }
+                        }
+                    }
+                }
+                if poisoned {
+                    self.quarantine_cache();
+                }
+                if next_pending.is_empty() {
+                    pending.clear();
+                } else if attempt >= self.policy.max_retries {
+                    for &i in &next_pending {
+                        errors[i] = Some(SessionFault::Numeric);
+                    }
+                    pending.clear();
+                } else {
+                    pending = next_pending;
+                    attempt += 1;
+                    self.faults.retries += 1;
+                    backoff_sleep(self.policy.retry_backoff_ms, attempt);
                 }
             }
         }
@@ -1184,6 +1526,109 @@ mod tests {
         drop(b1);
         drop(b2);
         assert_eq!(e.cache_stats().unwrap().pinned, 0);
+    }
+
+    /// Minimal inline fault injection for the guard tests: panics or
+    /// poisons the logits on scheduled 1-based `forward` call indices.
+    /// (The full deterministic harness is `crate::chaos`; this stays
+    /// here so the engine tests don't depend on it.)
+    struct Flaky {
+        inner: RwkvModel,
+        calls: u64,
+        panic_on: Vec<u64>,
+        nan_on: Vec<u64>,
+    }
+
+    impl EngineModel for Flaky {
+        fn vocab(&self) -> usize {
+            self.inner.vocab
+        }
+        fn state_len(&self) -> usize {
+            EngineModel::state_len(&self.inner)
+        }
+        fn init_state(&self) -> Vec<f32> {
+            EngineModel::init_state(&self.inner)
+        }
+        fn forward(
+            &mut self,
+            state: &mut Vec<f32>,
+            token: u32,
+            variant: Variant,
+        ) -> Result<Vec<f32>> {
+            self.calls += 1;
+            let n = self.calls;
+            // fault AFTER the real forward, so the state has genuinely
+            // advanced — rollback is what must undo it
+            let mut logits = self.inner.forward(state, token, variant)?;
+            if self.panic_on.contains(&n) {
+                panic!("injected panic at call {n}");
+            }
+            if self.nan_on.contains(&n) {
+                logits[0] = f32::NAN;
+            }
+            Ok(logits)
+        }
+    }
+
+    #[test]
+    fn prefill_panic_rolls_back_and_retries_bitexact() {
+        let mut clean = engine();
+        let req = GenRequest::greedy(vec![1, 2, 3, 4, 5, 6], 4);
+        let sc = clean.start(1, req.clone(), Instant::now()).unwrap();
+
+        // panic at forward call 3 = mid-chunk, with 2 tokens already
+        // folded into the state — the retry must replay from the chunk
+        // boundary and land bit-identically with the fault-free run
+        let mut e = Engine::new(Flaky {
+            inner: test_model(2, 32, 64, 50),
+            calls: 0,
+            panic_on: vec![3],
+            nan_on: vec![],
+        });
+        e.set_fault_policy(FaultPolicy { retry_backoff_ms: 0, ..FaultPolicy::default() });
+        let mut s = e.admit(1, req, Instant::now());
+        while !e.prefill_tick(&mut s, 4).unwrap() {}
+        assert_eq!(s.next_token, sc.next_token);
+        assert_eq!(s.state, sc.state, "retried prefill must be 0 ULP with fault-free");
+        let f = e.fault_stats();
+        assert_eq!((f.panics_caught, f.retries, f.rollbacks), (1, 1, 1));
+    }
+
+    #[test]
+    fn decode_nan_isolates_the_poisoned_session() {
+        // fail-fast policy: the poisoned member faults Numeric, its
+        // batchmate advances bit-exactly with a solo fault-free run
+        let mut clean = engine();
+        let rb = GenRequest::greedy(vec![4], 3);
+        let mut cb = clean.start(1, rb.clone(), Instant::now()).unwrap();
+        clean.step_session(&mut cb).unwrap();
+
+        let mut e = Engine::new(Flaky {
+            inner: test_model(2, 32, 64, 50),
+            calls: 0,
+            panic_on: vec![],
+            // calls 1-3 prefill A, call 4 prefills B, call 5 = A's first
+            // decode step in the batch loop
+            nan_on: vec![5],
+        });
+        e.set_fault_policy(FaultPolicy {
+            health_guards: true,
+            max_retries: 0,
+            retry_backoff_ms: 0,
+        });
+        let mut sa = e.start(1, GenRequest::greedy(vec![1, 2, 3], 3), Instant::now()).unwrap();
+        let mut sb = e.start(2, rb, Instant::now()).unwrap();
+        assert!(e.commit_pending(&mut sa).is_none());
+        assert!(e.commit_pending(&mut sb).is_none());
+        let errs = {
+            let mut refs = vec![&mut sa, &mut sb];
+            e.step_batch(&mut refs)
+        };
+        assert!(matches!(errs[0], Some(SessionFault::Numeric)), "got {:?}", errs[0]);
+        assert!(errs[1].is_none());
+        assert_eq!(sb.next_token, cb.next_token);
+        assert_eq!(sb.state, cb.state, "healthy batchmate must be 0 ULP with solo run");
+        assert_eq!(e.fault_stats().numeric_faults, 1);
     }
 
     #[test]

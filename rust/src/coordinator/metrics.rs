@@ -70,6 +70,34 @@ pub struct Metrics {
     /// Gauge: cache entries pinned by live sessions (resuming prefills
     /// and fork branches sharing a decode-state snapshot).
     pub prefix_cache_pinned: u64,
+    /// Snapshots the cache refused at insert or purged after a health
+    /// guard tripped because they contained NaN/±Inf (mirror of the
+    /// store's quarantine counter — see the `statecache` docs).
+    pub prefix_cache_quarantined: u64,
+    /// Requests shed from the admission queue under overload
+    /// (`FinishReason::Shed`, past `CoordinatorConfig::shed_watermark`).
+    pub shed: u64,
+    /// Times the supervisor caught a worker-loop panic and respawned
+    /// the loop on a recovered engine view.
+    pub worker_restarts: u64,
+    /// Sessions (active) and requests (queued) terminated with
+    /// `FinishReason::WorkerFailed` by the supervisor; per session,
+    /// like `completed`.
+    pub worker_failed: u64,
+    /// Sessions that finished with `FinishReason::NumericFault` after
+    /// exhausting their rollback-retries; per session.
+    pub numeric_faulted: u64,
+    /// Guarded model calls re-run after a transient fault (mirror of
+    /// the engine's cumulative `FaultStats`, refreshed every cycle).
+    pub fault_retries: u64,
+    /// Session states restored from their last-good snapshot.
+    pub fault_rollbacks: u64,
+    /// Model panics caught by the engine's per-call guards (each may
+    /// cover several batched sessions).
+    pub panics_caught: u64,
+    /// Non-finite logits/state panels detected by the health guards
+    /// (counted per poisoned session per attempt).
+    pub numeric_faults_detected: u64,
 }
 
 impl Metrics {
@@ -121,6 +149,9 @@ impl Metrics {
              queueing: {:.4} s mean wait\n\
              cache:    {} hits / {} misses ({:.0}% hit rate), \
              {} prompt tokens skipped, {} snapshots / {} B resident ({} pinned), {} evictions\n\
+             faults:   {} panics caught, {} non-finite panels, {} retries / {} rollbacks, \
+             {} numeric-faulted sessions, {} shed, {} worker restarts ({} sessions failed), \
+             {} snapshots quarantined\n\
              clips:    {} activations at the 9-bit rails",
             self.enqueued,
             self.admitted,
@@ -144,6 +175,15 @@ impl Metrics {
             self.prefix_cache_bytes,
             self.prefix_cache_pinned,
             self.prefix_cache_evictions,
+            self.panics_caught,
+            self.numeric_faults_detected,
+            self.fault_retries,
+            self.fault_rollbacks,
+            self.numeric_faulted,
+            self.shed,
+            self.worker_restarts,
+            self.worker_failed,
+            self.prefix_cache_quarantined,
             self.clip_events,
         )
     }
@@ -188,6 +228,15 @@ mod tests {
             prefix_cache_entries: 16,
             prefix_cache_evictions: 2,
             prefix_cache_pinned: 5,
+            prefix_cache_quarantined: 11,
+            shed: 12,
+            worker_restarts: 13,
+            worker_failed: 14,
+            numeric_faulted: 15,
+            fault_retries: 17,
+            fault_rollbacks: 18,
+            panics_caught: 19,
+            numeric_faults_detected: 20,
         };
         let r = m.report();
         assert!(r.contains("42 generated"));
@@ -199,6 +248,11 @@ mod tests {
         assert!(r.contains("3 hits / 1 misses (75% hit rate)"));
         assert!(r.contains("3072 prompt tokens skipped"));
         assert!(r.contains("16 snapshots / 40960 B resident (5 pinned), 2 evictions"));
+        assert!(r.contains(
+            "19 panics caught, 20 non-finite panels, 17 retries / 18 rollbacks, \
+             15 numeric-faulted sessions, 12 shed, 13 worker restarts (14 sessions failed), \
+             11 snapshots quarantined"
+        ));
         assert_eq!(m.prefix_cache_hit_rate(), 0.75);
     }
 }

@@ -15,13 +15,14 @@
 //!    committed* — a client renders tokens live instead of waiting for
 //!    the whole generation;
 //! 3. one terminal event per branch: [`GenEvent::Finished`] with the
-//!    aggregated [`GenResponse`], or [`GenEvent::Error`].  One caveat: a
-//!    request reaped *before its branches exist* (cancelled or expired
-//!    while still queued, or before the fork) terminates on branch 0
-//!    only and the stream then ends — raw `recv()` consumers must treat
-//!    stream exhaustion (`None`) as terminal for any remaining
-//!    branches; [`scheduler::GenStream::wait`] already mirrors the
-//!    branch-0 terminal onto them.
+//!    aggregated [`GenResponse`], or [`GenEvent::Error`].  This holds
+//!    even when the worker never sent one: a request reaped *before its
+//!    branches exist* (cancelled, expired or shed while still queued,
+//!    or before the fork) terminates on branch 0 only, and
+//!    [`scheduler::GenStream::recv`] synthesizes the missing branch
+//!    terminals from that whole-request terminal (or a disconnect
+//!    error) once the worker's channel closes — `recv` never blocks
+//!    forever and `None` means every branch already terminated.
 //!
 //! A stream can be ended early: [`scheduler::GenStream::cancel`] (or simply
 //! dropping the stream) flags the session, and the worker reaps it at the
@@ -65,17 +66,67 @@
 //! batching are bit-exact, so none of this machinery ever changes a
 //! session's tokens.
 //!
+//! # Failure model
+//!
+//! The serving layer treats the model as untrusted arithmetic: a panic
+//! or a NaN anywhere in a forward pass must cost at most the faulting
+//! *session*, never the worker, its batchmates, or a later request that
+//! happens to share a cached prefix.  Faults are handled at three
+//! nested scopes, innermost first:
+//!
+//! 1. **Per-call isolation + retry** ([`engine`], [`FaultPolicy`]).
+//!    Every scheduler-driven model call (`prefill_tick` chunks,
+//!    `step_batch` decode cycles) runs under `catch_unwind`, and —
+//!    when `health_guards` is on — its output logits and recurrent
+//!    states are scanned for NaN/±Inf ([`crate::model::panel_all_finite`]).
+//!    A panic or a poisoned panel rolls the affected sessions back to
+//!    their last cycle-boundary snapshot (an O(1)-byte state copy — the
+//!    RWKV property that makes retry nearly free) and retries up to
+//!    `max_retries` times with exponential backoff.  Un-faulted
+//!    batchmates are sampled from their own logits before any retry, so
+//!    they advance exactly once and stay bit-exact with a fault-free
+//!    run.  Errors the model *returns* (`Err`, e.g. a dead PJRT
+//!    runtime) are treated as deliberate and are not retried.
+//! 2. **Per-session typed terminals** ([`scheduler`]).  A session whose
+//!    retries are exhausted finishes — it does not hang and does not
+//!    kill the worker.  Persistent NaN/Inf ends the branch with
+//!    [`GenEvent::Finished`] / [`FinishReason::NumericFault`] carrying
+//!    the tokens generated so far; a persistent panic ends it with
+//!    [`GenEvent::Error`].  Either way the slot frees and pinned
+//!    snapshots release at the same cycle boundary as any other reap.
+//! 3. **Worker supervision** ([`scheduler`]).  A panic that escapes the
+//!    per-call guards (scheduler bug, panic in commit/accounting) is
+//!    caught by a supervisor wrapped around the whole loop: every
+//!    in-flight and queued session is terminated with
+//!    [`FinishReason::WorkerFailed`] (so `recv`/`wait_one`/`wait` never
+//!    hang on an orphaned stream), the engine is rebuilt on a **fresh**
+//!    state cache (resident snapshots are assumed tainted), and the
+//!    loop respawns to serve subsequent requests.  As a last-resort
+//!    backstop, [`GenStream`] also synthesizes terminal events for any
+//!    branch whose channel disconnects without one.
+//!
+//! The prefix cache is guarded independently: the store refuses to
+//! admit a snapshot containing a non-finite value and can purge any
+//! poisoned residents ([`crate::statecache`] — "snapshot quarantine"),
+//! so one faulting session can never replay a poisoned state into
+//! healthy traffic behind a shared prompt.  Under overload, a queue
+//! past [`CoordinatorConfig::shed_watermark`] sheds its lowest-priority
+//! queued requests with [`FinishReason::Shed`] instead of letting
+//! deadline-doomed work waste prefill cycles.  All of this is exercised
+//! by the deterministic fault-injection harness in [`crate::chaos`]
+//! (`rust/tests/chaos.rs`, `rust/benches/chaos.rs`).
+//!
 //! * [`engine`]    — prefill/decode/fork over any [`EngineModel`]; owns
-//!   the prefix + decode-state cache.
-//! * [`scheduler`] — bounded queue, cancellation/deadlines, event
-//!   streaming, the worker loop.
-//! * [`metrics`]   — latency/throughput/cache/pressure counters.
+//!   the prefix + decode-state cache and the fault policy above.
+//! * [`scheduler`] — bounded queue, cancellation/deadlines, shedding,
+//!   event streaming, the supervised worker loop.
+//! * [`metrics`]   — latency/throughput/cache/pressure/fault counters.
 
 pub mod engine;
 pub mod metrics;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineModel, SessionPhase};
+pub use engine::{Engine, EngineModel, FaultPolicy, FaultStats, SessionFault, SessionPhase};
 pub use metrics::Metrics;
 pub use scheduler::{Coordinator, CoordinatorConfig, GenStream, SubmitError};
 
@@ -198,6 +249,22 @@ pub enum FinishReason {
     Cancelled,
     /// The request's wall-clock [`GenRequest::deadline`] expired.
     DeadlineExceeded,
+    /// The model produced NaN/±Inf and every rollback-retry reproduced
+    /// it ([`FaultPolicy`]); the response carries the healthy tokens
+    /// generated before the fault.  The poisoned state never reaches
+    /// the prefix cache.
+    NumericFault,
+    /// The worker thread died with the session in flight (or queued)
+    /// and the supervisor terminated it while respawning the loop.  No
+    /// partial-cycle output is trusted: queued requests report zero
+    /// tokens, active ones whatever was committed at the last healthy
+    /// cycle boundary.
+    WorkerFailed,
+    /// Shed from the admission queue under overload: the queue exceeded
+    /// [`CoordinatorConfig::shed_watermark`] and this request had the
+    /// lowest priority (latest-submitted within the level).  Always
+    /// zero tokens — shedding happens before any prefill work.
+    Shed,
 }
 
 /// Incremental progress of one streaming session, delivered through

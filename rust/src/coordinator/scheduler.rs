@@ -44,20 +44,41 @@
 //! Backpressure is explicit: [`Coordinator::submit`] reserves a slot in
 //! a queue bounded by [`CoordinatorConfig::max_queue`] and rejects with
 //! [`SubmitError::QueueFull`] instead of buffering without bound.
+//! Between reap and admission, an optional shed phase additionally
+//! drops the lowest-priority queued requests with
+//! [`super::FinishReason::Shed`] whenever the queue exceeds
+//! [`CoordinatorConfig::shed_watermark`].
+//!
+//! The loop itself runs under a supervisor (see the crate-level
+//! "Failure model"): per-call model faults are isolated and retried by
+//! the engine's guards ([`super::engine::FaultPolicy`]), and a panic
+//! escaping them terminates every in-flight session with
+//! [`super::FinishReason::WorkerFailed`], rebuilds the engine view, and
+//! respawns the loop — no [`GenStream`] can hang on a dead worker.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::engine::{ActiveSession, Engine, EngineModel};
+use super::engine::{ActiveSession, Engine, EngineModel, FaultPolicy, SessionFault};
 use super::metrics::Metrics;
 use super::{FinishReason, GenEvent, GenRequest, GenResponse};
 use crate::statecache::StateCacheConfig;
+
+/// Poison-tolerant metrics acquisition: `Metrics` is plain counters —
+/// every intermediate state is valid — so a panic while the lock was
+/// held carries no information, and propagating the poison would brick
+/// metrics reporting (and every later `submit`) for the process's
+/// remaining lifetime.
+fn lock(m: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
@@ -80,6 +101,19 @@ pub struct CoordinatorConfig {
     /// Backpressure must be visible at the API boundary — an unbounded
     /// queue just converts overload into silent latency.
     pub max_queue: usize,
+    /// How the worker treats model-level faults — panic isolation,
+    /// NaN/Inf health guards, rollback-retry (see
+    /// [`super::engine::FaultPolicy`] and the crate-level "Failure
+    /// model" section).
+    pub fault: FaultPolicy,
+    /// Overload shedding: while more than this many requests sit in the
+    /// admission queue, the worker sheds the lowest-priority queued
+    /// request (latest-submitted within the level) each cycle with
+    /// [`FinishReason::Shed`] — low-priority work that would only expire
+    /// in queue stops wasting prefill cycles, preserving high-priority
+    /// goodput.  0 (the default) disables shedding; meaningful values
+    /// sit well below `max_queue` (the hard rejection bound).
+    pub shed_watermark: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -89,6 +123,8 @@ impl Default for CoordinatorConfig {
             prefill_chunk: 64,
             state_cache_bytes: StateCacheConfig::default().max_bytes,
             max_queue: 1024,
+            fault: FaultPolicy::default(),
+            shed_watermark: 0,
         }
     }
 }
@@ -147,7 +183,13 @@ pub struct GenStream {
     n_best: usize,
     rx: Receiver<GenEvent>,
     cancel: Arc<AtomicBool>,
-    terminals: usize,
+    /// Which branches have received their terminal event.
+    branch_done: Vec<bool>,
+    /// Branch 0's terminal when it ended for a whole-request reason
+    /// (reaped in queue, shed, worker death) — mirrored onto branches
+    /// whose own terminal will never arrive because they were never
+    /// forked into existence.
+    mirror: Option<GenResponse>,
     closed: bool,
 }
 
@@ -170,34 +212,88 @@ impl GenStream {
         self.cancel.store(true, Ordering::Release);
     }
 
-    /// Next event, blocking.  Returns `None` once every branch has
-    /// terminated (or the worker disappeared) — the stream is then
-    /// exhausted and drop will NOT cancel anything.
+    /// Record one branch's terminal event; closes the stream once every
+    /// branch has one.  Branch 0's terminal is kept for mirroring when
+    /// it names a whole-request reason (the request may have ended
+    /// before its fork branches ever existed).
+    fn mark_done(&mut self, branch: usize, resp: Option<&GenResponse>) {
+        if let Some(d) = self.branch_done.get_mut(branch) {
+            *d = true;
+        }
+        if branch == 0 {
+            if let Some(r) = resp {
+                if matches!(
+                    r.finish,
+                    FinishReason::Cancelled
+                        | FinishReason::DeadlineExceeded
+                        | FinishReason::Shed
+                        | FinishReason::WorkerFailed
+                ) {
+                    self.mirror = Some(r.clone());
+                }
+            }
+        }
+        if self.branch_done.iter().all(|&d| d) {
+            self.closed = true;
+        }
+    }
+
+    /// Next event, blocking.  Returns `None` only once every branch has
+    /// terminated — the stream is then exhausted and drop will NOT
+    /// cancel anything.
+    ///
+    /// A disconnected worker channel can never leave a branch without a
+    /// terminal: if the sender drops with branches still open (the
+    /// request was reaped before its fork, or the worker died harder
+    /// than the supervisor could clean up), `recv` synthesizes one
+    /// terminal per remaining branch — the branch-0 whole-request
+    /// terminal mirrored onto never-born branches when there is one,
+    /// a [`GenEvent::Error`] otherwise.  `recv` can therefore never
+    /// block forever, and `wait`/`wait_one` always return one outcome
+    /// per branch.
     pub fn recv(&mut self) -> Option<GenEvent> {
         if self.closed {
             return None;
         }
         match self.rx.recv() {
             Ok(ev) => {
-                if matches!(ev, GenEvent::Finished(_) | GenEvent::Error { .. }) {
-                    self.terminals += 1;
-                    if self.terminals >= self.n_best {
-                        self.closed = true;
-                    }
+                match &ev {
+                    GenEvent::Finished(r) => self.mark_done(r.branch, Some(r)),
+                    GenEvent::Error { branch, .. } => self.mark_done(*branch, None),
+                    GenEvent::Started { .. } | GenEvent::Token { .. } => {}
                 }
                 Some(ev)
             }
             Err(_) => {
-                self.closed = true;
-                None
+                let Some(b) = self.branch_done.iter().position(|&d| !d) else {
+                    self.closed = true;
+                    return None;
+                };
+                let ev = match &self.mirror {
+                    Some(r0) => {
+                        let mut r = r0.clone();
+                        r.branch = b;
+                        // a never-born branch produced nothing — only
+                        // the whole-request reason carries over
+                        r.tokens = Vec::new();
+                        GenEvent::Finished(r)
+                    }
+                    None => GenEvent::Error {
+                        branch: b,
+                        message: "worker connection lost before the branch finished".into(),
+                    },
+                };
+                self.mark_done(b, None);
+                Some(ev)
             }
         }
     }
 
     /// Drain the stream to completion, returning one result per branch
-    /// (index = branch).  A branch the worker never finished (e.g. the
-    /// request was reaped while still queued) reports an error carrying
-    /// the terminal the request did get, if any.
+    /// (index = branch).  Every branch gets exactly one outcome:
+    /// branches the worker never finished receive the terminal `recv`
+    /// synthesizes (the branch-0 whole-request terminal mirrored onto
+    /// branches that never existed, or a disconnect error).
     pub fn wait(mut self) -> Vec<Result<GenResponse>> {
         let n = self.n_best;
         let mut out: Vec<Option<Result<GenResponse>>> = (0..n).map(|_| None).collect();
@@ -214,27 +310,6 @@ impl GenStream {
                     }
                 }
                 GenEvent::Started { .. } | GenEvent::Token { .. } => {}
-            }
-        }
-        // a request reaped before forking terminates on branch 0 only;
-        // mirror that terminal onto the branches that never existed so
-        // callers see a uniform per-branch outcome
-        let mirror: Option<GenResponse> = match out.first() {
-            Some(Some(Ok(r0)))
-                if r0.finish == FinishReason::Cancelled
-                    || r0.finish == FinishReason::DeadlineExceeded =>
-            {
-                Some(r0.clone())
-            }
-            _ => None,
-        };
-        if let Some(r0) = mirror {
-            for (b, slot) in out.iter_mut().enumerate().skip(1) {
-                if slot.is_none() {
-                    let mut r = r0.clone();
-                    r.branch = b;
-                    *slot = Some(Ok(r));
-                }
             }
         }
         out.into_iter()
@@ -305,12 +380,59 @@ impl Coordinator {
         let m2 = metrics.clone();
         let d2 = queue_depth.clone();
         let worker = std::thread::spawn(move || {
-            let engine = if cfg.state_cache_bytes > 0 {
+            let mut engine = if cfg.state_cache_bytes > 0 {
                 Engine::with_cache(factory(), StateCacheConfig { max_bytes: cfg.state_cache_bytes })
             } else {
                 Engine::new(factory())
             };
-            worker_loop(engine, rx, cfg, m2, d2)
+            engine.set_fault_policy(cfg.fault);
+            // supervisor: the scheduling state (active slots + local
+            // queue) lives OUT here, so a panic that escapes the
+            // per-call fault guards — a scheduler bug, a panic in
+            // commit/fork/accounting — cannot take the client-facing
+            // Senders down with the loop.  The supervisor terminates
+            // every in-flight and queued session with a typed
+            // WorkerFailed terminal (no stream ever hangs), rebuilds
+            // the engine's serving state, and respawns the loop.
+            let mut active: Vec<Slot> = Vec::new();
+            let mut queue: VecDeque<Job> = VecDeque::new();
+            loop {
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    worker_loop(&mut engine, &mut active, &mut queue, &rx, &cfg, &m2, &d2)
+                }));
+                if run.is_ok() {
+                    return; // graceful shutdown (queue closed + drained)
+                }
+                lock(&m2).worker_restarts += 1;
+                for slot in active.drain(..) {
+                    complete(slot, Ok(FinishReason::WorkerFailed), &m2);
+                }
+                for job in queue.drain(..) {
+                    d2.fetch_sub(1, Ordering::AcqRel);
+                    {
+                        let mut m = lock(&m2);
+                        m.completed += 1;
+                        m.worker_failed += 1;
+                    }
+                    let _ = job.events.send(GenEvent::Finished(GenResponse {
+                        request_id: job.id,
+                        branch: 0,
+                        tokens: Vec::new(),
+                        finish: FinishReason::WorkerFailed,
+                        prefill_seconds: 0.0,
+                        decode_seconds: 0.0,
+                        queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
+                        ttft_seconds: 0.0,
+                        cached_prefix_tokens: 0,
+                    }));
+                }
+                {
+                    let mut m = lock(&m2);
+                    m.active_sessions = 0;
+                    m.queue_depth = d2.load(Ordering::Acquire) as u64;
+                }
+                engine.recover();
+            }
         });
         Coordinator {
             tx: Some(tx),
@@ -340,7 +462,7 @@ impl Coordinator {
         let mut depth = self.queue_depth.load(Ordering::Relaxed);
         loop {
             if depth >= self.max_queue {
-                self.metrics.lock().unwrap().rejected += 1;
+                lock(&self.metrics).rejected += 1;
                 return Err(SubmitError::QueueFull { limit: self.max_queue });
             }
             match self.queue_depth.compare_exchange_weak(
@@ -366,8 +488,16 @@ impl Coordinator {
             self.queue_depth.fetch_sub(1, Ordering::AcqRel);
             return Err(SubmitError::ShutDown);
         }
-        self.metrics.lock().unwrap().enqueued += 1;
-        Ok(GenStream { request_id: id, n_best, rx: erx, cancel, terminals: 0, closed: false })
+        lock(&self.metrics).enqueued += 1;
+        Ok(GenStream {
+            request_id: id,
+            n_best,
+            rx: erx,
+            cancel,
+            branch_done: vec![false; n_best],
+            mirror: None,
+            closed: false,
+        })
     }
 
     /// Blocking generate: submit, drain the stream, return branch 0.
@@ -430,11 +560,22 @@ fn reap_reason(cancel: &AtomicBool, deadline_at: Option<Instant>) -> Option<Fini
     }
 }
 
+/// Map a session's exhausted [`SessionFault`] onto its terminal
+/// outcome: a numeric fault is a *typed* finish (the tokens generated
+/// before the fault are healthy — every committed token passed the
+/// guards); panics and model-returned errors surface as stream errors.
+fn fault_outcome(f: SessionFault) -> Result<FinishReason> {
+    match f {
+        SessionFault::Numeric => Ok(FinishReason::NumericFault),
+        other => Err(anyhow!(other)),
+    }
+}
+
 /// Fold a finished session into `Metrics` and emit its terminal event.
 fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metrics>>) {
     let Slot { sess, events, .. } = slot;
     {
-        let mut m = metrics.lock().unwrap();
+        let mut m = lock(metrics);
         m.completed += 1;
         m.tokens_generated += sess.generated.len() as u64;
         m.decode_seconds_total += sess.decode_seconds;
@@ -445,6 +586,12 @@ fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metri
         if sess.is_decoding() {
             m.first_tokens += 1;
             m.ttft_seconds_total += sess.ttft_seconds;
+        }
+        match &outcome {
+            Ok(FinishReason::NumericFault) => m.numeric_faulted += 1,
+            Ok(FinishReason::WorkerFailed) => m.worker_failed += 1,
+            Ok(FinishReason::Shed) => m.shed += 1,
+            _ => {}
         }
     }
     match outcome {
@@ -467,15 +614,19 @@ fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metri
     }
 }
 
+/// The scheduling loop proper.  `active` and `queue` are owned by the
+/// supervisor in [`Coordinator::spawn_with`] — they must survive a
+/// panicking cycle so the supervisor can terminate every session they
+/// hold with a typed event instead of letting the Senders die silently.
 fn worker_loop<M: EngineModel>(
-    mut engine: Engine<M>,
-    rx: Receiver<Job>,
-    cfg: CoordinatorConfig,
-    metrics: Arc<Mutex<Metrics>>,
-    queue_depth: Arc<AtomicUsize>,
+    engine: &mut Engine<M>,
+    active: &mut Vec<Slot>,
+    queue: &mut VecDeque<Job>,
+    rx: &Receiver<Job>,
+    cfg: &CoordinatorConfig,
+    metrics: &Arc<Mutex<Metrics>>,
+    queue_depth: &Arc<AtomicUsize>,
 ) {
-    let mut active: Vec<Slot> = Vec::new();
-    let mut queue: VecDeque<Job> = Default::default();
     loop {
         // 1a. pull everything currently queued (block only when idle)
         loop {
@@ -512,7 +663,7 @@ fn worker_loop<M: EngineModel>(
                 let job = queue.remove(i).expect("index in bounds");
                 queue_depth.fetch_sub(1, Ordering::AcqRel);
                 {
-                    let mut m = metrics.lock().unwrap();
+                    let mut m = lock(metrics);
                     m.completed += 1;
                     match reason {
                         FinishReason::Cancelled => m.cancelled += 1,
@@ -533,6 +684,37 @@ fn worker_loop<M: EngineModel>(
             }
         }
 
+        // 1c. shed under overload: while the queue sits above the
+        //     watermark, drop the lowest-priority queued request
+        //     (latest-submitted within that level — it has waited the
+        //     least) with a typed Shed terminal and zero tokens.  This
+        //     runs after the reap so a cancelled/expired job still gets
+        //     its proper reason, and before admission so shed work
+        //     never takes a slot or a prefill cycle.
+        while cfg.shed_watermark > 0 && queue.len() > cfg.shed_watermark {
+            let victim = (0..queue.len())
+                .min_by_key(|&i| (queue[i].req.priority, std::cmp::Reverse(i)))
+                .expect("queue is non-empty");
+            let job = queue.remove(victim).expect("index in bounds");
+            queue_depth.fetch_sub(1, Ordering::AcqRel);
+            {
+                let mut m = lock(metrics);
+                m.completed += 1;
+                m.shed += 1;
+            }
+            let _ = job.events.send(GenEvent::Finished(GenResponse {
+                request_id: job.id,
+                branch: 0,
+                tokens: Vec::new(),
+                finish: FinishReason::Shed,
+                prefill_seconds: 0.0,
+                decode_seconds: 0.0,
+                queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
+                ttft_seconds: 0.0,
+                cached_prefix_tokens: 0,
+            }));
+        }
+
         // 2. reap active sessions: cancellation and deadlines take
         //    effect at this cycle boundary — the slot frees, pinned
         //    snapshots release with the session, partial tokens return.
@@ -547,14 +729,14 @@ fn worker_loop<M: EngineModel>(
                     continue;
                 };
                 {
-                    let mut m = metrics.lock().unwrap();
+                    let mut m = lock(metrics);
                     match reason {
                         FinishReason::Cancelled => m.cancelled += 1,
                         _ => m.deadline_exceeded += 1,
                     }
                 }
                 let slot = active.remove(i);
-                complete(slot, Ok(reason), &metrics);
+                complete(slot, Ok(reason), metrics);
             }
         }
 
@@ -582,7 +764,7 @@ fn worker_loop<M: EngineModel>(
             let queue_s = job.enqueued_at.elapsed().as_secs_f64();
             let sess = engine.admit(job.id, job.req, job.enqueued_at);
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock(metrics);
                 m.admitted += 1;
                 m.queue_seconds_total += queue_s;
             }
@@ -603,18 +785,18 @@ fn worker_loop<M: EngineModel>(
         //    A session whose prompt completes this cycle samples its
         //    first token and joins the decode batch below immediately.
         {
-            let mut failed: Vec<(usize, anyhow::Error)> = Vec::new();
+            let mut failed: Vec<(usize, Result<FinishReason>)> = Vec::new();
             for (i, slot) in active.iter_mut().enumerate() {
                 if !slot.sess.is_prefilling() {
                     continue;
                 }
-                if let Err(e) = engine.prefill_tick(&mut slot.sess, cfg.prefill_chunk) {
-                    failed.push((i, e));
+                if let Err(f) = engine.prefill_tick(&mut slot.sess, cfg.prefill_chunk) {
+                    failed.push((i, fault_outcome(f)));
                 }
             }
-            for (i, e) in failed.into_iter().rev() {
+            for (i, outcome) in failed.into_iter().rev() {
                 let slot = active.remove(i);
-                complete(slot, Err(e), &metrics);
+                complete(slot, outcome, metrics);
             }
         }
 
@@ -679,11 +861,11 @@ fn worker_loop<M: EngineModel>(
                         live.iter_mut().map(|(_, s)| &mut **s).collect();
                     engine.step_batch(&mut batch)
                 };
-                // per-session outcomes: a failing session finishes with
-                // its own error, its batchmates keep generating
+                // per-session outcomes: a faulting session finishes with
+                // its own typed terminal, its batchmates keep generating
                 for ((i, _), err) in live.into_iter().zip(errs) {
-                    if let Some(e) = err {
-                        finished.push((i, Err(e)));
+                    if let Some(f) = err {
+                        finished.push((i, fault_outcome(f)));
                     }
                 }
             }
@@ -697,9 +879,14 @@ fn worker_loop<M: EngineModel>(
         //    — the worker owns the engine, so the engine-side totals are
         //    authoritative), and the pressure gauges
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = lock(metrics);
             m.clip_events += engine.model.take_clip_events();
             m.prompt_tokens_prefilled = engine.prefilled_tokens();
+            let fs = engine.fault_stats();
+            m.fault_retries = fs.retries;
+            m.fault_rollbacks = fs.rollbacks;
+            m.panics_caught = fs.panics_caught;
+            m.numeric_faults_detected = fs.numeric_faults;
             if let Some(cs) = engine.cache_stats() {
                 m.prefix_cache_hits = cs.hits;
                 m.prefix_cache_misses = cs.misses;
@@ -708,6 +895,7 @@ fn worker_loop<M: EngineModel>(
                 m.prefix_cache_entries = cs.entries;
                 m.prefix_cache_evictions = cs.evictions;
                 m.prefix_cache_pinned = cs.pinned;
+                m.prefix_cache_quarantined = cs.quarantined;
             }
             m.queue_depth = queue_depth.load(Ordering::Acquire) as u64;
             m.active_sessions = (active.len() - finished.len()) as u64;
@@ -715,7 +903,7 @@ fn worker_loop<M: EngineModel>(
         // 8. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
             let slot = active.remove(i);
-            complete(slot, outcome, &metrics);
+            complete(slot, outcome, metrics);
         }
     }
 }
@@ -944,6 +1132,72 @@ mod tests {
         assert_eq!(rs[1].branch, 1);
         let m = c.metrics.lock().unwrap();
         assert_eq!(m.first_tokens, 2, "exactly the clamped branch count decodes");
+    }
+
+    #[test]
+    fn disconnected_sender_synthesizes_one_terminal_per_open_branch() {
+        // the stream-hang regression: if the worker's Sender dies with
+        // branches still open, recv must synthesize terminals — never
+        // block forever, never return None early
+        let mk_resp = |branch: usize, finish: FinishReason, tokens: Vec<u32>| GenResponse {
+            request_id: 1,
+            branch,
+            tokens,
+            finish,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            queue_seconds: 0.0,
+            ttft_seconds: 0.0,
+            cached_prefix_tokens: 0,
+        };
+        let mk_stream = |n: usize, rx| GenStream {
+            request_id: 1,
+            n_best: n,
+            rx,
+            cancel: Arc::new(AtomicBool::new(false)),
+            branch_done: vec![false; n],
+            mirror: None,
+            closed: false,
+        };
+
+        // whole-request terminal on branch 0 → mirrored (empty tokens)
+        // onto the never-born branches 1 and 2
+        let (tx, rx) = channel();
+        let mut s = mk_stream(3, rx);
+        tx.send(GenEvent::Started { branch: 0, cached_prefix_tokens: 0 }).unwrap();
+        tx.send(GenEvent::Finished(mk_resp(0, FinishReason::WorkerFailed, vec![7]))).unwrap();
+        drop(tx);
+        let mut finishes = Vec::new();
+        while let Some(ev) = s.recv() {
+            if let GenEvent::Finished(r) = ev {
+                finishes.push((r.branch, r.finish, r.tokens));
+            }
+        }
+        assert_eq!(
+            finishes,
+            vec![
+                (0, FinishReason::WorkerFailed, vec![7]),
+                (1, FinishReason::WorkerFailed, vec![]),
+                (2, FinishReason::WorkerFailed, vec![]),
+            ]
+        );
+        assert!(s.recv().is_none(), "exhausted stream stays exhausted");
+
+        // no whole-request terminal at all → typed Error per branch,
+        // and wait() still returns one outcome per branch
+        let (tx, rx) = channel();
+        let s = mk_stream(2, rx);
+        tx.send(GenEvent::Started { branch: 0, cached_prefix_tokens: 0 }).unwrap();
+        drop(tx);
+        let outcomes = s.wait();
+        assert_eq!(outcomes.len(), 2);
+        for (b, o) in outcomes.iter().enumerate() {
+            let e = o.as_ref().expect_err("open branch must surface a disconnect error");
+            assert!(
+                e.to_string().contains("worker connection lost"),
+                "branch {b}: unexpected error {e}"
+            );
+        }
     }
 
     #[test]

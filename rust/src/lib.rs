@@ -30,6 +30,10 @@
 //!   store that lets sessions resume prefill from cached RWKV states
 //!   (O(1) bytes per entry — the RWKV advantage a Transformer KV cache
 //!   can't match), plus the decode-state namespace fork requests reuse.
+//! * [`chaos`]       — deterministic fault injection: a seeded
+//!   [`chaos::ChaosModel`] wrapper that makes any `EngineModel` panic,
+//!   emit NaN, or stall on schedule, driving the fault-tolerance soak
+//!   tests and `rust/benches/chaos.rs`.
 //! * [`sim`]         — cycle-accurate accelerator simulator: HBM bridge
 //!   with ping-pong double buffering, MV-array / complex-unit / LayerNorm
 //!   timing, resource model (Table 2), energy model (Fig 8).
@@ -41,6 +45,7 @@
 
 pub mod arith;
 pub mod baselines;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod eval;

@@ -126,7 +126,8 @@ fn cmd_serve(args: &Args) -> hfrwkv::Result<()> {
         );
     }
     let wall = t0.elapsed().as_secs_f64();
-    let m = coord.metrics.lock().unwrap().clone();
+    // poison-tolerant: a worker panic must not take the report down too
+    let m = coord.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone();
     println!("\n{}", m.report());
     println!("wall time {wall:.2}s → {:.1} tok/s aggregate",
              m.tokens_generated as f64 / wall);

@@ -256,6 +256,25 @@ pub fn with_scratch<R>(f: impl FnOnce(&mut ScratchPanels) -> R) -> R {
     SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
 }
 
+/// Numeric health scan: true iff every float in the panel is finite
+/// (no NaN, no ±Inf).  This is the hook the serving layer's health
+/// guards run over logits panels and recurrent states after every
+/// engine call ([`crate::coordinator::FaultPolicy`]), and the check the
+/// state cache applies before a snapshot becomes resident — a single
+/// non-finite value in an RWKV state poisons every token the session
+/// will ever produce, so it must be caught at the panel boundary.
+///
+/// Branch-free accumulation (an f32 is non-finite iff its exponent
+/// field is all ones) so the scan vectorizes; it is O(len) loads + one
+/// `min` each, negligible next to the O(d²) walk that produced the
+/// panel.
+pub fn panel_all_finite(xs: &[f32]) -> bool {
+    const EXP: u32 = 0x7f80_0000;
+    xs.iter()
+        .fold(u32::MAX, |acc, x| acc.min((x.to_bits() & EXP) ^ EXP))
+        != 0
+}
+
 /// THE layer walk.  Consumes `tokens` (one per column), advances the
 /// state(s) per `cols`, and writes logits into `logits` per `head`
 /// (resized to `width * vocab` for [`HeadMode::PerColumn`], `vocab` for
@@ -489,4 +508,30 @@ fn channel_mixing<N: Numerics>(
         nm.quant(l, Site::FfnK2, &mut kf[of..of + f]);
     }
     matmul(m.ffn_value, kf, dx, width);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::panel_all_finite;
+
+    #[test]
+    fn finite_scan_accepts_normal_panels() {
+        assert!(panel_all_finite(&[]));
+        assert!(panel_all_finite(&[0.0, -0.0, 1.5, -3.25e20, f32::MIN_POSITIVE, f32::MAX]));
+        // subnormals are finite
+        assert!(panel_all_finite(&[1e-45, -1e-45]));
+    }
+
+    #[test]
+    fn finite_scan_flags_every_non_finite_class() {
+        for bad in [f32::NAN, -f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut xs = vec![1.0f32; 65];
+            assert!(panel_all_finite(&xs));
+            for i in [0, 31, 64] {
+                xs[i] = bad;
+                assert!(!panel_all_finite(&xs), "missed {bad} at {i}");
+                xs[i] = 1.0;
+            }
+        }
+    }
 }

@@ -58,7 +58,7 @@ pub mod sampler;
 pub mod tokenizer;
 pub mod weights;
 
-pub use forward::{Columns, HeadMode, Numerics, Site};
+pub use forward::{panel_all_finite, Columns, HeadMode, Numerics, Site};
 pub use rwkv::{RwkvModel, State};
 pub use rwkv_hw::{HwModel, LayerScales};
 pub use sampler::Sampler;

@@ -41,6 +41,19 @@
 //!   held handle pins its entry against eviction.
 //! * **Bounded**: a configurable byte budget with exact accounting and
 //!   LRU eviction over unpinned entries ([`StateCacheConfig`]).
+//! * **Quarantine rule — non-finite floats never become, or stay,
+//!   resident.**  A cached state is shared across *future* sessions, so
+//!   one NaN/±Inf snapshot would propagate a single numeric fault into
+//!   every request that later resumes from it.  The store therefore
+//!   scans every candidate's state and logits at insert
+//!   ([`panel_all_finite`](crate::model::panel_all_finite)) and refuses
+//!   poisoned ones (counted in [`CacheStats::quarantined`], distinct
+//!   from budget `rejected`); and when the engine's health guards catch
+//!   a non-finite panel mid-flight it calls
+//!   [`StateStore::purge_non_finite`], which sweeps out any poisoned
+//!   resident — *even pinned ones* (holders keep their `Arc`; the store
+//!   just stops serving it).  The chaos soak asserts
+//!   [`StateStore::scan_non_finite`] `== 0` after every faulted run.
 //!
 //! Cache keys are namespaced by model-variant class, so states produced
 //! by different numerics (`Exact` vs `HwApprox` on the PJRT runtime)

@@ -4,6 +4,7 @@ use std::sync::Arc;
 
 use super::trie::Trie;
 use super::StateCacheConfig;
+use crate::model::panel_all_finite;
 
 /// An immutable cached RWKV state: the flat `[n_layer * 5 * d]` vector
 /// captured after `tokens` prompt tokens were folded in.  Shared
@@ -94,6 +95,11 @@ pub struct CacheStats {
     /// fork branches sharing a decode state) — these are skipped by
     /// eviction, so `bytes_resident` can only shrink to the pinned sum.
     pub pinned: u64,
+    /// Snapshots refused at insert — or purged after a health guard
+    /// tripped — because their state or logits contained NaN/±Inf.
+    /// The quarantine rule (module docs): non-finite floats never
+    /// become, or stay, resident.
+    pub quarantined: u64,
 }
 
 struct Entry {
@@ -327,6 +333,14 @@ impl StateStore {
             cost,
             "cost hint must match the materialized snapshot"
         );
+        if !(panel_all_finite(&snap.state) && panel_all_finite(&snap.logits)) {
+            // quarantine at the door: a snapshot carrying NaN/±Inf must
+            // never become resident, or one poisoned capture would
+            // propagate the fault into every future resuming session
+            self.classes[class_slot].1.prune_from(node);
+            self.stats.quarantined += 1;
+            return InsertOutcome::Rejected;
+        }
         let shared = Arc::clone(&snap);
         let entry = Entry { snap, class_slot, node, last_used: self.tick() };
         let entry_id = match self.free.pop() {
@@ -344,6 +358,47 @@ impl StateStore {
         self.classes[class_slot].1.set_entry(node, entry_id);
         self.stats.inserts += 1;
         InsertOutcome::Inserted(shared)
+    }
+
+    /// Remove every resident snapshot whose state or logits contain
+    /// NaN/±Inf, returning how many were purged.  The insert-time scan
+    /// keeps poison out of the store under normal operation, so this is
+    /// the belt-and-braces sweep the engine runs when a health guard
+    /// trips mid-flight: once one non-finite panel has been observed,
+    /// residency-time trust is gone too.  Pinned entries are purged as
+    /// well — holders keep their `Arc` (a resuming session copies the
+    /// floats before mutating and re-validates on its own cycle), the
+    /// store just stops handing the snapshot to future requests.
+    pub fn purge_non_finite(&mut self) -> usize {
+        let mut removed = 0usize;
+        for i in 0..self.entries.len() {
+            let poisoned = self.entries[i].as_ref().is_some_and(|e| {
+                !(panel_all_finite(&e.snap.state) && panel_all_finite(&e.snap.logits))
+            });
+            if !poisoned {
+                continue;
+            }
+            let e = self.entries[i].take().expect("checked live above");
+            self.free.push(i);
+            self.bytes -= e.snap.cost_bytes();
+            self.live -= 1;
+            let removed_id = self.classes[e.class_slot].1.remove_entry(e.node);
+            debug_assert_eq!(removed_id, Some(i));
+            self.stats.quarantined += 1;
+            removed += 1;
+        }
+        removed
+    }
+
+    /// Diagnostic scan: resident snapshots currently carrying
+    /// non-finite values.  Always 0 under the quarantine rule — the
+    /// chaos soak asserts exactly that after every faulted run.
+    pub fn scan_non_finite(&self) -> usize {
+        self.entries
+            .iter()
+            .flatten()
+            .filter(|e| !(panel_all_finite(&e.snap.state) && panel_all_finite(&e.snap.logits)))
+            .count()
     }
 
     /// Evict least-recently-used unpinned entries until at most `target`
@@ -612,6 +667,59 @@ mod tests {
         assert_eq!(st.stats().pinned, 1);
         drop(pin2);
         assert_eq!(st.stats().pinned, 0);
+    }
+
+    #[test]
+    fn poisoned_snapshot_is_quarantined_at_insert() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        let mut bad = state(1.0, 4);
+        bad[2] = f32::NAN;
+        assert!(!st.insert_with(0, &[1, 2], 4, move || bad));
+        assert_eq!(st.len(), 0);
+        assert_eq!(st.bytes_resident(), 0);
+        let s = st.stats();
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.rejected, 0, "quarantine is not a budget rejection");
+        assert_eq!(s.inserts, 0);
+        // the structural node was undone, exactly like a budget reject
+        assert!(st.lookup(0, &[1, 2, 3], 2).is_none());
+        assert_eq!(st.scan_non_finite(), 0);
+    }
+
+    #[test]
+    fn adopt_refuses_non_finite_logits() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        let snap = SnapshotRef::detached(state(1.0, 4), 2, vec![f32::INFINITY; 3]);
+        let back = st.adopt(0, &[1, 2], snap.clone());
+        assert!(Arc::ptr_eq(&back.0, &snap.0), "refusal hands the detached copy back");
+        assert_eq!(st.len(), 0);
+        assert_eq!(st.stats().quarantined, 1);
+    }
+
+    #[test]
+    fn purge_removes_poisoned_residents_even_when_pinned() {
+        let mut st = StateStore::new(cfg(1 << 20));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        // poison the first resident in place — tests live inside the
+        // module, so they can reach through the Arc the way a buggy
+        // backend scribbling into a shared buffer would
+        {
+            let e = st.entries[0].as_mut().expect("first insert is live");
+            Arc::get_mut(&mut e.snap).expect("unpinned").state[3] = f32::NEG_INFINITY;
+        }
+        let pin = st.lookup(0, &[1, 1, 9], 2).unwrap(); // pin the poisoned entry
+        assert_eq!(st.scan_non_finite(), 1);
+        assert_eq!(st.purge_non_finite(), 1);
+        assert_eq!(st.scan_non_finite(), 0);
+        // the pinned holder keeps its handle; the store stops serving it
+        assert!(pin.state().iter().any(|x| !x.is_finite()));
+        assert!(st.lookup(0, &[1, 1, 9], 2).is_none());
+        assert!(st.lookup(0, &[2, 2, 9], 2).is_some(), "healthy resident survives");
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.bytes_resident(), cost(4, 2));
+        assert_eq!(st.stats().quarantined, 1);
+        assert_eq!(st.purge_non_finite(), 0, "purge is idempotent");
     }
 
     #[test]

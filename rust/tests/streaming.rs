@@ -264,6 +264,57 @@ fn priority_admits_before_fifo() {
 }
 
 #[test]
+fn overload_sheds_low_priority_and_preserves_high_priority_goodput() {
+    // one slow slot + a watermark of 4: flooding with 10 low-priority
+    // requests then 1 high-priority one must shed exactly 7 lows (the
+    // queue settles at the watermark; the high-priority request is
+    // never the shed victim) and the high-priority request must finish
+    // normally
+    let c = Coordinator::spawn(
+        slow_model(5),
+        CoordinatorConfig { max_active: 1, shed_watermark: 4, ..Default::default() },
+    );
+    // occupy the single slot so everything below stays queued
+    let mut blocker = c.submit(GenRequest::greedy(vec![1], 10_000)).unwrap();
+    match blocker.recv().unwrap() {
+        GenEvent::Started { .. } => {}
+        ev => panic!("expected Started, got {ev:?}"),
+    }
+    let lows: Vec<_> = (0..10u32)
+        .map(|i| c.submit(GenRequest::builder(vec![i % 50], 2).priority(0).build()).unwrap())
+        .collect();
+    let hi = c.submit(GenRequest::builder(vec![3], 2).priority(5).build()).unwrap();
+    blocker.cancel();
+    assert_eq!(blocker.wait_one().unwrap().finish, FinishReason::Cancelled);
+
+    let r_hi = hi.wait_one().unwrap();
+    assert_eq!(r_hi.finish, FinishReason::MaxTokens, "high-priority goodput must survive");
+    assert_eq!(r_hi.tokens.len(), 2);
+
+    let (mut shed, mut served) = (0, 0);
+    for s in lows {
+        let r = s.wait_one().unwrap();
+        match r.finish {
+            FinishReason::Shed => {
+                assert!(r.tokens.is_empty(), "shed requests never generate");
+                shed += 1;
+            }
+            FinishReason::MaxTokens => {
+                assert_eq!(r.tokens.len(), 2);
+                served += 1;
+            }
+            other => panic!("unexpected finish: {other:?}"),
+        }
+    }
+    // 11 queued, watermark 4 → exactly 7 shed; survivors = hi + 3 lows
+    assert_eq!((shed, served), (7, 3));
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.shed, 7);
+    assert_eq!(m.queue_depth, 0);
+    assert_eq!(m.active_sessions, 0);
+}
+
+#[test]
 fn fork_streams_all_branches_with_one_prefill() {
     let prompt: Vec<u32> = (0..32u32).map(|t| (t * 7 + 3) % 50).collect();
     let n = 8usize;
