@@ -10,13 +10,30 @@
 //! structural invariants always run; under `CHAOS_SOAK_ASSERT=1` any
 //! violation hard-fails the bench (what CI sets).
 //!
-//! Emits `BENCH_chaos.json` so future PRs can track recovery rates and
-//! guard overhead.
+//! A second sweep kills the whole worker thread every Nth scheduling
+//! cycle ([`hfrwkv::chaos::ChaosConfig::worker_kill_every`]) with the
+//! requests carrying a redrive budget, soaking the self-healing path:
+//! every stream is drained event-by-event and checked structurally —
+//! `seq_idx` gapless across every [`GenEvent::Redriven`] seam, at most
+//! `budget` redrives per stream, exactly one terminal, zero client
+//! re-submissions (each request is submitted once, ever).  Requests
+//! that finish clean must be bit-exact; requests that exhaust their
+//! budget must fail typed ([`FinishReason::WorkerFailed`]) carrying a
+//! healthy prefix; and the structured fault journal must attribute
+//! every crash decision (`Redriven` records == coordinator redrives,
+//! `SessionFailed` records == WorkerFailed terminals).
+//!
+//! Emits `BENCH_chaos.json` (recovery rates, guard overhead, redrive
+//! counts, crash-survivor cache size, resume-after-kill latency) so
+//! future PRs can track the whole fault surface.
 
 use std::time::Instant;
 
 use hfrwkv::chaos::{ChaosConfig, ChaosModel};
-use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, FaultPolicy, FinishReason, GenRequest};
+use hfrwkv::coordinator::{
+    Coordinator, CoordinatorConfig, FaultKind, FaultPolicy, FinishReason, GenEvent, GenRequest,
+    GenResponse, RecoveryAction,
+};
 use hfrwkv::model::rwkv::testing::test_model;
 use hfrwkv::model::RwkvModel;
 use hfrwkv::util::bench::{section, BenchReport};
@@ -25,6 +42,12 @@ const N_REQUESTS: u32 = 24;
 const TOKENS_PER_REQUEST: usize = 8;
 const RATES: [f64; 3] = [0.0, 0.05, 0.2];
 const CAPS: [usize; 2] = [2, 8];
+/// Crash redrives allowed per request in the worker-kill sweep.
+const REDRIVE_BUDGET: u32 = 2;
+/// Worker-kill sweep cells: (kill every Nth cycle, max_active).  The
+/// tight cell crashes most requests at least once and exhausts some
+/// budgets; the loose cells keep most requests clean.
+const KILL_CELLS: [(u64, usize); 3] = [(4, 2), (6, 8), (11, 8)];
 
 fn model() -> RwkvModel {
     test_model(2, 32, 64, 50)
@@ -119,6 +142,157 @@ fn run_cell(rate: f64, cap: usize, seed: u64, expected: &[Vec<u32>]) -> CellOutc
     }
 }
 
+struct KillOutcome {
+    clean: usize,
+    redriven_clean: usize,
+    worker_failed: usize,
+    mismatched: usize,
+    stream_violations: Vec<String>,
+    kills: u64,
+    restarts: u64,
+    redrives: u64,
+    redrives_completed: u64,
+    redrives_resumed: u64,
+    resume_seconds_total: f64,
+    recovered_snapshots: u64,
+    journal_redriven: usize,
+    journal_failed: usize,
+    gauges_zero: bool,
+    wall_s: f64,
+}
+
+/// One worker-kill cell: N redrive-budgeted requests through a
+/// coordinator whose worker panics every Nth scheduling cycle.  Every
+/// stream is drained event-by-event so the per-stream structure (seam
+/// placement, seq_idx continuity, one terminal) is checked, not just
+/// the terminal.
+fn run_kill_cell(kill_every: u64, cap: usize, expected: &[Vec<u32>]) -> KillOutcome {
+    let chaotic = ChaosModel::new(
+        model(),
+        ChaosConfig {
+            seed: kill_every * 31 + cap as u64,
+            fault_rate: 0.0,
+            worker_kill_every: kill_every,
+            ..ChaosConfig::default()
+        },
+    );
+    let log = chaotic.log_handle();
+    let cfg = CoordinatorConfig { max_active: cap, fault: policy(true), ..Default::default() };
+    let t0 = Instant::now();
+    let c = Coordinator::spawn(chaotic, cfg);
+    // each request is submitted exactly once — transparent redrive means
+    // the client never re-submits, whatever the worker does
+    let streams: Vec<_> = requests()
+        .into_iter()
+        .map(|r| {
+            GenRequest::builder(r.prompt, TOKENS_PER_REQUEST).redrive_budget(REDRIVE_BUDGET).build()
+        })
+        .map(|r| c.submit(r).expect("soak stays under max_queue"))
+        .collect();
+
+    let (mut clean, mut redriven_clean, mut worker_failed, mut mismatched) = (0, 0, 0, 0);
+    let mut violations: Vec<String> = Vec::new();
+    for (i, mut s) in streams.into_iter().enumerate() {
+        let mut toks: Vec<u32> = Vec::new();
+        let mut redriven_events = 0u32;
+        let mut terminal: Option<GenResponse> = None;
+        while let Some(ev) = s.recv() {
+            match ev {
+                GenEvent::Started { .. } => {}
+                GenEvent::Token { seq_idx, token, .. } => {
+                    if seq_idx != toks.len() {
+                        violations.push(format!(
+                            "req {i}: Token seq_idx {seq_idx} but {} delivered (gap/dup)",
+                            toks.len()
+                        ));
+                    }
+                    toks.push(token);
+                }
+                GenEvent::Redriven { replayed_from, .. } => {
+                    redriven_events += 1;
+                    if replayed_from != toks.len() {
+                        violations.push(format!(
+                            "req {i}: Redriven replayed_from {replayed_from} but {} delivered",
+                            toks.len()
+                        ));
+                    }
+                }
+                GenEvent::Finished(r) => {
+                    if terminal.is_some() {
+                        violations.push(format!("req {i}: second terminal"));
+                    }
+                    terminal = Some(r);
+                }
+                GenEvent::Error { message, .. } => {
+                    violations.push(format!("req {i}: error terminal under kills: {message}"));
+                }
+            }
+        }
+        if redriven_events > REDRIVE_BUDGET {
+            violations.push(format!("req {i}: {redriven_events} redrives exceed the budget"));
+        }
+        let Some(r) = terminal else {
+            violations.push(format!("req {i}: stream closed without a terminal"));
+            continue;
+        };
+        if r.tokens != toks {
+            violations.push(format!("req {i}: response tokens diverge from streamed tokens"));
+        }
+        match r.finish {
+            FinishReason::MaxTokens => {
+                if r.tokens == expected[i] {
+                    clean += 1;
+                    if redriven_events > 0 {
+                        redriven_clean += 1;
+                    }
+                } else {
+                    mismatched += 1;
+                }
+            }
+            FinishReason::WorkerFailed => {
+                worker_failed += 1;
+                if redriven_events != REDRIVE_BUDGET {
+                    violations.push(format!(
+                        "req {i}: WorkerFailed after {redriven_events} redrives (budget not spent)"
+                    ));
+                }
+                if toks.len() >= expected[i].len() || toks != expected[i][..toks.len()] {
+                    violations.push(format!(
+                        "req {i}: WorkerFailed tokens are not a healthy strict prefix"
+                    ));
+                }
+            }
+            other => {
+                violations.push(format!("req {i}: unexpected finish under kills: {other:?}"));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = c.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let j = c.fault_journal();
+    let crash = |action: RecoveryAction| {
+        j.iter().filter(|e| e.kind == FaultKind::WorkerCrash && e.action == action).count()
+    };
+    KillOutcome {
+        clean,
+        redriven_clean,
+        worker_failed,
+        mismatched,
+        stream_violations: violations,
+        kills: log.lock().unwrap_or_else(|e| e.into_inner()).worker_kills,
+        restarts: m.worker_restarts,
+        redrives: m.redrives,
+        redrives_completed: m.redrives_completed,
+        redrives_resumed: m.redrives_resumed,
+        resume_seconds_total: m.redrive_resume_seconds_total,
+        recovered_snapshots: m.cache_recovered_snapshots,
+        journal_redriven: crash(RecoveryAction::Redriven),
+        journal_failed: crash(RecoveryAction::SessionFailed),
+        gauges_zero: m.active_sessions == 0 && m.queue_depth == 0,
+        wall_s,
+    }
+}
+
 /// Aggregate throughput of the request mix through a plain (un-wrapped)
 /// model coordinator under the given fault policy — guards-on vs
 /// guards-off is the cost of the per-cycle NaN scans and last-good
@@ -147,16 +321,18 @@ fn main() {
     let mut report = BenchReport::new("chaos");
     let mut violations: Vec<String> = Vec::new();
 
-    // the injected panics would each print a full default-hook backtrace
-    // — silence exactly those (this binary is single-purpose, and real
-    // assertion failures still report through the kept default hook)
+    // the injected panics and worker kills would each print a full
+    // default-hook backtrace — silence exactly those (this binary is
+    // single-purpose, and real assertion failures still report through
+    // the kept default hook)
     let default_hook = std::panic::take_hook();
     std::panic::set_hook(Box::new(move |info| {
-        let injected = info
-            .payload()
+        let payload = info.payload();
+        let msg = payload
             .downcast_ref::<&str>()
-            .is_some_and(|s| s.contains("chaos: injected panic"));
-        if !injected {
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()));
+        if !msg.is_some_and(|s| s.contains("chaos: injected")) {
             default_hook(info);
         }
     }));
@@ -222,6 +398,87 @@ fn main() {
             if rate == 0.0 && (o.clean != N_REQUESTS as usize || o.injected != 0) {
                 violations.push(format!("{key}: zero-rate cell must be all-clean"));
             }
+        }
+    }
+
+    section(&format!(
+        "worker-kill soak: kill every Nth cycle (24 req x 8 tok, redrive budget {REDRIVE_BUDGET})"
+    ));
+    for &(kill_every, cap) in &KILL_CELLS {
+        let o = run_kill_cell(kill_every, cap, &expected);
+        let key = format!("kill{kill_every}_b{cap}");
+        let resume_ms = if o.redrives_resumed > 0 {
+            o.resume_seconds_total / o.redrives_resumed as f64 * 1e3
+        } else {
+            0.0
+        };
+        println!(
+            "  kill/{kill_every} B={cap}: {:>2} clean ({} redriven) / {} failed \
+             ({} kills, {} redrives, {} snapshots survived, {:.2}ms mean resume) in {:.2}s",
+            o.clean,
+            o.redriven_clean,
+            o.worker_failed,
+            o.kills,
+            o.redrives,
+            o.recovered_snapshots,
+            resume_ms,
+            o.wall_s
+        );
+        report.record(&format!("{key}_clean"), o.clean as f64);
+        report.record(&format!("{key}_redriven_clean"), o.redriven_clean as f64);
+        report.record(&format!("{key}_worker_failed"), o.worker_failed as f64);
+        report.record(&format!("{key}_kills"), o.kills as f64);
+        report.record(&format!("{key}_redrives"), o.redrives as f64);
+        report.record(&format!("{key}_redrives_completed"), o.redrives_completed as f64);
+        report.record(&format!("{key}_recovered_snapshots"), o.recovered_snapshots as f64);
+        report.record(&format!("{key}_journal_redriven"), o.journal_redriven as f64);
+        report.record(&format!("{key}_journal_failed"), o.journal_failed as f64);
+        report.record(&format!("{key}_mean_resume_ms"), resume_ms);
+        report.record(&format!("{key}_wall_s"), o.wall_s);
+
+        violations.extend(o.stream_violations.iter().map(|v| format!("{key}: {v}")));
+        if o.mismatched > 0 {
+            violations.push(format!("{key}: {} terminals carried non-bit-exact tokens", o.mismatched));
+        }
+        if o.clean + o.worker_failed + o.mismatched != N_REQUESTS as usize {
+            violations.push(format!(
+                "{key}: {} clean + {} failed + {} mismatched != {N_REQUESTS} \
+                 (a request lost its terminal)",
+                o.clean, o.worker_failed, o.mismatched
+            ));
+        }
+        if !o.gauges_zero {
+            violations.push(format!("{key}: gauges did not drain to zero"));
+        }
+        if o.kills == 0 || o.redrives == 0 {
+            violations.push(format!(
+                "{key}: the cell never exercised the kill path ({} kills, {} redrives)",
+                o.kills, o.redrives
+            ));
+        }
+        if o.restarts != o.kills {
+            violations.push(format!(
+                "{key}: {} kills but {} restarts (a kill escaped the supervisor)",
+                o.kills, o.restarts
+            ));
+        }
+        if o.journal_redriven as u64 != o.redrives {
+            violations.push(format!(
+                "{key}: journal attributes {} redrives, coordinator counted {}",
+                o.journal_redriven, o.redrives
+            ));
+        }
+        if o.journal_failed != o.worker_failed {
+            violations.push(format!(
+                "{key}: journal attributes {} crash failures, {} WorkerFailed terminals",
+                o.journal_failed, o.worker_failed
+            ));
+        }
+        if o.redrives_completed != o.redriven_clean as u64 {
+            violations.push(format!(
+                "{key}: {} redrives_completed vs {} redriven clean terminals",
+                o.redrives_completed, o.redriven_clean
+            ));
         }
     }
 

@@ -7,8 +7,16 @@
 //! the real call, so session state has genuinely advanced and only
 //! rollback can undo it), **NaN logits** (one victim slot of the
 //! returned/written panel), **NaN state** (scribbled into one victim's
-//! recurrent state), or **latency** (a sleep before the call, exercising
-//! timeout/deadline paths without corrupting anything).
+//! recurrent state), **latency** (a sleep before the call, exercising
+//! timeout/deadline paths without corrupting anything), or a **fatal
+//! model error** (the call *returns* `Err` instead of executing — the
+//! dead-runtime failure mode of a PJRT backend whose device vanished;
+//! deliberate and non-retryable, unlike a panic or a NaN).
+//!
+//! Orthogonally, [`ChaosConfig::worker_kill_every`] panics out of
+//! `take_clip_events` — a call the worker loop makes *outside* the
+//! engine's per-call fault guards — so the panic escapes to the
+//! supervisor and exercises the crash-redrive path end to end.
 //!
 //! The draw sequence is a pure function of the seed and the call
 //! sequence: one uniform draw per call, plus one kind-draw (and for
@@ -27,7 +35,7 @@
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::EngineModel;
 use crate::runtime::Variant;
@@ -51,6 +59,16 @@ pub struct ChaosConfig {
     /// Enable latency injection (sleep `latency_ms` before the call).
     pub latency: bool,
     pub latency_ms: u64,
+    /// Enable fatal model errors: the call returns `Err` without
+    /// executing, like a runtime whose device died.  The engine never
+    /// retries a model-returned error, so the session fails typed on
+    /// the first injection.
+    pub fatal: bool,
+    /// Every Nth `take_clip_events` call panics (0 disables) — a
+    /// worker-scope crash outside the per-call guards, forcing the
+    /// supervisor's redrive/recovery path.  Scheduled by call count,
+    /// not by `fault_rate`.
+    pub worker_kill_every: u64,
 }
 
 impl Default for ChaosConfig {
@@ -63,6 +81,8 @@ impl Default for ChaosConfig {
             nan_state: true,
             latency: false,
             latency_ms: 1,
+            fatal: false,
+            worker_kill_every: 0,
         }
     }
 }
@@ -76,11 +96,16 @@ pub struct InjectionLog {
     pub nan_logits: u64,
     pub nan_state: u64,
     pub latency: u64,
+    /// Fatal model errors returned (the call never executed).
+    pub fatal: u64,
+    /// Worker-scope kills thrown out of `take_clip_events`.
+    pub worker_kills: u64,
 }
 
 impl InjectionLog {
     /// Total corrupting injections (latency excluded — it delays but
-    /// never corrupts).
+    /// never corrupts; fatal errors and worker kills excluded too —
+    /// they abort cleanly rather than corrupting any panel).
     pub fn corruptions(&self) -> u64 {
         self.panics + self.nan_logits + self.nan_state
     }
@@ -92,6 +117,7 @@ enum Fault {
     NanLogits,
     NanState,
     Latency,
+    Fatal,
 }
 
 /// A fault-injecting [`EngineModel`] wrapper (see the module docs).
@@ -100,6 +126,10 @@ pub struct ChaosModel<M: EngineModel> {
     cfg: ChaosConfig,
     rng: Rng64,
     log: Arc<Mutex<InjectionLog>>,
+    /// `take_clip_events` calls seen — the `worker_kill_every` schedule
+    /// axis (deliberately not `fault_rate`-driven: one kill per N
+    /// scheduling cycles, deterministic in the cycle count).
+    clip_calls: u64,
 }
 
 fn locked(log: &Arc<Mutex<InjectionLog>>) -> std::sync::MutexGuard<'_, InjectionLog> {
@@ -110,7 +140,7 @@ fn locked(log: &Arc<Mutex<InjectionLog>>) -> std::sync::MutexGuard<'_, Injection
 
 impl<M: EngineModel> ChaosModel<M> {
     pub fn new(inner: M, cfg: ChaosConfig) -> ChaosModel<M> {
-        ChaosModel { inner, cfg, rng: Rng64::new(cfg.seed), log: Arc::default() }
+        ChaosModel { inner, cfg, rng: Rng64::new(cfg.seed), log: Arc::default(), clip_calls: 0 }
     }
 
     /// Snapshot of the injection counters.
@@ -143,6 +173,11 @@ impl<M: EngineModel> ChaosModel<M> {
         }
         if self.cfg.latency {
             kinds.push(Fault::Latency);
+        }
+        // pushed last so enabling `fatal` never re-maps the kind-draw
+        // of a schedule that ran without it
+        if self.cfg.fatal {
+            kinds.push(Fault::Fatal);
         }
         if !faulted || kinds.is_empty() {
             return None;
@@ -205,6 +240,11 @@ impl<M: EngineModel> EngineModel for ChaosModel<M> {
 
     fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>> {
         let fault = self.draw();
+        if fault == Some(Fault::Fatal) {
+            // a dead runtime returns without executing — state untouched
+            locked(&self.log).fatal += 1;
+            return Err(anyhow!("chaos: injected fatal runtime error (device lost)"));
+        }
         self.before(fault);
         let mut logits = self.inner.forward(state, token, variant)?;
         self.after(fault, &mut logits, state);
@@ -219,6 +259,18 @@ impl<M: EngineModel> EngineModel for ChaosModel<M> {
         logits: &mut Vec<f32>,
     ) -> Vec<Option<anyhow::Error>> {
         let fault = self.draw();
+        if fault == Some(Fault::Fatal) {
+            // one victim member's outcome becomes a model-returned
+            // error; its batchmates' outputs stay pristine (the engine
+            // must isolate, not retry — model errors are deliberate)
+            locked(&self.log).fatal += 1;
+            let victim = self.rng.below(states.len().max(1));
+            let mut outcomes = self.inner.forward_batch(states, tokens, variant, logits);
+            if let Some(o) = outcomes.get_mut(victim) {
+                *o = Some(anyhow!("chaos: injected fatal runtime error (device lost)"));
+            }
+            return outcomes;
+        }
         self.before(fault);
         let outcomes = self.inner.forward_batch(states, tokens, variant, logits);
         // one victim slot per faulting batch call — the batchmates'
@@ -256,6 +308,10 @@ impl<M: EngineModel> EngineModel for ChaosModel<M> {
         variant: Variant,
     ) -> Result<Vec<f32>> {
         let fault = self.draw();
+        if fault == Some(Fault::Fatal) {
+            locked(&self.log).fatal += 1;
+            return Err(anyhow!("chaos: injected fatal runtime error (device lost)"));
+        }
         self.before(fault);
         let mut logits = self.inner.prefill_chunk(state, tokens, variant)?;
         self.after(fault, &mut logits, state);
@@ -263,6 +319,16 @@ impl<M: EngineModel> EngineModel for ChaosModel<M> {
     }
 
     fn take_clip_events(&mut self) -> u64 {
+        self.clip_calls += 1;
+        if self.cfg.worker_kill_every > 0
+            && self.clip_calls % self.cfg.worker_kill_every == 0
+        {
+            // outside the per-call guards: this panic reaches the
+            // supervisor, which redrives in-flight sessions (budget
+            // permitting) and warm-recovers the cache
+            locked(&self.log).worker_kills += 1;
+            panic!("chaos: injected worker kill");
+        }
         self.inner.take_clip_events()
     }
 
@@ -356,6 +422,45 @@ mod tests {
         assert!(out.is_err(), "rate 1.0 with only panics enabled must panic");
         let log = *handle.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         assert_eq!((log.calls, log.panics), (1, 1));
+    }
+
+    #[test]
+    fn fatal_fault_returns_error_without_executing() {
+        let mut m = ChaosModel::new(
+            test_model(2, 32, 64, 50),
+            ChaosConfig {
+                seed: 7,
+                fault_rate: 1.0,
+                panics: false,
+                nan_logits: false,
+                nan_state: false,
+                fatal: true,
+                ..ChaosConfig::default()
+            },
+        );
+        let mut st = m.init_state();
+        let before = st.clone();
+        let err = m.forward(&mut st, 1, Variant::Exact).unwrap_err();
+        assert!(err.to_string().contains("chaos: injected fatal"), "{err}");
+        assert_eq!(st, before, "a dead runtime never advances state");
+        let log = m.log();
+        assert_eq!(log.fatal, 1);
+        assert_eq!(log.corruptions(), 0, "a fatal error aborts cleanly, it corrupts nothing");
+    }
+
+    #[test]
+    fn worker_kill_fires_every_nth_clip_drain() {
+        let mut m = ChaosModel::new(
+            test_model(2, 32, 64, 50),
+            ChaosConfig { worker_kill_every: 3, ..ChaosConfig::default() },
+        );
+        for i in 1..=7u64 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                m.take_clip_events()
+            }));
+            assert_eq!(r.is_err(), i % 3 == 0, "call {i} on a kill-every-3 schedule");
+        }
+        assert_eq!(m.log().worker_kills, 2);
     }
 
     #[test]

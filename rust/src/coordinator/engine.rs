@@ -4,10 +4,12 @@
 //! serves through the same coordinator).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
 use super::{FinishReason, GenRequest};
 use crate::model::sampler::Sampler;
 use crate::model::{panel_all_finite, HwModel, RwkvModel, State};
@@ -70,6 +72,11 @@ pub enum SessionFault {
     Numeric,
     /// The model panicked on every retry; the payload message.
     Panicked(String),
+    /// A retry's backoff sleep would cross the session's wall-clock
+    /// deadline, so the retry chain was abandoned instead of sleeping
+    /// into it; the scheduler maps this onto
+    /// [`FinishReason::DeadlineExceeded`].
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for SessionFault {
@@ -80,6 +87,9 @@ impl std::fmt::Display for SessionFault {
                 write!(f, "model produced non-finite logits or state (retries exhausted)")
             }
             SessionFault::Panicked(msg) => write!(f, "model panicked: {msg}"),
+            SessionFault::DeadlineExceeded => {
+                write!(f, "retry backoff abandoned: it would cross the session deadline")
+            }
         }
     }
 }
@@ -110,13 +120,25 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 
 /// Exponential backoff before retry `attempt` (1-based): `base << (k-1)`
 /// milliseconds, capped at 64× base so a deep retry chain cannot stall
-/// the whole worker for seconds.
-fn backoff_sleep(base_ms: u64, attempt: u32) {
+/// the whole worker for seconds.  Returned as a duration (not slept
+/// inline) so callers can first check it against a session deadline —
+/// sleeping *into* a deadline would burn wall-clock the session can
+/// never recover.
+fn backoff_duration(base_ms: u64, attempt: u32) -> Duration {
     if base_ms == 0 {
-        return;
+        return Duration::ZERO;
     }
     let factor = 1u64 << attempt.saturating_sub(1).min(6);
-    std::thread::sleep(Duration::from_millis(base_ms.saturating_mul(factor)));
+    Duration::from_millis(base_ms.saturating_mul(factor))
+}
+
+/// Would sleeping `sleep` from now cross `deadline_at`?  (A retry whose
+/// backoff lands past the deadline is pointless — the session would be
+/// reaped `DeadlineExceeded` before its retried call could commit.)
+fn sleep_crosses_deadline(sleep: Duration, deadline_at: Option<Instant>) -> bool {
+    deadline_at.is_some_and(|dl| {
+        Instant::now().checked_add(sleep).map_or(true, |wake| wake >= dl)
+    })
 }
 
 /// Anything that can run RWKV one token at a time with explicit state.
@@ -495,10 +517,28 @@ pub struct ActiveSession {
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
     /// Time from enqueue to the first sampled token (set when prefill
-    /// completes; 0 while still prefilling).
+    /// completes; 0 while still prefilling).  A redriven session keeps
+    /// its original TTFT — the first token was genuinely delivered
+    /// before the crash.
     pub ttft_seconds: f64,
     pub enqueued_at: Instant,
     pub started_at: Instant,
+    /// Absolute deadline (`enqueued_at + req.deadline`), precomputed at
+    /// admission so the retry-backoff guards don't re-derive it per
+    /// fault.  `None` = no deadline.
+    pub deadline_at: Option<Instant>,
+    /// How many times the supervisor has already redriven this session
+    /// (0 = never crashed); compared against `req.redrive_budget`.
+    pub redrive_attempt: u32,
+    /// Length of the *client's* prompt (post BOS-pad).  Equal to
+    /// `req.prompt.len()` for ordinary sessions; shorter for redriven
+    /// ones, whose prompt was extended with the already-committed
+    /// tokens (`req.prompt[orig_prompt_len..]` = the replayed output).
+    pub orig_prompt_len: usize,
+    /// When the worker crash that redrove this session was handled —
+    /// consumed by the scheduler at the next committed token to measure
+    /// time-to-first-token-after-fault.  `None` for ordinary sessions.
+    pub redriven_at: Option<Instant>,
 }
 
 impl ActiveSession {
@@ -537,13 +577,19 @@ pub struct Engine<M: EngineModel> {
     /// fork bench's one-prefill assertion reads via
     /// [`super::Metrics::prompt_tokens_prefilled`].
     prefilled_tokens: u64,
-    /// The cache's construction config, kept so [`Engine::recover`] can
-    /// rebuild a fresh store after a worker-scope failure.
-    cache_cfg: Option<StateCacheConfig>,
     /// Fault handling for the guarded calls (see [`FaultPolicy`]).
     policy: FaultPolicy,
     /// Cumulative fault counters (see [`FaultStats`]).
     faults: FaultStats,
+    /// Structured fault journal (see [`super::journal`]): every guarded-
+    /// call fault is recorded with its attribution tuple.  Shared so
+    /// the scheduler's supervisor can append worker-scope events to the
+    /// same ring ([`Engine::set_journal`]).
+    journal: Arc<Mutex<FaultJournal>>,
+    /// Scheduling cycle counter, bumped by the worker loop via
+    /// [`Engine::begin_cycle`] — the `cycle` stamped into journal
+    /// events (0 for non-scheduler callers that never bump it).
+    cycle: u64,
 }
 
 impl<M: EngineModel> Engine<M> {
@@ -553,9 +599,10 @@ impl<M: EngineModel> Engine<M> {
             batch_logits: Vec::new(),
             cache: None,
             prefilled_tokens: 0,
-            cache_cfg: None,
             policy: FaultPolicy::default(),
             faults: FaultStats::default(),
+            journal: Arc::new(Mutex::new(FaultJournal::default())),
+            cycle: 0,
         }
     }
 
@@ -564,15 +611,9 @@ impl<M: EngineModel> Engine<M> {
     /// `rust/tests/statecache.rs`), so the cache changes latency, never
     /// tokens.
     pub fn with_cache(model: M, cfg: StateCacheConfig) -> Engine<M> {
-        Engine {
-            model,
-            batch_logits: Vec::new(),
-            cache: Some(StateStore::new(cfg)),
-            prefilled_tokens: 0,
-            cache_cfg: Some(cfg),
-            policy: FaultPolicy::default(),
-            faults: FaultStats::default(),
-        }
+        let mut e = Engine::new(model);
+        e.cache = Some(StateStore::new(cfg));
+        e
     }
 
     /// Set how guarded calls treat faults (see [`FaultPolicy`]; the
@@ -592,16 +633,69 @@ impl<M: EngineModel> Engine<M> {
 
     /// Reset the engine's serving-side state after a worker-scope
     /// failure: the batch panel is dropped (a panic can leave it
-    /// half-written) and the state cache is rebuilt **empty** — a
-    /// supervisor cannot know which residents the dying cycle touched,
-    /// so every snapshot is conservatively assumed tainted.  The model
-    /// and the cumulative counters survive; per-session state belonged
-    /// to the sessions the supervisor just terminated.
-    pub fn recover(&mut self) {
+    /// half-written) and the state cache runs a **selective**
+    /// crash-recovery sweep ([`StateStore::recover`]) — residents whose
+    /// panels pass the non-finite scan survive with recency intact
+    /// (the insert-time quarantine already kept poison out, and the
+    /// scan re-proves each survivor healthy *now*), while anything the
+    /// dying cycle managed to corrupt is purged.  Surviving snapshots
+    /// are what lets a redriven session resume from its deepest cached
+    /// prefix instead of re-prefilling from token 0.  The model and
+    /// the cumulative counters survive; per-session state belonged to
+    /// the sessions the supervisor just dropped (which also released
+    /// their pins).  Returns `(kept, purged)` cache entries — `(0, 0)`
+    /// with the cache disabled.
+    pub fn recover(&mut self) -> (usize, usize) {
         self.batch_logits = Vec::new();
-        if let Some(cfg) = self.cache_cfg {
-            self.cache = Some(StateStore::new(cfg));
+        match &mut self.cache {
+            Some(cache) => cache.recover(),
+            None => (0, 0),
         }
+    }
+
+    /// Handle on the structured fault journal (see [`super::journal`]).
+    pub fn journal(&self) -> Arc<Mutex<FaultJournal>> {
+        Arc::clone(&self.journal)
+    }
+
+    /// Replace the journal with a shared one (the scheduler installs a
+    /// ring it also hands to the supervisor and the `Coordinator`
+    /// front-end, so all three record into one attribution stream).
+    pub fn set_journal(&mut self, journal: Arc<Mutex<FaultJournal>>) {
+        self.journal = journal;
+    }
+
+    /// Bump the scheduling-cycle stamp (the worker loop calls this once
+    /// per cycle; journal events record the current value).
+    pub fn begin_cycle(&mut self) {
+        self.cycle += 1;
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Append one attribution record to the fault journal.
+    fn record_fault(
+        &self,
+        request_id: u64,
+        branch: usize,
+        phase: FaultPhase,
+        kind: FaultKind,
+        attempt: u32,
+        action: RecoveryAction,
+    ) {
+        let mut j = self.journal.lock().unwrap_or_else(|e| e.into_inner());
+        j.record(FaultEvent {
+            request_id,
+            branch,
+            cycle: self.cycle,
+            phase,
+            kind,
+            attempt,
+            action,
+            unix_s: 0.0,
+        });
     }
 
     /// Purge any non-finite snapshot from the cache — called whenever a
@@ -696,6 +790,8 @@ impl<M: EngineModel> Engine<M> {
                 }
             }
         }
+        let deadline_at = req.deadline.and_then(|d| enqueued_at.checked_add(d));
+        let orig_prompt_len = req.prompt.len();
         ActiveSession {
             request_id,
             branch: 0,
@@ -713,7 +809,55 @@ impl<M: EngineModel> Engine<M> {
             ttft_seconds: 0.0,
             enqueued_at,
             started_at: Instant::now(),
+            deadline_at,
+            redrive_attempt: 0,
+            orig_prompt_len,
+            redriven_at: None,
         }
+    }
+
+    /// Turn a freshly admitted session back into the continuation of a
+    /// crashed one (the supervisor re-submitted it with its prompt
+    /// extended by the already-committed tokens — see the redrive
+    /// section of the [`crate::coordinator`] docs).  `orig_prompt_len`
+    /// splits that extended prompt back into client prompt vs replayed
+    /// output: the suffix is re-seeded into `generated`, so `seq_idx`
+    /// (`generated.len() - 1` at commit) continues without gaps or
+    /// duplicates and the finish conditions count the replayed tokens.
+    /// The sampler is rebuilt at the session's branch seed and
+    /// fast-forwarded by the replayed count — [`Sampler::sample`]
+    /// consumes exactly one draw per token, so the continuation is
+    /// bit-exact with the run that never crashed.  Chunked prefill over
+    /// the extended prompt is bit-exact with the stepwise decode that
+    /// produced those tokens, so the restored state is too.
+    pub fn resume_redriven(
+        &mut self,
+        s: &mut ActiveSession,
+        branch: usize,
+        attempt: u32,
+        orig_prompt_len: usize,
+        failed_at: Instant,
+    ) {
+        debug_assert!(orig_prompt_len <= s.req.prompt.len());
+        // A redrive with no committed tokens to replay (a fork parent
+        // crashed mid-prefill, say) may legally re-admit straight into
+        // ForkReady via a decode-NS cache hit; any session with a
+        // replay suffix must still be prefilling it.
+        debug_assert!(
+            s.is_prefilling() || orig_prompt_len == s.req.prompt.len(),
+            "a redrive with replayed tokens re-enters through chunked prefill"
+        );
+        s.branch = branch;
+        s.redrive_attempt = attempt;
+        s.orig_prompt_len = orig_prompt_len;
+        s.generated = s.req.prompt[orig_prompt_len..].to_vec();
+        s.sampler = Sampler::new(
+            s.req.temperature,
+            s.req.top_k,
+            s.req.seed.wrapping_add(branch as u64),
+        );
+        s.sampler.fast_forward(s.generated.len());
+        s.redriven_at = Some(failed_at);
     }
 
     /// Consume up to `max_chunk` prompt tokens of a `Prefilling` session
@@ -773,6 +917,14 @@ impl<M: EngineModel> Engine<M> {
                 // dead runtime): surface immediately, never retry
                 Ok(Err(e)) => {
                     s.prefill_seconds += t0.elapsed().as_secs_f64();
+                    self.record_fault(
+                        s.request_id,
+                        s.branch,
+                        FaultPhase::Prefill,
+                        FaultKind::ModelError,
+                        attempt,
+                        RecoveryAction::SessionFailed,
+                    );
                     return Err(SessionFault::Error(e));
                 }
                 Err(payload) => {
@@ -780,17 +932,52 @@ impl<M: EngineModel> Engine<M> {
                     SessionFault::Panicked(panic_message(payload))
                 }
             };
+            let kind = match fault {
+                SessionFault::Numeric => FaultKind::NonFinite,
+                _ => FaultKind::Panic,
+            };
             // a panic can abandon the state mid-marshal and a NaN has
             // definitely poisoned it — roll back either way (no-op in
             // fail-fast mode, where the faulting session dies anyway)
             self.rollback_session(s);
             if attempt >= self.policy.max_retries {
                 s.prefill_seconds += t0.elapsed().as_secs_f64();
+                self.record_fault(
+                    s.request_id,
+                    s.branch,
+                    FaultPhase::Prefill,
+                    kind,
+                    attempt,
+                    RecoveryAction::SessionFailed,
+                );
                 return Err(fault);
             }
             attempt += 1;
+            let sleep = backoff_duration(self.policy.retry_backoff_ms, attempt);
+            if sleep_crosses_deadline(sleep, s.deadline_at) {
+                s.prefill_seconds += t0.elapsed().as_secs_f64();
+                self.record_fault(
+                    s.request_id,
+                    s.branch,
+                    FaultPhase::Prefill,
+                    kind,
+                    attempt,
+                    RecoveryAction::DeadlineAbandoned,
+                );
+                return Err(SessionFault::DeadlineExceeded);
+            }
+            self.record_fault(
+                s.request_id,
+                s.branch,
+                FaultPhase::Prefill,
+                kind,
+                attempt,
+                RecoveryAction::Retried,
+            );
             self.faults.retries += 1;
-            backoff_sleep(self.policy.retry_backoff_ms, attempt);
+            if !sleep.is_zero() {
+                std::thread::sleep(sleep);
+            }
         };
         self.prefilled_tokens += (end - pos) as u64;
         s.phase = SessionPhase::Prefilling { pos: end };
@@ -820,7 +1007,11 @@ impl<M: EngineModel> Engine<M> {
                 s.phase = SessionPhase::ForkReady { logits };
             } else {
                 s.next_token = s.sampler.sample(&logits);
-                s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
+                // a redriven session keeps its pre-crash TTFT (the
+                // scheduler restores it before this tick runs)
+                if s.ttft_seconds == 0.0 {
+                    s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
+                }
                 s.phase = SessionPhase::Decoding;
             }
         }
@@ -861,6 +1052,10 @@ impl<M: EngineModel> Engine<M> {
             prefill_seconds,
             enqueued_at,
             started_at,
+            deadline_at,
+            redrive_attempt,
+            orig_prompt_len,
+            redriven_at,
             ..
         } = parent;
         let SessionPhase::ForkReady { logits } = phase else {
@@ -922,6 +1117,12 @@ impl<M: EngineModel> Engine<M> {
                     ttft_seconds: ttft,
                     enqueued_at,
                     started_at,
+                    deadline_at,
+                    redrive_attempt,
+                    orig_prompt_len,
+                    // same accounting as prefill_seconds: one crash, one
+                    // resume measurement
+                    redriven_at: if b == 0 { redriven_at } else { None },
                 }
             })
             .collect()
@@ -1048,13 +1249,53 @@ impl<M: EngineModel> Engine<M> {
                         }
                         if attempt >= self.policy.max_retries {
                             for &i in &pending {
+                                self.record_fault(
+                                    sessions[i].request_id,
+                                    sessions[i].branch,
+                                    FaultPhase::Decode,
+                                    FaultKind::Panic,
+                                    attempt,
+                                    RecoveryAction::SessionFailed,
+                                );
                                 errors[i] = Some(SessionFault::Panicked(msg.clone()));
                             }
                             pending.clear();
                         } else {
                             attempt += 1;
-                            self.faults.retries += 1;
-                            backoff_sleep(self.policy.retry_backoff_ms, attempt);
+                            let sleep = backoff_duration(self.policy.retry_backoff_ms, attempt);
+                            // never sleep a member into its deadline:
+                            // doomed ones finish DeadlineExceeded now,
+                            // the rest keep their retry
+                            pending.retain(|&i| {
+                                if sleep_crosses_deadline(sleep, sessions[i].deadline_at) {
+                                    self.record_fault(
+                                        sessions[i].request_id,
+                                        sessions[i].branch,
+                                        FaultPhase::Decode,
+                                        FaultKind::Panic,
+                                        attempt,
+                                        RecoveryAction::DeadlineAbandoned,
+                                    );
+                                    errors[i] = Some(SessionFault::DeadlineExceeded);
+                                    false
+                                } else {
+                                    self.record_fault(
+                                        sessions[i].request_id,
+                                        sessions[i].branch,
+                                        FaultPhase::Decode,
+                                        FaultKind::Panic,
+                                        attempt,
+                                        RecoveryAction::Retried,
+                                    );
+                                    true
+                                }
+                            });
+                            if !pending.is_empty() {
+                                self.faults.retries += 1;
+                                if !sleep.is_zero() {
+                                    std::thread::sleep(sleep);
+                                }
+                            }
                         }
                         continue;
                     }
@@ -1087,7 +1328,17 @@ impl<M: EngineModel> Engine<M> {
                         // a model-returned error is deliberate: the
                         // member's state advanced exactly once (the
                         // forward_batch contract), no retry
-                        Some(e) => errors[i] = Some(SessionFault::Error(e)),
+                        Some(e) => {
+                            self.record_fault(
+                                sessions[i].request_id,
+                                sessions[i].branch,
+                                FaultPhase::Decode,
+                                FaultKind::ModelError,
+                                attempt,
+                                RecoveryAction::SessionFailed,
+                            );
+                            errors[i] = Some(SessionFault::Error(e));
+                        }
                         None => {
                             let healthy = {
                                 let lg = &self.batch_logits[slot * vocab..(slot + 1) * vocab];
@@ -1116,14 +1367,51 @@ impl<M: EngineModel> Engine<M> {
                     pending.clear();
                 } else if attempt >= self.policy.max_retries {
                     for &i in &next_pending {
+                        self.record_fault(
+                            sessions[i].request_id,
+                            sessions[i].branch,
+                            FaultPhase::Decode,
+                            FaultKind::NonFinite,
+                            attempt,
+                            RecoveryAction::SessionFailed,
+                        );
                         errors[i] = Some(SessionFault::Numeric);
                     }
                     pending.clear();
                 } else {
                     pending = next_pending;
                     attempt += 1;
-                    self.faults.retries += 1;
-                    backoff_sleep(self.policy.retry_backoff_ms, attempt);
+                    let sleep = backoff_duration(self.policy.retry_backoff_ms, attempt);
+                    pending.retain(|&i| {
+                        if sleep_crosses_deadline(sleep, sessions[i].deadline_at) {
+                            self.record_fault(
+                                sessions[i].request_id,
+                                sessions[i].branch,
+                                FaultPhase::Decode,
+                                FaultKind::NonFinite,
+                                attempt,
+                                RecoveryAction::DeadlineAbandoned,
+                            );
+                            errors[i] = Some(SessionFault::DeadlineExceeded);
+                            false
+                        } else {
+                            self.record_fault(
+                                sessions[i].request_id,
+                                sessions[i].branch,
+                                FaultPhase::Decode,
+                                FaultKind::NonFinite,
+                                attempt,
+                                RecoveryAction::Retried,
+                            );
+                            true
+                        }
+                    });
+                    if !pending.is_empty() {
+                        self.faults.retries += 1;
+                        if !sleep.is_zero() {
+                            std::thread::sleep(sleep);
+                        }
+                    }
                 }
             }
         }
@@ -1592,6 +1880,70 @@ mod tests {
         assert_eq!(s.state, sc.state, "retried prefill must be 0 ULP with fault-free");
         let f = e.fault_stats();
         assert_eq!((f.panics_caught, f.retries, f.rollbacks), (1, 1, 1));
+    }
+
+    #[test]
+    fn retry_backoff_never_sleeps_into_the_deadline() {
+        // the deadline-blind-backoff bugfix: a persistent fault with a
+        // 200ms backoff base and a 20ms deadline must abandon the retry
+        // chain immediately instead of burning >2s of exponential sleeps
+        let mut e = Engine::new(Flaky {
+            inner: test_model(2, 32, 64, 50),
+            calls: 0,
+            panic_on: (1..=40).collect(),
+            nan_on: vec![],
+        });
+        e.set_fault_policy(FaultPolicy {
+            health_guards: true,
+            max_retries: 12,
+            retry_backoff_ms: 200,
+        });
+        let mut req = GenRequest::greedy(vec![1, 2, 3], 4);
+        req.deadline = Some(Duration::from_millis(20));
+        let t0 = Instant::now();
+        let mut s = e.admit(1, req, Instant::now());
+        let err = e.prefill_tick(&mut s, 8).unwrap_err();
+        assert!(matches!(err, SessionFault::DeadlineExceeded), "got {err}");
+        assert!(t0.elapsed() < Duration::from_millis(500), "slept into the deadline");
+        let journal = e.journal();
+        let events = journal.lock().unwrap().snapshot();
+        assert!(
+            events.iter().any(|ev| ev.request_id == 1
+                && ev.kind == FaultKind::Panic
+                && ev.action == RecoveryAction::DeadlineAbandoned),
+            "the abandoned retry must be journalled: {events:?}"
+        );
+    }
+
+    #[test]
+    fn redriven_session_continues_bitexact_after_simulated_crash() {
+        // fault-free reference at a sampling temperature (the RNG-draw
+        // accounting is what redrive must reproduce)
+        let mut clean = engine();
+        let req = GenRequest::builder(vec![5, 9, 13], 10)
+            .temperature(0.9)
+            .top_k(12)
+            .seed(21)
+            .build();
+        let mut c = clean.start(1, req.clone(), Instant::now()).unwrap();
+        while clean.step_session(&mut c).unwrap().is_none() {}
+        assert_eq!(c.generated.len(), 10);
+        // crash after 4 committed tokens: rebuild the session the way
+        // the supervisor does — prompt extended by the committed prefix,
+        // then resume_redriven to re-seed generated/sampler
+        let k = 4;
+        let mut redo = req.clone();
+        redo.prompt.extend_from_slice(&c.generated[..k]);
+        let mut e = engine();
+        let mut s = e.admit(1, redo, Instant::now());
+        e.resume_redriven(&mut s, 0, 1, req.prompt.len(), Instant::now());
+        assert_eq!(s.generated, c.generated[..k].to_vec());
+        while !e.prefill_tick(&mut s, 4).unwrap() {}
+        while e.step_session(&mut s).unwrap().is_none() {}
+        assert_eq!(s.generated, c.generated, "redriven continuation must be bit-exact");
+        assert_eq!(s.state, c.state, "post-run state must be 0 ULP too");
+        assert_eq!(s.redrive_attempt, 1);
+        assert!(s.redriven_at.is_some());
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Structured fault journal: a bounded ring of typed [`FaultEvent`]
+//! records replacing counters-only fault observability.
+//!
+//! Counters ([`super::Metrics`], [`super::engine::FaultStats`]) say *how
+//! many* faults happened; the journal says *which request*, on *which
+//! scheduling cycle*, in *which phase*, of *what kind*, on *which retry
+//! attempt*, and *what the serving stack did about it* — the tuple an
+//! operator needs to attribute a bad terminal to its root cause.  The
+//! engine records per-call faults (guarded prefill chunks and decode
+//! cycles), the supervisor records worker-scope crashes and the redrive
+//! decision taken for each in-flight session, and
+//! [`super::Coordinator::fault_journal`] hands the ring to callers; the
+//! chaos bench serializes the aggregate counts into `BENCH_chaos.json`.
+//!
+//! The ring is bounded (`FaultJournal::with_capacity`): a fault storm
+//! overwrites the oldest records and counts them in `dropped` rather
+//! than growing without bound on the serving path — the same
+//! discipline as the bounded admission queue.
+
+use std::collections::VecDeque;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Which serving phase the fault interrupted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// A guarded [`super::engine::Engine::prefill_tick`] chunk.
+    Prefill,
+    /// A guarded [`super::engine::Engine::step_batch`] decode cycle.
+    Decode,
+    /// Outside the per-call guards: the worker loop itself died and the
+    /// supervisor handled the session.
+    Worker,
+}
+
+/// What went wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The model panicked inside a guarded call.
+    Panic,
+    /// NaN/±Inf in a logits or state panel (health guards).
+    NonFinite,
+    /// The model *returned* an error (e.g. a dead runtime) — deliberate,
+    /// never retried.
+    ModelError,
+    /// A panic escaped the per-call guards and killed the worker loop;
+    /// the supervisor records one event per affected in-flight session.
+    WorkerCrash,
+}
+
+/// What the serving stack did about the fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Rolled the session(s) back to the last-good snapshot and re-ran
+    /// the call.
+    Retried,
+    /// Retry budget exhausted (or the fault is non-retryable): the
+    /// session finished with a typed terminal.
+    SessionFailed,
+    /// The retry was abandoned because its backoff sleep would cross
+    /// the session's deadline; the session finished
+    /// [`super::FinishReason::DeadlineExceeded`].
+    DeadlineAbandoned,
+    /// The supervisor re-admitted the session for a transparent redrive
+    /// ([`super::GenRequest::redrive_budget`]).
+    Redriven,
+}
+
+/// One journalled fault: the full attribution tuple.
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    pub request_id: u64,
+    /// Best-of-n branch index (0 for ordinary sessions).
+    pub branch: usize,
+    /// Engine scheduling cycle on which the fault fired (see
+    /// [`super::engine::Engine::cycle`]).
+    pub cycle: u64,
+    pub phase: FaultPhase,
+    pub kind: FaultKind,
+    /// Retry attempt the fault interrupted (0 = first try; for
+    /// [`FaultKind::WorkerCrash`] the session's redrive attempt so far).
+    pub attempt: u32,
+    pub action: RecoveryAction,
+    /// Wall-clock seconds since the UNIX epoch at record time.
+    pub unix_s: f64,
+}
+
+/// Bounded ring buffer of [`FaultEvent`]s (see the module docs).
+#[derive(Clone, Debug)]
+pub struct FaultJournal {
+    events: VecDeque<FaultEvent>,
+    cap: usize,
+    recorded: u64,
+    dropped: u64,
+}
+
+/// Default ring capacity: generous for attribution, bounded for a
+/// fault storm (each record is a few dozen bytes).
+const DEFAULT_CAP: usize = 256;
+
+impl Default for FaultJournal {
+    fn default() -> Self {
+        FaultJournal::with_capacity(DEFAULT_CAP)
+    }
+}
+
+impl FaultJournal {
+    pub fn with_capacity(cap: usize) -> FaultJournal {
+        FaultJournal {
+            events: VecDeque::with_capacity(cap.max(1).min(DEFAULT_CAP)),
+            cap: cap.max(1),
+            recorded: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append one event, evicting the oldest when the ring is full.
+    pub fn record(&mut self, mut ev: FaultEvent) {
+        ev.unix_s = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+        self.recorded += 1;
+    }
+
+    /// Events currently resident, oldest first.
+    pub fn snapshot(&self) -> Vec<FaultEvent> {
+        self.events.iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Cumulative events ever recorded (resident + overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64) -> FaultEvent {
+        FaultEvent {
+            request_id: id,
+            branch: 0,
+            cycle: id,
+            phase: FaultPhase::Decode,
+            kind: FaultKind::Panic,
+            attempt: 0,
+            action: RecoveryAction::Retried,
+            unix_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_counts() {
+        let mut j = FaultJournal::with_capacity(3);
+        for i in 0..5 {
+            j.record(ev(i));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.recorded(), 5);
+        assert_eq!(j.dropped(), 2);
+        let ids: Vec<u64> = j.snapshot().iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest records are the ones overwritten");
+        assert!(j.snapshot().iter().all(|e| e.unix_s > 0.0), "wall-clock stamped at record");
+    }
+}

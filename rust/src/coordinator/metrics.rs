@@ -98,6 +98,28 @@ pub struct Metrics {
     /// Non-finite logits/state panels detected by the health guards
     /// (counted per poisoned session per attempt).
     pub numeric_faults_detected: u64,
+    /// In-flight sessions the supervisor transparently re-admitted
+    /// after a worker crash (one per session per crash — a session
+    /// crashed twice with budget 2 counts twice).
+    pub redrives: u64,
+    /// Redriven sessions that went on to finish cleanly
+    /// (`MaxTokens`/`StopToken`) — `redrives` minus these is the
+    /// still-in-flight + subsequently-failed remainder.
+    pub redrives_completed: u64,
+    /// Redriven sessions that committed their first post-crash token.
+    pub redrives_resumed: u64,
+    /// Sum over `redrives_resumed` of crash-handled → first-token-
+    /// after-fault seconds (the client-visible stall a crash causes).
+    pub redrive_resume_seconds_total: f64,
+    /// State-cache snapshots that survived supervisor crash recoveries
+    /// (cumulative over restarts; the warm prefix a redriven session
+    /// resumes from).
+    pub cache_recovered_snapshots: u64,
+    /// Fault-journal records ever written (mirror of
+    /// [`super::FaultJournal::recorded`], refreshed every cycle).
+    pub fault_events: u64,
+    /// Fault-journal records overwritten after the bounded ring filled.
+    pub fault_events_dropped: u64,
 }
 
 impl Metrics {
@@ -122,6 +144,16 @@ impl Metrics {
     pub fn mean_ttft_seconds(&self) -> f64 {
         if self.first_tokens > 0 {
             self.ttft_seconds_total / self.first_tokens as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean crash-handled → first-token-after-fault stall over redriven
+    /// sessions that resumed.
+    pub fn mean_redrive_resume_seconds(&self) -> f64 {
+        if self.redrives_resumed > 0 {
+            self.redrive_resume_seconds_total / self.redrives_resumed as f64
         } else {
             0.0
         }
@@ -152,6 +184,8 @@ impl Metrics {
              faults:   {} panics caught, {} non-finite panels, {} retries / {} rollbacks, \
              {} numeric-faulted sessions, {} shed, {} worker restarts ({} sessions failed), \
              {} snapshots quarantined\n\
+             healing:  {} redrives ({} completed), {:.4} s mean resume-after-fault, \
+             {} snapshots survived recovery, {} journal records ({} dropped)\n\
              clips:    {} activations at the 9-bit rails",
             self.enqueued,
             self.admitted,
@@ -184,6 +218,12 @@ impl Metrics {
             self.worker_restarts,
             self.worker_failed,
             self.prefix_cache_quarantined,
+            self.redrives,
+            self.redrives_completed,
+            self.mean_redrive_resume_seconds(),
+            self.cache_recovered_snapshots,
+            self.fault_events,
+            self.fault_events_dropped,
             self.clip_events,
         )
     }
@@ -237,6 +277,13 @@ mod tests {
             fault_rollbacks: 18,
             panics_caught: 19,
             numeric_faults_detected: 20,
+            redrives: 21,
+            redrives_completed: 8,
+            redrives_resumed: 2,
+            redrive_resume_seconds_total: 0.5,
+            cache_recovered_snapshots: 23,
+            fault_events: 24,
+            fault_events_dropped: 25,
         };
         let r = m.report();
         assert!(r.contains("42 generated"));
@@ -252,6 +299,10 @@ mod tests {
             "19 panics caught, 20 non-finite panels, 17 retries / 18 rollbacks, \
              15 numeric-faulted sessions, 12 shed, 13 worker restarts (14 sessions failed), \
              11 snapshots quarantined"
+        ));
+        assert!(r.contains(
+            "21 redrives (8 completed), 0.2500 s mean resume-after-fault, \
+             23 snapshots survived recovery, 24 journal records (25 dropped)"
         ));
         assert_eq!(m.prefix_cache_hit_rate(), 0.75);
     }

@@ -94,16 +94,60 @@
 //!    the tokens generated so far; a persistent panic ends it with
 //!    [`GenEvent::Error`].  Either way the slot frees and pinned
 //!    snapshots release at the same cycle boundary as any other reap.
-//! 3. **Worker supervision** ([`scheduler`]).  A panic that escapes the
-//!    per-call guards (scheduler bug, panic in commit/accounting) is
-//!    caught by a supervisor wrapped around the whole loop: every
-//!    in-flight and queued session is terminated with
-//!    [`FinishReason::WorkerFailed`] (so `recv`/`wait_one`/`wait` never
-//!    hang on an orphaned stream), the engine is rebuilt on a **fresh**
-//!    state cache (resident snapshots are assumed tainted), and the
-//!    loop respawns to serve subsequent requests.  As a last-resort
-//!    backstop, [`GenStream`] also synthesizes terminal events for any
-//!    branch whose channel disconnects without one.
+//! 3. **Worker supervision + transparent redrive** ([`scheduler`]).  A
+//!    panic that escapes the per-call guards (scheduler bug, panic in
+//!    commit/accounting) is caught by a supervisor wrapped around the
+//!    whole loop, which respawns the loop and *self-heals* the work it
+//!    was carrying instead of punting to the client:
+//!
+//!    * **Redrive budget.**  Every in-flight session with remaining
+//!      [`GenRequest::redrive_budget`] (default 1) is re-admitted
+//!      automatically — zero client re-submissions.  The session keeps
+//!      its original request id, enqueued-at timestamp, priority, and
+//!      relative queue position (redriven sessions re-enter at the
+//!      *front* of the queue in their original order, ahead of work
+//!      that was queued behind them when they were first admitted).  A
+//!      session whose budget is spent finishes with
+//!      [`FinishReason::WorkerFailed`] exactly as before; budget 0
+//!      opts a request out of redrive entirely.  Queued-but-never-
+//!      admitted requests simply survive the respawn untouched — they
+//!      lost no state, so they spend no budget.
+//!    * **Deadline interaction.**  A redrive never outlives the
+//!      session's wall-clock deadline: if the deadline expired while
+//!      the worker was down, the session finishes
+//!      [`FinishReason::DeadlineExceeded`] rather than being redriven,
+//!      and a redriven session remains subject to the same deadline
+//!      reaping as any other.
+//!    * **Event-stream continuity contract.**  The [`GenStream`] stays
+//!      open across the redrive.  Already-delivered `Token` events are
+//!      never re-sent or contradicted: the committed healthy prefix is
+//!      preserved verbatim, and `seq_idx` continues from where it
+//!      stopped with no gaps and no duplicates.  A
+//!      [`GenEvent::Redriven`] marks the seam — `replayed_from` is the
+//!      number of tokens already committed (the next `Token` carries
+//!      `seq_idx == replayed_from`).  Under the hood the session is
+//!      re-admitted with its prompt *extended* by the committed tokens
+//!      and its sampler fast-forwarded by the same count; chunked
+//!      prefill is bit-exact with stepwise decode, so the continued
+//!      generation is 0-ULP identical to an un-faulted run
+//!      (`rust/tests/chaos.rs`, `rust/benches/chaos.rs`).
+//!    * **Warm-cache recovery.**  The respawned engine keeps every
+//!      state-cache entry that passes a non-finite scan (pins cleared,
+//!      recency preserved) and drops only poisoned ones, so a redriven
+//!      session resumes from its deepest healthy cached prefix and
+//!      replays only the suffix since the last chunk boundary — the
+//!      O(1)-byte RWKV state makes crash recovery a snapshot restore,
+//!      not an O(T) recompute.
+//!
+//!    As a last-resort backstop, [`GenStream`] also synthesizes
+//!    terminal events for any branch whose channel disconnects without
+//!    one.
+//!
+//! Every fault handled at any scope is additionally recorded in a
+//! bounded structured **fault journal** ([`journal`]) — request id,
+//! branch, scheduling cycle, phase, fault kind, retry attempt, recovery
+//! action, wall-clock — queryable via [`Coordinator::fault_journal`]
+//! and summarized in [`Metrics::report`].
 //!
 //! The prefix cache is guarded independently: the store refuses to
 //! admit a snapshot containing a non-finite value and can purge any
@@ -123,10 +167,12 @@
 //! * [`metrics`]   — latency/throughput/cache/pressure/fault counters.
 
 pub mod engine;
+pub mod journal;
 pub mod metrics;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineModel, FaultPolicy, FaultStats, SessionFault, SessionPhase};
+pub use journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
 pub use metrics::Metrics;
 pub use scheduler::{Coordinator, CoordinatorConfig, GenStream, SubmitError};
 
@@ -158,6 +204,11 @@ pub struct GenRequest {
     /// `1..=max_active` — every branch occupies an active slot, so a
     /// wider fork would break the concurrency bound.
     pub n_best: usize,
+    /// How many times the supervisor may transparently re-admit this
+    /// request after a worker crash fails it in flight (see the module
+    /// docs, "Worker supervision + transparent redrive").  0 opts out:
+    /// a crash surfaces [`FinishReason::WorkerFailed`] immediately.
+    pub redrive_budget: u32,
 }
 
 impl GenRequest {
@@ -173,6 +224,7 @@ impl GenRequest {
             deadline: None,
             priority: 0,
             n_best: 1,
+            redrive_budget: 1,
         }
     }
 
@@ -234,6 +286,12 @@ impl GenRequestBuilder {
         self
     }
 
+    /// Crash-redrive budget (see [`GenRequest::redrive_budget`]; default 1).
+    pub fn redrive_budget(mut self, n: u32) -> Self {
+        self.req.redrive_budget = n;
+        self
+    }
+
     pub fn build(self) -> GenRequest {
         self.req
     }
@@ -254,11 +312,13 @@ pub enum FinishReason {
     /// generated before the fault.  The poisoned state never reaches
     /// the prefix cache.
     NumericFault,
-    /// The worker thread died with the session in flight (or queued)
-    /// and the supervisor terminated it while respawning the loop.  No
-    /// partial-cycle output is trusted: queued requests report zero
-    /// tokens, active ones whatever was committed at the last healthy
-    /// cycle boundary.
+    /// The worker thread died with the session in flight and its
+    /// [`GenRequest::redrive_budget`] was already spent (or 0), so the
+    /// supervisor terminated it while respawning the loop.  No
+    /// partial-cycle output is trusted: the response carries whatever
+    /// was committed at the last healthy cycle boundary.  Sessions
+    /// with budget left are transparently redriven instead and never
+    /// see this reason.
     WorkerFailed,
     /// Shed from the admission queue under overload: the queue exceeded
     /// [`CoordinatorConfig::shed_watermark`] and this request had the
@@ -278,6 +338,13 @@ pub enum GenEvent {
     /// One sampled token was committed as output: `seq_idx` is its
     /// 0-based position in the branch's generated sequence.
     Token { branch: usize, token: u32, seq_idx: usize },
+    /// The worker crashed with this branch in flight and the supervisor
+    /// transparently re-admitted it (non-terminal; see the module docs).
+    /// `attempt` counts redrives of this session (1 = first redrive);
+    /// `replayed_from` is the committed-token count being resumed from —
+    /// the next `Token` on this branch carries `seq_idx == replayed_from`,
+    /// continuing the stream with no gaps or duplicates.
+    Redriven { branch: usize, attempt: u32, replayed_from: usize },
     /// Terminal: the branch finished; the aggregated per-branch response.
     Finished(GenResponse),
     /// Terminal: the branch failed.

@@ -67,6 +67,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::engine::{ActiveSession, Engine, EngineModel, FaultPolicy, SessionFault};
+use super::journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
 use super::metrics::Metrics;
 use super::{FinishReason, GenEvent, GenRequest, GenResponse};
 use crate::statecache::StateCacheConfig;
@@ -161,6 +162,34 @@ struct Job {
     deadline_at: Option<Instant>,
     events: Sender<GenEvent>,
     cancel: Arc<AtomicBool>,
+    /// `Some` when this job is a supervisor re-admission of a session
+    /// the worker crash failed in flight (see "Failure model" in
+    /// [`super`]): `req.prompt` has been extended by the tokens already
+    /// streamed to the client, and admission resumes the session via
+    /// [`Engine::resume_redriven`] instead of announcing a fresh one.
+    redrive: Option<Redrive>,
+}
+
+/// Continuation record for a transparent redrive: everything the
+/// re-admission needs to stitch the new session onto the crashed one's
+/// client-visible history.
+struct Redrive {
+    /// Best-of-n branch the crashed session was serving (a decoding
+    /// branch redrives solo with `n_best` forced to 1).
+    branch: usize,
+    /// 1-based redrive attempt this job represents.
+    attempt: u32,
+    /// Length of the client's original prompt; `req.prompt[len..]` is
+    /// the replayed committed-token suffix.
+    orig_prompt_len: usize,
+    /// Timings accumulated before the crash, carried so the final
+    /// [`GenResponse`] reports whole-request figures.
+    ttft_seconds: f64,
+    prefill_seconds: f64,
+    decode_seconds: f64,
+    /// When the supervisor observed the crash — the anchor for the
+    /// resume-after-fault latency metric.
+    failed_at: Instant,
 }
 
 /// One active slot in the worker: the session plus its client-facing
@@ -260,7 +289,9 @@ impl GenStream {
                 match &ev {
                     GenEvent::Finished(r) => self.mark_done(r.branch, Some(r)),
                     GenEvent::Error { branch, .. } => self.mark_done(*branch, None),
-                    GenEvent::Started { .. } | GenEvent::Token { .. } => {}
+                    GenEvent::Started { .. }
+                    | GenEvent::Token { .. }
+                    | GenEvent::Redriven { .. } => {}
                 }
                 Some(ev)
             }
@@ -309,7 +340,7 @@ impl GenStream {
                         out[branch] = Some(Err(anyhow!(message)));
                     }
                 }
-                GenEvent::Started { .. } | GenEvent::Token { .. } => {}
+                GenEvent::Started { .. } | GenEvent::Token { .. } | GenEvent::Redriven { .. } => {}
             }
         }
         out.into_iter()
@@ -352,6 +383,9 @@ pub struct Coordinator {
     /// break the concurrency/memory bound `max_active` exists to hold).
     max_active: usize,
     pub metrics: Arc<Mutex<Metrics>>,
+    /// Shared with the worker's engine and its supervisor — see
+    /// [`Coordinator::fault_journal`].
+    journal: Arc<Mutex<FaultJournal>>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -377,8 +411,10 @@ impl Coordinator {
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let queue_depth = Arc::new(AtomicUsize::new(0));
+        let journal = Arc::new(Mutex::new(FaultJournal::default()));
         let m2 = metrics.clone();
         let d2 = queue_depth.clone();
+        let j2 = journal.clone();
         let worker = std::thread::spawn(move || {
             let mut engine = if cfg.state_cache_bytes > 0 {
                 Engine::with_cache(factory(), StateCacheConfig { max_bytes: cfg.state_cache_bytes })
@@ -386,14 +422,19 @@ impl Coordinator {
                 Engine::new(factory())
             };
             engine.set_fault_policy(cfg.fault);
+            engine.set_journal(j2.clone());
             // supervisor: the scheduling state (active slots + local
             // queue) lives OUT here, so a panic that escapes the
             // per-call fault guards — a scheduler bug, a panic in
             // commit/fork/accounting — cannot take the client-facing
-            // Senders down with the loop.  The supervisor terminates
-            // every in-flight and queued session with a typed
-            // WorkerFailed terminal (no stream ever hangs), rebuilds
-            // the engine's serving state, and respawns the loop.
+            // Senders down with the loop.  For every in-flight session
+            // the supervisor either re-admits it for a transparent
+            // redrive (budget permitting, deadline willing) or
+            // terminates it with a typed WorkerFailed terminal — no
+            // stream ever hangs — then recovers the engine's serving
+            // state (healthy cache snapshots survive) and respawns the
+            // loop.  Queued never-admitted jobs ride the crash out
+            // untouched: they hold no engine state to lose.
             let mut active: Vec<Slot> = Vec::new();
             let mut queue: VecDeque<Job> = VecDeque::new();
             loop {
@@ -404,34 +445,124 @@ impl Coordinator {
                     return; // graceful shutdown (queue closed + drained)
                 }
                 lock(&m2).worker_restarts += 1;
+                let crash_cycle = engine.cycle();
+                let failed_at = Instant::now();
+                let record = |ev: FaultEvent| {
+                    j2.lock().unwrap_or_else(PoisonError::into_inner).record(ev);
+                };
+                // in original admission order so push_front (reversed
+                // below) restores each session's queue position
+                let mut redriven: Vec<Job> = Vec::new();
                 for slot in active.drain(..) {
-                    complete(slot, Ok(FinishReason::WorkerFailed), &m2);
-                }
-                for job in queue.drain(..) {
-                    d2.fetch_sub(1, Ordering::AcqRel);
-                    {
-                        let mut m = lock(&m2);
-                        m.completed += 1;
-                        m.worker_failed += 1;
+                    // a session whose last commit was terminal (phase 6)
+                    // but that crashed before phase-8 completion is done,
+                    // not in flight: every token is already committed and
+                    // streamed, so deliver the real terminal — a redrive
+                    // here would replay the finished sequence and then
+                    // sample one token PAST the terminal
+                    let done = &slot.sess;
+                    if done.req.stop_token.is_some_and(|t| done.generated.last() == Some(&t)) {
+                        complete(slot, Ok(FinishReason::StopToken), &m2);
+                        continue;
                     }
-                    let _ = job.events.send(GenEvent::Finished(GenResponse {
-                        request_id: job.id,
-                        branch: 0,
-                        tokens: Vec::new(),
-                        finish: FinishReason::WorkerFailed,
-                        prefill_seconds: 0.0,
-                        decode_seconds: 0.0,
-                        queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
-                        ttft_seconds: 0.0,
-                        cached_prefix_tokens: 0,
-                    }));
+                    if done.generated.len() >= done.req.max_new_tokens {
+                        complete(slot, Ok(FinishReason::MaxTokens), &m2);
+                        continue;
+                    }
+                    // a crash must not resurrect work the client already
+                    // gave up on — the reap the dead cycle never ran
+                    if let Some(reason) = reap_reason(&slot.cancel, slot.deadline_at) {
+                        if reason == FinishReason::DeadlineExceeded {
+                            record(FaultEvent {
+                                request_id: slot.sess.request_id,
+                                branch: slot.sess.branch,
+                                cycle: crash_cycle,
+                                phase: FaultPhase::Worker,
+                                kind: FaultKind::WorkerCrash,
+                                attempt: slot.sess.redrive_attempt,
+                                action: RecoveryAction::DeadlineAbandoned,
+                                unix_s: 0.0,
+                            });
+                        }
+                        complete(slot, Ok(reason), &m2);
+                        continue;
+                    }
+                    if slot.sess.redrive_attempt >= slot.sess.req.redrive_budget {
+                        record(FaultEvent {
+                            request_id: slot.sess.request_id,
+                            branch: slot.sess.branch,
+                            cycle: crash_cycle,
+                            phase: FaultPhase::Worker,
+                            kind: FaultKind::WorkerCrash,
+                            attempt: slot.sess.redrive_attempt,
+                            action: RecoveryAction::SessionFailed,
+                            unix_s: 0.0,
+                        });
+                        complete(slot, Ok(FinishReason::WorkerFailed), &m2);
+                        continue;
+                    }
+                    // budget left: re-admit transparently.  The stream
+                    // stays open; Redriven marks the seam and promises
+                    // the next Token continues at seq_idx = replayed_from.
+                    let Slot { sess, events, cancel, deadline_at } = slot;
+                    record(FaultEvent {
+                        request_id: sess.request_id,
+                        branch: sess.branch,
+                        cycle: crash_cycle,
+                        phase: FaultPhase::Worker,
+                        kind: FaultKind::WorkerCrash,
+                        attempt: sess.redrive_attempt,
+                        action: RecoveryAction::Redriven,
+                        unix_s: 0.0,
+                    });
+                    lock(&m2).redrives += 1;
+                    let _ = events.send(GenEvent::Redriven {
+                        branch: sess.branch,
+                        attempt: sess.redrive_attempt + 1,
+                        replayed_from: sess.generated.len(),
+                    });
+                    let was_decoding = sess.is_decoding();
+                    let mut req = sess.req;
+                    // prompt = client prompt ++ every committed token
+                    // (idempotent across repeated redrives: `generated`
+                    // already holds any previously replayed prefix)
+                    req.prompt.truncate(sess.orig_prompt_len);
+                    req.prompt.extend_from_slice(&sess.generated);
+                    if was_decoding {
+                        // a decoding branch redrives solo — its fork
+                        // siblings are their own sessions with their own
+                        // budgets
+                        req.n_best = 1;
+                    }
+                    d2.fetch_add(1, Ordering::AcqRel);
+                    redriven.push(Job {
+                        id: sess.request_id,
+                        req,
+                        enqueued_at: sess.enqueued_at,
+                        deadline_at,
+                        events,
+                        cancel,
+                        redrive: Some(Redrive {
+                            branch: sess.branch,
+                            attempt: sess.redrive_attempt + 1,
+                            orig_prompt_len: sess.orig_prompt_len,
+                            ttft_seconds: sess.ttft_seconds,
+                            prefill_seconds: sess.prefill_seconds,
+                            decode_seconds: sess.decode_seconds,
+                            failed_at,
+                        }),
+                    });
                 }
+                for job in redriven.into_iter().rev() {
+                    queue.push_front(job);
+                }
+                let (kept, _purged) = engine.recover();
                 {
                     let mut m = lock(&m2);
+                    m.cache_recovered_snapshots += kept as u64;
                     m.active_sessions = 0;
                     m.queue_depth = d2.load(Ordering::Acquire) as u64;
                 }
-                engine.recover();
             }
         });
         Coordinator {
@@ -441,8 +572,18 @@ impl Coordinator {
             max_queue: cfg.max_queue.max(1),
             max_active: cfg.max_active,
             metrics,
+            journal,
             worker: Some(worker),
         }
+    }
+
+    /// Snapshot of the structured fault journal, oldest record first —
+    /// every engine-guarded fault (retried, failed, or abandoned at the
+    /// deadline) and every supervisor redrive decision, attributed to
+    /// its (request, branch, cycle, kind).  Bounded: a fault storm
+    /// keeps the newest records (see [`FaultJournal`]).
+    pub fn fault_journal(&self) -> Vec<FaultEvent> {
+        self.journal.lock().unwrap_or_else(PoisonError::into_inner).snapshot()
     }
 
     /// Submit a request, returning the streaming session handle — or a
@@ -483,7 +624,8 @@ impl Coordinator {
         let deadline_at = req.deadline.and_then(|d| enqueued_at.checked_add(d));
         let (etx, erx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
-        let job = Job { id, req, enqueued_at, deadline_at, events: etx, cancel: cancel.clone() };
+        let job =
+            Job { id, req, enqueued_at, deadline_at, events: etx, cancel: cancel.clone(), redrive: None };
         if tx.send(job).is_err() {
             self.queue_depth.fetch_sub(1, Ordering::AcqRel);
             return Err(SubmitError::ShutDown);
@@ -567,7 +709,38 @@ fn reap_reason(cancel: &AtomicBool, deadline_at: Option<Instant>) -> Option<Fini
 fn fault_outcome(f: SessionFault) -> Result<FinishReason> {
     match f {
         SessionFault::Numeric => Ok(FinishReason::NumericFault),
+        // a retry abandoned at the deadline is the deadline's typed
+        // finish, not an opaque error — the committed tokens are healthy
+        SessionFault::DeadlineExceeded => Ok(FinishReason::DeadlineExceeded),
         other => Err(anyhow!(other)),
+    }
+}
+
+/// Terminal [`GenResponse`] for a job that dies in queue (reaped, shed,
+/// or failed without admission).  Redrive-aware: a requeued redrive
+/// already streamed tokens and burned prefill/decode time in its first
+/// life — its queued terminal must report them, on its own branch.
+fn job_response(job: &Job, finish: FinishReason) -> GenResponse {
+    let (branch, tokens, prefill_seconds, decode_seconds, ttft_seconds) = match &job.redrive {
+        Some(rd) => (
+            rd.branch,
+            job.req.prompt[rd.orig_prompt_len..].to_vec(),
+            rd.prefill_seconds,
+            rd.decode_seconds,
+            rd.ttft_seconds,
+        ),
+        None => (0, Vec::new(), 0.0, 0.0, 0.0),
+    };
+    GenResponse {
+        request_id: job.id,
+        branch,
+        tokens,
+        finish,
+        prefill_seconds,
+        decode_seconds,
+        queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
+        ttft_seconds,
+        cached_prefix_tokens: 0,
     }
 }
 
@@ -582,15 +755,24 @@ fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metri
         m.prefill_seconds_total += sess.prefill_seconds;
         // TTFT only for sessions that sampled a first token — a prefill
         // failure or pre-decode reap completes without one and must not
-        // drag the mean toward zero
-        if sess.is_decoding() {
+        // drag the mean toward zero.  Checked via the recorded value,
+        // not the phase: a redriven session reaped mid-replay carries
+        // its pre-crash TTFT without being Decoding yet.
+        if sess.ttft_seconds > 0.0 {
             m.first_tokens += 1;
             m.ttft_seconds_total += sess.ttft_seconds;
+        }
+        if sess.redrive_attempt > 0
+            && matches!(&outcome, Ok(FinishReason::MaxTokens | FinishReason::StopToken))
+        {
+            m.redrives_completed += 1;
         }
         match &outcome {
             Ok(FinishReason::NumericFault) => m.numeric_faulted += 1,
             Ok(FinishReason::WorkerFailed) => m.worker_failed += 1,
             Ok(FinishReason::Shed) => m.shed += 1,
+            Ok(FinishReason::Cancelled) => m.cancelled += 1,
+            Ok(FinishReason::DeadlineExceeded) => m.deadline_exceeded += 1,
             _ => {}
         }
     }
@@ -628,6 +810,11 @@ fn worker_loop<M: EngineModel>(
     queue_depth: &Arc<AtomicUsize>,
 ) {
     loop {
+        // scheduling-cycle counter: the `cycle` axis of fault-journal
+        // attribution (idle blocking below still counts as one cycle —
+        // the loop only comes back around when there is work)
+        engine.begin_cycle();
+
         // 1a. pull everything currently queued (block only when idle)
         loop {
             match rx.try_recv() {
@@ -670,17 +857,7 @@ fn worker_loop<M: EngineModel>(
                         _ => m.deadline_exceeded += 1,
                     }
                 }
-                let _ = job.events.send(GenEvent::Finished(GenResponse {
-                    request_id: job.id,
-                    branch: 0,
-                    tokens: Vec::new(),
-                    finish: reason,
-                    prefill_seconds: 0.0,
-                    decode_seconds: 0.0,
-                    queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
-                    ttft_seconds: 0.0,
-                    cached_prefix_tokens: 0,
-                }));
+                let _ = job.events.send(GenEvent::Finished(job_response(&job, reason)));
             }
         }
 
@@ -692,9 +869,16 @@ fn worker_loop<M: EngineModel>(
         //     its proper reason, and before admission so shed work
         //     never takes a slot or a prefill cycle.
         while cfg.shed_watermark > 0 && queue.len() > cfg.shed_watermark {
+            // requeued redrives are not shed candidates: their tokens
+            // are already streamed and the client was promised a
+            // continuation — shedding one would break the event
+            // contract to shave queue depth it barely contributes to
             let victim = (0..queue.len())
-                .min_by_key(|&i| (queue[i].req.priority, std::cmp::Reverse(i)))
-                .expect("queue is non-empty");
+                .filter(|&i| queue[i].redrive.is_none())
+                .min_by_key(|&i| (queue[i].req.priority, std::cmp::Reverse(i)));
+            let Some(victim) = victim else {
+                break; // only redrives queued: nothing sheddable
+            };
             let job = queue.remove(victim).expect("index in bounds");
             queue_depth.fetch_sub(1, Ordering::AcqRel);
             {
@@ -702,17 +886,7 @@ fn worker_loop<M: EngineModel>(
                 m.completed += 1;
                 m.shed += 1;
             }
-            let _ = job.events.send(GenEvent::Finished(GenResponse {
-                request_id: job.id,
-                branch: 0,
-                tokens: Vec::new(),
-                finish: FinishReason::Shed,
-                prefill_seconds: 0.0,
-                decode_seconds: 0.0,
-                queue_seconds: job.enqueued_at.elapsed().as_secs_f64(),
-                ttft_seconds: 0.0,
-                cached_prefix_tokens: 0,
-            }));
+            let _ = job.events.send(GenEvent::Finished(job_response(&job, FinishReason::Shed)));
         }
 
         // 2. reap active sessions: cancellation and deadlines take
@@ -728,13 +902,6 @@ fn worker_loop<M: EngineModel>(
                     i += 1;
                     continue;
                 };
-                {
-                    let mut m = lock(metrics);
-                    match reason {
-                        FinishReason::Cancelled => m.cancelled += 1,
-                        _ => m.deadline_exceeded += 1,
-                    }
-                }
                 let slot = active.remove(i);
                 complete(slot, Ok(reason), metrics);
             }
@@ -762,16 +929,37 @@ fn worker_loop<M: EngineModel>(
             let job = queue.remove(best).expect("index in bounds");
             queue_depth.fetch_sub(1, Ordering::AcqRel);
             let queue_s = job.enqueued_at.elapsed().as_secs_f64();
-            let sess = engine.admit(job.id, job.req, job.enqueued_at);
-            {
-                let mut m = lock(metrics);
-                m.admitted += 1;
-                m.queue_seconds_total += queue_s;
+            let mut sess = engine.admit(job.id, job.req, job.enqueued_at);
+            match job.redrive {
+                Some(rd) => {
+                    // continuation, not a fresh request: no Started (the
+                    // client saw one in the session's first life), no
+                    // admitted/queue-wait accounting (already counted),
+                    // and the session is stitched onto its streamed
+                    // history — `seq_idx` continues at replayed_from
+                    engine.resume_redriven(
+                        &mut sess,
+                        rd.branch,
+                        rd.attempt,
+                        rd.orig_prompt_len,
+                        rd.failed_at,
+                    );
+                    sess.ttft_seconds = rd.ttft_seconds;
+                    sess.prefill_seconds += rd.prefill_seconds;
+                    sess.decode_seconds += rd.decode_seconds;
+                }
+                None => {
+                    {
+                        let mut m = lock(metrics);
+                        m.admitted += 1;
+                        m.queue_seconds_total += queue_s;
+                    }
+                    let _ = job.events.send(GenEvent::Started {
+                        branch: 0,
+                        cached_prefix_tokens: sess.cached_prefix_tokens,
+                    });
+                }
             }
-            let _ = job.events.send(GenEvent::Started {
-                branch: 0,
-                cached_prefix_tokens: sess.cached_prefix_tokens,
-            });
             active.push(Slot {
                 sess,
                 events: job.events,
@@ -850,6 +1038,14 @@ fn worker_loop<M: EngineModel>(
                     token: tok,
                     seq_idx: slot.sess.generated.len() - 1,
                 });
+                // first NOVEL token after a redrive (replayed tokens are
+                // never re-committed): close out the resume-after-fault
+                // latency window opened at the crash
+                if let Some(failed_at) = slot.sess.redriven_at.take() {
+                    let mut m = lock(metrics);
+                    m.redrives_resumed += 1;
+                    m.redrive_resume_seconds_total += failed_at.elapsed().as_secs_f64();
+                }
                 match outcome {
                     Some(reason) => finished.push((i, Ok(reason))),
                     None => live.push((i, &mut slot.sess)),
@@ -896,6 +1092,12 @@ fn worker_loop<M: EngineModel>(
                 m.prefix_cache_evictions = cs.evictions;
                 m.prefix_cache_pinned = cs.pinned;
                 m.prefix_cache_quarantined = cs.quarantined;
+            }
+            {
+                let j = engine.journal();
+                let j = j.lock().unwrap_or_else(PoisonError::into_inner);
+                m.fault_events = j.recorded();
+                m.fault_events_dropped = j.dropped();
             }
             m.queue_depth = queue_depth.load(Ordering::Acquire) as u64;
             m.active_sessions = (active.len() - finished.len()) as u64;
@@ -957,6 +1159,7 @@ mod tests {
                     finished = Some(r);
                 }
                 GenEvent::Error { message, .. } => panic!("unexpected error: {message}"),
+                GenEvent::Redriven { .. } => panic!("no redrive in a fault-free run"),
             }
         }
         assert!(started);

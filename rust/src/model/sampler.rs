@@ -18,6 +18,22 @@ impl Sampler {
         Sampler { temperature, top_k, rng: Rng64::new(seed) }
     }
 
+    /// Advance the RNG as if `n` tokens had already been sampled,
+    /// without needing their logits.  [`Sampler::sample`] consumes
+    /// exactly one `next_f64` draw per call at `temperature > 0` and
+    /// none at all in greedy mode, so burning `n` draws reproduces the
+    /// sampler state of a run that committed `n` tokens — the property
+    /// the coordinator's transparent redrive relies on to continue a
+    /// half-generated session bit-exactly after a worker crash.
+    pub fn fast_forward(&mut self, n: usize) {
+        if self.temperature <= 0.0 {
+            return;
+        }
+        for _ in 0..n {
+            self.rng.next_f64();
+        }
+    }
+
     /// Sample a token id from raw logits.
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
         if self.temperature <= 0.0 {
@@ -114,6 +130,24 @@ mod tests {
         for _ in 0..50 {
             let t = topk.sample(&logits);
             assert!((t as usize) < logits.len());
+        }
+    }
+
+    #[test]
+    fn fast_forward_matches_sampling_n_tokens() {
+        // the redrive contract: burning n draws == sampling n tokens,
+        // for every temperature/top_k mode
+        let logits: Vec<f32> = (0..24).map(|i| (i as f32 * 0.7).cos()).collect();
+        for (t, k) in [(0.8f32, 8usize), (1.2, 0), (0.0, 0)] {
+            let mut replayed = Sampler::new(t, k, 77);
+            let mut resumed = Sampler::new(t, k, 77);
+            for _ in 0..9 {
+                replayed.sample(&logits);
+            }
+            resumed.fast_forward(9);
+            for _ in 0..5 {
+                assert_eq!(replayed.sample(&logits), resumed.sample(&logits));
+            }
         }
     }
 

@@ -54,6 +54,14 @@
 //!   resident — *even pinned ones* (holders keep their `Arc`; the store
 //!   just stops serving it).  The chaos soak asserts
 //!   [`StateStore::scan_non_finite`] `== 0` after every faulted run.
+//! * **Warm crash recovery**: a worker crash does not drop the cache.
+//!   [`StateStore::recover`] runs the same non-finite sweep and keeps
+//!   every healthy resident — trie position, bytes and LRU recency
+//!   intact — so a session the supervisor redrives after the crash
+//!   resumes from its deepest healthy cached prefix and replays only
+//!   the suffix since the last chunk boundary, instead of re-prefilling
+//!   from token 0 against a cold cache (pins die with the crashed
+//!   sessions; only provably finite snapshots survive).
 //!
 //! Cache keys are namespaced by model-variant class, so states produced
 //! by different numerics (`Exact` vs `HwApprox` on the PJRT runtime)

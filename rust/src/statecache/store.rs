@@ -390,6 +390,20 @@ impl StateStore {
         removed
     }
 
+    /// Crash-recovery sweep for a supervisor respawn: selectively
+    /// re-admit residents instead of dropping the store.  Every entry
+    /// passing the non-finite scan survives — its trie position, bytes,
+    /// and `last_used` recency stamp untouched, so a redriven session
+    /// resumes from its deepest healthy cached prefix and LRU order is
+    /// unchanged — while poisoned entries are purged.  Pins are the
+    /// caller's to clear: the supervisor drops its dead sessions (and
+    /// their snapshot `Arc`s) before calling this, so survivors come
+    /// back unpinned automatically.  Returns `(kept, purged)`.
+    pub fn recover(&mut self) -> (usize, usize) {
+        let purged = self.purge_non_finite();
+        (self.live, purged)
+    }
+
     /// Diagnostic scan: resident snapshots currently carrying
     /// non-finite values.  Always 0 under the quarantine rule — the
     /// chaos soak asserts exactly that after every faulted run.
@@ -720,6 +734,32 @@ mod tests {
         assert_eq!(st.bytes_resident(), cost(4, 2));
         assert_eq!(st.stats().quarantined, 1);
         assert_eq!(st.purge_non_finite(), 0, "purge is idempotent");
+    }
+
+    #[test]
+    fn recover_keeps_healthy_residents_with_recency_intact() {
+        // budget of three entries; one resident poisoned, and [2,2] is
+        // the LRU among the healthy pair going into the crash
+        let mut st = StateStore::new(cfg(3 * cost(4, 2)));
+        assert!(st.insert_with(0, &[1, 1], 4, || state(1.0, 4)));
+        assert!(st.insert_with(0, &[2, 2], 4, || state(2.0, 4)));
+        assert!(st.insert_with(0, &[7, 7], 4, || state(7.0, 4)));
+        {
+            let e = st.entries[2].as_mut().expect("third insert is live");
+            Arc::get_mut(&mut e.snap).expect("unpinned").state[0] = f32::NAN;
+        }
+        assert!(st.lookup(0, &[1, 1, 9], 2).is_some()); // [2,2] becomes LRU
+        assert_eq!(st.recover(), (2, 1));
+        assert!(st.lookup(0, &[7, 7, 9], 2).is_none(), "poisoned resident is gone");
+        // recency preserved across recover: fill back to budget, then
+        // one more insert must evict the PRE-crash LRU [2,2], not the
+        // [1,1] freshened just before the crash
+        assert!(st.insert_with(0, &[3, 3], 4, || state(3.0, 4)));
+        assert!(st.insert_with(0, &[4, 4], 4, || state(4.0, 4)));
+        assert!(st.lookup(0, &[2, 2, 9], 2).is_none(), "pre-crash LRU is the victim");
+        // the survivor is servable and uncorrupted post-respawn
+        assert_eq!(st.lookup(0, &[1, 1, 9], 2).unwrap().state(), &state(1.0, 4)[..]);
+        assert_eq!(st.recover(), (3, 0), "recover over a healthy store is a no-op scan");
     }
 
     #[test]

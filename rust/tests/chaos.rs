@@ -20,7 +20,20 @@
 //! * **Worker-panic regression** — a panic OUTSIDE the per-call guards
 //!   (here: the phase-7 counter drain) must not hang open streams: the
 //!   supervisor fails the in-flight sessions with
-//!   [`FinishReason::WorkerFailed`] and respawns the loop.
+//!   [`FinishReason::WorkerFailed`] (redrive budget 0) and respawns the
+//!   loop.
+//! * **Transparent redrive** — with budget, a worker crash re-admits
+//!   the in-flight session instead: the stream stays open across the
+//!   seam (`GenEvent::Redriven`, `seq_idx` gapless), the continuation
+//!   is bit-exact with a fault-free run, and the redrive resumes from
+//!   the crash-surviving prefix cache (suffix-only replay).  A session
+//!   whose deadline expired while the worker was down is never
+//!   redriven.  Every decision lands in the structured fault journal
+//!   ([`Coordinator::fault_journal`]).
+//! * **Fatal model errors** — a model-*returned* error (dead-runtime
+//!   style, [`hfrwkv::chaos::ChaosConfig::fatal`], and the real
+//!   feature-gated PJRT stub) fails the session typed on the first
+//!   call: no retries, no worker restart, journal kind `ModelError`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -29,8 +42,8 @@ use std::time::{Duration, Instant};
 use hfrwkv::chaos::{ChaosConfig, ChaosModel};
 use hfrwkv::coordinator::engine::ActiveSession;
 use hfrwkv::coordinator::{
-    Coordinator, CoordinatorConfig, Engine, EngineModel, FaultPolicy, FinishReason, GenEvent,
-    GenRequest, GenResponse,
+    Coordinator, CoordinatorConfig, Engine, EngineModel, FaultKind, FaultPolicy, FinishReason,
+    GenEvent, GenRequest, GenResponse, RecoveryAction,
 };
 use hfrwkv::model::rwkv::testing::test_model;
 use hfrwkv::model::{HwModel, RwkvModel};
@@ -427,6 +440,68 @@ impl<M: EngineModel> EngineModel for PanicOnce<M> {
     }
 }
 
+/// Panics out of the Nth `take_clip_events` call (one-shot), optionally
+/// sleeping first so a wall-clock deadline can expire "while the worker
+/// is down".  The phase-7 counter drain runs once per scheduling cycle,
+/// so with a single in-flight request the kill lands on a deterministic
+/// cycle — and therefore after a deterministic number of committed
+/// tokens.
+struct KillAt<M> {
+    inner: M,
+    at: u64,
+    sleep: Duration,
+    calls: u64,
+}
+
+impl<M> KillAt<M> {
+    fn new(inner: M, at: u64) -> KillAt<M> {
+        KillAt { inner, at, sleep: Duration::ZERO, calls: 0 }
+    }
+}
+
+impl<M: EngineModel> EngineModel for KillAt<M> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn state_len(&self) -> usize {
+        self.inner.state_len()
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.inner.init_state()
+    }
+
+    fn forward(
+        &mut self,
+        state: &mut Vec<f32>,
+        token: u32,
+        variant: Variant,
+    ) -> hfrwkv::Result<Vec<f32>> {
+        self.inner.forward(state, token, variant)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        variant: Variant,
+    ) -> hfrwkv::Result<Vec<f32>> {
+        self.inner.prefill_chunk(state, tokens, variant)
+    }
+
+    fn take_clip_events(&mut self) -> u64 {
+        self.calls += 1;
+        if self.calls == self.at {
+            if !self.sleep.is_zero() {
+                std::thread::sleep(self.sleep);
+            }
+            panic!("injected worker kill at counter drain {}", self.at);
+        }
+        self.inner.take_clip_events()
+    }
+}
+
 #[test]
 fn worker_panic_outside_guards_fails_streams_and_respawns() {
     let armed = Arc::new(AtomicBool::new(false));
@@ -437,8 +512,14 @@ fn worker_panic_outside_guards_fails_streams_and_respawns() {
         },
         CoordinatorConfig { max_active: 2, ..Default::default() },
     );
-    let mut a = c.submit(GenRequest::greedy(vec![1, 2], 10_000)).unwrap();
-    let mut b = c.submit(GenRequest::greedy(vec![3], 10_000)).unwrap();
+    // redrive budget 0 opts out of self-healing: this pins the
+    // pre-redrive contract — a crash fails the stream typed
+    let mut a = c
+        .submit(GenRequest::builder(vec![1, 2], 10_000).redrive_budget(0).build())
+        .unwrap();
+    let mut b = c
+        .submit(GenRequest::builder(vec![3], 10_000).redrive_budget(0).build())
+        .unwrap();
     // both demonstrably mid-decode before the panic fires
     for s in [&mut a, &mut b] {
         let mut seen = 0;
@@ -466,6 +547,282 @@ fn worker_panic_outside_guards_fails_streams_and_respawns() {
     let m = metrics_of(&c);
     assert_eq!(m.worker_restarts, 1);
     assert_eq!(m.worker_failed, 2);
+    assert_eq!(m.redrives, 0, "budget 0 never redrives");
     assert_eq!(m.active_sessions, 0);
     assert_eq!(m.queue_depth, 0);
+    // the journal attributes the crash to both sessions, typed
+    let j = c.fault_journal();
+    let failed = j
+        .iter()
+        .filter(|e| {
+            e.kind == FaultKind::WorkerCrash && e.action == RecoveryAction::SessionFailed
+        })
+        .count();
+    assert_eq!(failed, 2, "one SessionFailed crash record per budget-0 session: {j:?}");
+}
+
+// ---------------------------------------------------------------------
+// transparent redrive
+// ---------------------------------------------------------------------
+
+#[test]
+fn worker_crash_redrives_the_session_to_bitexact_completion() {
+    let req = GenRequest::builder(vec![5, 9, 13], 10)
+        .temperature(0.9)
+        .top_k(12)
+        .seed(21)
+        .build();
+
+    let clean = {
+        let c = Coordinator::spawn(base_model(), CoordinatorConfig::default());
+        c.generate(req.clone()).expect("fault-free run cannot fail").tokens
+    };
+    assert_eq!(clean.len(), 10);
+
+    // one in-flight request = one counter drain per cycle, and cycle N
+    // commits token N-1 before draining: the kill at drain #4 lands
+    // with exactly 4 tokens committed and delivered
+    let c = Coordinator::spawn(KillAt::new(base_model(), 4), CoordinatorConfig::default());
+    let mut s = c.submit(req).unwrap();
+    let mut toks: Vec<u32> = Vec::new();
+    let mut saw_redrive = false;
+    let mut finish = None;
+    loop {
+        match s.recv().expect("stream stays open across the crash") {
+            GenEvent::Started { branch, .. } => assert_eq!(branch, 0),
+            GenEvent::Token { seq_idx, token, .. } => {
+                assert_eq!(seq_idx, toks.len(), "seq_idx is gapless across the redrive seam");
+                toks.push(token);
+            }
+            GenEvent::Redriven { branch, attempt, replayed_from } => {
+                assert_eq!(branch, 0);
+                assert_eq!(attempt, 1);
+                assert_eq!(
+                    replayed_from,
+                    toks.len(),
+                    "the redrive replays exactly the delivered prefix"
+                );
+                saw_redrive = true;
+            }
+            GenEvent::Finished(response) => {
+                finish = Some(response);
+                break;
+            }
+            ev => panic!("unexpected event: {ev:?}"),
+        }
+    }
+    let r = finish.expect("a redriven session still reaches Finished");
+    assert!(saw_redrive, "the crash must actually have interrupted the session");
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    assert_eq!(r.tokens, clean, "the redriven continuation is bit-exact (sampled path)");
+    assert_eq!(toks, clean, "streamed tokens: no gaps, no duplicates, no divergence");
+
+    let m = metrics_of(&c);
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.redrives, 1);
+    assert_eq!(m.redrives_completed, 1);
+    assert_eq!(m.redrives_resumed, 1);
+    assert_eq!(m.worker_failed, 0, "a within-budget crash is healed, not failed");
+    let j = c.fault_journal();
+    assert!(
+        j.iter().any(|e| e.request_id == 1
+            && e.kind == FaultKind::WorkerCrash
+            && e.action == RecoveryAction::Redriven),
+        "the journal attributes the redrive decision: {j:?}"
+    );
+}
+
+/// A redriven session must resume from the crash-surviving prefix
+/// cache: the engine snapshots every prefill chunk boundary, `recover`
+/// keeps the healthy ones, and the re-admitted session replays only
+/// the suffix past the deepest boundary.
+fn warm_cache_recovery_case<M: EngineModel + Send + 'static>(make: impl Fn() -> M) {
+    let prompt: Vec<u32> = (0..40u32).map(|t| (t * 3 + 2) % 50).collect();
+    let req = GenRequest::greedy(prompt, 6);
+    let cfg = CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() };
+
+    let clean = {
+        let c = Coordinator::spawn(make(), cfg);
+        c.generate(req.clone()).expect("fault-free run cannot fail").tokens
+    };
+
+    // cycles 1..=5 prefill 8 tokens each; cycle 5 finishes prefill and
+    // commits t0, cycle 6 commits t1 — the kill at drain #6 lands with
+    // 2 tokens committed and 5 chunk boundaries (8..=40) snapshotted
+    let c = Coordinator::spawn(KillAt::new(make(), 6), cfg);
+    let r = c.generate(req).expect("redrive heals the crash");
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    assert_eq!(r.tokens, clean, "warm-cache resume is bit-exact (0 ULP)");
+    assert_eq!(
+        r.cached_prefix_tokens, 40,
+        "the redrive must resume from the deepest surviving boundary"
+    );
+
+    let m = metrics_of(&c);
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.redrives, 1);
+    assert_eq!(m.redrives_completed, 1);
+    assert_eq!(m.worker_failed, 0);
+    assert_eq!(m.prefix_cache_hits, 1, "the redrive admission hits the recovered cache");
+    assert!(
+        m.cache_recovered_snapshots >= 5,
+        "all five boundary snapshots survive recovery: {}",
+        m.cache_recovered_snapshots
+    );
+    // 40 prompt tokens prefilled in the first life + a 2-token suffix
+    // replay (the generated prefix past the deepest boundary) — NOT
+    // 40 + 42, which is what a cold cache would cost
+    assert_eq!(m.prompt_tokens_prefilled, 42, "suffix-only replay after recovery");
+}
+
+#[test]
+fn redrive_resumes_from_crash_surviving_cache_exact_backend() {
+    warm_cache_recovery_case(base_model);
+}
+
+#[test]
+fn redrive_resumes_from_crash_surviving_cache_hw_backend() {
+    warm_cache_recovery_case(hw_model);
+}
+
+#[test]
+fn crash_never_redrives_past_the_deadline() {
+    // the kill fires microseconds in (drain #3) but sleeps 120ms first
+    // — past the 60ms deadline — so the supervisor must abandon the
+    // redrive and fail the session DeadlineExceeded instead
+    let c = Coordinator::spawn(
+        KillAt {
+            inner: base_model(),
+            at: 3,
+            sleep: Duration::from_millis(120),
+            calls: 0,
+        },
+        CoordinatorConfig::default(),
+    );
+    let req = GenRequest::builder(vec![1, 2], 10_000)
+        .deadline(Duration::from_millis(60))
+        .build();
+    let r = c.submit(req).unwrap().wait_one().expect("typed terminal, not a stream error");
+    assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+    assert!(!r.tokens.is_empty(), "the healthy committed prefix is still delivered");
+
+    let m = metrics_of(&c);
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.redrives, 0, "a redrive past the deadline would be wasted work");
+    assert_eq!(m.deadline_exceeded, 1);
+    let j = c.fault_journal();
+    assert!(
+        j.iter().any(|e| e.kind == FaultKind::WorkerCrash
+            && e.action == RecoveryAction::DeadlineAbandoned),
+        "the journal records the abandoned redrive: {j:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// fatal (non-retryable) model errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn fatal_model_errors_fail_typed_without_retries() {
+    let model = ChaosModel::new(
+        base_model(),
+        ChaosConfig {
+            seed: 9,
+            fault_rate: 1.0,
+            panics: false,
+            nan_logits: false,
+            nan_state: false,
+            fatal: true,
+            ..ChaosConfig::default()
+        },
+    );
+    let log = model.log_handle();
+    let c = Coordinator::spawn_with(
+        move || model,
+        CoordinatorConfig {
+            fault: FaultPolicy { health_guards: true, max_retries: 12, retry_backoff_ms: 0 },
+            ..Default::default()
+        },
+    );
+    for i in 0..4u32 {
+        let err = c
+            .submit(GenRequest::greedy(vec![i + 1], 4))
+            .unwrap()
+            .wait_one()
+            .expect_err("a model-returned error is terminal");
+        assert!(
+            err.to_string().contains("chaos: injected fatal"),
+            "the model's own error reaches the stream: {err}"
+        );
+    }
+    let m = metrics_of(&c);
+    assert_eq!(m.fault_retries, 0, "model-returned errors are never retried");
+    assert_eq!(m.worker_restarts, 0, "a returned error is not a worker crash");
+    assert_eq!(m.active_sessions, 0);
+    assert_eq!(m.queue_depth, 0);
+    let log = *log.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(log.fatal >= 4, "every request hit the injected fatal: {log:?}");
+    let j = c.fault_journal();
+    for id in 1..=4u64 {
+        assert!(
+            j.iter().any(|e| e.request_id == id
+                && e.kind == FaultKind::ModelError
+                && e.action == RecoveryAction::SessionFailed),
+            "request {id} missing its ModelError record: {j:?}"
+        );
+    }
+}
+
+/// The real dead-runtime path: without the `pjrt` feature the runtime
+/// stub's every call bails — soak it through the full coordinator so
+/// the typed no-retry contract is pinned on the genuine backend, not
+/// just the chaos double.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_stub_backend_fails_sessions_typed_without_retries() {
+    use hfrwkv::runtime::{Manifest, RwkvRuntime};
+    use std::path::PathBuf;
+
+    let manifest = Manifest {
+        dir: PathBuf::new(),
+        n_layer: 2,
+        d_model: 32,
+        d_ffn: 64,
+        vocab: 50,
+        n_params: 0,
+        seq_chunk: 16,
+        pp_init: 1.0,
+        param_order: Vec::new(),
+        step_hlo: PathBuf::new(),
+        step_hw_hlo: PathBuf::new(),
+        seq_hlo: PathBuf::new(),
+        weights: PathBuf::new(),
+        eval_data: PathBuf::new(),
+    };
+    let c = Coordinator::spawn_with(move || RwkvRuntime { manifest }, CoordinatorConfig::default());
+    for i in 0..3u32 {
+        let err = c
+            .submit(GenRequest::greedy(vec![i + 1, 2], 4))
+            .unwrap()
+            .wait_one()
+            .expect_err("the stub backend must fail typed");
+        assert!(
+            err.to_string().contains("PJRT runtime unavailable"),
+            "the stub's own message reaches the stream: {err}"
+        );
+    }
+    let m = metrics_of(&c);
+    assert_eq!(m.fault_retries, 0, "a dead runtime is never retried");
+    assert_eq!(m.worker_restarts, 0);
+    assert_eq!(m.active_sessions, 0);
+    assert_eq!(m.queue_depth, 0);
+    let j = c.fault_journal();
+    for id in 1..=3u64 {
+        assert!(
+            j.iter().any(|e| e.request_id == id
+                && e.kind == FaultKind::ModelError
+                && e.action == RecoveryAction::SessionFailed),
+            "request {id} missing its ModelError record: {j:?}"
+        );
+    }
 }

@@ -347,6 +347,7 @@ fn fork_streams_all_branches_with_one_prefill() {
                 finished[r.branch] = Some(r.finish);
             }
             GenEvent::Error { branch, message } => panic!("branch {branch} errored: {message}"),
+            GenEvent::Redriven { .. } => panic!("no redrive in a fault-free run"),
         }
     }
     assert!(started.iter().all(|&s| s), "every branch must announce itself");
