@@ -3,17 +3,21 @@
 //! stack (coordinator → PJRT → HLO with Pallas kernels lowered in),
 //! streaming the first session's tokens live, reporting latency
 //! percentiles and aggregate throughput, demonstrating 1-prefill/8-branch
-//! best-of-n decode off one shared RWKV state, then verifying model
-//! quality on the held-out suites.
+//! best-of-n decode off one shared RWKV state, serving the same trained
+//! weights through the `HFRWKV_BACKEND`-selected native backend (exact
+//! f32 / decoded hw / packed 9-bit SIMD) with its weight-traffic report,
+//! then verifying model quality on the held-out suites.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo
+//! # quantized throughput configuration:
+//! HFRWKV_BACKEND=packed cargo run --release --example serve_demo
 //! ```
 
 use std::io::Write;
 use std::time::Instant;
 
-use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenEvent, GenRequest};
+use hfrwkv::coordinator::{Backend, Coordinator, CoordinatorConfig, GenEvent, GenRequest};
 use hfrwkv::eval;
 use hfrwkv::model::{RwkvModel, Tokenizer, WeightFile};
 use hfrwkv::runtime::{Manifest, RwkvRuntime};
@@ -155,9 +159,44 @@ fn main() -> hfrwkv::Result<()> {
         if prefilled <= prompt_len { ", shared across all branches" } else { " PER BRANCH?!" },
     );
 
+    // ---- phase 1c: native backend serving (HFRWKV_BACKEND) -----------------
+    // the same trained weights served WITHOUT PJRT, through whichever
+    // native backend the env selects: exact f32 (default), decoded-plane
+    // `hw`, or `packed` — the 9-bit SIMD throughput configuration, which
+    // streams half the weight bytes per decode cycle (the traffic line in
+    // the report below makes that visible)
+    let backend = Backend::from_env();
+    println!("\n== native serving (HFRWKV_BACKEND -> {backend:?}) ==");
+    let weights = WeightFile::load(&manifest.weights)?;
+    let native = RwkvModel::from_weights(&weights)?;
+    // calibrate the quantized backends on in-distribution text: the
+    // demo's own prompt set
+    let calib: Vec<u32> = prompts.iter().flat_map(|p| encode(p)).collect();
+    let nc = Coordinator::spawn_native(
+        native,
+        calib,
+        CoordinatorConfig { max_active: 4, backend, ..Default::default() },
+    );
+    let t0 = Instant::now();
+    let nrxs: Vec<_> = (0..12)
+        .map(|i| nc.submit(GenRequest::greedy(encode(prompts[i % prompts.len()]), 24)))
+        .collect::<hfrwkv::Result<_>>()?;
+    let mut native_tokens = 0usize;
+    for rx in nrxs {
+        native_tokens += rx.wait_one()?.tokens.len();
+    }
+    let native_wall = t0.elapsed().as_secs_f64();
+    let nm = nc.metrics.lock().unwrap().clone();
+    println!("{}", nm.report());
+    println!(
+        "aggregate {:.0} tok/s over {:.2} s wall (12 requests x 24 tokens, {backend:?} backend)",
+        native_tokens as f64 / native_wall,
+        native_wall
+    );
+    nc.shutdown();
+
     // ---- phase 2: model quality on held-out data ---------------------------
     println!("\n== held-out quality (native forward) ==");
-    let weights = WeightFile::load(&manifest.weights)?;
     let mut model = RwkvModel::from_weights(&weights)?;
     let (docs, suites) = eval::parse_eval_data(&eval_json)?;
     if let Some(stream) = eval::parse_valid_stream(&eval_json) {

@@ -1,0 +1,139 @@
+//! Quantized-serving benchmark: backend × batch-capacity sweep proving
+//! the packed Δ-PoT backend is the *throughput* configuration, not just
+//! the fidelity one.  Three coordinators serve identical greedy request
+//! mixes — exact f32, decoded-plane hw, and packed 9-bit SIMD — at
+//! max_active ∈ {1, 4, 8}; we report aggregate wall-clock tok/s plus
+//! the weight bytes each backend streams per decode cycle (packed must
+//! be exactly half of f32).
+//!
+//! The model is sized so every backend's plane set overflows L3
+//! (6×512/2048, ≈83 MB f32 vs ≈41 MB packed): decode is
+//! bandwidth-bound, which is precisely where halving the bytes per
+//! weight pays.  Under `QUANT_BENCH_ASSERT=1` (set in CI) the bench
+//! hard-fails if packed does not beat exact f32 tok/s at equal batch;
+//! otherwise shortfalls print as warnings so local runs on loaded
+//! machines never gate anything.
+//!
+//! Emits `BENCH_quant_serve.json` so future PRs can track trajectory.
+
+use std::time::Instant;
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, GenRequest};
+use hfrwkv::model::packed_gemm::simd_active;
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::model::{HwModel, PackedModel, RwkvModel};
+use hfrwkv::util::bench::{section, BenchReport};
+use hfrwkv::Rng64;
+
+const N_REQUESTS: u32 = 16;
+const TOKENS_PER_REQUEST: usize = 16;
+const CAPS: [usize; 3] = [1, 4, 8];
+
+const N_LAYER: usize = 6;
+const D: usize = 512;
+const F: usize = 2048;
+const VOCAB: usize = 512;
+
+fn base() -> RwkvModel {
+    test_model(N_LAYER, D, F, VOCAB)
+}
+
+fn calib_tokens() -> Vec<u32> {
+    let mut rng = Rng64::new(11);
+    (0..128).map(|_| rng.below(VOCAB) as u32).collect()
+}
+
+/// Serve N_REQUESTS greedy generations through a fresh coordinator at
+/// each capacity; returns (cap, aggregate tok/s, weight bytes/cycle).
+fn sweep<M, F2>(label: &str, mk: F2) -> Vec<(usize, f64, f64)>
+where
+    M: EngineModel + Send + 'static,
+    F2: Fn() -> M,
+{
+    CAPS.iter()
+        .map(|&cap| {
+            // model build (quantization included) outside the clock:
+            // the claim is steady-state serving throughput
+            let model = mk();
+            let cfg = CoordinatorConfig { max_active: cap, ..Default::default() };
+            let t0 = Instant::now();
+            let coord = Coordinator::spawn(model, cfg);
+            let rxs: Vec<_> = (0..N_REQUESTS)
+                .map(|i| {
+                    coord
+                        .submit(GenRequest::greedy(vec![i % VOCAB as u32], TOKENS_PER_REQUEST))
+                        .expect("bench stays under max_queue")
+                })
+                .collect();
+            let mut total = 0usize;
+            for rx in rxs {
+                total += rx.wait_one().unwrap().tokens.len();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let tps = total as f64 / wall;
+            let bytes_per_cycle = coord.metrics.lock().unwrap().weight_bytes_per_cycle();
+            println!(
+                "  {label:<7} B={cap:>2}: {tps:>8.1} tok/s aggregate  \
+                 ({total} tokens in {wall:.2}s, {bytes_per_cycle:.0} weight B/cycle)"
+            );
+            (cap, tps, bytes_per_cycle)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut report = BenchReport::new("quant_serve");
+    let asserting = matches!(std::env::var("QUANT_BENCH_ASSERT").as_deref(), Ok("1"));
+
+    section(&format!(
+        "backend x batch sweep ({N_LAYER}x{D}/{F} test model, \
+         {N_REQUESTS} req x {TOKENS_PER_REQUEST} tok, simd_active={})",
+        simd_active()
+    ));
+    let exact = sweep("exact", base);
+    let hw = sweep("hw", || HwModel::from_f32(base(), &calib_tokens()));
+    let packed = sweep("packed", || PackedModel::from_f32(base(), &calib_tokens()));
+
+    println!();
+    let mut failures = Vec::new();
+    for ((cap, ex_tps, ex_bpc), ((_, hw_tps, _), (_, pk_tps, pk_bpc))) in
+        exact.iter().zip(hw.iter().zip(&packed))
+    {
+        let speedup = pk_tps / ex_tps;
+        println!(
+            "  B={cap:>2}: packed/exact = {speedup:.2}x  \
+             (exact {ex_tps:.1}, hw {hw_tps:.1}, packed {pk_tps:.1} tok/s; \
+             {ex_bpc:.0} -> {pk_bpc:.0} B/cycle)"
+        );
+        report.record(&format!("exact_tok_s_b{cap}"), *ex_tps);
+        report.record(&format!("hw_tok_s_b{cap}"), *hw_tps);
+        report.record(&format!("packed_tok_s_b{cap}"), *pk_tps);
+        report.record(&format!("packed_speedup_b{cap}"), speedup);
+        report.record(&format!("exact_weight_bytes_cycle_b{cap}"), *ex_bpc);
+        report.record(&format!("packed_weight_bytes_cycle_b{cap}"), *pk_bpc);
+        if pk_tps <= ex_tps {
+            failures.push(format!(
+                "packed {pk_tps:.1} tok/s <= exact {ex_tps:.1} tok/s at max_active={cap}"
+            ));
+        }
+        // the traffic ratio is arithmetic, not timing: it must hold on
+        // any machine, so it asserts unconditionally
+        assert!(
+            (*ex_bpc - 2.0 * pk_bpc).abs() < 1.0,
+            "exact should stream exactly 2x the packed weight bytes per cycle \
+             (got {ex_bpc:.0} vs {pk_bpc:.0})"
+        );
+    }
+
+    for msg in &failures {
+        if asserting {
+            panic!("{msg}");
+        }
+        eprintln!("WARNING: {msg}");
+    }
+
+    match report.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench report: {e}"),
+    }
+}

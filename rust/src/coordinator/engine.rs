@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Result};
 use super::journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
 use super::{FinishReason, GenRequest};
 use crate::model::sampler::Sampler;
-use crate::model::{panel_all_finite, HwModel, RwkvModel, State};
+use crate::model::{panel_all_finite, HwModel, PackedModel, RwkvModel, State};
 use crate::runtime::{RwkvRuntime, Variant};
 use crate::statecache::{CacheStats, SnapshotRef, StateCacheConfig, StateStore};
 
@@ -200,6 +200,18 @@ pub trait EngineModel {
         0
     }
 
+    /// Bytes of weight-plane traffic ONE full decode cycle streams
+    /// (the seven per-layer matrices plus the head; the embedding is a
+    /// row gather, not a streamed plane).  The scheduler multiplies
+    /// this by decode cycles into [`super::Metrics`], making the
+    /// exact-vs-packed traffic cut (4 vs 2 bytes per weight) visible
+    /// in the serve report.  0 = the model doesn't expose its plane
+    /// footprint (e.g. the PJRT runtime, whose traffic lives
+    /// device-side).
+    fn weight_stream_bytes(&self) -> u64 {
+        0
+    }
+
     /// Consume a bounded slice of prompt tokens, returning the logits of
     /// the slice's LAST token.  This is the scheduler's unit of prefill
     /// work: a `Prefilling` session consumes one chunk per scheduling
@@ -316,6 +328,14 @@ fn batch_via_step(
     states.iter().map(|_| None).collect()
 }
 
+/// [`EngineModel::weight_stream_bytes`] for the f32-plane backends:
+/// `n_layer` blocks of five `d×d` and two `d×f` matrices plus the
+/// `vocab×d` head, at 4 bytes per weight.  (The packed backend
+/// computes its own 2-byte figure from its planes.)
+fn f32_weight_stream_bytes(n_layer: usize, d: usize, f: usize, vocab: usize) -> u64 {
+    (n_layer * (5 * d * d + 2 * d * f) + vocab * d) as u64 * 4
+}
+
 impl EngineModel for RwkvRuntime {
     fn vocab(&self) -> usize {
         self.manifest.vocab
@@ -406,6 +426,10 @@ impl EngineModel for RwkvModel {
             RwkvModel::prefill_chunk(self, st, toks)
         })
     }
+
+    fn weight_stream_bytes(&self) -> u64 {
+        f32_weight_stream_bytes(self.n_layer, self.d, self.f, self.vocab)
+    }
 }
 
 impl EngineModel for HwModel {
@@ -456,6 +480,180 @@ impl EngineModel for HwModel {
 
     fn take_clip_events(&mut self) -> u64 {
         HwModel::take_clip_events(self)
+    }
+
+    fn weight_stream_bytes(&self) -> u64 {
+        // decoded Δ-PoT: same grid as packed, but full f32 planes
+        f32_weight_stream_bytes(self.n_layer(), self.d(), self.f(), self.vocab())
+    }
+}
+
+impl EngineModel for PackedModel {
+    fn vocab(&self) -> usize {
+        PackedModel::vocab(self)
+    }
+
+    fn state_len(&self) -> usize {
+        self.n_layer() * 5 * self.d()
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.new_state().data
+    }
+
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, _variant: Variant) -> Result<Vec<f32>> {
+        let (n_layer, d) = (self.n_layer(), self.d());
+        let mut st = State { data: std::mem::take(state), n_layer, d };
+        let logits = self.step(&mut st, token);
+        *state = st.data;
+        Ok(logits)
+    }
+
+    fn forward_batch(
+        &mut self,
+        states: &mut [&mut Vec<f32>],
+        tokens: &[u32],
+        _variant: Variant,
+        logits: &mut Vec<f32>,
+    ) -> Vec<Option<anyhow::Error>> {
+        let (n_layer, d) = (self.n_layer(), self.d());
+        batch_via_step(n_layer, d, states, |sts| {
+            self.step_batch_into(sts, tokens, logits)
+        })
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        _variant: Variant,
+    ) -> Result<Vec<f32>> {
+        let (n_layer, d) = (self.n_layer(), self.d());
+        prefill_via_state(n_layer, d, state, tokens, |st, toks| {
+            PackedModel::prefill_chunk(self, st, toks)
+        })
+    }
+
+    fn take_clip_events(&mut self) -> u64 {
+        PackedModel::take_clip_events(self)
+    }
+
+    fn weight_stream_bytes(&self) -> u64 {
+        // packed Δ-PoT words: 2 bytes per weight, half the f32 traffic
+        self.decode_cycle_weight_bytes()
+    }
+}
+
+/// Which native numerics backend a serving stack runs (the backend
+/// table in [`crate::model`]).  Selected per coordinator via
+/// [`super::CoordinatorConfig::backend`] and built by
+/// [`BackendModel::build`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Plain f32 planes ([`RwkvModel`]) — the exact reference.
+    #[default]
+    Exact,
+    /// Decoded Δ-PoT planes + integer elementwise units ([`HwModel`])
+    /// — bit-faithful accuracy model, full f32 traffic.
+    Hw,
+    /// Packed Δ-PoT planes on the SIMD kernels ([`PackedModel`]) — the
+    /// throughput configuration, half the weight traffic.
+    Packed,
+}
+
+impl Backend {
+    /// Read the `HFRWKV_BACKEND` environment variable (`exact` / `hw`
+    /// / `packed`, case-insensitive).  Unset or unrecognized values
+    /// fall back to the default exact backend — serving must not fail
+    /// on a typo'd env.
+    pub fn from_env() -> Backend {
+        match std::env::var("HFRWKV_BACKEND").as_deref() {
+            Ok(s) if s.eq_ignore_ascii_case("hw") => Backend::Hw,
+            Ok(s) if s.eq_ignore_ascii_case("packed") => Backend::Packed,
+            _ => Backend::Exact,
+        }
+    }
+}
+
+/// A config-selected native backend behind one [`EngineModel`] — what
+/// [`super::Coordinator::spawn_native`] serves.  Variants are boxed so
+/// the enum stays small regardless of backend footprint (the packed
+/// model carries every plane twice over: codes + the quantized base).
+pub enum BackendModel {
+    Exact(Box<RwkvModel>),
+    Hw(Box<HwModel>),
+    Packed(Box<PackedModel>),
+}
+
+/// Delegate one expression across the three [`BackendModel`] variants.
+macro_rules! for_backend {
+    ($self:expr, $m:ident => $body:expr) => {
+        match $self {
+            BackendModel::Exact($m) => $body,
+            BackendModel::Hw($m) => $body,
+            BackendModel::Packed($m) => $body,
+        }
+    };
+}
+
+impl BackendModel {
+    /// Build `backend` from an f32 base model.  `calib_tokens` drives
+    /// the activation-scale calibration of the quantized backends
+    /// (ignored by `Exact`); hw and packed calibrate through the same
+    /// pipeline, so switching between them never moves the scales.
+    pub fn build(base: RwkvModel, backend: Backend, calib_tokens: &[u32]) -> BackendModel {
+        match backend {
+            Backend::Exact => BackendModel::Exact(Box::new(base)),
+            Backend::Hw => BackendModel::Hw(Box::new(HwModel::from_f32(base, calib_tokens))),
+            Backend::Packed => {
+                BackendModel::Packed(Box::new(PackedModel::from_f32(base, calib_tokens)))
+            }
+        }
+    }
+}
+
+impl EngineModel for BackendModel {
+    fn vocab(&self) -> usize {
+        for_backend!(self, m => EngineModel::vocab(&**m))
+    }
+
+    fn state_len(&self) -> usize {
+        for_backend!(self, m => EngineModel::state_len(&**m))
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        for_backend!(self, m => EngineModel::init_state(&**m))
+    }
+
+    fn forward(&mut self, state: &mut Vec<f32>, token: u32, variant: Variant) -> Result<Vec<f32>> {
+        for_backend!(self, m => m.forward(state, token, variant))
+    }
+
+    fn forward_batch(
+        &mut self,
+        states: &mut [&mut Vec<f32>],
+        tokens: &[u32],
+        variant: Variant,
+        logits: &mut Vec<f32>,
+    ) -> Vec<Option<anyhow::Error>> {
+        for_backend!(self, m => m.forward_batch(states, tokens, variant, logits))
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        state: &mut Vec<f32>,
+        tokens: &[u32],
+        variant: Variant,
+    ) -> Result<Vec<f32>> {
+        for_backend!(self, m => m.prefill_chunk(state, tokens, variant))
+    }
+
+    fn take_clip_events(&mut self) -> u64 {
+        for_backend!(self, m => EngineModel::take_clip_events(&mut **m))
+    }
+
+    fn weight_stream_bytes(&self) -> u64 {
+        for_backend!(self, m => EngineModel::weight_stream_bytes(&**m))
     }
 }
 
@@ -1584,6 +1782,46 @@ mod tests {
         // non-hw models have nothing to report
         let mut plain = test_model(1, 16, 32, 20);
         assert_eq!(EngineModel::take_clip_events(&mut plain), 0);
+    }
+
+    #[test]
+    fn weight_stream_bytes_packed_is_half_of_exact() {
+        let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+        let base = test_model(2, 32, 64, 50);
+        let weights = 2 * (5 * 32 * 32 + 2 * 32 * 64) + 50 * 32;
+        let exact_bytes = EngineModel::weight_stream_bytes(&base);
+        assert_eq!(exact_bytes, weights as u64 * 4);
+        // hw decodes to f32, so it streams exactly the exact backend's bytes
+        let hw = HwModel::from_f32(base.clone(), &calib);
+        assert_eq!(EngineModel::weight_stream_bytes(&hw), exact_bytes);
+        // packed streams the 2-byte words: half
+        let pk = PackedModel::from_f32(base, &calib);
+        assert_eq!(EngineModel::weight_stream_bytes(&pk), exact_bytes / 2);
+    }
+
+    #[test]
+    fn backend_model_serves_like_its_direct_backend() {
+        let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+        let base = test_model(2, 32, 64, 50);
+        let run = |model: BackendModel| {
+            let mut e = Engine::new(model);
+            let mut s = e.start(0, GenRequest::greedy(vec![3, 1, 4], 8), Instant::now()).unwrap();
+            while e.step_session(&mut s).unwrap().is_none() {}
+            s.generated
+        };
+        let direct_hw = {
+            let mut e = Engine::new(HwModel::from_f32(base.clone(), &calib));
+            let mut s = e.start(0, GenRequest::greedy(vec![3, 1, 4], 8), Instant::now()).unwrap();
+            while e.step_session(&mut s).unwrap().is_none() {}
+            s.generated
+        };
+        let hw = run(BackendModel::build(base.clone(), Backend::Hw, &calib));
+        assert_eq!(hw, direct_hw);
+        // packed is bit-identical to hw, so the served tokens match too
+        let packed = run(BackendModel::build(base.clone(), Backend::Packed, &calib));
+        assert_eq!(packed, direct_hw, "packed backend tokens diverged from hw");
+        let exact = run(BackendModel::build(base, Backend::Exact, &calib));
+        assert_eq!(exact.len(), 8);
     }
 
     #[test]

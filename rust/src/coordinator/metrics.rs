@@ -120,6 +120,15 @@ pub struct Metrics {
     pub fault_events: u64,
     /// Fault-journal records overwritten after the bounded ring filled.
     pub fault_events_dropped: u64,
+    /// Scheduling cycles that ran a batched decode forward (the
+    /// denominator of [`Metrics::weight_bytes_per_cycle`]).
+    pub decode_cycles: u64,
+    /// Bytes of weight-plane traffic the decode forwards streamed
+    /// (`EngineModel::weight_stream_bytes` per decode cycle): the
+    /// exact/hw backends stream 4 B per weight, the packed backend 2 —
+    /// the traffic cut that makes packed the throughput configuration.
+    /// 0 for models that don't expose their plane footprint (PJRT).
+    pub weight_bytes_streamed: u64,
 }
 
 impl Metrics {
@@ -159,6 +168,17 @@ impl Metrics {
         }
     }
 
+    /// Mean weight bytes streamed per decode cycle — compare across
+    /// backends at the same model size: packed reads half the exact
+    /// backend's figure.
+    pub fn weight_bytes_per_cycle(&self) -> f64 {
+        if self.decode_cycles > 0 {
+            self.weight_bytes_streamed as f64 / self.decode_cycles as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Fraction of admissions that resumed from a cached prefix.
     pub fn prefix_cache_hit_rate(&self) -> f64 {
         let total = self.prefix_cache_hits + self.prefix_cache_misses;
@@ -176,6 +196,7 @@ impl Metrics {
              {} cancelled, {} deadline-exceeded\n\
              tokens:   {} generated\n\
              decode:   {:.1} tok/s (engine time)\n\
+             traffic:  {} weight B streamed / {} decode cycles ({:.0} B per cycle)\n\
              prefill:  {:.3} s total ({} prompt tokens forwarded)\n\
              ttft:     {:.4} s mean (enqueue -> first token)\n\
              queueing: {:.4} s mean wait\n\
@@ -197,6 +218,9 @@ impl Metrics {
             self.deadline_exceeded,
             self.tokens_generated,
             self.decode_tokens_per_sec(),
+            self.weight_bytes_streamed,
+            self.decode_cycles,
+            self.weight_bytes_per_cycle(),
             self.prefill_seconds_total,
             self.prompt_tokens_prefilled,
             self.mean_ttft_seconds(),
@@ -240,6 +264,7 @@ mod tests {
         assert_eq!(m.mean_queue_seconds(), 0.0);
         assert_eq!(m.mean_ttft_seconds(), 0.0);
         assert_eq!(m.prefix_cache_hit_rate(), 0.0);
+        assert_eq!(m.weight_bytes_per_cycle(), 0.0);
     }
 
     #[test]
@@ -284,10 +309,14 @@ mod tests {
             cache_recovered_snapshots: 23,
             fault_events: 24,
             fault_events_dropped: 25,
+            decode_cycles: 10,
+            weight_bytes_streamed: 20480,
         };
         let r = m.report();
         assert!(r.contains("42 generated"));
         assert!(r.contains("21.0 tok/s"));
+        assert!(r.contains("20480 weight B streamed / 10 decode cycles (2048 B per cycle)"));
+        assert_eq!(m.weight_bytes_per_cycle(), 2048.0);
         assert!(r.contains("0.2500 s mean (enqueue -> first token)"));
         assert!(r.contains("7 activations at the 9-bit rails"));
         assert!(r.contains("9 queued / 3 active now, 4 rejected (queue full), 5 cancelled, 6 deadline-exceeded"));

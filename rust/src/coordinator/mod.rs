@@ -171,7 +171,10 @@ pub mod journal;
 pub mod metrics;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineModel, FaultPolicy, FaultStats, SessionFault, SessionPhase};
+pub use engine::{
+    Backend, BackendModel, Engine, EngineModel, FaultPolicy, FaultStats, SessionFault,
+    SessionPhase,
+};
 pub use journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
 pub use metrics::Metrics;
 pub use scheduler::{Coordinator, CoordinatorConfig, GenStream, SubmitError};

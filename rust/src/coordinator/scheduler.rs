@@ -66,10 +66,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::engine::{ActiveSession, Engine, EngineModel, FaultPolicy, SessionFault};
+use super::engine::{
+    ActiveSession, Backend, BackendModel, Engine, EngineModel, FaultPolicy, SessionFault,
+};
 use super::journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
 use super::metrics::Metrics;
 use super::{FinishReason, GenEvent, GenRequest, GenResponse};
+use crate::model::RwkvModel;
 use crate::statecache::StateCacheConfig;
 
 /// Poison-tolerant metrics acquisition: `Metrics` is plain counters —
@@ -115,6 +118,11 @@ pub struct CoordinatorConfig {
     /// goodput.  0 (the default) disables shedding; meaningful values
     /// sit well below `max_queue` (the hard rejection bound).
     pub shed_watermark: usize,
+    /// Which native numerics backend [`Coordinator::spawn_native`]
+    /// builds (exact f32, decoded-Δ-PoT hw, or packed-Δ-PoT SIMD — see
+    /// [`Backend`]).  Ignored by [`Coordinator::spawn`]/`spawn_with`,
+    /// whose caller already constructed the model.
+    pub backend: Backend,
 }
 
 impl Default for CoordinatorConfig {
@@ -126,6 +134,7 @@ impl Default for CoordinatorConfig {
             max_queue: 1024,
             fault: FaultPolicy::default(),
             shed_watermark: 0,
+            backend: Backend::default(),
         }
     }
 }
@@ -393,6 +402,21 @@ impl Coordinator {
     /// Spawn the worker thread around an engine model.
     pub fn spawn<M: EngineModel + Send + 'static>(model: M, cfg: CoordinatorConfig) -> Coordinator {
         Self::spawn_with(move || model, cfg)
+    }
+
+    /// Spawn the worker around the native backend
+    /// [`CoordinatorConfig::backend`] selects: the f32 base model goes
+    /// through [`BackendModel::build`] *inside* the worker thread, so
+    /// the quantized backends' encode + calibration walk runs off the
+    /// caller's thread.  `calib_tokens` feeds the activation-scale
+    /// calibration (ignored by the exact backend).
+    pub fn spawn_native(
+        base: RwkvModel,
+        calib_tokens: Vec<u32>,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let backend = cfg.backend;
+        Self::spawn_with(move || BackendModel::build(base, backend, &calib_tokens), cfg)
     }
 
     /// Spawn with a factory executed *inside* the worker thread — required
@@ -1025,6 +1049,10 @@ fn worker_loop<M: EngineModel>(
         //    forward (§Perf L3-3 weight-reuse amortization).  Sessions
         //    still prefilling are skipped.
         let mut finished: Vec<(usize, Result<FinishReason>)> = Vec::new();
+        // did this cycle run a batched decode forward?  Each one streams
+        // every weight plane exactly once regardless of batch width —
+        // the weight-reuse fact the traffic metric below accounts
+        let mut did_decode = false;
         {
             let mut live: Vec<(usize, &mut ActiveSession)> = Vec::new();
             for (i, slot) in active.iter_mut().enumerate() {
@@ -1052,6 +1080,7 @@ fn worker_loop<M: EngineModel>(
                 }
             }
             if !live.is_empty() {
+                did_decode = true;
                 let errs = {
                     let mut batch: Vec<&mut ActiveSession> =
                         live.iter_mut().map(|(_, s)| &mut **s).collect();
@@ -1077,6 +1106,10 @@ fn worker_loop<M: EngineModel>(
         {
             let mut m = lock(metrics);
             m.clip_events += engine.model.take_clip_events();
+            if did_decode {
+                m.decode_cycles += 1;
+                m.weight_bytes_streamed += engine.model.weight_stream_bytes();
+            }
             m.prompt_tokens_prefilled = engine.prefilled_tokens();
             let fs = engine.fault_stats();
             m.fault_retries = fs.retries;
@@ -1401,6 +1434,45 @@ mod tests {
                 "branch {b}: unexpected error {e}"
             );
         }
+    }
+
+    #[test]
+    fn native_backends_serve_identically_and_report_traffic() {
+        // spawn_native over each backend: packed tokens must equal hw
+        // tokens (one value grid), and the per-decode-cycle weight
+        // traffic must show the 2-byte-vs-4-byte cut
+        let calib: Vec<u32> = (0..64u32).map(|i| (i * 11 + 3) % 50).collect();
+        let mk = |backend| {
+            Coordinator::spawn_native(
+                test_model(2, 32, 64, 50),
+                calib.clone(),
+                CoordinatorConfig { max_active: 2, backend, ..Default::default() },
+            )
+        };
+        let run = |c: &Coordinator| c.generate(GenRequest::greedy(vec![1, 2, 3], 6)).unwrap();
+        let ch = mk(Backend::Hw);
+        let hw_tokens = run(&ch).tokens;
+        let (hw_cycles, hw_bytes) = {
+            let m = ch.metrics.lock().unwrap();
+            (m.decode_cycles, m.weight_bytes_streamed)
+        };
+        assert!(hw_cycles > 0, "decode cycles must be counted");
+        let cp = mk(Backend::Packed);
+        let packed_tokens = run(&cp).tokens;
+        assert_eq!(packed_tokens, hw_tokens, "packed serving diverged from hw");
+        let m = cp.metrics.lock().unwrap();
+        assert!(m.decode_cycles > 0);
+        let hw_per_cycle = hw_bytes / hw_cycles;
+        let packed_per_cycle = m.weight_bytes_streamed / m.decode_cycles;
+        assert_eq!(packed_per_cycle * 2, hw_per_cycle, "packed must stream half the bytes");
+        drop(m);
+        // the exact backend serves fine too (different numerics, so
+        // only the shape is asserted) and streams the f32 figure
+        let ce = mk(Backend::Exact);
+        let r = run(&ce);
+        assert_eq!(r.tokens.len(), 6);
+        let m = ce.metrics.lock().unwrap();
+        assert_eq!(m.weight_bytes_streamed / m.decode_cycles, hw_per_cycle);
     }
 
     #[test]

@@ -26,17 +26,23 @@
 //! # Bit-exactness contract
 //!
 //! Per-column op order is identical across panel widths and modes: each
-//! column runs the exact [`matvec`] accumulation order through
-//! [`matmul`], token shift reads the same values whether they come from
-//! a carried state row (batch / first sequence column) or the previous
-//! panel column (later sequence columns), and the WKV recurrence body is
-//! written once.  Decode, batched decode and chunked prefill are
-//! therefore bit-exact with each other on BOTH backends — asserted in
-//! `rust/tests/batch_parity.rs`, `rust/tests/prefill_parity.rs` and
-//! `rust/tests/forward_core.rs` (which also anchors the walk against an
-//! independently written naive reference forward).
+//! column of every [`Numerics::gemm`] call runs the exact
+//! `rwkv::matvec` accumulation order (eight interleaved accumulators +
+//! tail, reduced in a fixed tree), token shift reads the same values
+//! whether they come from a carried state row (batch / first sequence
+//! column) or the previous panel column (later sequence columns), and
+//! the WKV recurrence body is written once.  Decode, batched decode and
+//! chunked prefill are therefore bit-exact with each other on EVERY
+//! backend — asserted in `rust/tests/batch_parity.rs`,
+//! `rust/tests/prefill_parity.rs` and `rust/tests/forward_core.rs`
+//! (which also anchors the walk against an independently written naive
+//! reference forward).  Backends that store weights in a different
+//! format (the packed Δ-PoT backend) uphold the same contract by
+//! decoding to the identical f32 value grid inside their `gemm` and
+//! accumulating in the identical order — `rust/tests/packed_parity.rs`
+//! pins that at 0 ULP against a scalar oracle.
 
-use super::rwkv::{matmul, matvec, Block, State};
+use super::rwkv::{Block, State};
 
 /// Activation-quantization sites, one per hook point in the walk
 /// (§3.2's W9A9 protocol quantizes activations entering each PE-array
@@ -62,26 +68,41 @@ pub enum Site {
     Resid,
 }
 
-/// The per-layer weight-*matrix* set a backend feeds the PE array
-/// (f32 matrices for the exact backend, decoded Δ-PoT for hardware).
-pub struct Mats<'a> {
-    pub att_key: &'a [f32],
-    pub att_value: &'a [f32],
-    pub att_receptance: &'a [f32],
-    pub att_output: &'a [f32],
-    pub ffn_key: &'a [f32],
-    pub ffn_receptance: &'a [f32],
-    pub ffn_value: &'a [f32],
+/// Names the eight weight-*matrix* planes the PE array consumes: the
+/// seven per-layer projections plus the output head.  The walk hands
+/// [`Numerics::gemm`] a `MatId` instead of a borrowed f32 slice so a
+/// backend is free to store the plane however it likes — contiguous
+/// f32 (exact), decoded Δ-PoT f32 (hw), or packed 16-bit Δ-PoT codes
+/// consumed in-register (packed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatId {
+    /// `att.key` `[d, d]`
+    AttKey,
+    /// `att.value` `[d, d]`
+    AttValue,
+    /// `att.receptance` `[d, d]`
+    AttReceptance,
+    /// `att.output` `[d, d]`
+    AttOutput,
+    /// `ffn.key` `[f, d]`
+    FfnKey,
+    /// `ffn.receptance` `[d, d]`
+    FfnReceptance,
+    /// `ffn.value` `[d, f]`
+    FfnValue,
+    /// output head `[vocab, d]` (layer index ignored)
+    Head,
 }
 
 /// A numerics backend: everything the generic walk does not hard-code.
 ///
 /// Model shape and the *vector* weights (LayerNorm affine, mix factors,
 /// decay/first) come from [`Numerics::block`] and friends; the seven
-/// per-layer matrices, the embedding and the head come from
-/// [`Numerics::mats`] / [`Numerics::emb`] / [`Numerics::head`] so a
-/// backend can substitute quantized copies; the five op hooks select
-/// the arithmetic (exact f32 vs the integer approximation units).
+/// per-layer matrices, the embedding and the head are consumed through
+/// [`Numerics::gemm`] / [`Numerics::embed`] so a backend can substitute
+/// quantized — or packed — copies and its own kernels; the five op
+/// hooks select the elementwise arithmetic (exact f32 vs the integer
+/// approximation units).
 ///
 /// Hooks take `&self` so one walk invocation can interleave them
 /// freely; backends that accumulate observability state (clip counters,
@@ -98,12 +119,16 @@ pub trait Numerics {
     fn ln0(&self) -> (&[f32], &[f32]);
     /// Output-LayerNorm affine (w, b).
     fn ln_out(&self) -> (&[f32], &[f32]);
-    /// Embedding matrix `[vocab, d]`.
-    fn emb(&self) -> &[f32];
-    /// Head matrix `[vocab, d]`.
-    fn head(&self) -> &[f32];
-    /// Matrix set of layer `l`.
-    fn mats(&self, l: usize) -> Mats<'_>;
+    /// Write embedding row `tok` (length `d`) into `out`.
+    fn embed(&self, tok: u32, out: &mut [f32]);
+    /// Matrix-panel multiply: `out[c] = mat · xs[c]` for each of
+    /// `width` columns, where `mat` is plane `mat` of layer `l`
+    /// (`l` is ignored for [`MatId::Head`]).  Every implementation
+    /// MUST reproduce the `rwkv::matmul` per-column accumulation
+    /// order bit-exactly — this is the seam the bit-exactness
+    /// contract (module docs) rests on.  `width == 1` is the decode
+    /// matvec.
+    fn gemm(&self, l: usize, mat: MatId, xs: &[f32], out: &mut [f32], width: usize);
 
     /// LayerNorm `x → out` with affine (w, b).
     fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]);
@@ -281,7 +306,7 @@ pub fn panel_all_finite(xs: &[f32]) -> bool {
 /// [`HeadMode::LastColumn`], cleared for [`HeadMode::Skip`]).
 ///
 /// See the module docs for the bit-exactness contract; per-column op
-/// order is the original [`matvec`]-based single-step order at every
+/// order is the original `rwkv::matvec` single-step order at every
 /// width, in both column modes, on every backend.
 pub fn forward_panel<N: Numerics>(
     nm: &N,
@@ -309,13 +334,14 @@ pub fn forward_panel<N: Numerics>(
     }
     buf.ensure(d, nm.f(), width);
 
-    // embedding + ln0, per column
+    // embedding + ln0, per column (the xn panel is dead until layer 0's
+    // time mixing, so it doubles as the raw-embedding scratch)
     {
         let (w0, b0) = nm.ln0();
         for (c, &tok) in tokens.iter().enumerate() {
             let o = c * d;
-            let emb_row = &nm.emb()[tok as usize * d..(tok as usize + 1) * d];
-            nm.layernorm(emb_row, w0, b0, &mut buf.x[o..o + d]);
+            nm.embed(tok, &mut buf.xn[o..o + d]);
+            nm.layernorm(&buf.xn[o..o + d], w0, b0, &mut buf.x[o..o + d]);
         }
     }
 
@@ -348,7 +374,7 @@ pub fn forward_panel<N: Numerics>(
                 logits.clear();
                 logits.resize(width * vocab, 0.0);
             }
-            matmul(nm.head(), &buf.xn[..width * d], logits, width);
+            nm.gemm(0, MatId::Head, &buf.xn[..width * d], logits, width);
         }
         HeadMode::LastColumn => {
             let o = (width - 1) * d;
@@ -357,14 +383,15 @@ pub fn forward_panel<N: Numerics>(
                 logits.clear();
                 logits.resize(vocab, 0.0);
             }
-            matvec(nm.head(), &buf.xn[o..o + d], logits);
+            // width-1 gemm ≡ matvec (rwkv::matmul_is_per_column_matvec)
+            nm.gemm(0, MatId::Head, &buf.xn[o..o + d], logits, 1);
         }
         HeadMode::Skip => logits.clear(),
     }
 }
 
 /// Time mixing over the panel: per column LayerNorm → quant → token
-/// shift, then ONE [`matmul`] per projection over all columns, with the
+/// shift, then ONE [`Numerics::gemm`] per projection over all columns, with the
 /// elementwise WKV recurrence between them.  Writes the attention
 /// residual into `buf.dx`.
 fn time_mixing<N: Numerics>(
@@ -400,10 +427,9 @@ fn time_mixing<N: Numerics>(
         state.row_mut(l, 0).copy_from_slice(&xn[last..last + d]);
     }
 
-    let m = nm.mats(l);
-    matmul(m.att_receptance, xr, r, width);
-    matmul(m.att_key, xk, k, width);
-    matmul(m.att_value, xv, v, width);
+    nm.gemm(l, MatId::AttReceptance, xr, r, width);
+    nm.gemm(l, MatId::AttKey, xk, k, width);
+    nm.gemm(l, MatId::AttValue, xv, v, width);
     for c in 0..width {
         let o = c * d;
         nm.quant(l, Site::AttK, &mut k[o..o + d]);
@@ -455,7 +481,7 @@ fn time_mixing<N: Numerics>(
         }
         nm.quant(l, Site::AttGated, &mut gated[o..o + d]);
     }
-    matmul(m.att_output, gated, dx, width);
+    nm.gemm(l, MatId::AttOutput, gated, dx, width);
 }
 
 /// Channel mixing over the panel — same structure as [`time_mixing`]
@@ -496,9 +522,8 @@ fn channel_mixing<N: Numerics>(
         state.row_mut(l, 1).copy_from_slice(&xn[last..last + d]);
     }
 
-    let m = nm.mats(l);
-    matmul(m.ffn_receptance, xr, r, width);
-    matmul(m.ffn_key, xk, kf, width);
+    nm.gemm(l, MatId::FfnReceptance, xr, r, width);
+    nm.gemm(l, MatId::FfnKey, xk, kf, width);
     for kv in kf.iter_mut() {
         let relu = kv.max(0.0);
         *kv = relu * relu;
@@ -507,7 +532,7 @@ fn channel_mixing<N: Numerics>(
         let of = c * f;
         nm.quant(l, Site::FfnK2, &mut kf[of..of + f]);
     }
-    matmul(m.ffn_value, kf, dx, width);
+    nm.gemm(l, MatId::FfnValue, kf, dx, width);
 }
 
 #[cfg(test)]

@@ -20,14 +20,28 @@
 //!   ablation rows (fake-quantized weights, W9A9 activations) run here
 //!   (§5.2).
 //! * [`rwkv_hw::HwModel`] — the hardware backend, i.e. the paper's full
-//!   datapath: Δ-PoT matrices (§3.2), per-site 9-bit activations at
-//!   calibrated per-layer scales, EXP-LUT / PWL-sigmoid / DIVU
-//!   nonlinearities (§4), ATAC-identity LayerNorm.  This is the
-//!   "Proposed+HW" Table 1 row, with 9-bit clip-event observability.
+//!   datapath: Δ-PoT matrices (§3.2) decoded to f32 at load, per-site
+//!   9-bit activations at calibrated per-layer scales, EXP-LUT /
+//!   PWL-sigmoid / DIVU nonlinearities (§4), ATAC-identity LayerNorm.
+//!   This is the "Proposed+HW" Table 1 row, with 9-bit clip-event
+//!   observability — bit-faithful, but it streams full f32 planes.
+//! * [`rwkv_packed::PackedModel`] — the throughput backend: the SAME
+//!   value grid and elementwise units as `HwModel`, but the matrices
+//!   stay PACKED (9-bit Δ-PoT words, 2 bytes/weight streamed) and the
+//!   matmuls decode in-register with runtime-dispatched AVX2 kernels
+//!   ([`packed_gemm`]) — half the weight traffic per decode cycle, the
+//!   paper's memory-bottleneck argument replayed in software.  Logits
+//!   are bit-identical to `HwModel`'s (`rust/tests/packed_parity.rs`).
 //! * the calibration tap (internal to `rwkv_hw`) — a site-observer
 //!   backend whose quantization hook records per-site activation maxima
-//!   instead of rounding; `HwModel::from_f32` resolves its output into
-//!   the per-layer scale table.
+//!   instead of rounding; `HwModel::from_f32` / `PackedModel::from_f32`
+//!   resolve its output into the per-layer scale table.
+//!
+//! | backend | weights streamed | elementwise | role |
+//! |---|---|---|---|
+//! | [`RwkvModel`] | f32 (4 B/w) | f32 | exact reference, software ablations |
+//! | [`HwModel`] | decoded Δ-PoT f32 (4 B/w) | integer units | bit-faithful accuracy model |
+//! | [`PackedModel`] | packed Δ-PoT (2 B/w) | integer units | throughput configuration |
 //!
 //! Because every execution shape on every backend is the same walk,
 //! decode / batched decode / chunked prefill are bit-exact with each
@@ -52,15 +66,18 @@
 //! flat state vector every backend here uses.
 
 pub mod forward;
+pub mod packed_gemm;
 pub mod rwkv;
 pub mod rwkv_hw;
+pub mod rwkv_packed;
 pub mod sampler;
 pub mod tokenizer;
 pub mod weights;
 
-pub use forward::{panel_all_finite, Columns, HeadMode, Numerics, Site};
+pub use forward::{panel_all_finite, Columns, HeadMode, MatId, Numerics, Site};
 pub use rwkv::{RwkvModel, State};
 pub use rwkv_hw::{HwModel, LayerScales};
+pub use rwkv_packed::PackedModel;
 pub use sampler::Sampler;
 pub use tokenizer::Tokenizer;
 pub use weights::WeightFile;

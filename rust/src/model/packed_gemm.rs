@@ -1,0 +1,374 @@
+//! Packed Δ-PoT matmul kernels: the PE-array pass that consumes 9-bit
+//! storage words directly instead of pre-decoded f32 planes.
+//!
+//! Two implementations of ONE arithmetic:
+//!
+//! * [`packed_gemm_ref`] — the scalar decode-on-the-fly oracle.  Per
+//!   column it is literally `rwkv::matvec` with `row[k]` replaced by
+//!   `lut[row[k]]` (the plane's 512-entry decode table): 8 interleaved
+//!   accumulators, same multiply order (`weight * x`), same tail loop,
+//!   same `reduce8` reduction tree.  Because the LUT holds exactly the
+//!   values the hw backend's decoded planes hold, `packed_gemm_ref` is
+//!   bit-identical to `rwkv::matmul` over the decoded plane.
+//! * `gemm_avx2` — the AVX2 throughput kernel.  Weights decode
+//!   in-register (exponent-field bit construction: `2^(1-dq0)` and
+//!   `2^(1-dq0-dq1)` are built by shifting the biased exponent into
+//!   place, zero-masked via `cmpeq`/`andnot`, summed with one exact
+//!   `_mm256_add_ps`, scaled by γ with one `_mm256_mul_ps` — the same
+//!   single rounding step the scalar `DpotCode::value` performs — and
+//!   signed by XORing bit 8 of the word into the sign bit, which is
+//!   exactly a ±1 multiply under IEEE sign-symmetric rounding).  Lane k
+//!   of each SIMD accumulator is scalar accumulator `acc[k]`, and the
+//!   final reduction extracts lanes and reuses the scalar `reduce8`
+//!   expression — so the SIMD kernel is 0-ULP identical to the oracle,
+//!   not merely close.  No FMA anywhere: explicit mul/add intrinsics are
+//!   never contraction-fused by LLVM, while a fused multiply-add would
+//!   round differently and break the parity contract.
+//!
+//! [`packed_gemm`] dispatches between them at runtime
+//! (`is_x86_feature_detected!("avx2")`), so the same binary is correct
+//! on any x86-64 and on non-x86 hosts; building with
+//! `--features no-simd` forces the scalar path everywhere (the CI
+//! matrix leg that keeps the fallback from rotting).
+//!
+//! `rust/tests/packed_parity.rs` pins SIMD == oracle at 0 ULP across
+//! decode (w=1), batch (w∈2..8) and sequence-panel shapes, including
+//! ragged non-multiple-of-8 inner dimensions.
+
+use super::rwkv::reduce8;
+use crate::quant::PackedPlane;
+
+/// True when the AVX2 packed kernel will be used for [`packed_gemm`]
+/// calls on this host (false on non-x86-64, on pre-AVX2 CPUs, and under
+/// `--features no-simd`).
+pub fn simd_active() -> bool {
+    #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(feature = "no-simd"))))]
+    {
+        false
+    }
+}
+
+/// Packed-plane panel multiply: `out[j] = plane · xs[j]` for each of
+/// `b` columns (`xs[j*cols..]`, `out[j*rows..]` — the same panel layout
+/// as `rwkv::matmul`).  Runtime-dispatches to the AVX2 kernel or the
+/// scalar oracle; both produce bit-identical panels.
+pub fn packed_gemm(p: &PackedPlane, xs: &[f32], out: &mut [f32], b: usize) {
+    if b == 0 {
+        return;
+    }
+    check_panels(p, xs, out, b);
+    #[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence just checked; panel shapes checked
+            unsafe { avx2::gemm_avx2(p, xs, out, b) };
+            return;
+        }
+    }
+    packed_gemm_ref(p, xs, out, b);
+}
+
+/// The scalar decode-on-the-fly oracle (see module docs).  Public so
+/// the parity suite and benches can pin the SIMD kernel against it.
+pub fn packed_gemm_ref(p: &PackedPlane, xs: &[f32], out: &mut [f32], b: usize) {
+    if b == 0 {
+        return;
+    }
+    check_panels(p, xs, out, b);
+    let (l, m) = (p.cols, p.rows);
+    let lut: &[f32; 512] = p.lut[..512].try_into().expect("plane LUT is 512 entries");
+    let chunks = l / 8;
+    for r in 0..m {
+        let row = &p.codes[r * l..(r + 1) * l];
+        for j in 0..b {
+            let x = &xs[j * l..(j + 1) * l];
+            let mut acc = [0f32; 8];
+            for c in 0..chunks {
+                let o = c * 8;
+                let rb = &row[o..o + 8];
+                let xb = &x[o..o + 8];
+                for k in 0..8 {
+                    // 9-bit words: `as usize & 511` is a no-op on real
+                    // planes but lets the compiler drop the bounds check
+                    acc[k] += lut[rb[k] as usize & 511] * xb[k];
+                }
+            }
+            let mut tail = 0f32;
+            for k in chunks * 8..l {
+                tail += lut[row[k] as usize & 511] * x[k];
+            }
+            out[j * m + r] = reduce8(acc, tail);
+        }
+    }
+}
+
+/// Shared hard asserts (the `b` parameter lets slice lengths disagree,
+/// which would silently misindex in release builds — same rationale as
+/// `rwkv::matmul`).
+fn check_panels(p: &PackedPlane, xs: &[f32], out: &mut [f32], b: usize) {
+    assert_eq!(xs.len(), b * p.cols, "xs must hold exactly b columns");
+    assert_eq!(out.len(), b * p.rows, "out must hold exactly b columns");
+    assert_eq!(p.codes.len(), p.rows * p.cols, "plane shape inconsistent");
+    assert!(p.lut.len() >= 512, "plane LUT must cover all 9-bit words");
+}
+
+#[cfg(all(target_arch = "x86_64", not(feature = "no-simd")))]
+mod avx2 {
+    use super::super::rwkv::reduce8;
+    use crate::quant::PackedPlane;
+    use std::arch::x86_64::*;
+
+    /// Decode 8 packed words to the plane's f32 value grid, in-register.
+    ///
+    /// Bit-exact with `lut[w]` for every word the encoder emits (the
+    /// only divergence is non-canonical words with `dq0 == 0` and the
+    /// sign bit set, which would decode to `-0.0` instead of `+0.0` —
+    /// `DpotTensor::encode` never produces them; asserted exhaustively
+    /// in the tests below).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `codes` points at 8
+    /// readable u16s.
+    #[inline(always)]
+    unsafe fn decode8(codes: *const u16, gamma: __m256) -> __m256 {
+        let raw = _mm_loadu_si128(codes as *const __m128i);
+        let w = _mm256_cvtepu16_epi32(raw);
+        let fmask = _mm256_set1_epi32(0xF);
+        let dq0 = _mm256_and_si256(_mm256_srli_epi32::<4>(w), fmask);
+        let dq1 = _mm256_and_si256(w, fmask);
+        let zero = _mm256_setzero_si256();
+        // 2^(1-dq0) has biased exponent 128 - dq0; build it directly in
+        // the exponent field.  2^(1-dq0-dq1) has exponent >= 98, so both
+        // terms are normal floats — no subnormal edge cases.
+        let e0 = _mm256_sub_epi32(_mm256_set1_epi32(128), dq0);
+        let p0 = _mm256_slli_epi32::<23>(e0);
+        let p1 = _mm256_slli_epi32::<23>(_mm256_sub_epi32(e0, dq1));
+        let z0 = _mm256_cmpeq_epi32(dq0, zero);
+        let z1 = _mm256_cmpeq_epi32(dq1, zero);
+        let p0 = _mm256_andnot_si256(z0, p0);
+        let p1 = _mm256_andnot_si256(_mm256_or_si256(z0, z1), p1);
+        // exact: p0 and p1 are powers of two at most 2^15 apart
+        let mag = _mm256_add_ps(_mm256_castsi256_ps(p0), _mm256_castsi256_ps(p1));
+        // the ONE rounding step, identical to the scalar `mag * gamma`
+        let v = _mm256_mul_ps(mag, gamma);
+        // word bit 8 (sign) -> f32 bit 31; XOR == multiply by ±1
+        let sbit = _mm256_slli_epi32::<23>(_mm256_and_si256(w, _mm256_set1_epi32(0x100)));
+        _mm256_xor_ps(v, _mm256_castsi256_ps(sbit))
+    }
+
+    /// Lane-extract reduction: lane k of `acc` is scalar accumulator
+    /// `acc[k]`, reduced through the very same [`reduce8`] expression.
+    #[inline(always)]
+    unsafe fn reduce8_avx(acc: __m256, tail: f32) -> f32 {
+        let mut a = [0f32; 8];
+        _mm256_storeu_ps(a.as_mut_ptr(), acc);
+        reduce8(a, tail)
+    }
+
+    /// One weight row dotted with `NC` panel columns starting at column
+    /// `j`: each 8-word chunk decodes ONCE and multiplies into all `NC`
+    /// columns' accumulators (the packed analog of `rwkv::matmul`'s
+    /// weight-reuse blocking — here the amortized work is the decode,
+    /// not just the load).
+    ///
+    /// Deliberately NOT `#[target_feature]` (const-generic fns and
+    /// target_feature interact poorly across toolchains); `inline(always)`
+    /// into the `#[target_feature(enable = "avx2")]` driver gives the
+    /// intrinsics the right ISA at codegen.
+    ///
+    /// # Safety
+    /// AVX2 must be available; `row.len() == l`; columns `j..j+NC` of
+    /// `xs` must be in-bounds.
+    #[inline(always)]
+    unsafe fn dot_block<const NC: usize>(
+        row: &[u16],
+        lut: &[f32; 512],
+        gamma: __m256,
+        xs: &[f32],
+        j: usize,
+        l: usize,
+    ) -> [f32; NC] {
+        let chunks = l / 8;
+        let mut acc = [_mm256_setzero_ps(); NC];
+        for c in 0..chunks {
+            let o = c * 8;
+            let wv = decode8(row.as_ptr().add(o), gamma);
+            for k in 0..NC {
+                let xv = _mm256_loadu_ps(xs.as_ptr().add((j + k) * l + o));
+                // mul order weight*x, matching matvec/the oracle
+                acc[k] = _mm256_add_ps(acc[k], _mm256_mul_ps(wv, xv));
+            }
+        }
+        let mut res = [0f32; NC];
+        for k in 0..NC {
+            let mut tail = 0f32;
+            for i in chunks * 8..l {
+                tail += lut[row[i] as usize & 511] * xs[(j + k) * l + i];
+            }
+            res[k] = reduce8_avx(acc[k], tail);
+        }
+        res
+    }
+
+    /// The AVX2 driver: weight rows outer, panel columns blocked 4-wide
+    /// then singly (same shape as `rwkv::matmul`; per-column results are
+    /// blocking-invariant, so this is a pure reuse choice).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and panel shapes were
+    /// checked (`check_panels` in the parent module).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_avx2(p: &PackedPlane, xs: &[f32], out: &mut [f32], b: usize) {
+        let (l, m) = (p.cols, p.rows);
+        let lut: &[f32; 512] = p.lut[..512].try_into().expect("plane LUT is 512 entries");
+        let gamma = _mm256_set1_ps(p.gamma);
+        for r in 0..m {
+            let row = &p.codes[r * l..(r + 1) * l];
+            let mut j = 0usize;
+            while j + 4 <= b {
+                let res = dot_block::<4>(row, lut, gamma, xs, j, l);
+                for k in 0..4 {
+                    out[(j + k) * m + r] = res[k];
+                }
+                j += 4;
+            }
+            while j < b {
+                let res = dot_block::<1>(row, lut, gamma, xs, j, l);
+                out[j * m + r] = res[0];
+                j += 1;
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::quant::DpotTensor;
+
+        /// Every canonical 9-bit word (the encoder never sets the sign
+        /// bit when dq0 == 0) must decode in-register to exactly the
+        /// LUT / `DpotCode::value` grid, across several scales.
+        #[test]
+        fn decode8_matches_lut_exhaustively() {
+            if !std::arch::is_x86_feature_detected!("avx2") {
+                eprintln!("skipping: no AVX2 on this host");
+                return;
+            }
+            let canonical: Vec<u16> =
+                (0..512u16).filter(|w| !((w >> 4) & 0xF == 0 && w >> 8 == 1)).collect();
+            for gamma in [1.0f32, 0.37, 3.25e-3, 117.0] {
+                let lut: Vec<f32> = (0..512u16)
+                    .map(|w| crate::quant::DpotCode::unpack(w).value(gamma))
+                    .collect();
+                let g = unsafe { _mm256_set1_ps(gamma) };
+                for chunk in canonical.chunks(8) {
+                    let mut words = [0u16; 8];
+                    words[..chunk.len()].copy_from_slice(chunk);
+                    let mut got = [0f32; 8];
+                    unsafe {
+                        let v = decode8(words.as_ptr(), g);
+                        _mm256_storeu_ps(got.as_mut_ptr(), v);
+                    }
+                    for (k, &w) in chunk.iter().enumerate() {
+                        assert_eq!(
+                            got[k].to_bits(),
+                            lut[w as usize].to_bits(),
+                            "word {w:#05x} gamma {gamma}: {} vs {}",
+                            got[k],
+                            lut[w as usize]
+                        );
+                    }
+                }
+            }
+        }
+
+        /// The SIMD driver must equal the scalar oracle bit-for-bit on
+        /// ragged shapes (tail columns, tail inner dims).
+        #[test]
+        fn gemm_avx2_matches_oracle() {
+            if !std::arch::is_x86_feature_detected!("avx2") {
+                eprintln!("skipping: no AVX2 on this host");
+                return;
+            }
+            let mut rng = crate::Rng64::new(21);
+            for (m, l, b) in [(5, 12, 1), (7, 16, 3), (9, 19, 4), (11, 33, 7), (4, 8, 9)] {
+                let w: Vec<f32> = (0..m * l).map(|_| rng.normal() as f32 * 0.2).collect();
+                let p = crate::quant::PackedPlane::from_tensor(&DpotTensor::encode(&w, m, l));
+                let xs: Vec<f32> = (0..b * l).map(|_| rng.normal() as f32 * 0.5).collect();
+                let mut simd = vec![0f32; b * m];
+                let mut oracle = vec![0f32; b * m];
+                unsafe { gemm_avx2(&p, &xs, &mut simd, b) };
+                super::super::packed_gemm_ref(&p, &xs, &mut oracle, b);
+                for i in 0..b * m {
+                    assert_eq!(
+                        simd[i].to_bits(),
+                        oracle[i].to_bits(),
+                        "m={m} l={l} b={b} elem {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::rwkv::matmul;
+    use crate::quant::DpotTensor;
+
+    /// The oracle over packed codes must be bit-identical to the f32
+    /// `matmul` over the decoded plane — this chains the packed backend
+    /// into the existing exact/hw bit-exactness contract.
+    #[test]
+    fn oracle_matches_f32_matmul_over_decoded_plane() {
+        let mut rng = crate::Rng64::new(33);
+        for (m, l, b) in [(6, 8, 1), (5, 13, 2), (16, 24, 5), (3, 40, 8)] {
+            let w: Vec<f32> = (0..m * l).map(|_| rng.normal() as f32 * 0.4).collect();
+            let t = DpotTensor::encode(&w, m, l);
+            let p = PackedPlane::from_tensor(&t);
+            let dec = t.decode();
+            let xs: Vec<f32> = (0..b * l).map(|_| rng.normal() as f32).collect();
+            let mut packed = vec![0f32; b * m];
+            let mut exact = vec![0f32; b * m];
+            packed_gemm_ref(&p, &xs, &mut packed, b);
+            matmul(&dec, &xs, &mut exact, b);
+            for i in 0..b * m {
+                assert_eq!(
+                    packed[i].to_bits(),
+                    exact[i].to_bits(),
+                    "m={m} l={l} b={b} elem {i}"
+                );
+            }
+        }
+    }
+
+    /// The runtime dispatcher must agree with the oracle whatever path
+    /// it picked on this host.
+    #[test]
+    fn dispatcher_matches_oracle() {
+        let mut rng = crate::Rng64::new(44);
+        let (m, l, b) = (14, 29, 6);
+        let w: Vec<f32> = (0..m * l).map(|_| rng.normal() as f32 * 0.3).collect();
+        let p = PackedPlane::encode(&w, m, l);
+        let xs: Vec<f32> = (0..b * l).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0f32; b * m];
+        let mut want = vec![0f32; b * m];
+        packed_gemm(&p, &xs, &mut got, b);
+        packed_gemm_ref(&p, &xs, &mut want, b);
+        for i in 0..b * m {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "elem {i} (simd={})", simd_active());
+        }
+    }
+
+    #[test]
+    fn zero_width_panel_is_noop() {
+        let p = PackedPlane::encode(&[0.5f32; 6], 2, 3);
+        packed_gemm(&p, &[], &mut [], 0);
+        packed_gemm_ref(&p, &[], &mut [], 0);
+    }
+}

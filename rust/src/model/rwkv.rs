@@ -43,7 +43,7 @@
 
 use anyhow::{bail, Result};
 
-use super::forward::{self, Columns, HeadMode, Mats, Numerics, Site};
+use super::forward::{self, Columns, HeadMode, MatId, Numerics, Site};
 use super::weights::WeightFile;
 use crate::quant::Scheme;
 
@@ -182,9 +182,11 @@ pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32]) {
 }
 
 /// Reduce the 8 accumulators exactly like [`matvec`] does — one shared
-/// expression so the batched kernel cannot drift from the sequential one.
+/// expression so the batched kernel cannot drift from the sequential
+/// one.  `pub(crate)` so the packed backend's scalar oracle
+/// (`model::packed_gemm`) reduces through the very same expression.
 #[inline]
-fn reduce8(acc: [f32; 8], tail: f32) -> f32 {
+pub(crate) fn reduce8(acc: [f32; 8], tail: f32) -> f32 {
     (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]) + tail
 }
 
@@ -492,25 +494,23 @@ impl Numerics for RwkvModel {
         (&self.ln_out_w, &self.ln_out_b)
     }
 
-    fn emb(&self) -> &[f32] {
-        &self.emb
+    fn embed(&self, tok: u32, out: &mut [f32]) {
+        let d = self.d;
+        out.copy_from_slice(&self.emb[tok as usize * d..(tok as usize + 1) * d]);
     }
 
-    fn head(&self) -> &[f32] {
-        &self.head
-    }
-
-    fn mats(&self, l: usize) -> Mats<'_> {
-        let b = &self.blocks[l];
-        Mats {
-            att_key: &b.att_key,
-            att_value: &b.att_value,
-            att_receptance: &b.att_receptance,
-            att_output: &b.att_output,
-            ffn_key: &b.ffn_key,
-            ffn_receptance: &b.ffn_receptance,
-            ffn_value: &b.ffn_value,
-        }
+    fn gemm(&self, l: usize, mat: MatId, xs: &[f32], out: &mut [f32], width: usize) {
+        let w: &[f32] = match mat {
+            MatId::AttKey => &self.blocks[l].att_key,
+            MatId::AttValue => &self.blocks[l].att_value,
+            MatId::AttReceptance => &self.blocks[l].att_receptance,
+            MatId::AttOutput => &self.blocks[l].att_output,
+            MatId::FfnKey => &self.blocks[l].ffn_key,
+            MatId::FfnReceptance => &self.blocks[l].ffn_receptance,
+            MatId::FfnValue => &self.blocks[l].ffn_value,
+            MatId::Head => &self.head,
+        };
+        matmul(w, xs, out, width);
     }
 
     fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {

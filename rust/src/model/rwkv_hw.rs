@@ -24,7 +24,8 @@
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
-use super::forward::{self, Columns, HeadMode, Mats, Numerics, Site};
+use super::forward::{self, Columns, HeadMode, MatId, Numerics, Site};
+use super::rwkv::matmul;
 use super::rwkv::{Block, RwkvModel, State};
 use crate::arith::{Divu, ExpSigmoidUnit};
 use crate::quant::DpotTensor;
@@ -111,7 +112,10 @@ fn dpot_decode_all(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     DpotTensor::encode(w, rows, cols).decode()
 }
 
-fn quant9(xs: &mut [f32], scale: f32, clips: &mut u64) {
+/// 9-bit uniform symmetric quantization at a fixed scale, counting rail
+/// clips.  `pub(crate)` because the packed backend applies the very
+/// same activation grid ([`crate::model::PackedModel`]).
+pub(crate) fn quant9(xs: &mut [f32], scale: f32, clips: &mut u64) {
     let qmax = 255.0f32;
     let s = scale.max(1e-12);
     for x in xs.iter_mut() {
@@ -146,6 +150,101 @@ fn calibrate(base: &RwkvModel, calib_tokens: &[u32], chunk: usize) -> ScaleMap {
     site_max
 }
 
+/// Step 2 of the W9A9 construction pipeline: quantize the additive /
+/// vector weights 9-bit uniform, in place on the base model, returning
+/// the (discarded-by-convention) clip count.  Shared verbatim between
+/// [`HwModel::from_f32`] and the packed backend so both resolve the
+/// SAME quantized-vector model — any drift here would break their
+/// bit-exact logit parity.
+pub(crate) fn quantize_vector_weights(base: &mut RwkvModel) -> u64 {
+    let mut clips = 0u64;
+    for b in &mut base.blocks {
+        for v in [
+            &mut b.att_first,
+            &mut b.att_mix_k,
+            &mut b.att_mix_v,
+            &mut b.att_mix_r,
+            &mut b.ffn_mix_k,
+            &mut b.ffn_mix_r,
+            &mut b.ln1_w,
+            &mut b.ln1_b,
+            &mut b.ln2_w,
+            &mut b.ln2_b,
+        ] {
+            let s = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            quant9(v, s, &mut clips);
+        }
+        // decay is consumed as -exp(decay): quantize the raw value
+        let s = b.att_decay.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        quant9(&mut b.att_decay, s, &mut clips);
+    }
+    clips
+}
+
+/// Steps 3–4 of the construction pipeline: run the calibration tap over
+/// (at most 512 tokens of) the calib stream and resolve the site map
+/// into the per-layer scale structs the hot path indexes directly
+/// (4.0 = uncalibrated-site fallback).  Shared between the hw and
+/// packed backends — see [`quantize_vector_weights`].
+pub(crate) fn resolve_layer_scales(base: &RwkvModel, calib_tokens: &[u32]) -> Vec<LayerScales> {
+    let calib = &calib_tokens[..calib_tokens.len().min(512)];
+    let site_max = calibrate(base, calib, CALIB_CHUNK);
+    let site = |l: usize, s: Site| *site_max.get(&(l, s)).unwrap_or(&4.0);
+    (0..base.n_layer)
+        .map(|l| LayerScales {
+            att_xn: site(l, Site::AttXn),
+            att_k: site(l, Site::AttK),
+            att_v: site(l, Site::AttV),
+            att_gated: site(l, Site::AttGated),
+            ffn_xn: site(l, Site::FfnXn),
+            ffn_k2: site(l, Site::FfnK2),
+            resid: site(l, Site::Resid),
+        })
+        .collect()
+}
+
+/// LayerNorm in the ATAC identity form with DIVU division — the §4 eq 12
+/// single-pass form.  Free function over the unit so every hardware-grid
+/// backend (hw, packed) shares ONE implementation.
+pub(crate) fn hw_layernorm(divu: &Divu, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+    let d = x.len() as f64;
+    let s1: f64 = x.iter().map(|&v| v as f64).sum();
+    let s2: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let mu = s1 / d;
+    let sigma = (s2 / d - mu * mu + 1e-5).max(1e-12).sqrt();
+    for i in 0..x.len() {
+        let num = x[i] as f64 - mu;
+        let q = if num >= 0.0 {
+            divu.div_f64(num, sigma, 12)
+        } else {
+            -divu.div_f64(-num, sigma, 12)
+        };
+        out[i] = (q as f32) * w[i] + b[i];
+    }
+}
+
+/// The integer EXP unit. WKV always feeds `x <= 0` (running-max); the
+/// clamp guards the domain.
+#[inline]
+pub(crate) fn hw_exp(exps: &ExpSigmoidUnit, x: f32) -> f32 {
+    exps.exp_f64(x.clamp(-60.0, 0.0) as f64) as f32
+}
+
+/// The PWL sigmoid unit (§4 eq 9).
+#[inline]
+pub(crate) fn hw_sigmoid(exps: &ExpSigmoidUnit, x: f32) -> f32 {
+    exps.sigmoid_f64(x as f64) as f32
+}
+
+/// DIVU division with sign split and denominator floor.
+#[inline]
+pub(crate) fn hw_div(divu: &Divu, num: f32, den: f32) -> f32 {
+    let s = if (num < 0.0) ^ (den < 0.0) { -1.0 } else { 1.0 };
+    let n = num.abs().max(1e-9) as f64;
+    let d = den.abs().max(1e-9) as f64;
+    s * divu.div_f64(n, d, 12) as f32
+}
+
 impl HwModel {
     /// Build from an f32 model; `calib_tokens` drives the activation-scale
     /// calibration pass (a slice of the training stream in the real flow).
@@ -174,47 +273,13 @@ impl HwModel {
         // 2. additive weights: 9-bit uniform (done by value, in place on
         //    the base copy so the HW forward reads quantized vectors)
         let mut base = base;
-        let mut clips = 0u64;
-        for b in &mut base.blocks {
-            for v in [
-                &mut b.att_first,
-                &mut b.att_mix_k,
-                &mut b.att_mix_v,
-                &mut b.att_mix_r,
-                &mut b.ffn_mix_k,
-                &mut b.ffn_mix_r,
-                &mut b.ln1_w,
-                &mut b.ln1_b,
-                &mut b.ln2_w,
-                &mut b.ln2_b,
-            ] {
-                let s = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
-                quant9(v, s, &mut clips);
-            }
-            // decay is consumed as -exp(decay): quantize the raw value
-            let s = b.att_decay.iter().fold(0f32, |m, &x| m.max(x.abs()));
-            quant9(&mut b.att_decay, s, &mut clips);
-        }
+        quantize_vector_weights(&mut base);
 
-        // 3. calibration: the site-observer tap over the generic walk
-        //    (f32 matrices + quantized vectors — calibration happens
-        //    before activation quantization in the real flow too)
-        let calib = &calib_tokens[..calib_tokens.len().min(512)];
-        let site_max = calibrate(&base, calib, CALIB_CHUNK);
-        // 4. resolve the site map into the per-layer struct the hot path
-        //    indexes directly (4.0 = uncalibrated-site fallback)
-        let site = |l: usize, s: Site| *site_max.get(&(l, s)).unwrap_or(&4.0);
-        let scales: Vec<LayerScales> = (0..base.n_layer)
-            .map(|l| LayerScales {
-                att_xn: site(l, Site::AttXn),
-                att_k: site(l, Site::AttK),
-                att_v: site(l, Site::AttV),
-                att_gated: site(l, Site::AttGated),
-                ffn_xn: site(l, Site::FfnXn),
-                ffn_k2: site(l, Site::FfnK2),
-                resid: site(l, Site::Resid),
-            })
-            .collect();
+        // 3–4. calibration (the site-observer tap over the generic walk;
+        //    f32 matrices + quantized vectors — calibration happens
+        //    before activation quantization in the real flow too) and
+        //    resolution into the indexed per-layer scales
+        let scales = resolve_layer_scales(&base, calib_tokens);
 
         HwModel {
             base,
@@ -244,6 +309,10 @@ impl HwModel {
         self.base.d
     }
 
+    pub fn f(&self) -> usize {
+        self.base.f
+    }
+
     /// Per-layer calibrated activation scales, one entry per layer.
     pub fn scales(&self) -> &[LayerScales] {
         &self.scales
@@ -265,43 +334,6 @@ impl HwModel {
         let c = self.clips.take();
         self.clip_events = c;
         self.clip_total += c;
-    }
-
-    /// LayerNorm in the ATAC identity form with DIVU division.
-    fn hw_layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
-        let d = x.len() as f64;
-        let s1: f64 = x.iter().map(|&v| v as f64).sum();
-        let s2: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
-        let mu = s1 / d;
-        let sigma = (s2 / d - mu * mu + 1e-5).max(1e-12).sqrt();
-        for i in 0..x.len() {
-            let num = x[i] as f64 - mu;
-            let q = if num >= 0.0 {
-                self.divu.div_f64(num, sigma, 12)
-            } else {
-                -self.divu.div_f64(-num, sigma, 12)
-            };
-            out[i] = (q as f32) * w[i] + b[i];
-        }
-    }
-
-    #[inline]
-    fn hw_exp(&self, x: f32) -> f32 {
-        // WKV always feeds x <= 0 (running-max); clamp guards the domain
-        self.exps.exp_f64(x.clamp(-60.0, 0.0) as f64) as f32
-    }
-
-    #[inline]
-    fn hw_sigmoid(&self, x: f32) -> f32 {
-        self.exps.sigmoid_f64(x as f64) as f32
-    }
-
-    #[inline]
-    fn hw_div(&self, num: f32, den: f32) -> f32 {
-        let s = if (num < 0.0) ^ (den < 0.0) { -1.0 } else { 1.0 };
-        let n = num.abs().max(1e-9) as f64;
-        let d = den.abs().max(1e-9) as f64;
-        s * self.divu.div_f64(n, d, 12) as f32
     }
 
     /// One autoregressive step on the hardware datapath: a width-1
@@ -422,29 +454,27 @@ impl Numerics for HwModel {
         (&self.base.ln_out_w, &self.base.ln_out_b)
     }
 
-    fn emb(&self) -> &[f32] {
-        &self.q.emb
+    fn embed(&self, tok: u32, out: &mut [f32]) {
+        let d = self.base.d;
+        out.copy_from_slice(&self.q.emb[tok as usize * d..(tok as usize + 1) * d]);
     }
 
-    fn head(&self) -> &[f32] {
-        &self.q.head
-    }
-
-    fn mats(&self, l: usize) -> Mats<'_> {
-        let b = &self.q.blocks[l];
-        Mats {
-            att_key: &b.att_key,
-            att_value: &b.att_value,
-            att_receptance: &b.att_receptance,
-            att_output: &b.att_output,
-            ffn_key: &b.ffn_key,
-            ffn_receptance: &b.ffn_receptance,
-            ffn_value: &b.ffn_value,
-        }
+    fn gemm(&self, l: usize, mat: MatId, xs: &[f32], out: &mut [f32], width: usize) {
+        let w: &[f32] = match mat {
+            MatId::AttKey => &self.q.blocks[l].att_key,
+            MatId::AttValue => &self.q.blocks[l].att_value,
+            MatId::AttReceptance => &self.q.blocks[l].att_receptance,
+            MatId::AttOutput => &self.q.blocks[l].att_output,
+            MatId::FfnKey => &self.q.blocks[l].ffn_key,
+            MatId::FfnReceptance => &self.q.blocks[l].ffn_receptance,
+            MatId::FfnValue => &self.q.blocks[l].ffn_value,
+            MatId::Head => &self.q.head,
+        };
+        matmul(w, xs, out, width);
     }
 
     fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
-        self.hw_layernorm(x, w, b, out);
+        hw_layernorm(&self.divu, x, w, b, out);
     }
 
     fn quant(&self, l: usize, site: Site, xs: &mut [f32]) {
@@ -454,15 +484,15 @@ impl Numerics for HwModel {
     }
 
     fn exp(&self, x: f32) -> f32 {
-        self.hw_exp(x)
+        hw_exp(&self.exps, x)
     }
 
     fn sigmoid(&self, x: f32) -> f32 {
-        self.hw_sigmoid(x)
+        hw_sigmoid(&self.exps, x)
     }
 
     fn div(&self, num: f32, den: f32) -> f32 {
-        self.hw_div(num, den)
+        hw_div(&self.divu, num, den)
     }
 }
 
@@ -508,16 +538,12 @@ impl Numerics for CalibTap<'_> {
         self.m.ln_out()
     }
 
-    fn emb(&self) -> &[f32] {
-        Numerics::emb(self.m)
+    fn embed(&self, tok: u32, out: &mut [f32]) {
+        Numerics::embed(self.m, tok, out);
     }
 
-    fn head(&self) -> &[f32] {
-        Numerics::head(self.m)
-    }
-
-    fn mats(&self, l: usize) -> Mats<'_> {
-        self.m.mats(l)
+    fn gemm(&self, l: usize, mat: MatId, xs: &[f32], out: &mut [f32], width: usize) {
+        Numerics::gemm(self.m, l, mat, xs, out, width);
     }
 
     fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {

@@ -1,0 +1,388 @@
+//! Packed-numerics RWKV backend: the SAME W9A9 value grid as
+//! [`HwModel`], stored and executed the way the accelerator stores it —
+//! 9-bit Δ-PoT words streamed straight into the matmul (§3.1's URAM
+//! layout, replayed in software as the throughput configuration).
+//!
+//! [`HwModel`] decodes every Δ-PoT plane back to f32 at load, so it is
+//! bit-faithful but strictly *slower* than the exact backend (same
+//! traffic, extra elementwise units).  [`PackedModel`] keeps the planes
+//! packed ([`PackedPlane`]: 2 bytes/weight instead of 4) and runs the
+//! AVX2 decode-in-register kernels ([`crate::model::packed_gemm`]) —
+//! halving weight traffic per decode cycle, which is exactly the
+//! paper's memory-bottleneck argument (§Perf L3-3) replayed in
+//! software.  `rust/benches/quant_serve.rs` asserts the resulting
+//! tokens/sec beat the exact f32 backend at equal batch.
+//!
+//! Construction shares [`HwModel`]'s pipeline verbatim (same vector
+//! quantization, same calibration walk, same scale resolution — the
+//! `pub(crate)` helpers in `rwkv_hw`), and every elementwise hook runs
+//! the same integer units, so PackedModel logits and states are
+//! BIT-IDENTICAL to HwModel's (`rust/tests/packed_parity.rs`): one
+//! value grid, two storage formats, and only the fast one streams
+//! half the bytes.
+
+use std::cell::Cell;
+
+use super::forward::{self, Columns, HeadMode, MatId, Numerics, Site};
+use super::packed_gemm::packed_gemm;
+use super::rwkv::{Block, RwkvModel, State};
+use super::rwkv_hw::{
+    hw_div, hw_exp, hw_layernorm, hw_sigmoid, quant9, quantize_vector_weights,
+    resolve_layer_scales, HwModel, LayerScales,
+};
+use crate::arith::{Divu, ExpSigmoidUnit};
+use crate::quant::PackedPlane;
+
+/// The seven per-layer packed weight planes.
+struct PackedBlock {
+    att_key: PackedPlane,
+    att_value: PackedPlane,
+    att_receptance: PackedPlane,
+    att_output: PackedPlane,
+    ffn_key: PackedPlane,
+    ffn_receptance: PackedPlane,
+    ffn_value: PackedPlane,
+}
+
+/// The packed-numerics model (see module docs).
+pub struct PackedModel {
+    /// vector-quantized base (same transform as [`HwModel`]'s step 2)
+    base: RwkvModel,
+    blocks: Vec<PackedBlock>,
+    emb: PackedPlane,
+    head: PackedPlane,
+    scales: Vec<LayerScales>,
+    exps: ExpSigmoidUnit,
+    divu: Divu,
+    /// clips during the LAST forward call (see [`HwModel::clip_events`])
+    pub clip_events: u64,
+    clip_total: u64,
+    clips: Cell<u64>,
+}
+
+impl PackedModel {
+    /// Build from an f32 model; `calib_tokens` drives the activation
+    /// scale calibration.  The pipeline is step-for-step [`HwModel::from_f32`]
+    /// — matrices encoded from the ORIGINAL f32 weights (re-encoding
+    /// decoded values would shift every plane's γ), then vector
+    /// quantization, then calibration — so the two backends resolve
+    /// identical scales and identical weight grids.
+    pub fn from_f32(base: RwkvModel, calib_tokens: &[u32]) -> PackedModel {
+        let d = base.d;
+        let f = base.f;
+        let v = base.vocab;
+        // 1. encode every matrix in Δ-PoT and keep the PACKED codes
+        let emb = PackedPlane::encode(&base.emb, v, d);
+        let head = PackedPlane::encode(&base.head, v, d);
+        let blocks = base
+            .blocks
+            .iter()
+            .map(|b| PackedBlock {
+                att_key: PackedPlane::encode(&b.att_key, d, d),
+                att_value: PackedPlane::encode(&b.att_value, d, d),
+                att_receptance: PackedPlane::encode(&b.att_receptance, d, d),
+                att_output: PackedPlane::encode(&b.att_output, d, d),
+                ffn_key: PackedPlane::encode(&b.ffn_key, f, d),
+                ffn_receptance: PackedPlane::encode(&b.ffn_receptance, d, d),
+                ffn_value: PackedPlane::encode(&b.ffn_value, d, f),
+            })
+            .collect();
+        // 2. additive/vector weights: 9-bit uniform, in place
+        let mut base = base;
+        quantize_vector_weights(&mut base);
+        // 3-4. calibrate and resolve per-layer activation scales
+        let scales = resolve_layer_scales(&base, calib_tokens);
+
+        PackedModel {
+            base,
+            blocks,
+            emb,
+            head,
+            scales,
+            exps: ExpSigmoidUnit::new(),
+            divu: Divu::new(),
+            clip_events: 0,
+            clip_total: 0,
+            clips: Cell::new(0),
+        }
+    }
+
+    /// Build alongside an [`HwModel`] from one f32 model (convenience
+    /// for parity tests and backend comparisons).
+    pub fn with_hw_twin(base: RwkvModel, calib_tokens: &[u32]) -> (PackedModel, HwModel) {
+        (
+            PackedModel::from_f32(base.clone(), calib_tokens),
+            HwModel::from_f32(base, calib_tokens),
+        )
+    }
+
+    pub fn new_state(&self) -> State {
+        self.base.new_state()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.base.vocab
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.base.n_layer
+    }
+
+    pub fn d(&self) -> usize {
+        self.base.d
+    }
+
+    pub fn f(&self) -> usize {
+        self.base.f
+    }
+
+    /// Per-layer calibrated activation scales.
+    pub fn scales(&self) -> &[LayerScales] {
+        &self.scales
+    }
+
+    /// Bytes of weight-plane traffic one full decode cycle streams (the
+    /// seven layer matrices + the head; the embedding is a row gather,
+    /// not a streamed plane): 2 bytes per packed weight, vs 4 on the
+    /// f32 backends — the ~2× traffic cut `Metrics` surfaces.
+    pub fn decode_cycle_weight_bytes(&self) -> u64 {
+        let mut total = self.head.storage_bytes();
+        for b in &self.blocks {
+            total += b.att_key.storage_bytes()
+                + b.att_value.storage_bytes()
+                + b.att_receptance.storage_bytes()
+                + b.att_output.storage_bytes()
+                + b.ffn_key.storage_bytes()
+                + b.ffn_receptance.storage_bytes()
+                + b.ffn_value.storage_bytes();
+        }
+        total
+    }
+
+    /// Drain the cumulative 9-bit clip counter (see
+    /// [`HwModel::take_clip_events`]).
+    pub fn take_clip_events(&mut self) -> u64 {
+        std::mem::take(&mut self.clip_total)
+    }
+
+    fn finish_clips(&mut self) {
+        let c = self.clips.take();
+        self.clip_events = c;
+        self.clip_total += c;
+    }
+
+    /// One autoregressive step: a width-1 batch panel through the
+    /// generic walk on the packed kernels.
+    pub fn step(&mut self, state: &mut State, token: u32) -> Vec<f32> {
+        let mut logits = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Batch(std::slice::from_mut(state)),
+                &[token],
+                HeadMode::PerColumn,
+                buf,
+                &mut logits,
+            )
+        });
+        self.finish_clips();
+        logits
+    }
+
+    /// Batched autoregressive step: B sessions share ONE packed-plane
+    /// pass per matrix — each 8-word chunk is decoded once and feeds
+    /// every column's accumulators, so the decode cost amortizes with
+    /// batch exactly like the weight loads do.  Bit-exact with
+    /// [`PackedModel::step`] per session at any B.
+    pub fn step_batch(&mut self, states: &mut [State], tokens: &[u32]) -> Vec<Vec<f32>> {
+        let mut flat = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Batch(states),
+                tokens,
+                HeadMode::PerColumn,
+                buf,
+                &mut flat,
+            )
+        });
+        self.finish_clips();
+        flat.chunks(self.base.vocab).map(|c| c.to_vec()).collect()
+    }
+
+    /// [`PackedModel::step_batch`] writing one flat `[B * vocab]`
+    /// logits panel into a caller-owned buffer (the allocation-free
+    /// engine decode path).
+    pub fn step_batch_into(&mut self, states: &mut [State], tokens: &[u32], logits: &mut Vec<f32>) {
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Batch(states),
+                tokens,
+                HeadMode::PerColumn,
+                buf,
+                logits,
+            )
+        });
+        self.finish_clips();
+    }
+
+    /// Sequence-parallel chunked prefill on the packed kernels (§Perf
+    /// L3-4): one packed pass per matrix per chunk, head on the last
+    /// token only.  Bit-exact with T calls to [`PackedModel::step`].
+    pub fn prefill_chunk(&mut self, state: &mut State, tokens: &[u32]) -> Vec<f32> {
+        let mut logits = Vec::new();
+        forward::with_scratch(|buf| {
+            forward::forward_panel(
+                &*self,
+                Columns::Seq(state),
+                tokens,
+                HeadMode::LastColumn,
+                buf,
+                &mut logits,
+            )
+        });
+        self.finish_clips();
+        logits
+    }
+}
+
+/// The packed-numerics backend hooks: identical elementwise arithmetic
+/// to [`HwModel`] (shared free functions over the same integer units),
+/// with `gemm` running on packed planes.
+impl Numerics for PackedModel {
+    fn n_layer(&self) -> usize {
+        self.base.n_layer
+    }
+
+    fn d(&self) -> usize {
+        self.base.d
+    }
+
+    fn f(&self) -> usize {
+        self.base.f
+    }
+
+    fn vocab(&self) -> usize {
+        self.base.vocab
+    }
+
+    fn block(&self, l: usize) -> &Block {
+        &self.base.blocks[l]
+    }
+
+    fn ln0(&self) -> (&[f32], &[f32]) {
+        (&self.base.ln0_w, &self.base.ln0_b)
+    }
+
+    fn ln_out(&self) -> (&[f32], &[f32]) {
+        (&self.base.ln_out_w, &self.base.ln_out_b)
+    }
+
+    fn embed(&self, tok: u32, out: &mut [f32]) {
+        // LUT row decode: bit-identical to the hw backend's decoded
+        // embedding rows
+        self.emb.decode_row(tok as usize, out);
+    }
+
+    fn gemm(&self, l: usize, mat: MatId, xs: &[f32], out: &mut [f32], width: usize) {
+        let p: &PackedPlane = match mat {
+            MatId::AttKey => &self.blocks[l].att_key,
+            MatId::AttValue => &self.blocks[l].att_value,
+            MatId::AttReceptance => &self.blocks[l].att_receptance,
+            MatId::AttOutput => &self.blocks[l].att_output,
+            MatId::FfnKey => &self.blocks[l].ffn_key,
+            MatId::FfnReceptance => &self.blocks[l].ffn_receptance,
+            MatId::FfnValue => &self.blocks[l].ffn_value,
+            MatId::Head => &self.head,
+        };
+        packed_gemm(p, xs, out, width);
+    }
+
+    fn layernorm(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+        hw_layernorm(&self.divu, x, w, b, out);
+    }
+
+    fn quant(&self, l: usize, site: Site, xs: &mut [f32]) {
+        let mut clips = 0u64;
+        quant9(xs, self.scales[l].site(site), &mut clips);
+        self.clips.set(self.clips.get() + clips);
+    }
+
+    fn exp(&self, x: f32) -> f32 {
+        hw_exp(&self.exps, x)
+    }
+
+    fn sigmoid(&self, x: f32) -> f32 {
+        hw_sigmoid(&self.exps, x)
+    }
+
+    fn div(&self, num: f32, den: f32) -> f32 {
+        hw_div(&self.divu, num, den)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::rwkv::testing::test_model;
+
+    fn calib_tokens() -> Vec<u32> {
+        let mut rng = crate::Rng64::new(77);
+        (0..128).map(|_| rng.below(50) as u32).collect()
+    }
+
+    #[test]
+    fn packed_step_bitexact_with_hw() {
+        let m = test_model(2, 32, 64, 50);
+        let (mut pk, mut hw) = PackedModel::with_hw_twin(m, &calib_tokens());
+        assert_eq!(pk.scales(), hw.scales(), "construction pipelines diverged");
+        let mut sp = pk.new_state();
+        let mut sh = hw.new_state();
+        for t in 0..30 {
+            let tok = (t * 7 % 50) as u32;
+            let lp = pk.step(&mut sp, tok);
+            let lh = hw.step(&mut sh, tok);
+            for (i, (a, b)) in lp.iter().zip(&lh).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} logit {i}: {a} vs {b}");
+            }
+            assert_eq!(sp, sh, "t={t} state");
+            assert_eq!(pk.clip_events, hw.clip_events, "t={t} clips");
+        }
+    }
+
+    #[test]
+    fn packed_long_rollout_stable() {
+        let m = test_model(2, 32, 64, 50);
+        let mut pk = PackedModel::from_f32(m, &calib_tokens());
+        let mut s = pk.new_state();
+        let mut tok = 1u32;
+        for _ in 0..200 {
+            let logits = pk.step(&mut s, tok);
+            assert!(logits.iter().all(|v| v.is_finite()));
+            tok = logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0 as u32;
+        }
+    }
+
+    #[test]
+    fn decode_cycle_weight_bytes_is_two_per_weight() {
+        let (n_layer, d, f, vocab) = (2usize, 32usize, 64usize, 50usize);
+        let pk = PackedModel::from_f32(test_model(n_layer, d, f, vocab), &calib_tokens());
+        let weights = n_layer * (5 * d * d + 2 * d * f) + vocab * d;
+        assert_eq!(pk.decode_cycle_weight_bytes(), weights as u64 * 2);
+    }
+
+    #[test]
+    fn clip_total_accumulates_and_drains() {
+        let m = test_model(1, 16, 32, 50);
+        let mut pk = PackedModel::from_f32(m, &calib_tokens());
+        let mut s = pk.new_state();
+        let mut per_call = 0u64;
+        for t in 0..8 {
+            pk.step(&mut s, (t % 20) as u32);
+            per_call += pk.clip_events;
+        }
+        assert_eq!(pk.take_clip_events(), per_call);
+        assert_eq!(pk.take_clip_events(), 0);
+    }
+}

@@ -8,6 +8,8 @@
 //! *difference* q1 - q0) is what widens the representable exponent range
 //! at fixed bits.
 
+use std::sync::OnceLock;
+
 pub const DPOT_K0: u32 = 4;
 pub const DPOT_K1: u32 = 4;
 
@@ -54,18 +56,26 @@ impl DpotCode {
     }
 }
 
-/// Sorted (magnitude, code) table for nearest-code encoding.
-fn code_table() -> Vec<(f64, DpotCode)> {
-    let mut t = vec![(0.0, DpotCode::ZERO)];
-    for dq0 in 1..16u8 {
-        for dq1 in 0..16u8 {
-            let c = DpotCode { sign: 1, dq0, dq1 };
-            t.push((c.magnitude(), c));
+/// Sorted (magnitude, code) table for nearest-code encoding: 241
+/// distinct magnitudes, built ONCE behind a `OnceLock` — a whole-model
+/// load encodes ~`n_layer·7 + 2` tensors and used to re-allocate and
+/// re-sort this table for every one of them.  (Magnitudes are finite by
+/// construction, so `total_cmp` orders them identically to the partial
+/// order while staying NaN-total.)
+fn code_table() -> &'static [(f64, DpotCode)] {
+    static TABLE: OnceLock<Vec<(f64, DpotCode)>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = vec![(0.0, DpotCode::ZERO)];
+        for dq0 in 1..16u8 {
+            for dq1 in 0..16u8 {
+                let c = DpotCode { sign: 1, dq0, dq1 };
+                t.push((c.magnitude(), c));
+            }
         }
-    }
-    t.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    t.dedup_by(|a, b| a.0 == b.0);
-    t
+        t.sort_by(|a, b| a.0.total_cmp(&b.0));
+        t.dedup_by(|a, b| a.0 == b.0);
+        t
+    })
 }
 
 /// A whole tensor encoded in Δ-PoT: code planes + per-tensor γ.

@@ -1,6 +1,39 @@
-//! Quantization strategy (§3): the Δ-PoT scheme plus the comparators of
-//! Table 1 (RTN, PoT, LogQ, APoT), fixed-point helpers, and fake-quant
-//! application to whole weight sets.
+//! Quantization (§3): the Δ-PoT scheme, its PACKED inference-time
+//! storage, the Table 1 comparators (RTN, PoT, LogQ, APoT), fixed-point
+//! helpers, and fake-quant application to whole weight sets.
+//!
+//! # The packed inference path
+//!
+//! The serving hot path consumes Δ-PoT weights in three stages:
+//!
+//! 1. [`DpotTensor::encode`] maps each f32 matrix to 9-bit codes
+//!    (`sign · 2γ · (2^-dq0 + 2^-dq0-dq1)`, eqs 5–6) with one f32 γ per
+//!    tensor — 241 distinct magnitudes, nearest-code assignment.
+//! 2. [`PackedPlane`] stores the packed words ([`DpotCode::pack`]:
+//!    `sign<<8 | dq0<<4 | dq1`) in a dense `Vec<u16>` — **2 bytes per
+//!    weight streamed** vs 4 for f32, the traffic cut that makes the
+//!    quantized model the *throughput* configuration (the paper's 9-bit
+//!    URAM layout rounds to 16-bit words in software so SIMD lanes stay
+//!    aligned; the on-disk/URAM format is still 9 bits + γ,
+//!    [`DpotTensor::storage_bits`]).  Each plane carries a 512-entry
+//!    decode LUT pinning the exact f32 value grid.
+//! 3. `model::packed_gemm` multiplies straight on the words — AVX2
+//!    in-register decode with a scalar decode-through-LUT oracle, both
+//!    bit-identical to f32 matmul over the decoded plane.
+//!
+//! # Which weights stay f32 (the RWKVQuant hybrid argument)
+//!
+//! Only the seven per-layer projection matrices, the embedding and the
+//! head are Δ-PoT coded.  The *vector* weights — LayerNorm affines,
+//! token-shift mix factors, decay/first — quantize 9-bit **uniform**
+//! and are retained at f32 precision in storage: they are O(d) per
+//! layer (negligible traffic next to the O(d²) planes), and RWKVQuant's
+//! analysis (PAPERS.md) shows RWKV's highly non-uniform vector weights
+//! are exactly where exponent-grid (PoT-family) quantizers fail — its
+//! hybrid scheme keeps vector-class parameters on a finer grid for the
+//! same reason the paper's per-site scheme leaves them out of the
+//! Δ-PoT budget.  Activations are 9-bit uniform at per-site calibrated
+//! scales (`model::rwkv_hw`), never stored.
 //!
 //! Every scheme is held to the same 9-bit storage budget the paper's
 //! ablation uses ("equivalent W9A9"): RTN = sign+8 uniform, PoT/LogQ =
@@ -9,11 +42,13 @@
 mod codebook;
 mod dpot;
 pub mod fixed;
+mod packed;
 mod schemes;
 
 pub use codebook::Codebook;
 pub use dpot::{DpotCode, DpotTensor, DPOT_K0, DPOT_K1};
 pub use fixed::Fixed;
+pub use packed::PackedPlane;
 pub use schemes::{apot_levels, dpot_levels, pot_levels, rtn_levels, Scheme};
 
 /// Fake-quantize a weight tensor in place under `scheme` (per-tensor

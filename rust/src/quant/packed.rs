@@ -1,0 +1,118 @@
+//! Packed Δ-PoT weight planes: the storage format the throughput
+//! backend ([`crate::model::PackedModel`]) streams at inference time.
+//!
+//! [`crate::quant::DpotTensor`] keeps one `DpotCode` struct (3 bytes +
+//! padding) per weight and is decoded to f32 before any matmul touches
+//! it; a [`PackedPlane`] keeps the 9-bit storage word itself
+//! (`DpotCode::pack`: `sign<<8 | dq0<<4 | dq1`) in a dense `Vec<u16>`,
+//! 2 bytes per weight — half the f32 traffic per decode cycle — and the
+//! packed kernels ([`crate::model::packed_gemm`]) consume the words
+//! directly, decoding in-register.
+//!
+//! Each plane also carries a 512-entry f32 lookup table
+//! (`lut[word] == DpotCode::unpack(word).value(gamma)`): the scalar
+//! oracle kernel and the SIMD kernel's remainder loops decode through
+//! it, and because `pack`/`unpack` round-trip exactly, `lut[pack(c)]`
+//! is bit-identical to the `c.value(gamma)` grid the hw backend's
+//! decoded planes hold — the anchor of the packed↔hw 0-ULP parity.
+
+use super::dpot::{DpotCode, DpotTensor};
+
+/// One weight matrix stored as packed Δ-PoT codes plus its decode LUT.
+#[derive(Clone, Debug)]
+pub struct PackedPlane {
+    /// row-major `[rows * cols]` packed 9-bit words (in u16 storage)
+    pub codes: Vec<u16>,
+    /// `lut[w] = unpack(w).value(gamma)` for every 9-bit word (512
+    /// entries, so any `codes` element indexes in-bounds)
+    pub lut: Vec<f32>,
+    /// per-tensor scale (max|w| / 1.5, the top Δ-PoT magnitude)
+    pub gamma: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PackedPlane {
+    /// Encode a row-major `rows x cols` f32 matrix (via
+    /// [`DpotTensor::encode`], so the realized value grid is the same
+    /// one the hw backend decodes).
+    pub fn encode(w: &[f32], rows: usize, cols: usize) -> PackedPlane {
+        PackedPlane::from_tensor(&DpotTensor::encode(w, rows, cols))
+    }
+
+    /// Pack an already-encoded tensor.
+    pub fn from_tensor(t: &DpotTensor) -> PackedPlane {
+        let codes: Vec<u16> = t.codes.iter().map(|c| c.pack()).collect();
+        let lut: Vec<f32> =
+            (0..512u16).map(|w| DpotCode::unpack(w).value(t.gamma)).collect();
+        PackedPlane { codes, lut, gamma: t.gamma, rows: t.rows, cols: t.cols }
+    }
+
+    /// Decode one row into `out` (length `cols`) through the LUT —
+    /// exactly the values the packed kernels compute with.
+    pub fn decode_row(&self, r: usize, out: &mut [f32]) {
+        let row = &self.codes[r * self.cols..(r + 1) * self.cols];
+        for (o, &w) in out.iter_mut().zip(row) {
+            *o = self.lut[w as usize];
+        }
+    }
+
+    /// Decode the whole plane (tests / parity anchors only — the hot
+    /// path never materializes this).
+    pub fn decode(&self) -> Vec<f32> {
+        self.codes.iter().map(|&w| self.lut[w as usize]).collect()
+    }
+
+    /// Bytes actually streamed per full pass over the plane: 2 per
+    /// weight (the u16 words; the 2 KiB LUT stays cache-resident).
+    pub fn storage_bytes(&self) -> u64 {
+        self.codes.len() as u64 * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_decode_matches_tensor_decode_bitexact() {
+        let mut rng = crate::Rng64::new(11);
+        let w: Vec<f32> = (0..37 * 23).map(|_| rng.normal() as f32 * 0.3).collect();
+        let t = DpotTensor::encode(&w, 37, 23);
+        let p = PackedPlane::from_tensor(&t);
+        let dt = t.decode();
+        let dp = p.decode();
+        assert_eq!(dt.len(), dp.len());
+        for (i, (a, b)) in dt.iter().zip(&dp).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "weight {i}: {a} vs {b}");
+        }
+        // row decode agrees with the flat decode
+        let mut row = vec![0f32; 23];
+        p.decode_row(5, &mut row);
+        assert_eq!(&dp[5 * 23..6 * 23], &row[..]);
+    }
+
+    #[test]
+    fn lut_matches_value_grid_for_every_canonical_word() {
+        let t = DpotTensor::encode(&[0.9f32, -0.4, 0.0, 0.2], 2, 2);
+        let p = PackedPlane::from_tensor(&t);
+        for dq0 in 0..16u8 {
+            for dq1 in 0..16u8 {
+                for sign in [-1i8, 1] {
+                    let c = DpotCode { sign: if dq0 == 0 { 0 } else { sign }, dq0, dq1 };
+                    assert_eq!(
+                        p.lut[c.pack() as usize].to_bits(),
+                        c.value(t.gamma).to_bits(),
+                        "{c:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_two_bytes_per_weight() {
+        let p = PackedPlane::encode(&[0.5f32; 64], 8, 8);
+        assert_eq!(p.storage_bytes(), 128);
+    }
+}
