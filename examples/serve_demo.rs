@@ -12,6 +12,8 @@
 //! make artifacts && cargo run --release --example serve_demo
 //! # quantized throughput configuration:
 //! HFRWKV_BACKEND=packed cargo run --release --example serve_demo
+//! # Perfetto-loadable trace of the PJRT serving phases:
+//! HFRWKV_TRACE=/tmp/serve_trace.json cargo run --release --example serve_demo
 //! ```
 
 use std::io::Write;
@@ -21,10 +23,7 @@ use hfrwkv::coordinator::{Backend, Coordinator, CoordinatorConfig, GenEvent, Gen
 use hfrwkv::eval;
 use hfrwkv::model::{RwkvModel, Tokenizer, WeightFile};
 use hfrwkv::runtime::{Manifest, RwkvRuntime};
-
-fn pct(sorted: &[f64], p: f64) -> f64 {
-    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
-}
+use hfrwkv::util::bench::percentile_sorted;
 
 fn main() -> hfrwkv::Result<()> {
     let dir = std::path::Path::new("artifacts");
@@ -62,6 +61,9 @@ fn main() -> hfrwkv::Result<()> {
             GenEvent::Token { token, .. } => {
                 print!("{} ", tokenizer.decode(&[token]));
                 let _ = std::io::stdout().flush();
+            }
+            GenEvent::Redriven { attempt, replayed_from, .. } => {
+                print!("[redriven #{attempt}, resuming after token {replayed_from}] ");
             }
             GenEvent::Finished(r) => {
                 println!("\n  [finished: {:?}, {:.1} tok/s]", r.finish, r.decode_tokens_per_sec());
@@ -118,8 +120,8 @@ fn main() -> hfrwkv::Result<()> {
     );
     println!(
         "latency  p50 {:.1} ms   p95 {:.1} ms   max {:.1} ms",
-        pct(&latencies, 0.50) * 1e3,
-        pct(&latencies, 0.95) * 1e3,
+        percentile_sorted(&latencies, 0.50) * 1e3,
+        percentile_sorted(&latencies, 0.95) * 1e3,
         latencies.last().unwrap() * 1e3
     );
     println!(
@@ -128,6 +130,18 @@ fn main() -> hfrwkv::Result<()> {
         wall,
         n_requests
     );
+    // the same numbers as the report, machine-readable (scrapers take
+    // this line instead of parsing the human report)
+    println!("metrics-json {}", m.to_json());
+    // HFRWKV_TRACE=<path> dumps the serving-phase trace ring as a
+    // Chrome-trace JSON file — open it in Perfetto (ui.perfetto.dev) to
+    // see each session's async span over the per-cycle scheduler slices
+    if let Ok(path) = std::env::var("HFRWKV_TRACE") {
+        match coord.export_trace(&path) {
+            Ok(()) => println!("trace    wrote Perfetto-loadable trace to {path}"),
+            Err(e) => eprintln!("trace    export to {path} failed: {e}"),
+        }
+    }
 
     // ---- phase 1b: best-of-n off one shared state --------------------------
     // one prompt prefill, 8 sampled continuations forked off the

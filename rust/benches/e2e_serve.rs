@@ -14,7 +14,7 @@ use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, EngineModel, FaultPoli
 use hfrwkv::model::rwkv::testing::test_model;
 use hfrwkv::model::RwkvModel;
 use hfrwkv::runtime::{RwkvRuntime, Variant};
-use hfrwkv::util::bench::{bench, section, BenchReport};
+use hfrwkv::util::bench::{bench, percentile_sorted, section, BenchReport};
 
 const N_REQUESTS: u32 = 32;
 const TOKENS_PER_REQUEST: usize = 32;
@@ -185,11 +185,11 @@ fn main() {
             lats.push((r.queue_seconds + r.prefill_seconds + r.decode_seconds) * 1e3);
             ttfts.push(r.ttft_seconds * 1e3);
         }
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let p50 = lats[lats.len() / 2];
-        let p95 = lats[(lats.len() as f64 * 0.95) as usize];
-        let ttft_p50 = ttfts[ttfts.len() / 2];
+        lats.sort_by(|a, b| a.total_cmp(b));
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        let p50 = percentile_sorted(&lats, 0.50);
+        let p95 = percentile_sorted(&lats, 0.95);
+        let ttft_p50 = percentile_sorted(&ttfts, 0.50);
         println!(
             "λ={lambda_rps:>5.0} req/s: e2e latency p50 {p50:>7.1} ms  \
              p95 {p95:>7.1} ms  max {:>7.1} ms  ttft p50 {ttft_p50:>6.2} ms",

@@ -15,6 +15,7 @@ use crate::model::sampler::Sampler;
 use crate::model::{panel_all_finite, HwModel, PackedModel, RwkvModel, State};
 use crate::runtime::{RwkvRuntime, Variant};
 use crate::statecache::{CacheStats, SnapshotRef, StateCacheConfig, StateStore};
+use crate::trace::{CyclePhaseKind, TraceEvent, TraceEventKind, Tracer};
 
 /// How the engine treats model-level faults (panics and non-finite
 /// output) in its scheduler-driven calls ([`Engine::prefill_tick`],
@@ -737,6 +738,12 @@ pub struct ActiveSession {
     /// consumed by the scheduler at the next committed token to measure
     /// time-to-first-token-after-fault.  `None` for ordinary sessions.
     pub redriven_at: Option<Instant>,
+    /// When this session's previous token was committed — the scheduler
+    /// feeds the gap into [`super::Metrics::inter_token_hist`].  `None`
+    /// until the first commit, and reset to `None` across a redrive
+    /// resume so the crash stall never enters the steady-state
+    /// inter-token distribution.
+    pub last_token_at: Option<Instant>,
 }
 
 impl ActiveSession {
@@ -788,6 +795,11 @@ pub struct Engine<M: EngineModel> {
     /// [`Engine::begin_cycle`] — the `cycle` stamped into journal
     /// events (0 for non-scheduler callers that never bump it).
     cycle: u64,
+    /// Shared trace handle ([`crate::trace::Tracer`]): prefill chunks,
+    /// first tokens, forks, the decode forward/scatter split and fault
+    /// mirrors are recorded here.  Disabled by default; the scheduler
+    /// installs the coordinator's tracer via [`Engine::set_tracer`].
+    tracer: Tracer,
 }
 
 impl<M: EngineModel> Engine<M> {
@@ -801,6 +813,7 @@ impl<M: EngineModel> Engine<M> {
             faults: FaultStats::default(),
             journal: Arc::new(Mutex::new(FaultJournal::default())),
             cycle: 0,
+            tracer: Tracer::disabled(),
         }
     }
 
@@ -863,6 +876,13 @@ impl<M: EngineModel> Engine<M> {
         self.journal = journal;
     }
 
+    /// Install the shared trace handle (the scheduler passes the
+    /// coordinator's tracer so engine- and scheduler-side events share
+    /// one epoch and one ring).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
     /// Bump the scheduling-cycle stamp (the worker loop calls this once
     /// per cycle; journal events record the current value).
     pub fn begin_cycle(&mut self) {
@@ -894,6 +914,15 @@ impl<M: EngineModel> Engine<M> {
             action,
             unix_s: 0.0,
         });
+        drop(j);
+        // mirror onto the session's trace timeline: same attribution
+        // tuple, cross-referenced to the journal by (request, cycle)
+        self.tracer.instant(
+            request_id,
+            branch as u32,
+            self.cycle,
+            TraceEventKind::Fault { phase, kind, attempt, action },
+        );
     }
 
     /// Purge any non-finite snapshot from the cache — called whenever a
@@ -1011,6 +1040,7 @@ impl<M: EngineModel> Engine<M> {
             redrive_attempt: 0,
             orig_prompt_len,
             redriven_at: None,
+            last_token_at: None,
         }
     }
 
@@ -1056,6 +1086,8 @@ impl<M: EngineModel> Engine<M> {
         );
         s.sampler.fast_forward(s.generated.len());
         s.redriven_at = Some(failed_at);
+        // the inter-token gap clock must not span the crash stall
+        s.last_token_at = None;
     }
 
     /// Consume up to `max_chunk` prompt tokens of a `Prefilling` session
@@ -1083,6 +1115,7 @@ impl<M: EngineModel> Engine<M> {
             _ => return Ok(true),
         };
         let t0 = Instant::now();
+        let trace_t0 = self.tracer.now_us();
         let end = pos.saturating_add(max_chunk.max(1)).min(s.req.prompt.len());
         let done = end == s.req.prompt.len();
         if self.policy.max_retries > 0 {
@@ -1194,6 +1227,13 @@ impl<M: EngineModel> Engine<M> {
             });
         }
         s.prefill_seconds += t0.elapsed().as_secs_f64();
+        self.tracer.span(
+            trace_t0,
+            s.request_id,
+            s.branch as u32,
+            self.cycle,
+            TraceEventKind::PrefillChunk { from: pos as u32, to: end as u32 },
+        );
         if done {
             // prefill over: release the resumed-from snapshot so decode
             // time doesn't hold it unevictable (see the field docs)
@@ -1209,6 +1249,12 @@ impl<M: EngineModel> Engine<M> {
                 // scheduler restores it before this tick runs)
                 if s.ttft_seconds == 0.0 {
                     s.ttft_seconds = s.enqueued_at.elapsed().as_secs_f64();
+                    self.tracer.instant(
+                        s.request_id,
+                        s.branch as u32,
+                        self.cycle,
+                        TraceEventKind::FirstToken,
+                    );
                 }
                 s.phase = SessionPhase::Decoding;
             }
@@ -1286,6 +1332,7 @@ impl<M: EngineModel> Engine<M> {
             }
         };
         let ttft = enqueued_at.elapsed().as_secs_f64();
+        self.tracer.instant(request_id, 0, self.cycle, TraceEventKind::Fork { branches: n as u32 });
         // per branch: one state copy (the fundamental fork cost) plus a
         // req clone — the prompt Vec in it is dominated by the state
         // floats, so sharing it behind an Arc isn't worth the API churn
@@ -1296,6 +1343,7 @@ impl<M: EngineModel> Engine<M> {
                 let mut sampler =
                     Sampler::new(req.temperature, req.top_k, req.seed.wrapping_add(b as u64));
                 let next_token = sampler.sample(snap.logits());
+                self.tracer.instant(request_id, b as u32, self.cycle, TraceEventKind::FirstToken);
                 ActiveSession {
                     request_id,
                     branch: b,
@@ -1321,6 +1369,7 @@ impl<M: EngineModel> Engine<M> {
                     // same accounting as prefill_seconds: one crash, one
                     // resume measurement
                     redriven_at: if b == 0 { redriven_at } else { None },
+                    last_token_at: None,
                 }
             })
             .collect()
@@ -1390,6 +1439,10 @@ impl<M: EngineModel> Engine<M> {
             return errors;
         }
         let t0 = Instant::now();
+        let trace_t0 = self.tracer.now_us();
+        // sampler-scatter time accumulated across variant groups and
+        // retries; the rest of the cycle is the fused forward
+        let mut scatter_us = 0u64;
         let mut variants: Vec<Variant> = Vec::new();
         for s in sessions.iter() {
             if !variants.contains(&s.req.variant) {
@@ -1520,6 +1573,7 @@ impl<M: EngineModel> Engine<M> {
                 }
                 let mut next_pending: Vec<usize> = Vec::new();
                 let mut poisoned = false;
+                let t_scatter = self.tracer.now_us();
                 for (slot, outcome) in outcomes.into_iter().enumerate() {
                     let i = pending[slot];
                     match outcome {
@@ -1558,6 +1612,7 @@ impl<M: EngineModel> Engine<M> {
                         }
                     }
                 }
+                scatter_us += self.tracer.now_us().saturating_sub(t_scatter);
                 if poisoned {
                     self.quarantine_cache();
                 }
@@ -1616,6 +1671,29 @@ impl<M: EngineModel> Engine<M> {
         let dt = t0.elapsed().as_secs_f64() / n as f64;
         for s in sessions.iter_mut() {
             s.decode_seconds += dt;
+        }
+        if self.tracer.enabled() {
+            // split the cycle into two adjacent engine-track slices:
+            // fused forward (everything that isn't sampling) + scatter
+            let total = self.tracer.now_us().saturating_sub(trace_t0);
+            let scatter = scatter_us.min(total);
+            let forward = total - scatter;
+            self.tracer.record(TraceEvent {
+                ts_us: trace_t0,
+                dur_us: forward,
+                request_id: 0,
+                branch: 0,
+                cycle: self.cycle,
+                kind: TraceEventKind::CyclePhase(CyclePhaseKind::DecodeForward),
+            });
+            self.tracer.record(TraceEvent {
+                ts_us: trace_t0 + forward,
+                dur_us: scatter,
+                request_id: 0,
+                branch: 0,
+                cycle: self.cycle,
+                kind: TraceEventKind::CyclePhase(CyclePhaseKind::SamplerScatter),
+            });
         }
         errors
     }

@@ -1,4 +1,9 @@
-//! Serving metrics: counters + derived rates, printable as a report.
+//! Serving metrics: counters + derived rates + tail-latency histograms,
+//! printable as a report ([`Metrics::report`]) or serializable as
+//! structured JSON ([`Metrics::to_json`]).
+
+use crate::trace::LatencyHistogram;
+use crate::util::json::Json;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -129,6 +134,31 @@ pub struct Metrics {
     /// the traffic cut that makes packed the throughput configuration.
     /// 0 for models that don't expose their plane footprint (PJRT).
     pub weight_bytes_streamed: u64,
+    /// Trace-ring records ever written (mirror of the coordinator's
+    /// [`crate::trace::Tracer`] ring, refreshed every cycle; 0 with
+    /// tracing disabled).
+    pub trace_events: u64,
+    /// Trace-ring records overwritten after the bounded ring filled.
+    pub trace_events_dropped: u64,
+    /// Time-to-first-token distribution (enqueue → first sampled token)
+    /// over the sessions counted in `first_tokens`.  Fixed ~4 KB
+    /// log-bucketed histogram ([`LatencyHistogram`]) — percentiles where
+    /// `ttft_seconds_total` only gives a mean.
+    pub ttft_hist: LatencyHistogram,
+    /// Gap between consecutive committed tokens of one session (the
+    /// streaming smoothness tail).  Redrive seams are excluded: the gap
+    /// clock resets on resume, so a crash stall never pollutes the
+    /// steady-state distribution (it is visible in `ttft_hist` /
+    /// `redrive_resume_seconds_total` instead).
+    pub inter_token_hist: LatencyHistogram,
+    /// Queue wait (submit → admission) per admission; counts exactly
+    /// the admissions folded into `queue_seconds_total` (a crash
+    /// redrive re-enters neither).
+    pub queue_wait_hist: LatencyHistogram,
+    /// Duration of one bounded prefill chunk (one session, one cycle).
+    pub prefill_chunk_hist: LatencyHistogram,
+    /// Duration of one fused batched decode forward + sample cycle.
+    pub decode_cycle_hist: LatencyHistogram,
 }
 
 impl Metrics {
@@ -190,6 +220,8 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let (ttft_p50, ttft_p90, ttft_p99, ttft_max) = self.ttft_hist.summary_ms();
+        let (itl_p50, itl_p90, itl_p99, itl_max) = self.inter_token_hist.summary_ms();
         format!(
             "requests: {} enqueued / {} admitted, {} sessions completed\n\
              pressure: {} queued / {} active now, {} rejected (queue full), \
@@ -200,6 +232,10 @@ impl Metrics {
              prefill:  {:.3} s total ({} prompt tokens forwarded)\n\
              ttft:     {:.4} s mean (enqueue -> first token)\n\
              queueing: {:.4} s mean wait\n\
+             latency:  ttft p50 {:.2} ms / p90 {:.2} / p99 {:.2} / max {:.2} ms\n\
+             latency:  inter-token p50 {:.3} ms / p90 {:.3} / p99 {:.3} / max {:.3} ms\n\
+             latency:  queue p50 {:.2} / p99 {:.2} ms; prefill-chunk p50 {:.2} / p99 {:.2} ms; \
+             decode-cycle p50 {:.2} / p99 {:.2} ms\n\
              cache:    {} hits / {} misses ({:.0}% hit rate), \
              {} prompt tokens skipped, {} snapshots / {} B resident ({} pinned), {} evictions\n\
              faults:   {} panics caught, {} non-finite panels, {} retries / {} rollbacks, \
@@ -225,6 +261,20 @@ impl Metrics {
             self.prompt_tokens_prefilled,
             self.mean_ttft_seconds(),
             self.mean_queue_seconds(),
+            ttft_p50,
+            ttft_p90,
+            ttft_p99,
+            ttft_max,
+            itl_p50,
+            itl_p90,
+            itl_p99,
+            itl_max,
+            self.queue_wait_hist.percentile_us(0.50) as f64 / 1e3,
+            self.queue_wait_hist.percentile_us(0.99) as f64 / 1e3,
+            self.prefill_chunk_hist.percentile_us(0.50) as f64 / 1e3,
+            self.prefill_chunk_hist.percentile_us(0.99) as f64 / 1e3,
+            self.decode_cycle_hist.percentile_us(0.50) as f64 / 1e3,
+            self.decode_cycle_hist.percentile_us(0.99) as f64 / 1e3,
             self.prefix_cache_hits,
             self.prefix_cache_misses,
             self.prefix_cache_hit_rate() * 100.0,
@@ -250,6 +300,72 @@ impl Metrics {
             self.fault_events_dropped,
             self.clip_events,
         )
+    }
+
+    /// Structured snapshot for benches and demos (`BENCH_*.json`
+    /// fields, machine-readable serve reports) — every counter, the
+    /// derived rates, and per-histogram latency percentiles.
+    /// [`Metrics::report`] stays the human view of the same data.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("enqueued", self.enqueued)
+            .set("admitted", self.admitted)
+            .set("completed", self.completed)
+            .set("tokens_generated", self.tokens_generated)
+            .set("prefill_seconds_total", self.prefill_seconds_total)
+            .set("decode_seconds_total", self.decode_seconds_total)
+            .set("queue_seconds_total", self.queue_seconds_total)
+            .set("first_tokens", self.first_tokens)
+            .set("ttft_seconds_total", self.ttft_seconds_total)
+            .set("clip_events", self.clip_events)
+            .set("rejected", self.rejected)
+            .set("cancelled", self.cancelled)
+            .set("deadline_exceeded", self.deadline_exceeded)
+            .set("prompt_tokens_prefilled", self.prompt_tokens_prefilled)
+            .set("queue_depth", self.queue_depth)
+            .set("active_sessions", self.active_sessions)
+            .set("prefix_cache_hits", self.prefix_cache_hits)
+            .set("prefix_cache_misses", self.prefix_cache_misses)
+            .set("prefix_tokens_skipped", self.prefix_tokens_skipped)
+            .set("prefix_cache_bytes", self.prefix_cache_bytes)
+            .set("prefix_cache_entries", self.prefix_cache_entries)
+            .set("prefix_cache_evictions", self.prefix_cache_evictions)
+            .set("prefix_cache_pinned", self.prefix_cache_pinned)
+            .set("prefix_cache_quarantined", self.prefix_cache_quarantined)
+            .set("shed", self.shed)
+            .set("worker_restarts", self.worker_restarts)
+            .set("worker_failed", self.worker_failed)
+            .set("numeric_faulted", self.numeric_faulted)
+            .set("fault_retries", self.fault_retries)
+            .set("fault_rollbacks", self.fault_rollbacks)
+            .set("panics_caught", self.panics_caught)
+            .set("numeric_faults_detected", self.numeric_faults_detected)
+            .set("redrives", self.redrives)
+            .set("redrives_completed", self.redrives_completed)
+            .set("redrives_resumed", self.redrives_resumed)
+            .set("redrive_resume_seconds_total", self.redrive_resume_seconds_total)
+            .set("cache_recovered_snapshots", self.cache_recovered_snapshots)
+            .set("fault_events", self.fault_events)
+            .set("fault_events_dropped", self.fault_events_dropped)
+            .set("decode_cycles", self.decode_cycles)
+            .set("weight_bytes_streamed", self.weight_bytes_streamed)
+            .set("trace_events", self.trace_events)
+            .set("trace_events_dropped", self.trace_events_dropped)
+            .set("decode_tokens_per_sec", self.decode_tokens_per_sec())
+            .set("mean_queue_seconds", self.mean_queue_seconds())
+            .set("mean_ttft_seconds", self.mean_ttft_seconds())
+            .set("mean_redrive_resume_seconds", self.mean_redrive_resume_seconds())
+            .set("weight_bytes_per_cycle", self.weight_bytes_per_cycle())
+            .set("prefix_cache_hit_rate", self.prefix_cache_hit_rate());
+        let mut latency = Json::obj();
+        latency
+            .set("ttft", self.ttft_hist.to_json())
+            .set("inter_token", self.inter_token_hist.to_json())
+            .set("queue_wait", self.queue_wait_hist.to_json())
+            .set("prefill_chunk", self.prefill_chunk_hist.to_json())
+            .set("decode_cycle", self.decode_cycle_hist.to_json());
+        j.set("latency", latency);
+        j
     }
 }
 
@@ -311,6 +427,7 @@ mod tests {
             fault_events_dropped: 25,
             decode_cycles: 10,
             weight_bytes_streamed: 20480,
+            ..Default::default()
         };
         let r = m.report();
         assert!(r.contains("42 generated"));
@@ -334,5 +451,51 @@ mod tests {
              23 snapshots survived recovery, 24 journal records (25 dropped)"
         ));
         assert_eq!(m.prefix_cache_hit_rate(), 0.75);
+    }
+
+    #[test]
+    fn report_prints_latency_percentiles() {
+        let mut m = Metrics::default();
+        // 100 TTFT observations 1..=100 ms, inter-token 1..=100 µs
+        for i in 1..=100u64 {
+            m.ttft_hist.record_us(i * 1000);
+            m.inter_token_hist.record_us(i);
+        }
+        m.queue_wait_hist.record_us(500);
+        m.prefill_chunk_hist.record_us(2_000);
+        m.decode_cycle_hist.record_us(3_000);
+        let r = m.report();
+        assert!(r.contains("latency:  ttft p50"), "missing ttft latency line:\n{r}");
+        assert!(r.contains("latency:  inter-token p50"), "missing inter-token line:\n{r}");
+        assert!(r.contains("decode-cycle p50"), "missing cycle line:\n{r}");
+        // p50 of 1..=100 ms is the bucket containing 51 ms; exact-ish
+        let p50_ms = m.ttft_hist.percentile_us(0.50) as f64 / 1e3;
+        assert!((44.0..=51.0).contains(&p50_ms), "ttft p50 {p50_ms} ms");
+        // inter-token values < 16 µs..100 µs: p99 bucket holds 100 µs
+        let (lo, hi) = m.inter_token_hist.percentile_range_us(0.99);
+        assert!(lo <= 100 && 100 < hi);
+    }
+
+    #[test]
+    fn to_json_roundtrips_counters_and_latency() {
+        let mut m = Metrics {
+            enqueued: 3,
+            admitted: 2,
+            tokens_generated: 42,
+            decode_seconds_total: 2.0,
+            ..Default::default()
+        };
+        for _ in 0..10 {
+            m.ttft_hist.record_us(10_000);
+        }
+        let j = m.to_json();
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.req("enqueued").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.req("tokens_generated").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(back.req("decode_tokens_per_sec").unwrap().as_f64().unwrap(), 21.0);
+        let ttft = back.req("latency").unwrap().req("ttft").unwrap();
+        assert_eq!(ttft.req("count").unwrap().as_usize().unwrap(), 10);
+        let p50 = ttft.req("p50_ms").unwrap().as_f64().unwrap();
+        assert!((8.75..=10.0).contains(&p50), "p50_ms {p50} outside bucket bound");
     }
 }

@@ -160,11 +160,54 @@
 //! by the deterministic fault-injection harness in [`crate::chaos`]
 //! (`rust/tests/chaos.rs`, `rust/benches/chaos.rs`).
 //!
+//! # Observability
+//!
+//! Four instruments, each answering a question the others cannot; all
+//! of them allocation-free (or bounded) on the hot path so they can
+//! stay on in production:
+//!
+//! * **Counters** ([`Metrics`]) — *how much, in total*: tokens,
+//!   admissions, cache hits, faults, derived throughput rates.  Plain
+//!   `u64`/`f64` fields behind one mutex, folded at phase boundaries;
+//!   rendered by [`Metrics::report`] (human) and [`Metrics::to_json`]
+//!   (structured).  Counters hide distribution: a good mean coexists
+//!   with a terrible tail.
+//! * **Latency histograms** ([`crate::trace::LatencyHistogram`], five
+//!   of them inside `Metrics`) — *what the distribution looks like*:
+//!   p50/p90/p99/max of TTFT, inter-token gap, queue wait, prefill
+//!   chunk and decode cycle.  Fixed ~4 KB log-bucketed arrays (≤12.5%
+//!   relative bucket error, exact below 16 µs); recording is an index
+//!   computation and an increment — no allocation, no sort.
+//! * **Trace ring** ([`crate::trace::Tracer`], sized by
+//!   [`CoordinatorConfig::trace_events`]) — *where THIS request's time
+//!   went*: a bounded ring of typed events spanning enqueue →
+//!   admission (with cache-resume depth) → each prefill chunk → first
+//!   token → fork → fault/redrive seams → terminal, plus per-cycle
+//!   scheduler phase timings.  Exported as Perfetto-loadable Chrome
+//!   trace JSON via [`Coordinator::export_trace`].  Faults in the ring
+//!   carry the same `(request, cycle, phase)` attribution as the fault
+//!   journal, so a trace anomaly cross-references to its journal
+//!   record directly.
+//! * **Fault journal** ([`journal`]) — *what went wrong and what the
+//!   recovery did*: the durable, queryable record described above.
+//!   The ring may evict an old fault under event pressure; the journal
+//!   keeps its own (deeper) retention and is the source of truth for
+//!   fault forensics.
+//!
+//! Overhead contract: with tracing enabled at the default ring size,
+//! end-to-end serving throughput at the default `max_active` stays
+//! within 3% of the tracing-off configuration —
+//! `rust/benches/trace_overhead.rs` measures and (in CI) asserts it.
+//!
 //! * [`engine`]    — prefill/decode/fork over any [`EngineModel`]; owns
-//!   the prefix + decode-state cache and the fault policy above.
+//!   the prefix + decode-state cache and the fault policy above, and
+//!   records the model-side trace events (prefill chunks, first token,
+//!   forward/scatter split).
 //! * [`scheduler`] — bounded queue, cancellation/deadlines, shedding,
-//!   event streaming, the supervised worker loop.
-//! * [`metrics`]   — latency/throughput/cache/pressure/fault counters.
+//!   event streaming, the supervised worker loop; records the
+//!   queue/admission/terminal trace events and folds the histograms.
+//! * [`metrics`]   — latency/throughput/cache/pressure/fault counters
+//!   plus the five tail-latency histograms.
 
 pub mod engine;
 pub mod journal;

@@ -58,6 +58,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
@@ -74,6 +75,8 @@ use super::metrics::Metrics;
 use super::{FinishReason, GenEvent, GenRequest, GenResponse};
 use crate::model::RwkvModel;
 use crate::statecache::StateCacheConfig;
+use crate::trace::{CyclePhaseKind, TraceEvent, TraceEventKind, Tracer};
+use crate::util::json::Json;
 
 /// Poison-tolerant metrics acquisition: `Metrics` is plain counters —
 /// every intermediate state is valid — so a panic while the lock was
@@ -123,6 +126,14 @@ pub struct CoordinatorConfig {
     /// [`Backend`]).  Ignored by [`Coordinator::spawn`]/`spawn_with`,
     /// whose caller already constructed the model.
     pub backend: Backend,
+    /// Capacity of the cycle-level trace ring ([`crate::trace`]): the
+    /// newest `trace_events` session-lifecycle and scheduler-phase
+    /// events are retained for [`Coordinator::export_trace`].  0
+    /// disables tracing entirely (every record path reduces to a
+    /// branch on `None`); the default keeps it on —
+    /// `benches/trace_overhead.rs` pins the cost under 3% of serving
+    /// throughput at the default `max_active`.
+    pub trace_events: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -135,6 +146,7 @@ impl Default for CoordinatorConfig {
             fault: FaultPolicy::default(),
             shed_watermark: 0,
             backend: Backend::default(),
+            trace_events: crate::trace::DEFAULT_TRACE_EVENTS,
         }
     }
 }
@@ -395,6 +407,10 @@ pub struct Coordinator {
     /// Shared with the worker's engine and its supervisor — see
     /// [`Coordinator::fault_journal`].
     journal: Arc<Mutex<FaultJournal>>,
+    /// Shared with the worker loop and the engine — see
+    /// [`Coordinator::export_trace`].  Disabled (a no-op handle) when
+    /// [`CoordinatorConfig::trace_events`] is 0.
+    tracer: Tracer,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -436,9 +452,11 @@ impl Coordinator {
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let journal = Arc::new(Mutex::new(FaultJournal::default()));
+        let tracer = Tracer::new(cfg.trace_events);
         let m2 = metrics.clone();
         let d2 = queue_depth.clone();
         let j2 = journal.clone();
+        let t2 = tracer.clone();
         let worker = std::thread::spawn(move || {
             let mut engine = if cfg.state_cache_bytes > 0 {
                 Engine::with_cache(factory(), StateCacheConfig { max_bytes: cfg.state_cache_bytes })
@@ -447,6 +465,7 @@ impl Coordinator {
             };
             engine.set_fault_policy(cfg.fault);
             engine.set_journal(j2.clone());
+            engine.set_tracer(t2.clone());
             // supervisor: the scheduling state (active slots + local
             // queue) lives OUT here, so a panic that escapes the
             // per-call fault guards — a scheduler bug, a panic in
@@ -463,7 +482,7 @@ impl Coordinator {
             let mut queue: VecDeque<Job> = VecDeque::new();
             loop {
                 let run = catch_unwind(AssertUnwindSafe(|| {
-                    worker_loop(&mut engine, &mut active, &mut queue, &rx, &cfg, &m2, &d2)
+                    worker_loop(&mut engine, &mut active, &mut queue, &rx, &cfg, &m2, &d2, &t2)
                 }));
                 if run.is_ok() {
                     return; // graceful shutdown (queue closed + drained)
@@ -486,11 +505,11 @@ impl Coordinator {
                     // sample one token PAST the terminal
                     let done = &slot.sess;
                     if done.req.stop_token.is_some_and(|t| done.generated.last() == Some(&t)) {
-                        complete(slot, Ok(FinishReason::StopToken), &m2);
+                        complete(slot, Ok(FinishReason::StopToken), &m2, &t2, crash_cycle);
                         continue;
                     }
                     if done.generated.len() >= done.req.max_new_tokens {
-                        complete(slot, Ok(FinishReason::MaxTokens), &m2);
+                        complete(slot, Ok(FinishReason::MaxTokens), &m2, &t2, crash_cycle);
                         continue;
                     }
                     // a crash must not resurrect work the client already
@@ -508,7 +527,7 @@ impl Coordinator {
                                 unix_s: 0.0,
                             });
                         }
-                        complete(slot, Ok(reason), &m2);
+                        complete(slot, Ok(reason), &m2, &t2, crash_cycle);
                         continue;
                     }
                     if slot.sess.redrive_attempt >= slot.sess.req.redrive_budget {
@@ -522,7 +541,7 @@ impl Coordinator {
                             action: RecoveryAction::SessionFailed,
                             unix_s: 0.0,
                         });
-                        complete(slot, Ok(FinishReason::WorkerFailed), &m2);
+                        complete(slot, Ok(FinishReason::WorkerFailed), &m2, &t2, crash_cycle);
                         continue;
                     }
                     // budget left: re-admit transparently.  The stream
@@ -540,6 +559,15 @@ impl Coordinator {
                         unix_s: 0.0,
                     });
                     lock(&m2).redrives += 1;
+                    t2.instant(
+                        sess.request_id,
+                        sess.branch as u32,
+                        crash_cycle,
+                        TraceEventKind::Redriven {
+                            attempt: sess.redrive_attempt + 1,
+                            replayed_from: sess.generated.len() as u32,
+                        },
+                    );
                     let _ = events.send(GenEvent::Redriven {
                         branch: sess.branch,
                         attempt: sess.redrive_attempt + 1,
@@ -597,6 +625,7 @@ impl Coordinator {
             max_active: cfg.max_active,
             metrics,
             journal,
+            tracer,
             worker: Some(worker),
         }
     }
@@ -608,6 +637,30 @@ impl Coordinator {
     /// keeps the newest records (see [`FaultJournal`]).
     pub fn fault_journal(&self) -> Vec<FaultEvent> {
         self.journal.lock().unwrap_or_else(PoisonError::into_inner).snapshot()
+    }
+
+    /// Snapshot of the bounded trace ring, oldest event first — empty
+    /// when tracing is disabled ([`CoordinatorConfig::trace_events`] =
+    /// 0).  See [`crate::trace`] for what gets recorded where.
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        self.tracer.snapshot()
+    }
+
+    /// The current ring snapshot as a Chrome-trace JSON object
+    /// (`{"traceEvents": [...], ...}`) — what
+    /// [`Coordinator::export_trace`] writes to disk.  Pure read: the
+    /// worker keeps recording while and after the snapshot is taken.
+    pub fn export_trace_json(&self) -> Json {
+        crate::trace::chrome_trace(&self.tracer.snapshot())
+    }
+
+    /// Write the current trace ring as a Chrome-trace JSON file
+    /// loadable by Perfetto (<https://ui.perfetto.dev>) or
+    /// `chrome://tracing`: sessions render as async spans (queue wait,
+    /// prefill, decode and redrive seams per request), scheduler and
+    /// engine cycle phases as thread-track slices.
+    pub fn export_trace<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        crate::trace::write_chrome_trace(path.as_ref(), &self.tracer.snapshot())
     }
 
     /// Submit a request, returning the streaming session handle — or a
@@ -655,6 +708,9 @@ impl Coordinator {
             return Err(SubmitError::ShutDown);
         }
         lock(&self.metrics).enqueued += 1;
+        // the session's async trace span opens here; cycle is 0 because
+        // the submit side cannot see the worker's cycle counter
+        self.tracer.instant(id, 0, 0, TraceEventKind::Enqueue);
         Ok(GenStream {
             request_id: id,
             n_best,
@@ -740,6 +796,21 @@ fn fault_outcome(f: SessionFault) -> Result<FinishReason> {
     }
 }
 
+/// Static name for a session outcome — the `reason` arg of the trace
+/// ring's [`TraceEventKind::Terminal`] marker.
+fn finish_name(outcome: &Result<FinishReason>) -> &'static str {
+    match outcome {
+        Ok(FinishReason::MaxTokens) => "max_tokens",
+        Ok(FinishReason::StopToken) => "stop_token",
+        Ok(FinishReason::Cancelled) => "cancelled",
+        Ok(FinishReason::DeadlineExceeded) => "deadline_exceeded",
+        Ok(FinishReason::NumericFault) => "numeric_fault",
+        Ok(FinishReason::WorkerFailed) => "worker_failed",
+        Ok(FinishReason::Shed) => "shed",
+        Err(_) => "error",
+    }
+}
+
 /// Terminal [`GenResponse`] for a job that dies in queue (reaped, shed,
 /// or failed without admission).  Redrive-aware: a requeued redrive
 /// already streamed tokens and burned prefill/decode time in its first
@@ -768,8 +839,16 @@ fn job_response(job: &Job, finish: FinishReason) -> GenResponse {
     }
 }
 
-/// Fold a finished session into `Metrics` and emit its terminal event.
-fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metrics>>) {
+/// Fold a finished session into `Metrics` and emit its terminal event
+/// (plus the trace ring's [`TraceEventKind::Terminal`] marker closing
+/// the session's async span).
+fn complete(
+    slot: Slot,
+    outcome: Result<FinishReason>,
+    metrics: &Arc<Mutex<Metrics>>,
+    tracer: &Tracer,
+    cycle: u64,
+) {
     let Slot { sess, events, .. } = slot;
     {
         let mut m = lock(metrics);
@@ -781,10 +860,14 @@ fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metri
         // failure or pre-decode reap completes without one and must not
         // drag the mean toward zero.  Checked via the recorded value,
         // not the phase: a redriven session reaped mid-replay carries
-        // its pre-crash TTFT without being Decoding yet.
+        // its pre-crash TTFT without being Decoding yet.  The histogram
+        // folds at the same single point, so a redriven session (whose
+        // first life never reaches `complete`) counts its whole-request
+        // TTFT exactly once.
         if sess.ttft_seconds > 0.0 {
             m.first_tokens += 1;
             m.ttft_seconds_total += sess.ttft_seconds;
+            m.ttft_hist.record_seconds(sess.ttft_seconds);
         }
         if sess.redrive_attempt > 0
             && matches!(&outcome, Ok(FinishReason::MaxTokens | FinishReason::StopToken))
@@ -800,6 +883,12 @@ fn complete(slot: Slot, outcome: Result<FinishReason>, metrics: &Arc<Mutex<Metri
             _ => {}
         }
     }
+    tracer.instant(
+        sess.request_id,
+        sess.branch as u32,
+        cycle,
+        TraceEventKind::Terminal { reason: finish_name(&outcome) },
+    );
     match outcome {
         Ok(reason) => {
             let _ = events.send(GenEvent::Finished(GenResponse {
@@ -832,12 +921,14 @@ fn worker_loop<M: EngineModel>(
     cfg: &CoordinatorConfig,
     metrics: &Arc<Mutex<Metrics>>,
     queue_depth: &Arc<AtomicUsize>,
+    tracer: &Tracer,
 ) {
     loop {
         // scheduling-cycle counter: the `cycle` axis of fault-journal
         // attribution (idle blocking below still counts as one cycle —
         // the loop only comes back around when there is work)
         engine.begin_cycle();
+        let cycle = engine.cycle();
 
         // 1a. pull everything currently queued (block only when idle)
         loop {
@@ -859,6 +950,10 @@ fn worker_loop<M: EngineModel>(
                 Err(_) => return,
             }
         }
+        // the admission span opens AFTER the idle block: time spent
+        // parked on an empty queue is not scheduling work, and folding
+        // it in would make every first-request cycle look pathological
+        let t_admission = tracer.now_us();
 
         // 1b. reap queued jobs whose stream was cancelled/dropped or
         //     whose deadline expired before admission: terminate with
@@ -881,6 +976,13 @@ fn worker_loop<M: EngineModel>(
                         _ => m.deadline_exceeded += 1,
                     }
                 }
+                // close the async trace span a queued death leaves open
+                tracer.instant(
+                    job.id,
+                    0,
+                    cycle,
+                    TraceEventKind::Terminal { reason: finish_name(&Ok(reason)) },
+                );
                 let _ = job.events.send(GenEvent::Finished(job_response(&job, reason)));
             }
         }
@@ -910,6 +1012,12 @@ fn worker_loop<M: EngineModel>(
                 m.completed += 1;
                 m.shed += 1;
             }
+            tracer.instant(
+                job.id,
+                0,
+                cycle,
+                TraceEventKind::Terminal { reason: finish_name(&Ok(FinishReason::Shed)) },
+            );
             let _ = job.events.send(GenEvent::Finished(job_response(&job, FinishReason::Shed)));
         }
 
@@ -927,7 +1035,7 @@ fn worker_loop<M: EngineModel>(
                     continue;
                 };
                 let slot = active.remove(i);
-                complete(slot, Ok(reason), metrics);
+                complete(slot, Ok(reason), metrics, tracer, cycle);
             }
         }
 
@@ -971,13 +1079,35 @@ fn worker_loop<M: EngineModel>(
                     sess.ttft_seconds = rd.ttft_seconds;
                     sess.prefill_seconds += rd.prefill_seconds;
                     sess.decode_seconds += rd.decode_seconds;
+                    tracer.instant(
+                        sess.request_id,
+                        sess.branch as u32,
+                        cycle,
+                        TraceEventKind::Admit {
+                            cached_prefix_tokens: sess.cached_prefix_tokens as u32,
+                            redrive: true,
+                        },
+                    );
                 }
                 None => {
                     {
                         let mut m = lock(metrics);
                         m.admitted += 1;
                         m.queue_seconds_total += queue_s;
+                        // same single accounting point as `admitted`, so
+                        // the histogram's count stays equal to it — a
+                        // redrive re-admission never lands here
+                        m.queue_wait_hist.record_seconds(queue_s);
                     }
+                    tracer.instant(
+                        sess.request_id,
+                        0,
+                        cycle,
+                        TraceEventKind::Admit {
+                            cached_prefix_tokens: sess.cached_prefix_tokens as u32,
+                            redrive: false,
+                        },
+                    );
                     let _ = job.events.send(GenEvent::Started {
                         branch: 0,
                         cached_prefix_tokens: sess.cached_prefix_tokens,
@@ -992,24 +1122,44 @@ fn worker_loop<M: EngineModel>(
             });
         }
 
+        tracer.span(t_admission, 0, 0, cycle, TraceEventKind::CyclePhase(CyclePhaseKind::Admission));
+
         // 4. prefill cycle: every Prefilling session consumes one
         //    bounded sequence-parallel chunk of its prompt (§Perf L3-4).
         //    A session whose prompt completes this cycle samples its
         //    first token and joins the decode batch below immediately.
+        let t_prefill = tracer.now_us();
+        let mut did_prefill = false;
         {
             let mut failed: Vec<(usize, Result<FinishReason>)> = Vec::new();
+            let mut chunk_secs: Vec<f64> = Vec::new();
             for (i, slot) in active.iter_mut().enumerate() {
                 if !slot.sess.is_prefilling() {
                     continue;
                 }
-                if let Err(f) = engine.prefill_tick(&mut slot.sess, cfg.prefill_chunk) {
+                let t_chunk = Instant::now();
+                let tick = engine.prefill_tick(&mut slot.sess, cfg.prefill_chunk);
+                chunk_secs.push(t_chunk.elapsed().as_secs_f64());
+                if let Err(f) = tick {
                     failed.push((i, fault_outcome(f)));
+                }
+            }
+            if !chunk_secs.is_empty() {
+                did_prefill = true;
+                let mut m = lock(metrics);
+                for s in chunk_secs {
+                    m.prefill_chunk_hist.record_seconds(s);
                 }
             }
             for (i, outcome) in failed.into_iter().rev() {
                 let slot = active.remove(i);
-                complete(slot, outcome, metrics);
+                complete(slot, outcome, metrics, tracer, cycle);
             }
+        }
+        if did_prefill {
+            // skipped on pure-decode cycles: an empty zero-length slice
+            // every cycle would evict real events from the ring
+            tracer.span(t_prefill, 0, 0, cycle, TraceEventKind::CyclePhase(CyclePhaseKind::Prefill));
         }
 
         // 5. fork cycle: prompts that completed with n_best > 1 spawn
@@ -1053,6 +1203,10 @@ fn worker_loop<M: EngineModel>(
         // every weight plane exactly once regardless of batch width —
         // the weight-reuse fact the traffic metric below accounts
         let mut did_decode = false;
+        // inter-token gaps and this cycle's fused-forward duration,
+        // folded into the histograms under ONE lock in phase 7
+        let mut token_gaps: Vec<f64> = Vec::new();
+        let mut decode_cycle_s: Option<f64> = None;
         {
             let mut live: Vec<(usize, &mut ActiveSession)> = Vec::new();
             for (i, slot) in active.iter_mut().enumerate() {
@@ -1066,6 +1220,14 @@ fn worker_loop<M: EngineModel>(
                     token: tok,
                     seq_idx: slot.sess.generated.len() - 1,
                 });
+                // inter-token gap: commit-to-commit on the same session.
+                // The clock starts at the SECOND commit (TTFT owns the
+                // first) and resets across a redrive seam, so the crash
+                // stall shows up in redrive_resume_seconds, not here.
+                let now = Instant::now();
+                if let Some(prev) = slot.sess.last_token_at.replace(now) {
+                    token_gaps.push((now - prev).as_secs_f64());
+                }
                 // first NOVEL token after a redrive (replayed tokens are
                 // never re-committed): close out the resume-after-fault
                 // latency window opened at the crash
@@ -1081,11 +1243,13 @@ fn worker_loop<M: EngineModel>(
             }
             if !live.is_empty() {
                 did_decode = true;
+                let t_step = Instant::now();
                 let errs = {
                     let mut batch: Vec<&mut ActiveSession> =
                         live.iter_mut().map(|(_, s)| &mut **s).collect();
                     engine.step_batch(&mut batch)
                 };
+                decode_cycle_s = Some(t_step.elapsed().as_secs_f64());
                 // per-session outcomes: a faulting session finishes with
                 // its own typed terminal, its batchmates keep generating
                 for ((i, _), err) in live.into_iter().zip(errs) {
@@ -1103,6 +1267,7 @@ fn worker_loop<M: EngineModel>(
         //    count, the prefix/decode cache counters (mirrored wholesale
         //    — the worker owns the engine, so the engine-side totals are
         //    authoritative), and the pressure gauges
+        let t_maint = tracer.now_us();
         {
             let mut m = lock(metrics);
             m.clip_events += engine.model.take_clip_events();
@@ -1110,6 +1275,15 @@ fn worker_loop<M: EngineModel>(
                 m.decode_cycles += 1;
                 m.weight_bytes_streamed += engine.model.weight_stream_bytes();
             }
+            for g in &token_gaps {
+                m.inter_token_hist.record_seconds(*g);
+            }
+            if let Some(s) = decode_cycle_s {
+                m.decode_cycle_hist.record_seconds(s);
+            }
+            let (trace_recorded, trace_dropped) = tracer.stats();
+            m.trace_events = trace_recorded;
+            m.trace_events_dropped = trace_dropped;
             m.prompt_tokens_prefilled = engine.prefilled_tokens();
             let fs = engine.fault_stats();
             m.fault_retries = fs.retries;
@@ -1135,10 +1309,11 @@ fn worker_loop<M: EngineModel>(
             m.queue_depth = queue_depth.load(Ordering::Acquire) as u64;
             m.active_sessions = (active.len() - finished.len()) as u64;
         }
+        tracer.span(t_maint, 0, 0, cycle, TraceEventKind::CyclePhase(CyclePhaseKind::Maintenance));
         // 8. complete (reverse order keeps indices valid)
         for (i, outcome) in finished.into_iter().rev() {
             let slot = active.remove(i);
-            complete(slot, outcome, metrics);
+            complete(slot, outcome, metrics, tracer, cycle);
         }
     }
 }

@@ -30,6 +30,10 @@
 //!   store that lets sessions resume prefill from cached RWKV states
 //!   (O(1) bytes per entry — the RWKV advantage a Transformer KV cache
 //!   can't match), plus the decode-state namespace fork requests reuse.
+//! * [`trace`]       — serving observability: fixed-size log-bucketed
+//!   latency histograms (TTFT / inter-token / queue / prefill-chunk /
+//!   decode-cycle tails in `Metrics`), a bounded ring of typed per-session
+//!   and per-cycle trace events, and a Chrome-trace (Perfetto) exporter.
 //! * [`chaos`]       — deterministic fault injection: a seeded
 //!   [`chaos::ChaosModel`] wrapper that makes any `EngineModel` panic,
 //!   emit NaN, or stall on schedule, driving the fault-tolerance soak
@@ -55,6 +59,7 @@ pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod statecache;
+pub mod trace;
 pub mod util;
 
 pub use config::{AccelConfig, ModelShape, Platform};

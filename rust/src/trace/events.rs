@@ -1,0 +1,176 @@
+//! Typed trace events and the bounded ring they live in.
+//!
+//! A [`TraceEvent`] is a fixed-size record — no `String`, no `Vec`, no
+//! allocation on the record path (terminal reasons are `&'static str`
+//! names).  The [`TraceRing`] follows the fault journal's discipline
+//! ([`crate::coordinator::journal::FaultJournal`]): bounded capacity,
+//! oldest-first eviction under pressure, cumulative `recorded`/`dropped`
+//! counters so an overwritten storm is visible rather than silent.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::journal::{FaultKind, FaultPhase, RecoveryAction};
+
+/// Default ring capacity ([`crate::coordinator::CoordinatorConfig::trace_events`]):
+/// a few minutes of serving at typical event rates (~10 events/cycle),
+/// ~1 MB resident.
+pub const DEFAULT_TRACE_EVENTS: usize = 16_384;
+
+/// A scheduler/engine cycle segment, traced once per cycle when active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CyclePhaseKind {
+    /// Queue pull + queued-reap + shed + admission (scheduler).
+    Admission,
+    /// The chunked-prefill tick over all prefilling sessions (scheduler;
+    /// per-session chunks additionally appear as
+    /// [`TraceEventKind::PrefillChunk`] spans).
+    Prefill,
+    /// The fused batched decode forward inside
+    /// [`crate::coordinator::Engine::step_batch`], retries included.
+    DecodeForward,
+    /// Sampling each session's next token from the decode panel.
+    SamplerScatter,
+    /// Post-cycle bookkeeping: stat drains, cache/journal mirrors,
+    /// gauges, completions (scheduler).
+    Maintenance,
+}
+
+impl CyclePhaseKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CyclePhaseKind::Admission => "admission",
+            CyclePhaseKind::Prefill => "prefill_tick",
+            CyclePhaseKind::DecodeForward => "decode_forward",
+            CyclePhaseKind::SamplerScatter => "sampler_scatter",
+            CyclePhaseKind::Maintenance => "maintenance",
+        }
+    }
+}
+
+/// What a [`TraceEvent`] records.  Session-lifecycle kinds carry the
+/// owning request id in the event header; cycle-phase events use
+/// request id 0 (the scheduler/engine tracks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// The request entered the admission queue ([`crate::coordinator::Coordinator::submit`]).
+    Enqueue,
+    /// The request left the queue for an active slot; `redrive` marks a
+    /// supervisor re-admission after a worker crash.
+    Admit { cached_prefix_tokens: u32, redrive: bool },
+    /// One bounded chunk of prompt prefill: token positions `from..to`.
+    PrefillChunk { from: u32, to: u32 },
+    /// The first token of the session was sampled (the TTFT point).
+    FirstToken,
+    /// The prompt forked into `branches` best-of-n decode branches.
+    Fork { branches: u32 },
+    /// The supervisor re-admitted this session after a worker crash;
+    /// cross-reference the fault journal's `WorkerCrash` record at the
+    /// same `(request, cycle)`.
+    Redriven { attempt: u32, replayed_from: u32 },
+    /// Mirror of a fault-journal record — the same attribution tuple,
+    /// placed on the session's timeline.
+    Fault { phase: FaultPhase, kind: FaultKind, attempt: u32, action: RecoveryAction },
+    /// The branch terminated; `reason` is the `FinishReason` name (or
+    /// `"error"` for an error terminal).
+    Terminal { reason: &'static str },
+    /// One cycle segment (request id 0); see [`CyclePhaseKind`].
+    CyclePhase(CyclePhaseKind),
+}
+
+/// One trace record: fixed size, ~48 bytes, allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since the tracer's epoch (coordinator spawn).
+    pub ts_us: u64,
+    /// Span duration (0 for instant events).
+    pub dur_us: u64,
+    /// Owning request, or 0 for cycle-scope events.
+    pub request_id: u64,
+    /// Best-of-n branch (0 for ordinary sessions and cycle-scope events).
+    pub branch: u32,
+    /// Engine scheduling cycle the event belongs to.
+    pub cycle: u64,
+    pub kind: TraceEventKind,
+}
+
+/// Bounded ring of [`TraceEvent`]s (see the module docs).
+#[derive(Clone, Debug)]
+pub struct TraceRing {
+    events: VecDeque<TraceEvent>,
+    cap: usize,
+    recorded: u64,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn with_capacity(cap: usize) -> TraceRing {
+        TraceRing {
+            events: VecDeque::with_capacity(cap.max(1).min(DEFAULT_TRACE_EVENTS)),
+            cap: cap.max(1),
+            recorded: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append one event, evicting the oldest when the ring is full.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+        self.recorded += 1;
+    }
+
+    /// Events currently resident, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.iter().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Cumulative events ever recorded (resident + overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            ts_us: i,
+            dur_us: 0,
+            request_id: i,
+            branch: 0,
+            cycle: i,
+            kind: TraceEventKind::Enqueue,
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_counts() {
+        let mut r = TraceRing::with_capacity(3);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> = r.snapshot().iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest records are the ones overwritten");
+    }
+}

@@ -1,0 +1,188 @@
+//! Chrome-trace-format exporter: turn a [`TraceEvent`] snapshot into a
+//! JSON object loadable by Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! Layout of the exported trace (all on pid 1, "hfrwkv-coordinator"):
+//!
+//! * **sessions** — each request is one *async* span (`ph: "b"/"e"`,
+//!   `id` = request id) opened at enqueue and closed at the terminal,
+//!   with instant markers (`ph: "n"`) for admission, first token,
+//!   forks, faults and redrive seams.  In Perfetto each request renders
+//!   as its own horizontal track: queue wait, prefill and decode are
+//!   directly legible, and a redriven request visibly restarts.
+//! * **tid 1 "scheduler"** — per-cycle complete slices (`ph: "X"`) for
+//!   the admission, prefill-tick and maintenance segments.
+//! * **tid 2 "engine"** — per-cycle decode-forward and sampler-scatter
+//!   slices plus one slice per session prefill chunk, i.e. where model
+//!   FLOPs actually went.
+//!
+//! Timestamps are microseconds since the tracer epoch, sorted before
+//! export so `ts` is monotonic (the validity contract pinned by
+//! `rust/tests/trace.rs`).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::{CyclePhaseKind, TraceEvent, TraceEventKind};
+
+const PID: u64 = 1;
+const TID_SCHEDULER: u64 = 1;
+const TID_ENGINE: u64 = 2;
+
+fn base(ph: &str, name: &str, ts_us: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("ph", ph).set("name", name).set("pid", PID).set("ts", ts_us);
+    j
+}
+
+fn meta(name: &str, tid: Option<u64>, value: &str) -> Json {
+    let mut j = base("M", name, 0);
+    if let Some(tid) = tid {
+        j.set("tid", tid);
+    }
+    let mut args = Json::obj();
+    args.set("name", value);
+    j.set("args", args);
+    j
+}
+
+/// Session-track async event (`b`/`e`/`n`): matched by (cat, id, name).
+fn session_event(ph: &str, name: &str, ev: &TraceEvent, args: Json) -> Json {
+    let mut j = base(ph, name, ev.ts_us);
+    j.set("cat", "session").set("id", ev.request_id).set("args", args);
+    j
+}
+
+/// Thread-track complete slice (`X`) with a duration.
+fn slice(name: &str, tid: u64, ev: &TraceEvent, args: Json) -> Json {
+    let mut j = base("X", name, ev.ts_us);
+    j.set("tid", tid).set("dur", ev.dur_us).set("args", args);
+    j
+}
+
+fn args_of(ev: &TraceEvent) -> Json {
+    let mut a = Json::obj();
+    a.set("cycle", ev.cycle).set("branch", ev.branch as u64);
+    match ev.kind {
+        TraceEventKind::Admit { cached_prefix_tokens, redrive } => {
+            a.set("cached_prefix_tokens", cached_prefix_tokens as u64).set("redrive", redrive);
+        }
+        TraceEventKind::PrefillChunk { from, to } => {
+            a.set("from", from as u64).set("to", to as u64).set("request", ev.request_id);
+        }
+        TraceEventKind::Fork { branches } => {
+            a.set("branches", branches as u64);
+        }
+        TraceEventKind::Redriven { attempt, replayed_from } => {
+            a.set("attempt", attempt as u64).set("replayed_from", replayed_from as u64);
+        }
+        TraceEventKind::Fault { phase, kind, attempt, action } => {
+            a.set("phase", format!("{phase:?}"))
+                .set("kind", format!("{kind:?}"))
+                .set("attempt", attempt as u64)
+                .set("action", format!("{action:?}"));
+        }
+        TraceEventKind::Terminal { reason } => {
+            a.set("reason", reason);
+        }
+        TraceEventKind::Enqueue
+        | TraceEventKind::FirstToken
+        | TraceEventKind::CyclePhase(_) => {}
+    }
+    a
+}
+
+/// Build the Chrome trace object
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`) from a ring
+/// snapshot.  Pure function of the events — callers that want a file use
+/// [`write_chrome_trace`] or [`crate::coordinator::Coordinator::export_trace`].
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut sorted: Vec<&TraceEvent> = events.iter().collect();
+    sorted.sort_by_key(|e| e.ts_us);
+
+    let mut out = vec![
+        meta("process_name", None, "hfrwkv-coordinator"),
+        meta("thread_name", Some(TID_SCHEDULER), "scheduler"),
+        meta("thread_name", Some(TID_ENGINE), "engine"),
+    ];
+    for ev in sorted {
+        let args = args_of(ev);
+        out.push(match ev.kind {
+            TraceEventKind::Enqueue => session_event("b", "session", ev, args),
+            TraceEventKind::Terminal { .. } => session_event("e", "session", ev, args),
+            TraceEventKind::Admit { .. } => session_event("n", "admit", ev, args),
+            TraceEventKind::FirstToken => session_event("n", "first_token", ev, args),
+            TraceEventKind::Fork { .. } => session_event("n", "fork", ev, args),
+            TraceEventKind::Redriven { .. } => session_event("n", "redriven", ev, args),
+            TraceEventKind::Fault { .. } => session_event("n", "fault", ev, args),
+            TraceEventKind::PrefillChunk { .. } => slice("prefill_chunk", TID_ENGINE, ev, args),
+            TraceEventKind::CyclePhase(phase) => {
+                let tid = match phase {
+                    CyclePhaseKind::DecodeForward | CyclePhaseKind::SamplerScatter => TID_ENGINE,
+                    _ => TID_SCHEDULER,
+                };
+                slice(phase.name(), tid, ev, args)
+            }
+        });
+    }
+
+    let mut trace = Json::obj();
+    trace.set("traceEvents", out).set("displayTimeUnit", "ms");
+    trace
+}
+
+/// Serialize [`chrome_trace`] to a file.
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(events).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn ev(ts: u64, id: u64, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent { ts_us: ts, dur_us: 5, request_id: id, branch: 0, cycle: 1, kind }
+    }
+
+    #[test]
+    fn export_shape_and_ordering() {
+        // deliberately out of order: exporter must sort by ts
+        let events = vec![
+            ev(90, 7, TraceEventKind::Terminal { reason: "max_tokens" }),
+            ev(10, 7, TraceEventKind::Enqueue),
+            ev(20, 0, TraceEventKind::CyclePhase(CyclePhaseKind::Admission)),
+            ev(30, 7, TraceEventKind::PrefillChunk { from: 0, to: 8 }),
+            ev(40, 7, TraceEventKind::FirstToken),
+            ev(50, 0, TraceEventKind::CyclePhase(CyclePhaseKind::DecodeForward)),
+        ];
+        let j = chrome_trace(&events);
+        let s = j.to_string();
+        let back = parse(&s).unwrap();
+        let arr = back.req("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata + 6 events
+        assert_eq!(arr.len(), 9);
+        let mut last_ts = 0.0;
+        for e in arr {
+            let ts = e.req("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "ts not monotonic");
+            last_ts = ts;
+        }
+        // async begin/end pair for the session, matched on id
+        let phs: Vec<&str> =
+            arr.iter().map(|e| e.req("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "b").count(), 1);
+        assert_eq!(phs.iter().filter(|p| **p == "e").count(), 1);
+        // decode_forward lands on the engine thread, admission on scheduler
+        for e in arr {
+            match e.req("name").unwrap().as_str().unwrap() {
+                "decode_forward" | "prefill_chunk" => {
+                    assert_eq!(e.req("tid").unwrap().as_usize().unwrap(), 2)
+                }
+                "admission" => assert_eq!(e.req("tid").unwrap().as_usize().unwrap(), 1),
+                _ => {}
+            }
+        }
+    }
+}

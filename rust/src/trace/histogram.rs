@@ -1,0 +1,249 @@
+//! Fixed-footprint log-bucketed latency histograms (HDR-style).
+//!
+//! A [`LatencyHistogram`] is a `[u64; 496]` bucket array plus three
+//! scalars — no allocation ever, neither at construction nor on the
+//! record path — so one can live inside [`crate::coordinator::Metrics`]
+//! under the scheduler's existing metrics lock without changing the
+//! hot-path cost model.
+//!
+//! Bucketing: values are microseconds.  Values below 16 µs get exact
+//! 1 µs buckets; above that, every power of two splits into
+//! `2^SUB_BITS = 8` sub-buckets, so a bucket's width is 1/8 of its
+//! lower bound.  Percentile estimates therefore carry at most 12.5%
+//! relative quantization error (and are *exact* below 16 µs) — plenty
+//! for tail-latency reporting, at ~4 KB per histogram.
+//! [`LatencyHistogram::percentile_range_us`] exposes the bucket bounds
+//! so tests can assert the error contract against a sort-based oracle
+//! (`rust/tests/trace.rs`).
+
+use crate::util::json::Json;
+
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+
+/// Total bucket count: 8 exact unit buckets below `2^SUB_BITS`, then 8
+/// sub-buckets for each of the remaining 61 octaves of the u64 range.
+pub const BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Bucket index for a microsecond value.  Continuous: buckets 0..16 are
+/// the exact values 0..16, then log-linear.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let sub = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        SUB + ((msb - SUB_BITS) as usize) * SUB + sub
+    }
+}
+
+/// Inclusive lower bound of bucket `idx` (the value `percentile_us`
+/// reports when the rank lands in that bucket).
+fn bucket_lo(idx: usize) -> u64 {
+    if idx < SUB {
+        idx as u64
+    } else {
+        let octave = (idx - SUB) / SUB;
+        let sub = (idx - SUB) % SUB;
+        ((SUB + sub) as u64) << octave
+    }
+}
+
+/// Exclusive upper bound of bucket `idx`.
+fn bucket_hi(idx: usize) -> u64 {
+    if idx + 1 < BUCKETS {
+        bucket_lo(idx + 1)
+    } else {
+        u64::MAX
+    }
+}
+
+/// Log-bucketed latency histogram over microsecond values.  ~4 KB,
+/// fixed size, allocation-free; `Default` is the empty histogram.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one microsecond observation.  O(1), no allocation.
+    #[inline]
+    pub fn record_us(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(v);
+        self.max_us = self.max_us.max(v);
+    }
+
+    /// Record a duration in seconds (the unit the serving stack's
+    /// `Instant::elapsed().as_secs_f64()` call sites already hold).
+    #[inline]
+    pub fn record_seconds(&mut self, s: f64) {
+        let us = if s <= 0.0 { 0 } else { (s * 1e6).min(u64::MAX as f64) as u64 };
+        self.record_us(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest recorded value, exact (not bucket-quantized).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// The `[lo, hi)` bucket bounds containing the p-quantile
+    /// observation.  The rank convention matches
+    /// [`crate::util::bench::percentile_sorted`]: element
+    /// `min(floor(n*p), n-1)` of the sorted observations — so a
+    /// sort-based oracle over the same samples must land inside the
+    /// returned half-open range (the proptest contract).
+    pub fn percentile_range_us(&self, p: f64) -> (u64, u64) {
+        if self.count == 0 {
+            return (0, 0);
+        }
+        let rank = ((self.count as f64 * p) as u64).min(self.count - 1) + 1;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (bucket_lo(i), bucket_hi(i));
+            }
+        }
+        // unreachable: seen == count >= rank by the clamp above
+        (self.max_us, u64::MAX)
+    }
+
+    /// p-quantile estimate: the lower bound of the containing bucket
+    /// (exact below 16 µs; within 12.5% of the true value above).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.percentile_range_us(p).0
+    }
+
+    pub fn percentile_seconds(&self, p: f64) -> f64 {
+        self.percentile_us(p) as f64 / 1e6
+    }
+
+    /// `(p50, p90, p99, max)` in milliseconds — the serve-report line.
+    pub fn summary_ms(&self) -> (f64, f64, f64, f64) {
+        (
+            self.percentile_us(0.50) as f64 / 1e3,
+            self.percentile_us(0.90) as f64 / 1e3,
+            self.percentile_us(0.99) as f64 / 1e3,
+            self.max_us as f64 / 1e3,
+        )
+    }
+
+    /// Structured summary for `Metrics::to_json` / `BENCH_*.json`.
+    pub fn to_json(&self) -> Json {
+        let (p50, p90, p99, max) = self.summary_ms();
+        let mut j = Json::obj();
+        j.set("count", self.count)
+            .set("mean_ms", self.mean_us() / 1e3)
+            .set("p50_ms", p50)
+            .set("p90_ms", p90)
+            .set("p99_ms", p99)
+            .set("max_ms", max);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_continuous_and_cover_u64() {
+        // every bucket's exclusive hi is the next bucket's inclusive lo,
+        // starting at 0 and ending at u64::MAX
+        assert_eq!(bucket_lo(0), 0);
+        for i in 0..BUCKETS - 1 {
+            assert_eq!(bucket_hi(i), bucket_lo(i + 1), "gap after bucket {i}");
+            assert!(bucket_lo(i) < bucket_hi(i), "empty bucket {i}");
+        }
+        assert_eq!(bucket_hi(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn index_maps_into_its_own_bounds() {
+        for v in
+            [0u64, 1, 7, 8, 15, 16, 17, 100, 1000, 4095, 4096, 1 << 20, u64::MAX / 2, u64::MAX]
+        {
+            let i = bucket_index(v);
+            assert!(i < BUCKETS);
+            assert!(bucket_lo(i) <= v, "v={v} below bucket {i} lo");
+            assert!(v < bucket_hi(i) || i == BUCKETS - 1, "v={v} above bucket {i} hi");
+        }
+    }
+
+    #[test]
+    fn exact_below_sixteen_us() {
+        let mut h = LatencyHistogram::default();
+        for v in 0..16u64 {
+            h.record_us(v);
+        }
+        for v in 0..16u64 {
+            let p = (v as f64 + 0.5) / 16.0;
+            assert_eq!(h.percentile_us(p), v);
+        }
+    }
+
+    #[test]
+    fn percentiles_track_known_distribution() {
+        let mut h = LatencyHistogram::default();
+        for v in 1..=1000u64 {
+            h.record_us(v * 100); // 100 µs .. 100 ms, uniform
+        }
+        let (lo50, hi50) = h.percentile_range_us(0.50);
+        assert!(lo50 <= 50_100 && 50_100 < hi50, "p50 range [{lo50},{hi50})");
+        let (lo99, hi99) = h.percentile_range_us(0.99);
+        assert!(lo99 <= 99_100 && 99_100 < hi99, "p99 range [{lo99},{hi99})");
+        assert_eq!(h.max_us(), 100_000);
+        assert_eq!(h.count(), 1000);
+        // quantization error contract: lower bound within 12.5%
+        assert!(h.percentile_us(0.50) as f64 >= 50_100.0 * 0.875);
+    }
+
+    #[test]
+    fn record_seconds_saturates_and_rounds() {
+        let mut h = LatencyHistogram::default();
+        h.record_seconds(-1.0); // clamps to 0
+        h.record_seconds(0.0015); // 1500 µs
+        h.record_seconds(f64::MAX); // saturates instead of overflowing
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.percentile_us(0.0), 0);
+        assert_eq!(h.max_us(), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_range_us(0.99), (0, 0));
+        assert_eq!(h.summary_ms(), (0.0, 0.0, 0.0, 0.0));
+        assert!(h.is_empty());
+        let j = h.to_json();
+        assert_eq!(j.req("count").unwrap().as_usize().unwrap(), 0);
+    }
+}

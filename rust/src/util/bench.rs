@@ -70,7 +70,7 @@ pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchStats {
         min_ns: samples[0],
         median_ns: samples[n / 2],
         mean_ns: samples.iter().sum::<f64>() / n as f64,
-        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        p95_ns: percentile_sorted(&samples, 0.95),
         iters: batch * n as u64,
     };
     println!(
@@ -87,6 +87,19 @@ pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchStats {
 /// Print a section header in bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Percentile of an already-sorted sample set, floor-rank convention:
+/// `sorted[floor(n * p)]`, clamped to the last element.  The ONE
+/// percentile definition shared by the bench harness ([`bench`]'s p95),
+/// the serving benches' latency sweeps, and the histogram proptest
+/// oracle in `rust/tests/trace.rs` — so a bench-side figure and a
+/// `Metrics` histogram figure can never disagree by convention.
+///
+/// Panics on an empty slice (a percentile of nothing is a caller bug).
+pub fn percentile_sorted<T: Copy>(sorted: &[T], p: f64) -> T {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
 }
 
 /// Machine-readable benchmark record: named scalar results accumulated
@@ -171,6 +184,16 @@ mod tests {
         let res = j.req("results").unwrap();
         assert!((res.req("speedup_b8").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-12);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn percentile_sorted_floor_convention() {
+        let xs: Vec<u64> = (0..100).collect();
+        assert_eq!(percentile_sorted(&xs, 0.0), 0);
+        assert_eq!(percentile_sorted(&xs, 0.5), 50);
+        assert_eq!(percentile_sorted(&xs, 0.95), 95);
+        assert_eq!(percentile_sorted(&xs, 1.0), 99, "p100 clamps to max");
+        assert_eq!(percentile_sorted(&[7.5f64], 0.99), 7.5);
     }
 
     #[test]

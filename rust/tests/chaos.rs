@@ -632,6 +632,51 @@ fn worker_crash_redrives_the_session_to_bitexact_completion() {
     );
 }
 
+/// Observability accounting across the redrive seam: a crashed-and-
+/// re-admitted session is ONE request and must be counted like one.
+/// The re-admission must not re-enter the queue-wait accounting
+/// (`admitted`/`queue_seconds_total`/the queue-wait histogram), the
+/// TTFT must fold into its histogram exactly once (at the single
+/// `complete`), and the inter-token histogram must exclude the crash
+/// stall (the seam resets the gap clock; the stall is visible in
+/// `redrive_resume_seconds_total` instead).
+#[test]
+fn redrive_counts_queue_and_ttft_exactly_once() {
+    // same deterministic kill as the bit-exactness test above: one
+    // in-flight request, the kill at drain #4 lands with exactly 4
+    // tokens committed, then the redrive commits the remaining 6
+    let c = Coordinator::spawn(KillAt::new(base_model(), 4), CoordinatorConfig::default());
+    let r = c.generate(GenRequest::greedy(vec![5, 9, 13], 10)).expect("redrive heals the crash");
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    assert_eq!(r.tokens.len(), 10);
+
+    let m = metrics_of(&c);
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.redrives, 1, "the crash must actually have interrupted the session");
+    assert_eq!(m.enqueued, 1);
+    assert_eq!(m.completed, 1);
+    // admission-side: counted at the FIRST admission only
+    assert_eq!(m.admitted, 1, "re-admission must not double-count admitted");
+    assert_eq!(
+        m.queue_wait_hist.count(),
+        1,
+        "re-admission must not re-enter the queue-wait histogram"
+    );
+    // TTFT: folded once, at the single complete(), with the carried
+    // first-life value
+    assert_eq!(m.first_tokens, 1);
+    assert_eq!(m.ttft_hist.count(), 1, "a redriven session records ONE TTFT sample");
+    assert!(
+        (m.ttft_seconds_total - r.ttft_seconds).abs() < 1e-9,
+        "the histogram's sibling total carries the whole-request TTFT exactly once"
+    );
+    // inter-token gaps: 4 first-life commits (3 gaps) + 6 second-life
+    // commits (5 gaps; the seam resets the clock, so the crash stall is
+    // NOT a gap) = 8 samples — 9 would mean the stall leaked in
+    assert_eq!(m.inter_token_hist.count(), 8, "the crash stall must not pollute inter-token");
+    assert_eq!(m.redrives_resumed, 1, "the stall is accounted as resume latency instead");
+}
+
 /// A redriven session must resume from the crash-surviving prefix
 /// cache: the engine snapshots every prefill chunk boundary, `recover`
 /// keeps the healthy ones, and the re-admitted session replays only

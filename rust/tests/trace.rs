@@ -1,0 +1,270 @@
+//! Observability integration suite: the latency histograms against a
+//! sort-based oracle (property-tested), the Chrome-trace exporter's
+//! validity contract against a real serving run, and the serve-report /
+//! `Metrics::to_json` latency surface.
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenRequest};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::prop_assert;
+use hfrwkv::trace::{LatencyHistogram, TraceEventKind};
+use hfrwkv::util::bench::percentile_sorted;
+use hfrwkv::util::json::{parse, parse_file, Json};
+use hfrwkv::util::prop::check;
+
+// ---------------------------------------------------------------------------
+// histogram vs sort oracle
+// ---------------------------------------------------------------------------
+
+/// The histogram's percentile must bracket the exact sort-based answer
+/// (same floor-rank convention — [`percentile_sorted`] is the shared
+/// helper the benches use), and the bracket must honor the documented
+/// bucket-boundary error bound: exact below 16 µs, ≤ 12.5% relative
+/// width above.
+#[test]
+fn histogram_percentiles_match_sort_oracle() {
+    check("histogram vs sorted oracle", 64, |g| {
+        let len = g.sized_len(400);
+        let samples: Vec<u64> = (0..len)
+            .map(|_| {
+                // log-uniform magnitudes so samples cross many octaves
+                // (a uniform draw would almost never exercise the
+                // sub-16 µs exact region)
+                let e = g.usize_in(0, 30) as u32;
+                g.rng.next_u64() % (1u64 << e).max(2)
+            })
+            .collect();
+        let mut h = LatencyHistogram::default();
+        for &v in &samples {
+            h.record_us(v);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for &p in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let oracle = percentile_sorted(&sorted, p);
+            let (lo, hi) = h.percentile_range_us(p);
+            prop_assert!(
+                lo <= oracle && oracle < hi,
+                "p{p}: oracle {oracle} outside [{lo}, {hi}) with n={len}"
+            );
+            prop_assert!(
+                hi - lo <= (lo / 8).max(1),
+                "p{p}: bucket [{lo}, {hi}) wider than the 12.5% bound"
+            );
+            prop_assert!(
+                h.percentile_us(p) <= oracle,
+                "p{p}: lower-bound estimate {} above the oracle {oracle}",
+                h.percentile_us(p)
+            );
+        }
+        prop_assert!(h.count() == len as u64, "count {} != n {len}", h.count());
+        prop_assert!(
+            h.max_us() == *sorted.last().unwrap(),
+            "max is stored exactly, got {} want {}",
+            h.max_us(),
+            sorted.last().unwrap()
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chrome-trace exporter validity
+// ---------------------------------------------------------------------------
+
+fn event_id(e: &Json) -> Option<u64> {
+    e.req("id").ok().and_then(|v| v.as_usize().ok()).map(|v| v as u64)
+}
+
+fn ph_of(e: &Json) -> &str {
+    e.req("ph").unwrap().as_str().unwrap()
+}
+
+/// A real multi-request serving run (long chunked prompt + short
+/// batchmates) must export a trace that round-trips through util/json,
+/// has monotonic timestamps, opens and closes every session's async
+/// span, and puts the per-cycle slices on the right threads.
+#[test]
+fn exported_trace_is_valid_chrome_trace_json() {
+    let coord = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() },
+    );
+    let long: Vec<u32> = (0..30u32).map(|t| (t * 7 + 3) % 50).collect();
+    let mut streams = vec![coord.submit(GenRequest::greedy(long, 5)).unwrap()];
+    for i in 0..4u32 {
+        streams.push(coord.submit(GenRequest::greedy(vec![1 + i], 6)).unwrap());
+    }
+    let ids: Vec<u64> = streams.iter().map(|s| s.request_id()).collect();
+    for s in streams {
+        s.wait_one().unwrap();
+    }
+
+    let s = coord.export_trace_json().to_string();
+    let back = parse(&s).expect("export round-trips through util/json");
+    assert_eq!(back.req("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let arr = back.req("traceEvents").unwrap().as_arr().unwrap();
+
+    // every event is well-formed and ts is monotonic over the array
+    let mut last_ts = 0.0;
+    for e in arr {
+        e.req("name").unwrap().as_str().unwrap();
+        e.req("pid").unwrap().as_usize().unwrap();
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "ts not monotonic: {ts} after {last_ts}");
+        last_ts = ts;
+    }
+
+    // every submitted session's async span opens exactly once and
+    // closes at least once (fork branches share the id), in order
+    for id in &ids {
+        let begins: Vec<f64> = arr
+            .iter()
+            .filter(|e| ph_of(e) == "b" && event_id(e) == Some(*id))
+            .map(|e| e.req("ts").unwrap().as_f64().unwrap())
+            .collect();
+        let ends: Vec<f64> = arr
+            .iter()
+            .filter(|e| ph_of(e) == "e" && event_id(e) == Some(*id))
+            .map(|e| e.req("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(begins.len(), 1, "request {id}: exactly one span begin");
+        assert!(!ends.is_empty(), "request {id}: span never closed");
+        assert!(begins[0] <= ends[0], "request {id}: span ends before it begins");
+    }
+
+    // the cycle-phase slices land on their documented threads, with
+    // durations; the chunked prompt must leave >= 4 prefill slices
+    let mut prefill_chunks = 0;
+    let mut admissions = 0;
+    for e in arr {
+        match e.req("name").unwrap().as_str().unwrap() {
+            "prefill_chunk" | "decode_forward" | "sampler_scatter" => {
+                assert_eq!(e.req("tid").unwrap().as_usize().unwrap(), 2, "engine thread");
+                assert!(e.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+                if e.req("name").unwrap().as_str().unwrap() == "prefill_chunk" {
+                    prefill_chunks += 1;
+                }
+            }
+            "admission" | "maintenance" | "prefill_tick" => {
+                assert_eq!(e.req("tid").unwrap().as_usize().unwrap(), 1, "scheduler thread");
+                if e.req("name").unwrap().as_str().unwrap() == "admission" {
+                    admissions += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    assert!(prefill_chunks >= 4, "30-token prompt at chunk 8 leaves >= 4 chunk slices");
+    assert!(admissions >= 1, "per-cycle admission slices present");
+
+    // the file path writes the same object parse_file can read back
+    let path = std::env::temp_dir().join("hfrwkv_trace_test.json");
+    coord.export_trace(&path).unwrap();
+    let from_file = parse_file(&path).unwrap();
+    assert!(
+        from_file.req("traceEvents").unwrap().as_arr().unwrap().len() >= arr.len(),
+        "file export sees at least the events of the earlier snapshot"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The raw ring, inspected directly: one request's lifecycle events
+/// arrive in causal order with consistent attribution.
+#[test]
+fn trace_ring_records_session_lifecycle_in_order() {
+    let coord = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 2, ..Default::default() },
+    );
+    let stream = coord.submit(GenRequest::greedy(vec![1, 2, 3], 4)).unwrap();
+    let id = stream.request_id();
+    stream.wait_one().unwrap();
+
+    let events = coord.trace_events();
+    let of_session: Vec<_> = events.iter().filter(|e| e.request_id == id).collect();
+    let pos = |pred: &dyn Fn(&TraceEventKind) -> bool| {
+        of_session.iter().position(|e| pred(&e.kind))
+    };
+    let enqueue = pos(&|k| matches!(k, TraceEventKind::Enqueue)).expect("enqueue recorded");
+    let admit = pos(&|k| matches!(k, TraceEventKind::Admit { .. })).expect("admit recorded");
+    let first = pos(&|k| matches!(k, TraceEventKind::FirstToken)).expect("first token recorded");
+    let term = pos(&|k| matches!(k, TraceEventKind::Terminal { .. })).expect("terminal recorded");
+    assert!(enqueue < admit && admit < first && first < term, "lifecycle out of order");
+    match of_session[term].kind {
+        TraceEventKind::Terminal { reason } => assert_eq!(reason, "max_tokens"),
+        _ => unreachable!(),
+    }
+    assert!(
+        of_session.iter().all(|e| e.branch == 0),
+        "single-branch request never leaves branch 0"
+    );
+}
+
+/// `trace_events = 0` is a true off switch: empty ring, metadata-only
+/// export — while the histograms (metrics-side, always on) still fill.
+#[test]
+fn disabled_tracing_keeps_histograms_but_exports_nothing() {
+    let coord = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { trace_events: 0, ..Default::default() },
+    );
+    coord.generate(GenRequest::greedy(vec![1, 2], 4)).unwrap();
+    assert!(coord.trace_events().is_empty());
+    let j = coord.export_trace_json();
+    assert_eq!(
+        j.req("traceEvents").unwrap().as_arr().unwrap().len(),
+        3,
+        "process/thread metadata only"
+    );
+    let m = coord.metrics.lock().unwrap().clone();
+    assert_eq!(m.trace_events, 0);
+    assert_eq!(m.trace_events_dropped, 0);
+    assert_eq!(m.ttft_hist.count(), 1, "histograms are independent of the ring");
+}
+
+// ---------------------------------------------------------------------------
+// Metrics surface
+// ---------------------------------------------------------------------------
+
+/// End-to-end: after a batch of requests the serve report prints the
+/// latency lines, `to_json` carries matching structured percentiles,
+/// and each histogram's count ties to its sibling counter.
+#[test]
+fn serve_report_and_json_surface_latency_percentiles() {
+    let coord = Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 3, ..Default::default() },
+    );
+    let streams: Vec<_> =
+        (0..6u32).map(|i| coord.submit(GenRequest::greedy(vec![1 + i], 5)).unwrap()).collect();
+    for s in streams {
+        s.wait_one().unwrap();
+    }
+
+    let m = coord.metrics.lock().unwrap().clone();
+    assert_eq!(m.ttft_hist.count(), m.first_tokens, "one TTFT sample per first token");
+    assert_eq!(m.queue_wait_hist.count(), m.admitted, "one queue sample per admission");
+    assert!(m.inter_token_hist.count() > 0, "decode gaps recorded");
+    assert!(m.prefill_chunk_hist.count() > 0, "prefill chunks recorded");
+    assert!(m.decode_cycle_hist.count() > 0, "decode cycles recorded");
+    assert!(m.trace_events > 0, "ring saw events");
+
+    let rep = m.report();
+    assert!(rep.contains("latency:  ttft p50"), "report: {rep}");
+    assert!(rep.contains("inter-token p50"), "report: {rep}");
+    assert!(rep.contains("decode-cycle p50"), "report: {rep}");
+
+    let back = parse(&m.to_json().to_string()).unwrap();
+    let lat = back.req("latency").unwrap();
+    assert_eq!(
+        lat.req("ttft").unwrap().req("count").unwrap().as_usize().unwrap() as u64,
+        m.first_tokens
+    );
+    for key in ["ttft", "inter_token", "queue_wait", "prefill_chunk", "decode_cycle"] {
+        let h = lat.req(key).unwrap();
+        let p50 = h.req("p50_ms").unwrap().as_f64().unwrap();
+        let p99 = h.req("p99_ms").unwrap().as_f64().unwrap();
+        let max = h.req("max_ms").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= max, "{key}: p50 {p50} p99 {p99} max {max} misordered");
+    }
+}
