@@ -14,6 +14,9 @@
 //! HFRWKV_BACKEND=packed cargo run --release --example serve_demo
 //! # Perfetto-loadable trace of the PJRT serving phases:
 //! HFRWKV_TRACE=/tmp/serve_trace.json cargo run --release --example serve_demo
+//! # serve the demo model over HTTP/SSE instead of running the phases
+//! # (then drive it with the curl line the process prints):
+//! HFRWKV_HTTP=127.0.0.1:8090 cargo run --release --example serve_demo
 //! ```
 
 use std::io::Write;
@@ -30,6 +33,53 @@ fn main() -> hfrwkv::Result<()> {
     let manifest = Manifest::load(dir)?;
     let eval_json = manifest.load_eval_data()?;
     let tokenizer = Tokenizer::from_json(eval_json.req("vocab")?)?;
+
+    // ---- HFRWKV_HTTP=<addr>: serve the demo model over the network ---------
+    // binds the HTTP/SSE tier on the trained weights (served natively
+    // through the HFRWKV_BACKEND-selected backend) and blocks, so the
+    // transport is exercisable by hand with curl
+    if let Ok(addr) = std::env::var("HFRWKV_HTTP") {
+        let weights = WeightFile::load(&manifest.weights)?;
+        let native = RwkvModel::from_weights(&weights)?;
+        let backend = Backend::from_env();
+        let calib = {
+            let mut t = vec![hfrwkv::model::tokenizer::BOS];
+            t.extend(tokenizer.encode("alice has a red hat . the hat of alice is")?);
+            t
+        };
+        let coord = std::sync::Arc::new(Coordinator::spawn_native(
+            native,
+            calib,
+            CoordinatorConfig { max_active: 8, backend, ..Default::default() },
+        ));
+        // the server's encoder owns its own tokenizer, so string
+        // prompts work over the wire: `"prompt": "text"` as well as ids
+        let tok = tokenizer.clone();
+        let encoder: hfrwkv::net::Encoder = std::sync::Arc::new(move |text: &str| {
+            let mut prompt = vec![hfrwkv::model::tokenizer::BOS];
+            prompt.extend(tok.encode(text)?);
+            Ok(prompt)
+        });
+        let server = hfrwkv::net::Server::bind_with(
+            addr.as_str(),
+            coord,
+            hfrwkv::net::ServerConfig { encoder: Some(encoder), ..Default::default() },
+        )?;
+        println!("serving the demo model ({backend:?} backend) on http://{}", server.addr());
+        println!("try a streaming request (SSE frames render as they arrive):");
+        println!(
+            "  curl -N -X POST http://{}/v1/generate \\\n       -H 'X-Priority: 1' \\\n       -d '{{\"prompt\": \"alice has a red hat . the hat of alice is\", \"max_new_tokens\": 24}}'",
+            server.addr()
+        );
+        println!(
+            "observability: curl http://{0}/metrics   and   curl http://{0}/trace",
+            server.addr()
+        );
+        println!("press Ctrl-C to stop");
+        loop {
+            std::thread::park();
+        }
+    }
 
     // ---- phase 0: live token streaming ------------------------------------
     println!("== streaming (one session, tokens rendered as they arrive) ==");

@@ -2,8 +2,37 @@
 //! printable as a report ([`Metrics::report`]) or serializable as
 //! structured JSON ([`Metrics::to_json`]).
 
+use std::collections::BTreeMap;
+
 use crate::trace::LatencyHistogram;
 use crate::util::json::Json;
+
+/// Per-priority-level slice of the serving counters, keyed by
+/// [`super::GenRequest::priority`] in [`Metrics::per_priority`].  This
+/// is what makes quota behavior observable: under a low-priority flood
+/// the flooded level shows `quota_rejected` growth and a pinned
+/// `queued` gauge while the high-priority level's `admitted` /
+/// `completed` keep tracking its `enqueued` — the isolation claim the
+/// HTTP load harness asserts by reading these back over `/metrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PriorityCounters {
+    /// Gauge: requests of this level currently queued (submitted but
+    /// not admitted) — the live count metered against the level's
+    /// `CoordinatorConfig::priority_quotas` share.
+    pub queued: u64,
+    /// Requests of this level accepted by `submit`.
+    pub enqueued: u64,
+    /// Requests of this level that took an active slot.
+    pub admitted: u64,
+    /// Sessions of this level that reached a terminal event (queued
+    /// deaths included, like the global `completed`).
+    pub completed: u64,
+    /// Requests of this level shed from the queue under overload.
+    pub shed: u64,
+    /// Submissions of this level rejected with
+    /// `SubmitError::QuotaExceeded` (level at its queue share).
+    pub quota_rejected: u64,
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -37,6 +66,15 @@ pub struct Metrics {
     /// (`SubmitError::QueueFull`) — sustained growth means the service
     /// is saturated and callers should back off.
     pub rejected: u64,
+    /// Submissions rejected because their priority level was at its
+    /// configured queue share (`SubmitError::QuotaExceeded`) — distinct
+    /// from `rejected`: the *level* is saturated, not the service.
+    pub quota_rejected: u64,
+    /// Per-priority-level counter slices (see [`PriorityCounters`]);
+    /// levels appear on first use and persist.  Mirrored into
+    /// [`Metrics::to_json`] under `per_priority` and summarized on the
+    /// report's `quota:` line.
+    pub per_priority: BTreeMap<i32, PriorityCounters>,
     /// Sessions reaped by client `cancel()` or stream drop, whether
     /// still queued or already active (partial tokens are returned with
     /// `FinishReason::Cancelled`).  Per *session*, like `completed`:
@@ -162,6 +200,11 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// The counter slice for one priority level, created on first use.
+    pub fn prio(&mut self, level: i32) -> &mut PriorityCounters {
+        self.per_priority.entry(level).or_default()
+    }
+
     /// Decode throughput over completed work (tokens/s of engine time).
     pub fn decode_tokens_per_sec(&self) -> f64 {
         if self.decode_seconds_total > 0.0 {
@@ -222,6 +265,22 @@ impl Metrics {
     pub fn report(&self) -> String {
         let (ttft_p50, ttft_p90, ttft_p99, ttft_max) = self.ttft_hist.summary_ms();
         let (itl_p50, itl_p90, itl_p99, itl_max) = self.inter_token_hist.summary_ms();
+        let quota_line = if self.per_priority.is_empty() {
+            format!("{} rejected over quota (no per-priority traffic yet)", self.quota_rejected)
+        } else {
+            let levels = self
+                .per_priority
+                .iter()
+                .map(|(lvl, p)| {
+                    format!(
+                        "p{lvl}: {} queued, {}/{}/{} enq/adm/done, {} shed, {} quota-rejected",
+                        p.queued, p.enqueued, p.admitted, p.completed, p.shed, p.quota_rejected
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("; ");
+            format!("{} rejected over quota; {levels}", self.quota_rejected)
+        };
         format!(
             "requests: {} enqueued / {} admitted, {} sessions completed\n\
              pressure: {} queued / {} active now, {} rejected (queue full), \
@@ -232,6 +291,7 @@ impl Metrics {
              prefill:  {:.3} s total ({} prompt tokens forwarded)\n\
              ttft:     {:.4} s mean (enqueue -> first token)\n\
              queueing: {:.4} s mean wait\n\
+             quota:    {}\n\
              latency:  ttft p50 {:.2} ms / p90 {:.2} / p99 {:.2} / max {:.2} ms\n\
              latency:  inter-token p50 {:.3} ms / p90 {:.3} / p99 {:.3} / max {:.3} ms\n\
              latency:  queue p50 {:.2} / p99 {:.2} ms; prefill-chunk p50 {:.2} / p99 {:.2} ms; \
@@ -261,6 +321,7 @@ impl Metrics {
             self.prompt_tokens_prefilled,
             self.mean_ttft_seconds(),
             self.mean_queue_seconds(),
+            quota_line,
             ttft_p50,
             ttft_p90,
             ttft_p99,
@@ -319,6 +380,7 @@ impl Metrics {
             .set("ttft_seconds_total", self.ttft_seconds_total)
             .set("clip_events", self.clip_events)
             .set("rejected", self.rejected)
+            .set("quota_rejected", self.quota_rejected)
             .set("cancelled", self.cancelled)
             .set("deadline_exceeded", self.deadline_exceeded)
             .set("prompt_tokens_prefilled", self.prompt_tokens_prefilled)
@@ -365,6 +427,21 @@ impl Metrics {
             .set("prefill_chunk", self.prefill_chunk_hist.to_json())
             .set("decode_cycle", self.decode_cycle_hist.to_json());
         j.set("latency", latency);
+        // per-priority slices keyed by the level's decimal string —
+        // what the HTTP load harness reads back to assert quota
+        // isolation end to end
+        let mut pp = Json::obj();
+        for (lvl, p) in &self.per_priority {
+            let mut o = Json::obj();
+            o.set("queued", p.queued)
+                .set("enqueued", p.enqueued)
+                .set("admitted", p.admitted)
+                .set("completed", p.completed)
+                .set("shed", p.shed)
+                .set("quota_rejected", p.quota_rejected);
+            pp.set(&lvl.to_string(), o);
+        }
+        j.set("per_priority", pp);
         j
     }
 }
@@ -474,6 +551,36 @@ mod tests {
         // inter-token values < 16 µs..100 µs: p99 bucket holds 100 µs
         let (lo, hi) = m.inter_token_hist.percentile_range_us(0.99);
         assert!(lo <= 100 && 100 < hi);
+    }
+
+    #[test]
+    fn report_and_json_carry_per_priority_slices() {
+        let mut m = Metrics { quota_rejected: 4, ..Default::default() };
+        *m.prio(5) = PriorityCounters {
+            queued: 1,
+            enqueued: 10,
+            admitted: 9,
+            completed: 8,
+            shed: 0,
+            quota_rejected: 0,
+        };
+        *m.prio(-1) = PriorityCounters {
+            queued: 2,
+            enqueued: 6,
+            admitted: 2,
+            completed: 2,
+            shed: 1,
+            quota_rejected: 4,
+        };
+        let r = m.report();
+        assert!(r.contains("quota:    4 rejected over quota"), "missing quota line:\n{r}");
+        assert!(r.contains("p-1: 2 queued, 6/2/2 enq/adm/done, 1 shed, 4 quota-rejected"), "{r}");
+        assert!(r.contains("p5: 1 queued, 10/9/8 enq/adm/done, 0 shed, 0 quota-rejected"), "{r}");
+        let back = crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(back.req("quota_rejected").unwrap().as_usize().unwrap(), 4);
+        let pp = back.req("per_priority").unwrap();
+        assert_eq!(pp.req("5").unwrap().req("admitted").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(pp.req("-1").unwrap().req("quota_rejected").unwrap().as_usize().unwrap(), 4);
     }
 
     #[test]

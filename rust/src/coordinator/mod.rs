@@ -199,6 +199,45 @@
 //! within 3% of the tracing-off configuration —
 //! `rust/benches/trace_overhead.rs` measures and (in CI) asserts it.
 //!
+//! # Network serving
+//!
+//! [`crate::net::Server`] puts this API on a TCP socket: a
+//! dependency-free (std::net) HTTP/1.1 front-end whose
+//! `POST /v1/generate` maps a JSON body onto [`GenRequest`] and streams
+//! the session's [`GenEvent`]s back as Server-Sent Events — one frame
+//! per event, in order, bit-identical (tokens and `seq_idx`) to the
+//! in-process stream (`rust/tests/http.rs`).
+//!
+//! * **Wire format.**  The request body is a JSON object: `prompt`
+//!   (array of token ids, or a string when the server carries an
+//!   encoder), `max_new_tokens`, and optionally `temperature`, `top_k`,
+//!   `seed`, `n_best`, `stop_token`, `redrive_budget`, `priority`,
+//!   `deadline_ms`.  The response is `Content-Type: text/event-stream`:
+//!   one `event: started|token|redriven|finished|error` frame per
+//!   [`GenEvent`], each with a `data:` JSON payload mirroring the
+//!   event's fields (`finished` carries the full [`GenResponse`], with
+//!   the reason as [`FinishReason::as_str`]).  The connection closes
+//!   after the last branch's terminal frame.
+//! * **Header contract.**  `X-Priority: <i32>` and
+//!   `X-Deadline-Ms: <u64>` override the body's `priority` /
+//!   `deadline_ms` — the transport-level knobs a gateway sets without
+//!   parsing the body.
+//! * **Error mapping.**  Malformed JSON or missing fields → `400`;
+//!   oversized body → `413`; unknown route → `404`; wrong method →
+//!   `405`.  Typed [`SubmitError`]s map to status + `Retry-After`:
+//!   [`SubmitError::QueueFull`] and [`SubmitError::QuotaExceeded`] →
+//!   `429`, [`SubmitError::ShutDown`] → `503`.  A client disconnect
+//!   mid-stream drops the server-side [`GenStream`], cancelling the
+//!   session at the next cycle boundary — slot freed, pinned snapshots
+//!   released, exactly as for an in-process drop.
+//! * **Quota semantics.**  [`CoordinatorConfig::priority_quotas`]
+//!   bounds each priority level's share of the admission queue; a
+//!   level at its share gets `429` while other levels keep admitting —
+//!   the isolation `rust/benches/serve_http.rs` floods and asserts
+//!   end to end.  `GET /metrics` serves [`Metrics::to_json`]
+//!   (including the per-priority slices) and `GET /trace` the
+//!   Chrome-trace export.
+//!
 //! * [`engine`]    — prefill/decode/fork over any [`EngineModel`]; owns
 //!   the prefix + decode-state cache and the fault policy above, and
 //!   records the model-side trace events (prefill chunks, first token,
@@ -219,7 +258,7 @@ pub use engine::{
     SessionPhase,
 };
 pub use journal::{FaultEvent, FaultJournal, FaultKind, FaultPhase, RecoveryAction};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, PriorityCounters};
 pub use scheduler::{Coordinator, CoordinatorConfig, GenStream, SubmitError};
 
 use std::time::Duration;
@@ -371,6 +410,23 @@ pub enum FinishReason {
     /// lowest priority (latest-submitted within the level).  Always
     /// zero tokens — shedding happens before any prefill work.
     Shed,
+}
+
+impl FinishReason {
+    /// Stable lowercase wire name — the `finish_reason` field of SSE
+    /// `finished` frames, the trace ring's terminal label, and the
+    /// bench JSON vocabulary all spell outcomes this way.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::NumericFault => "numeric_fault",
+            FinishReason::WorkerFailed => "worker_failed",
+            FinishReason::Shed => "shed",
+        }
+    }
 }
 
 /// Incremental progress of one streaming session, delivered through

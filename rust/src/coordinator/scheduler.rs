@@ -44,6 +44,10 @@
 //! Backpressure is explicit: [`Coordinator::submit`] reserves a slot in
 //! a queue bounded by [`CoordinatorConfig::max_queue`] and rejects with
 //! [`SubmitError::QueueFull`] instead of buffering without bound.
+//! Per-priority quotas ([`CoordinatorConfig::priority_quotas`]) bound
+//! each level's share of that queue separately, rejecting with
+//! [`SubmitError::QuotaExceeded`] so a low-priority flood saturates its
+//! own share, never the whole queue.
 //! Between reap and admission, an optional shed phase additionally
 //! drops the lowest-priority queued requests with
 //! [`super::FinishReason::Shed`] whenever the queue exceeds
@@ -56,7 +60,7 @@
 //! [`super::FinishReason::WorkerFailed`], rebuilds the engine view, and
 //! respawns the loop — no [`GenStream`] can hang on a dead worker.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -87,7 +91,7 @@ fn lock(m: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// maximum concurrently-active sessions (prefilling + decoding;
     /// every best-of-n branch counts while it lives)
@@ -134,6 +138,19 @@ pub struct CoordinatorConfig {
     /// `benches/trace_overhead.rs` pins the cost under 3% of serving
     /// throughput at the default `max_active`.
     pub trace_events: usize,
+    /// Per-priority admission quotas: `(priority level, max queued at
+    /// that level)`.  A level listed here rejects further submissions
+    /// with [`SubmitError::QuotaExceeded`] once that many of its
+    /// requests sit in the admission queue, *even while the global
+    /// `max_queue` has room* — so a low-priority flood can never
+    /// consume more than its configured share of the queue and starve
+    /// high-priority traffic out of admission.  Levels not listed are
+    /// bounded only by `max_queue`.  Quotas meter the *queued* phase
+    /// (submit → admit): once admitted, a session competes for
+    /// `max_active` slots on priority alone, and a supervisor redrive
+    /// re-entering the queue is exempt (its first life already paid
+    /// for admission).  Empty (the default) disables the mechanism.
+    pub priority_quotas: Vec<(i32, usize)>,
 }
 
 impl Default for CoordinatorConfig {
@@ -147,6 +164,7 @@ impl Default for CoordinatorConfig {
             shed_watermark: 0,
             backend: Backend::default(),
             trace_events: crate::trace::DEFAULT_TRACE_EVENTS,
+            priority_quotas: Vec::new(),
         }
     }
 }
@@ -158,6 +176,11 @@ pub enum SubmitError {
     /// The bounded admission queue is at [`CoordinatorConfig::max_queue`]:
     /// the service is saturated, back off and retry.
     QueueFull { limit: usize },
+    /// This request's priority level is at its configured
+    /// [`CoordinatorConfig::priority_quotas`] share of the queue — the
+    /// *level* is saturated even though the service as a whole may not
+    /// be.  Back off and retry (or resubmit at a higher priority).
+    QuotaExceeded { priority: i32, limit: usize },
     /// The coordinator has shut down; no worker will ever serve this.
     ShutDown,
 }
@@ -167,6 +190,9 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull { limit } => {
                 write!(f, "admission queue full ({limit} requests waiting)")
+            }
+            SubmitError::QuotaExceeded { priority, limit } => {
+                write!(f, "priority {priority} is at its queue quota ({limit} requests waiting)")
             }
             SubmitError::ShutDown => write!(f, "coordinator is shut down"),
         }
@@ -189,6 +215,67 @@ struct Job {
     /// streamed to the client, and admission resumes the session via
     /// [`Engine::resume_redriven`] instead of announcing a fresh one.
     redrive: Option<Redrive>,
+    /// Priority level this job holds a [`QuotaBook`] queued-count
+    /// reservation at — released exactly once, at whichever queue exit
+    /// the job takes (admission, reap, shed, or a failed enqueue).
+    /// `None` for supervisor redrives, which bypass admission quotas.
+    quota: Option<i32>,
+}
+
+/// Submit-side per-priority queue accounting backing
+/// [`CoordinatorConfig::priority_quotas`].  Shared by every submitter
+/// and the worker: `try_reserve` runs in [`Coordinator::submit`],
+/// `release` at each queue exit in the worker loop (and on a failed
+/// enqueue).  Levels without a configured limit are still counted —
+/// the live per-level depth feeds the per-priority metrics gauges.
+struct QuotaBook {
+    /// `(priority level, max queued at that level)` from config.
+    limits: Vec<(i32, usize)>,
+    /// Live submitted-but-not-admitted count per level.  Entries are
+    /// never removed (levels are few), so the metrics mirror also
+    /// drains levels back to 0 instead of dropping them.
+    queued: Mutex<BTreeMap<i32, usize>>,
+}
+
+impl QuotaBook {
+    fn new(limits: Vec<(i32, usize)>) -> QuotaBook {
+        QuotaBook { limits, queued: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Reserve one queued slot at `priority`, or `Err(limit)` when the
+    /// level is at its configured quota.
+    fn try_reserve(&self, priority: i32) -> std::result::Result<(), usize> {
+        let mut q = self.queued.lock().unwrap_or_else(PoisonError::into_inner);
+        let n = q.entry(priority).or_insert(0);
+        if let Some(&(_, limit)) = self.limits.iter().find(|&&(p, _)| p == priority) {
+            if *n >= limit {
+                return Err(limit);
+            }
+        }
+        *n += 1;
+        Ok(())
+    }
+
+    fn release(&self, priority: i32) {
+        let mut q = self.queued.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(n) = q.get_mut(&priority) {
+            *n = n.saturating_sub(1);
+        }
+    }
+
+    /// Release the reservation `job` carries, if any (redrives carry
+    /// none).  Call exactly once per queue exit.
+    fn release_job(&self, job: &Job) {
+        if let Some(p) = job.quota {
+            self.release(p);
+        }
+    }
+
+    /// Live queued depth per level, for the metrics gauge mirror.
+    fn snapshot(&self) -> Vec<(i32, usize)> {
+        let q = self.queued.lock().unwrap_or_else(PoisonError::into_inner);
+        q.iter().map(|(&p, &n)| (p, n)).collect()
+    }
 }
 
 /// Continuation record for a transparent redrive: everything the
@@ -411,6 +498,9 @@ pub struct Coordinator {
     /// [`Coordinator::export_trace`].  Disabled (a no-op handle) when
     /// [`CoordinatorConfig::trace_events`] is 0.
     tracer: Tracer,
+    /// Per-priority queue accounting shared with the worker — see
+    /// [`CoordinatorConfig::priority_quotas`].
+    quota: Arc<QuotaBook>,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -448,6 +538,10 @@ impl Coordinator {
         // admit (clients block forever while the worker spins); clamp
         // once so the submit-side mirror and the worker always agree
         cfg.max_active = cfg.max_active.max(1);
+        // the worker closure takes `cfg` by move (it is no longer Copy
+        // since priority_quotas); mirror what the submit side needs first
+        let (max_queue, max_active) = (cfg.max_queue.max(1), cfg.max_active);
+        let quota = Arc::new(QuotaBook::new(cfg.priority_quotas.clone()));
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let queue_depth = Arc::new(AtomicUsize::new(0));
@@ -457,6 +551,7 @@ impl Coordinator {
         let d2 = queue_depth.clone();
         let j2 = journal.clone();
         let t2 = tracer.clone();
+        let q2 = quota.clone();
         let worker = std::thread::spawn(move || {
             let mut engine = if cfg.state_cache_bytes > 0 {
                 Engine::with_cache(factory(), StateCacheConfig { max_bytes: cfg.state_cache_bytes })
@@ -482,7 +577,7 @@ impl Coordinator {
             let mut queue: VecDeque<Job> = VecDeque::new();
             loop {
                 let run = catch_unwind(AssertUnwindSafe(|| {
-                    worker_loop(&mut engine, &mut active, &mut queue, &rx, &cfg, &m2, &d2, &t2)
+                    worker_loop(&mut engine, &mut active, &mut queue, &rx, &cfg, &m2, &d2, &t2, &q2)
                 }));
                 if run.is_ok() {
                     return; // graceful shutdown (queue closed + drained)
@@ -594,6 +689,10 @@ impl Coordinator {
                         deadline_at,
                         events,
                         cancel,
+                        // a continuation is not a fresh admission — it
+                        // must not be quota-rejected out of its own
+                        // promised redrive
+                        quota: None,
                         redrive: Some(Redrive {
                             branch: sess.branch,
                             attempt: sess.redrive_attempt + 1,
@@ -621,11 +720,12 @@ impl Coordinator {
             tx: Some(tx),
             next_id: AtomicU64::new(1),
             queue_depth,
-            max_queue: cfg.max_queue.max(1),
-            max_active: cfg.max_active,
+            max_queue,
+            max_active,
             metrics,
             journal,
             tracer,
+            quota,
             worker: Some(worker),
         }
     }
@@ -693,6 +793,16 @@ impl Coordinator {
                 Err(now) => depth = now,
             }
         }
+        // per-priority quota: the level must also be under its
+        // configured queue share (see `CoordinatorConfig::priority_quotas`)
+        let priority = req.priority;
+        if let Err(limit) = self.quota.try_reserve(priority) {
+            self.queue_depth.fetch_sub(1, Ordering::AcqRel);
+            let mut m = lock(&self.metrics);
+            m.quota_rejected += 1;
+            m.prio(priority).quota_rejected += 1;
+            return Err(SubmitError::QuotaExceeded { priority, limit });
+        }
         // unique-id counter only — no ordering with anything else
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let n_best = req.n_best.clamp(1, self.max_active);
@@ -701,13 +811,26 @@ impl Coordinator {
         let deadline_at = req.deadline.and_then(|d| enqueued_at.checked_add(d));
         let (etx, erx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
-        let job =
-            Job { id, req, enqueued_at, deadline_at, events: etx, cancel: cancel.clone(), redrive: None };
+        let job = Job {
+            id,
+            req,
+            enqueued_at,
+            deadline_at,
+            events: etx,
+            cancel: cancel.clone(),
+            redrive: None,
+            quota: Some(priority),
+        };
         if tx.send(job).is_err() {
             self.queue_depth.fetch_sub(1, Ordering::AcqRel);
+            self.quota.release(priority);
             return Err(SubmitError::ShutDown);
         }
-        lock(&self.metrics).enqueued += 1;
+        {
+            let mut m = lock(&self.metrics);
+            m.enqueued += 1;
+            m.prio(priority).enqueued += 1;
+        }
         // the session's async trace span opens here; cycle is 0 because
         // the submit side cannot see the worker's cycle counter
         self.tracer.instant(id, 0, 0, TraceEventKind::Enqueue);
@@ -800,13 +923,7 @@ fn fault_outcome(f: SessionFault) -> Result<FinishReason> {
 /// ring's [`TraceEventKind::Terminal`] marker.
 fn finish_name(outcome: &Result<FinishReason>) -> &'static str {
     match outcome {
-        Ok(FinishReason::MaxTokens) => "max_tokens",
-        Ok(FinishReason::StopToken) => "stop_token",
-        Ok(FinishReason::Cancelled) => "cancelled",
-        Ok(FinishReason::DeadlineExceeded) => "deadline_exceeded",
-        Ok(FinishReason::NumericFault) => "numeric_fault",
-        Ok(FinishReason::WorkerFailed) => "worker_failed",
-        Ok(FinishReason::Shed) => "shed",
+        Ok(r) => r.as_str(),
         Err(_) => "error",
     }
 }
@@ -853,6 +970,7 @@ fn complete(
     {
         let mut m = lock(metrics);
         m.completed += 1;
+        m.prio(sess.req.priority).completed += 1;
         m.tokens_generated += sess.generated.len() as u64;
         m.decode_seconds_total += sess.decode_seconds;
         m.prefill_seconds_total += sess.prefill_seconds;
@@ -922,6 +1040,7 @@ fn worker_loop<M: EngineModel>(
     metrics: &Arc<Mutex<Metrics>>,
     queue_depth: &Arc<AtomicUsize>,
     tracer: &Tracer,
+    quota: &Arc<QuotaBook>,
 ) {
     loop {
         // scheduling-cycle counter: the `cycle` axis of fault-journal
@@ -968,9 +1087,11 @@ fn worker_loop<M: EngineModel>(
                 };
                 let job = queue.remove(i).expect("index in bounds");
                 queue_depth.fetch_sub(1, Ordering::AcqRel);
+                quota.release_job(&job);
                 {
                     let mut m = lock(metrics);
                     m.completed += 1;
+                    m.prio(job.req.priority).completed += 1;
                     match reason {
                         FinishReason::Cancelled => m.cancelled += 1,
                         _ => m.deadline_exceeded += 1,
@@ -1007,10 +1128,14 @@ fn worker_loop<M: EngineModel>(
             };
             let job = queue.remove(victim).expect("index in bounds");
             queue_depth.fetch_sub(1, Ordering::AcqRel);
+            quota.release_job(&job);
             {
                 let mut m = lock(metrics);
                 m.completed += 1;
                 m.shed += 1;
+                let p = m.prio(job.req.priority);
+                p.completed += 1;
+                p.shed += 1;
             }
             tracer.instant(
                 job.id,
@@ -1060,6 +1185,8 @@ fn worker_loop<M: EngineModel>(
             used += weight;
             let job = queue.remove(best).expect("index in bounds");
             queue_depth.fetch_sub(1, Ordering::AcqRel);
+            quota.release_job(&job);
+            let priority = job.req.priority;
             let queue_s = job.enqueued_at.elapsed().as_secs_f64();
             let mut sess = engine.admit(job.id, job.req, job.enqueued_at);
             match job.redrive {
@@ -1093,6 +1220,7 @@ fn worker_loop<M: EngineModel>(
                     {
                         let mut m = lock(metrics);
                         m.admitted += 1;
+                        m.prio(priority).admitted += 1;
                         m.queue_seconds_total += queue_s;
                         // same single accounting point as `admitted`, so
                         // the histogram's count stays equal to it — a
@@ -1308,6 +1436,11 @@ fn worker_loop<M: EngineModel>(
             }
             m.queue_depth = queue_depth.load(Ordering::Acquire) as u64;
             m.active_sessions = (active.len() - finished.len()) as u64;
+            // per-level queued gauges mirror the quota book (drained
+            // levels report 0 — the book keeps every level it has seen)
+            for (level, queued) in quota.snapshot() {
+                m.prio(level).queued = queued as u64;
+            }
         }
         tracer.span(t_maint, 0, 0, cycle, TraceEventKind::CyclePhase(CyclePhaseKind::Maintenance));
         // 8. complete (reverse order keeps indices valid)
@@ -1339,6 +1472,37 @@ mod tests {
         assert_eq!(r.branch, 0);
         assert!(r.ttft_seconds > 0.0, "ttft must be recorded");
         assert!(r.ttft_seconds <= r.queue_seconds + r.prefill_seconds + r.decode_seconds + 1.0);
+    }
+
+    #[test]
+    fn priority_quota_rejects_and_releases() {
+        let c = Coordinator::spawn(
+            test_model(2, 32, 64, 50),
+            CoordinatorConfig {
+                max_active: 1,
+                priority_quotas: vec![(-1, 0), (0, 1)],
+                ..Default::default()
+            },
+        );
+        // a level with quota 0 can never queue, independent of global room
+        let err = c
+            .submit(GenRequest::builder(vec![1, 2], 4).priority(-1).build())
+            .err()
+            .expect("quota 0 must reject");
+        assert_eq!(err, SubmitError::QuotaExceeded { priority: -1, limit: 0 });
+        // admission releases the reservation: sequential requests at a
+        // quota-1 level all pass because each one leaves the queue
+        // before the next submits
+        for _ in 0..3 {
+            let r = c.generate(GenRequest::builder(vec![1, 2], 4).priority(0).build()).unwrap();
+            assert_eq!(r.tokens.len(), 4);
+        }
+        let m = c.metrics.lock().unwrap().clone();
+        assert_eq!(m.quota_rejected, 1);
+        assert_eq!(m.per_priority[&-1].quota_rejected, 1);
+        let p0 = &m.per_priority[&0];
+        assert_eq!((p0.enqueued, p0.admitted, p0.completed), (3, 3, 3));
+        c.shutdown();
     }
 
     #[test]

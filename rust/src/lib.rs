@@ -45,6 +45,14 @@
 //!   RTX 3090, A100) for Figs 7–8.
 //! * [`eval`]        — perplexity + the seven synthetic benchmark suites
 //!   standing in for LAMBADA/HellaSwag/ARC/SciQ/PIQA/Winogrande.
+//! * [`net`]         — network serving tier: dependency-free HTTP/1.1 +
+//!   SSE front-end over the coordinator (`POST /v1/generate` streams
+//!   token events; `/metrics` and `/trace` expose observability), with
+//!   a bounded connection-handler pool and transport-level shedding.
+//! * [`loadgen`]     — open-loop realistic-traffic load harness: Poisson
+//!   and bursty arrivals, lognormal prompt lengths, Zipf-shared system
+//!   prompts, best-of-n and early-cancel mixes driven over real TCP
+//!   sockets, reporting TTFT/inter-token tails and goodput-under-SLO.
 //! * [`harness`]     — regenerates every paper table and figure.
 
 pub mod arith;
@@ -54,7 +62,9 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod harness;
+pub mod loadgen;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

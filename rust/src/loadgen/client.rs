@@ -1,0 +1,171 @@
+//! Minimal blocking HTTP/SSE client — just enough protocol to drive
+//! [`crate::net::Server`] over a real TCP socket from the load harness
+//! and the integration tests.  Deliberately mirrors the server's
+//! subset: one request per connection, close-delimited bodies.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::util::json::{parse_bytes, Json};
+use crate::Result;
+
+/// One received SSE frame, stamped at arrival (the server flushes per
+/// frame, so `at` is a faithful per-event receive time).
+#[derive(Clone, Debug)]
+pub struct SseEvent {
+    pub event: String,
+    pub data: Json,
+    pub at: Instant,
+}
+
+/// An in-flight `POST /v1/generate`.  Dropping it mid-stream closes
+/// the socket, which the server turns into a session cancel — the
+/// harness's early-cancel mix is literally `drop(conn)`.
+pub struct GenConnection {
+    status: u16,
+    headers: BTreeMap<String, String>,
+    reader: BufReader<TcpStream>,
+}
+
+/// POST `body` to `/v1/generate` with optional extra headers and read
+/// the response head.  Status 200 means an SSE stream follows
+/// ([`GenConnection::next_event`]); anything else carries a JSON error
+/// body ([`GenConnection::read_body_json`]).
+pub fn post_generate(
+    addr: SocketAddr,
+    body: &Json,
+    headers: &[(&str, String)],
+) -> Result<GenConnection> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body_bytes = body.to_string().into_bytes();
+    let mut head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        body_bytes.len()
+    );
+    for (name, value) in headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&body_bytes)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, headers) = read_response_head(&mut reader)?;
+    Ok(GenConnection { status, headers, reader })
+}
+
+impl GenConnection {
+    pub fn status(&self) -> u16 {
+        self.status
+    }
+
+    /// Response header, case-insensitive.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+
+    /// Read the rest of the (close-delimited) body and parse it as
+    /// JSON — for non-200 error responses.
+    pub fn read_body_json(mut self) -> Result<Json> {
+        let mut body = Vec::new();
+        self.reader.read_to_end(&mut body)?;
+        parse_bytes(&body)
+    }
+
+    /// The next SSE frame, or `None` once the server closes the stream
+    /// (or the frame is unreadable — either way the stream is over).
+    pub fn next_event(&mut self) -> Option<SseEvent> {
+        let mut event = String::new();
+        let mut data: Option<String> = None;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match self.reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return None,
+                Ok(_) => {}
+            }
+            let t = line.trim_end_matches(['\r', '\n']);
+            if t.is_empty() {
+                if let Some(payload) = data.take() {
+                    let at = Instant::now();
+                    let data = crate::util::json::parse(&payload).ok()?;
+                    return Some(SseEvent { event: std::mem::take(&mut event), data, at });
+                }
+                continue; // stray blank line before any field
+            }
+            if let Some(v) = t.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = t.strip_prefix("data: ") {
+                data = Some(v.to_string());
+            }
+        }
+    }
+}
+
+/// GET `path` and parse the JSON body — the `/metrics` and `/trace`
+/// readback used by the harness and CI assertions.
+pub fn get_json(addr: SocketAddr, path: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, _) = read_response_head(&mut reader)?;
+    let mut body = Vec::new();
+    reader.read_to_end(&mut body)?;
+    if status != 200 {
+        bail!("GET {path} -> {status}: {}", String::from_utf8_lossy(&body));
+    }
+    parse_bytes(&body)
+}
+
+/// Write raw request bytes and read back (status, headers, body) —
+/// lets tests exercise malformed requests the typed helpers cannot
+/// produce (bad routes, oversized bodies, invalid JSON).
+pub fn raw_request(
+    addr: SocketAddr,
+    request: &[u8],
+) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(request)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, headers) = read_response_head(&mut reader)?;
+    let mut body = Vec::new();
+    reader.read_to_end(&mut body)?;
+    Ok((status, headers, body))
+}
+
+fn read_response_head(
+    r: &mut BufReader<TcpStream>,
+) -> Result<(u16, BTreeMap<String, String>)> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .with_context(|| format!("malformed status line {line:?}"))?
+        .parse()
+        .with_context(|| format!("malformed status line {line:?}"))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("EOF inside response headers");
+        }
+        let t = line.trim_end_matches(['\r', '\n']);
+        if t.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = t.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    Ok((status, headers))
+}

@@ -1,0 +1,482 @@
+//! Open-loop realistic-traffic load harness for the HTTP serving tier.
+//!
+//! **Open-loop** means arrival times are drawn up front from the
+//! traffic model and requests fire at those times regardless of how
+//! the server is coping — unlike a closed loop (fixed client count,
+//! next request after the last response), which self-throttles under
+//! overload and hides queueing collapse.  Tail latencies and
+//! goodput-under-SLO are only honest under open-loop load.
+//!
+//! The traffic model, all driven by the crate's deterministic
+//! [`Rng64`]:
+//!
+//! * **Arrivals** — Poisson (exponential inter-arrival, `-ln(U)/λ`),
+//!   optionally modulated by an on/off [`Burst`] square wave.
+//! * **Prompt lengths** — lognormal (`exp(μ + σ·N(0,1))`), matching
+//!   the heavy right tail of real prompt-length distributions.
+//! * **Prefix sharing** — each prompt starts with a system prompt
+//!   drawn Zipf(`s`) from a fixed pool, so a few prefixes dominate and
+//!   the prefix cache has something realistic to hit on.
+//! * **Request mixes** — a fraction of best-of-n fan-out requests and
+//!   a fraction of early client cancels (the connection is dropped
+//!   after a few tokens, exercising disconnect-reaping end to end).
+//!
+//! [`run_open_loop`] drives one traffic class against a live server
+//! address and returns a [`LoadReport`] of TTFT / inter-token tails
+//! and goodput-under-SLO.  Multi-class experiments (e.g. the quota
+//! isolation bench) run one `run_open_loop` per class on separate
+//! threads against the same address.
+
+pub mod client;
+
+pub use client::{get_json, post_generate, raw_request, GenConnection, SseEvent};
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::Rng64;
+
+/// On/off rate modulation: within each `period_s`, the first
+/// `duty` fraction runs at `base_rate * peak`, the rest at
+/// `base_rate / peak` — mean rate stays near the base while the
+/// harness alternates overload bursts with quiet valleys.
+#[derive(Clone, Copy, Debug)]
+pub struct Burst {
+    pub period_s: f64,
+    /// Fraction of the period in the high-rate phase, in (0, 1).
+    pub duty: f64,
+    /// Rate multiplier of the high phase (and divisor of the low one).
+    pub peak: f64,
+}
+
+/// One traffic class.  Defaults are sized for the tiny test model —
+/// benches override what they sweep.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Mean arrival rate λ (requests/second).
+    pub arrivals_per_sec: f64,
+    pub burst: Option<Burst>,
+    /// Lognormal ln-space mean of the unique prompt-suffix length.
+    pub prompt_len_mu: f64,
+    pub prompt_len_sigma: f64,
+    pub max_prompt_len: usize,
+    /// Shared system-prompt pool size (Zipf-distributed pick).
+    pub system_prompts: usize,
+    pub system_prompt_len: usize,
+    /// Zipf exponent; larger = more mass on the top prefixes.
+    pub zipf_s: f64,
+    /// Token ids are drawn uniformly below this.
+    pub vocab: u32,
+    pub max_new_tokens: usize,
+    /// Fraction of requests submitted as best-of-`n_best` fan-outs.
+    pub best_of_frac: f64,
+    pub n_best: usize,
+    /// Fraction of requests whose client disconnects mid-stream.
+    pub cancel_frac: f64,
+    /// How many token events a cancelling client reads first.
+    pub cancel_after_tokens: usize,
+    /// Sent as `X-Priority` on every request of this class.
+    pub priority: i32,
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> TrafficConfig {
+        TrafficConfig {
+            seed: 0x1A0D,
+            n_requests: 32,
+            arrivals_per_sec: 50.0,
+            burst: None,
+            prompt_len_mu: 2.3,
+            prompt_len_sigma: 0.7,
+            max_prompt_len: 48,
+            system_prompts: 8,
+            system_prompt_len: 12,
+            zipf_s: 1.1,
+            vocab: 50,
+            max_new_tokens: 8,
+            best_of_frac: 0.0,
+            n_best: 2,
+            cancel_frac: 0.0,
+            cancel_after_tokens: 2,
+            priority: 0,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Service-level objective the goodput figure is measured against.
+#[derive(Clone, Copy, Debug)]
+pub struct Slo {
+    /// A request is "good" only if its TTFT is at or under this.
+    pub ttft_ms: f64,
+}
+
+/// Aggregated outcome of one [`run_open_loop`] traffic class.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub submitted: usize,
+    /// Got at least one terminal `finished` frame.
+    pub completed: usize,
+    /// Completions whose every branch finished `max_tokens`/`stop_token`
+    /// (not shed, not deadline-expired, not faulted).
+    pub completed_ok: usize,
+    /// 429/503 at submission.
+    pub rejected: usize,
+    /// Transport failures and unexpected statuses.
+    pub errors: usize,
+    /// Streams the harness dropped on purpose (cancel mix).
+    pub client_cancelled: usize,
+    pub tokens_received: usize,
+    /// Sorted seconds-based samples (milliseconds), ready for percentiles.
+    pub ttft_ms: Vec<f64>,
+    pub inter_token_ms: Vec<f64>,
+    pub wall_seconds: f64,
+    /// `completed_ok` requests that also met the TTFT SLO.
+    pub slo_met: usize,
+    /// `slo_met / wall_seconds` — completions-per-second that a client
+    /// under the SLO actually experienced as served.
+    pub goodput_rps: f64,
+}
+
+impl LoadReport {
+    pub fn ttft_p50(&self) -> f64 {
+        percentile(&self.ttft_ms, 0.50)
+    }
+
+    pub fn ttft_p99(&self) -> f64 {
+        percentile(&self.ttft_ms, 0.99)
+    }
+
+    pub fn inter_token_p50(&self) -> f64 {
+        percentile(&self.inter_token_ms, 0.50)
+    }
+
+    pub fn inter_token_p99(&self) -> f64 {
+        percentile(&self.inter_token_ms, 0.99)
+    }
+
+    /// Flat JSON for bench reports (no raw sample arrays).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("completed_ok", self.completed_ok)
+            .set("rejected", self.rejected)
+            .set("errors", self.errors)
+            .set("client_cancelled", self.client_cancelled)
+            .set("tokens_received", self.tokens_received)
+            .set("ttft_p50_ms", self.ttft_p50())
+            .set("ttft_p99_ms", self.ttft_p99())
+            .set("inter_token_p50_ms", self.inter_token_p50())
+            .set("inter_token_p99_ms", self.inter_token_p99())
+            .set("wall_seconds", self.wall_seconds)
+            .set("slo_met", self.slo_met)
+            .set("goodput_rps", self.goodput_rps);
+        j
+    }
+}
+
+/// Floor-rank percentile over a sorted slice; NaN when empty (the JSON
+/// writer serializes non-finite as `null`, so empty cells stay visible
+/// in reports instead of faking a 0).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
+    sorted[idx]
+}
+
+/// Draw the arrival-time offsets (seconds from harness start) for one
+/// class.  Pure function of the config — the schedule is fixed before
+/// any request fires, which is what makes the loop open.
+pub fn arrival_offsets(cfg: &TrafficConfig, rng: &mut Rng64) -> Vec<f64> {
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for _ in 0..cfg.n_requests {
+        let rate = match &cfg.burst {
+            None => cfg.arrivals_per_sec,
+            Some(b) => {
+                let phase = (t / b.period_s.max(1e-9)).fract();
+                if phase < b.duty {
+                    cfg.arrivals_per_sec * b.peak
+                } else {
+                    cfg.arrivals_per_sec / b.peak.max(1e-9)
+                }
+            }
+        };
+        // exponential inter-arrival: -ln(U)/λ
+        t += -(rng.next_f64().max(1e-12)).ln() / rate.max(1e-9);
+        out.push(t);
+    }
+    out
+}
+
+/// Inverse-CDF Zipf sample: rank `1..=n` with weight `1/rank^s`.
+pub fn zipf_rank(rng: &mut Rng64, cdf: &[f64]) -> usize {
+    let u = rng.next_f64() * cdf.last().copied().unwrap_or(1.0);
+    match cdf.iter().position(|&c| u < c) {
+        Some(i) => i + 1,
+        None => cdf.len(),
+    }
+}
+
+/// Cumulative (unnormalised) Zipf weights for [`zipf_rank`].
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    (1..=n.max(1))
+        .map(|r| {
+            acc += (r as f64).powf(-s);
+            acc
+        })
+        .collect()
+}
+
+/// Lognormal prompt-suffix length, clamped to `1..=max`.
+fn lognormal_len(rng: &mut Rng64, mu: f64, sigma: f64, max: usize) -> usize {
+    let len = (mu + sigma * rng.normal()).exp().round() as i64;
+    (len.max(1) as usize).min(max.max(1))
+}
+
+/// Everything one request thread needs, precomputed deterministically.
+struct RequestSpec {
+    start_s: f64,
+    prompt: Vec<u32>,
+    n_best: usize,
+    cancel_after: Option<usize>,
+    priority: i32,
+    deadline_ms: Option<u64>,
+    max_new_tokens: usize,
+}
+
+fn build_specs(cfg: &TrafficConfig) -> Vec<RequestSpec> {
+    let mut rng = Rng64::new(cfg.seed);
+    let offsets = arrival_offsets(cfg, &mut rng);
+    let cdf = zipf_cdf(cfg.system_prompts, cfg.zipf_s);
+    offsets
+        .into_iter()
+        .map(|start_s| {
+            // shared system prefix: deterministic tokens per pool rank,
+            // so equal ranks produce byte-identical prefixes to cache on
+            let rank = zipf_rank(&mut rng, &cdf) as u32;
+            let mut prompt: Vec<u32> = (0..cfg.system_prompt_len as u32)
+                .map(|i| (rank.wrapping_mul(2654435761).wrapping_add(i)) % cfg.vocab.max(1))
+                .collect();
+            let suffix = lognormal_len(&mut rng, cfg.prompt_len_mu, cfg.prompt_len_sigma, cfg.max_prompt_len);
+            prompt.extend((0..suffix).map(|_| (rng.next_u64() % cfg.vocab.max(1) as u64) as u32));
+            let n_best = if rng.next_f64() < cfg.best_of_frac { cfg.n_best.max(1) } else { 1 };
+            let cancel_after =
+                (rng.next_f64() < cfg.cancel_frac).then_some(cfg.cancel_after_tokens.max(1));
+            RequestSpec {
+                start_s,
+                prompt,
+                n_best,
+                cancel_after,
+                priority: cfg.priority,
+                deadline_ms: cfg.deadline_ms,
+                max_new_tokens: cfg.max_new_tokens,
+            }
+        })
+        .collect()
+}
+
+#[derive(Default)]
+struct Outcome {
+    status: u16,
+    ttft_s: Option<f64>,
+    gaps_s: Vec<f64>,
+    tokens: usize,
+    finished: bool,
+    all_branches_ok: bool,
+    cancelled: bool,
+}
+
+fn run_request(addr: SocketAddr, spec: &RequestSpec, t0: Instant) -> Outcome {
+    let elapsed = t0.elapsed().as_secs_f64();
+    if spec.start_s > elapsed {
+        std::thread::sleep(Duration::from_secs_f64(spec.start_s - elapsed));
+    }
+    let mut body = Json::obj();
+    body.set(
+        "prompt",
+        Json::Arr(spec.prompt.iter().map(|&t| Json::from(t as u64)).collect()),
+    )
+    .set("max_new_tokens", spec.max_new_tokens);
+    if spec.n_best > 1 {
+        body.set("n_best", spec.n_best);
+    }
+    if let Some(ms) = spec.deadline_ms {
+        body.set("deadline_ms", ms);
+    }
+    // priority rides the header, exercising the override path every time
+    let headers = [("X-Priority", spec.priority.to_string())];
+    let submit_at = Instant::now();
+    let mut conn = match post_generate(addr, &body, &headers) {
+        Ok(c) => c,
+        Err(_) => return Outcome::default(), // status 0 = transport error
+    };
+    let mut out = Outcome { status: conn.status(), all_branches_ok: true, ..Outcome::default() };
+    if out.status != 200 {
+        return out;
+    }
+    let mut last_token_at: Option<Instant> = None;
+    while let Some(ev) = conn.next_event() {
+        match ev.event.as_str() {
+            "token" => {
+                out.tokens += 1;
+                match last_token_at {
+                    None => out.ttft_s = Some(ev.at.duration_since(submit_at).as_secs_f64()),
+                    Some(prev) => out.gaps_s.push(ev.at.duration_since(prev).as_secs_f64()),
+                }
+                last_token_at = Some(ev.at);
+                if spec.cancel_after == Some(out.tokens) {
+                    out.cancelled = true;
+                    return out; // dropping `conn` closes the socket mid-stream
+                }
+            }
+            "finished" => {
+                out.finished = true;
+                let ok = matches!(
+                    ev.data.get("finish_reason").and_then(|r| r.as_str().ok()),
+                    Some("max_tokens" | "stop_token")
+                );
+                out.all_branches_ok &= ok;
+            }
+            "error" => out.all_branches_ok = false,
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Fire one traffic class at `addr` on its precomputed open-loop
+/// schedule (one thread per request, sleeping until its arrival time)
+/// and aggregate the outcomes.
+pub fn run_open_loop(addr: SocketAddr, cfg: &TrafficConfig, slo: &Slo) -> LoadReport {
+    let specs = build_specs(cfg);
+    let t0 = Instant::now();
+    let handles: Vec<_> = specs
+        .into_iter()
+        .map(|spec| std::thread::spawn(move || run_request(addr, &spec, t0)))
+        .collect();
+    let outcomes: Vec<Outcome> = handles
+        .into_iter()
+        .map(|h| h.join().unwrap_or_default())
+        .collect();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let mut report = LoadReport { submitted: outcomes.len(), wall_seconds: wall, ..LoadReport::default() };
+    for o in &outcomes {
+        report.tokens_received += o.tokens;
+        if o.cancelled {
+            report.client_cancelled += 1;
+        } else if o.finished {
+            report.completed += 1;
+            let ok = o.all_branches_ok;
+            if ok {
+                report.completed_ok += 1;
+            }
+            if let Some(ttft) = o.ttft_s {
+                if ok && ttft * 1e3 <= slo.ttft_ms {
+                    report.slo_met += 1;
+                }
+            }
+        } else if matches!(o.status, 429 | 503) {
+            report.rejected += 1;
+        } else {
+            report.errors += 1;
+        }
+        if let Some(ttft) = o.ttft_s {
+            report.ttft_ms.push(ttft * 1e3);
+        }
+        report.inter_token_ms.extend(o.gaps_s.iter().map(|g| g * 1e3));
+    }
+    report.ttft_ms.sort_by(|a, b| a.total_cmp(b));
+    report.inter_token_ms.sort_by(|a, b| a.total_cmp(b));
+    report.goodput_rps = report.slo_met as f64 / wall;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_deterministic_and_monotone() {
+        let cfg = TrafficConfig { n_requests: 200, arrivals_per_sec: 100.0, ..TrafficConfig::default() };
+        let a = arrival_offsets(&cfg, &mut Rng64::new(9));
+        let b = arrival_offsets(&cfg, &mut Rng64::new(9));
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[1] > w[0]), "offsets strictly increase");
+        // mean inter-arrival should be near 1/λ = 10ms
+        let mean = a.last().unwrap() / a.len() as f64;
+        assert!((0.005..0.02).contains(&mean), "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn burst_compresses_on_phase_arrivals() {
+        let burst = Burst { period_s: 1.0, duty: 0.5, peak: 10.0 };
+        let cfg = TrafficConfig {
+            n_requests: 300,
+            arrivals_per_sec: 20.0,
+            burst: Some(burst),
+            ..TrafficConfig::default()
+        };
+        let offsets = arrival_offsets(&cfg, &mut Rng64::new(3));
+        let (mut on, mut off) = (0usize, 0usize);
+        for t in &offsets {
+            if t.fract() < burst.duty {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        assert!(on > off * 4, "bursty arrivals cluster in the on-phase: {on} vs {off}");
+    }
+
+    #[test]
+    fn zipf_rank_one_dominates() {
+        let cdf = zipf_cdf(16, 1.2);
+        let mut rng = Rng64::new(5);
+        let mut counts = [0usize; 16];
+        for _ in 0..4000 {
+            counts[zipf_rank(&mut rng, &cdf) - 1] += 1;
+        }
+        assert!(counts[0] > counts[7] * 4, "rank 1 ({}) >> rank 8 ({})", counts[0], counts[7]);
+        assert!(counts.iter().all(|&c| c > 0), "every rank appears");
+    }
+
+    #[test]
+    fn specs_reuse_system_prefixes_and_bound_lengths() {
+        let cfg = TrafficConfig { n_requests: 64, cancel_frac: 0.25, best_of_frac: 0.25, ..TrafficConfig::default() };
+        let specs = build_specs(&cfg);
+        assert_eq!(specs.len(), 64);
+        let mut prefixes = std::collections::BTreeSet::new();
+        for s in &specs {
+            assert!(s.prompt.len() <= cfg.system_prompt_len + cfg.max_prompt_len);
+            assert!(s.prompt.len() > cfg.system_prompt_len);
+            assert!(s.prompt.iter().all(|&t| t < cfg.vocab));
+            prefixes.insert(s.prompt[..cfg.system_prompt_len].to_vec());
+        }
+        assert!(
+            prefixes.len() <= cfg.system_prompts,
+            "only {} distinct system prefixes possible, saw {}",
+            cfg.system_prompts,
+            prefixes.len()
+        );
+        assert!(prefixes.len() > 1, "Zipf pool actually varies");
+        assert!(specs.iter().any(|s| s.cancel_after.is_some()));
+        assert!(specs.iter().any(|s| s.n_best > 1));
+    }
+
+    #[test]
+    fn percentile_floor_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 0.99), 3.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

@@ -1,0 +1,299 @@
+//! Minimal HTTP/1.1 primitives for the serving front-end — request
+//! reading (request line + headers + `Content-Length` body, all
+//! bounded), response writing (fixed JSON bodies and SSE streams), and
+//! the typed status error everything in the router maps onto.
+//!
+//! Deliberately not a general HTTP implementation: one request per
+//! connection, `Connection: close` on every response (so SSE bodies
+//! are close-delimited and need no chunked encoding), no keep-alive,
+//! no chunked *requests*, no TLS.  That subset is exactly what the
+//! load harness and a curl client need, with zero dependencies beyond
+//! `std::net`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use crate::util::json::Json;
+
+/// Cap on the request line + headers combined — a client that streams
+/// an unbounded header section is cut off with `431`-ish failure (we
+/// report 400) instead of growing a String without bound.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// One parsed request.  Header names are lowercased (HTTP headers are
+/// case-insensitive); values keep their bytes minus surrounding
+/// whitespace.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+}
+
+/// Typed failure while reading, parsing, or routing a request:
+/// `status` goes on the status line, `message` into the JSON error
+/// body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.status, status_text(self.status), self.message)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Reason phrase for the status codes this tier emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Read one request off the stream.  `Ok(None)` is a clean EOF before
+/// any bytes (client connected and left) — not an error, nothing to
+/// answer.  `Err` carries the status the caller should write back
+/// (400 malformed, 413 over `max_body`).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+) -> std::result::Result<Option<Request>, HttpError> {
+    let mut head_bytes = 0usize;
+    let mut line = String::new();
+    // request line; tolerate one leading empty line (RFC 7230 §3.5)
+    let request_line = loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) => return Ok(None),
+            Ok(n) => head_bytes += n,
+            Err(e) => return Err(HttpError::new(400, format!("reading request line: {e}"))),
+        }
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(HttpError::new(400, "request head too large"));
+        }
+        let t = line.trim_end_matches(['\r', '\n']);
+        if !t.is_empty() {
+            break t.to_string();
+        }
+    };
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => return Err(HttpError::new(400, format!("malformed request line {request_line:?}"))),
+    };
+    let _ = version;
+    let mut headers = BTreeMap::new();
+    loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) => return Err(HttpError::new(400, "EOF inside headers")),
+            Ok(n) => head_bytes += n,
+            Err(e) => return Err(HttpError::new(400, format!("reading headers: {e}"))),
+        }
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err(HttpError::new(400, "request head too large"));
+        }
+        let t = line.trim_end_matches(['\r', '\n']);
+        if t.is_empty() {
+            break;
+        }
+        let Some((name, value)) = t.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header {t:?}")));
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    // body: Content-Length only (no chunked requests in this subset)
+    let body = match headers.get("content-length") {
+        None => Vec::new(),
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| HttpError::new(400, format!("bad Content-Length {v:?}")))?;
+            if n > max_body {
+                return Err(HttpError::new(
+                    413,
+                    format!("body is {n} bytes, limit {max_body}"),
+                ));
+            }
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)
+                .map_err(|e| HttpError::new(400, format!("reading {n}-byte body: {e}")))?;
+            body
+        }
+    };
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+/// Write a complete response.  Every response closes the connection
+/// (one request per connection keeps the server stateless per socket
+/// and makes SSE bodies close-delimited).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len()
+    )?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write `e` as a JSON error response.  Backpressure statuses (429 /
+/// 503) carry `Retry-After` so well-behaved clients pace themselves.
+pub fn write_error(w: &mut impl Write, e: &HttpError) -> std::io::Result<()> {
+    let mut body = Json::obj();
+    body.set("error", e.message.as_str()).set("status", e.status as u64);
+    let extra: &[(&str, &str)] =
+        if matches!(e.status, 429 | 503) { &[("Retry-After", "1")] } else { &[] };
+    write_response(w, e.status, "application/json", extra, body.to_string().as_bytes())
+}
+
+/// Write a 200 with a JSON body.
+pub fn write_json(w: &mut impl Write, body: &Json) -> std::io::Result<()> {
+    write_response(w, 200, "application/json", &[], body.to_string().as_bytes())
+}
+
+/// Open an SSE response: after this, the body is a sequence of
+/// [`write_sse_event`] frames until the connection closes.
+pub fn write_sse_headers(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One SSE frame: `event: <name>` + a single `data:` line.  The JSON
+/// writer escapes every control character (see `util::json`), so the
+/// payload can never contain a raw newline that would break framing —
+/// that guarantee is what lets `data` stay a single line.  Flushes per
+/// frame: a token event must reach the client when it is committed,
+/// not when a buffer happens to fill.
+pub fn write_sse_event(w: &mut impl Write, event: &str, data: &Json) -> std::io::Result<()> {
+    write!(w, "event: {event}\ndata: {}\n\n", data.to_string())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn req(text: &str) -> std::result::Result<Option<Request>, HttpError> {
+        read_request(&mut BufReader::new(text.as_bytes()), 1024)
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let r = req("POST /v1/generate HTTP/1.1\r\nHost: x\r\nX-Priority: 3\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/generate");
+        assert_eq!(r.header("x-priority"), Some("3"));
+        assert_eq!(r.header("X-Priority"), Some("3"), "lookup is case-insensitive");
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(req("").unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let e = req("POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 413);
+    }
+
+    #[test]
+    fn garbage_is_400() {
+        for bad in [
+            "nonsense\r\n\r\n",
+            "GET /\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: zero\r\n\r\n",
+            "POST / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+        ] {
+            let e = req(bad).unwrap_err();
+            assert_eq!(e.status, 400, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn unbounded_head_is_rejected() {
+        let mut text = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..2000 {
+            text.push_str(&format!("X-Filler-{i}: aaaaaaaaaaaaaaaa\r\n"));
+        }
+        text.push_str("\r\n");
+        let e = req(&text).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.message.contains("too large"));
+    }
+
+    #[test]
+    fn sse_frame_shape() {
+        let mut out = Vec::new();
+        let mut data = Json::obj();
+        data.set("token", 7u64).set("text", "hi\nthere");
+        write_sse_event(&mut out, "token", &data).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("event: token\ndata: {"));
+        assert!(s.ends_with("\n\n"));
+        // exactly one blank-line frame terminator: the escaped \n in the
+        // payload must NOT have produced a raw newline
+        assert_eq!(s.matches('\n').count(), 3, "{s:?}");
+    }
+
+    #[test]
+    fn error_responses_carry_retry_after_on_backpressure() {
+        let mut out = Vec::new();
+        write_error(&mut out, &HttpError::new(429, "queue full")).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        let mut out = Vec::new();
+        write_error(&mut out, &HttpError::new(400, "nope")).unwrap();
+        assert!(!String::from_utf8(out).unwrap().contains("Retry-After"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Network serving tier: a dependency-free HTTP/1.1 + SSE front-end
+//! over the in-process [`crate::coordinator::Coordinator`].
+//!
+//! [`Server::bind`] runs an accept loop with a bounded handler pool;
+//! `POST /v1/generate` streams [`crate::coordinator::GenEvent`]s as
+//! SSE frames, `GET /metrics` and `GET /trace` expose the
+//! coordinator's observability surfaces.  The full wire contract
+//! (routes, body fields, header overrides, status mapping, quota
+//! semantics) lives in the coordinator module docs under "Network
+//! serving"; the load harness that drives this tier over real sockets
+//! is [`crate::loadgen`].
+//!
+//! Built on `std::net` only — no async runtime, no HTTP crate.  One
+//! thread per in-flight connection, which matches the coordinator's
+//! scale (tens of concurrent sessions, admission-bounded), keeps
+//! cancellation trivial (client disconnect → write error → `GenStream`
+//! drop → session reaped), and adds nothing to the dependency graph.
+
+pub mod http;
+pub mod server;
+
+pub use http::{HttpError, Request};
+pub use server::{parse_gen_request, Encoder, Server, ServerConfig};

@@ -1,0 +1,377 @@
+//! The TCP serving tier: an accept loop feeding a bounded
+//! connection-handler pool, a three-route router, and the
+//! request-body → [`GenRequest`] translation.
+//!
+//! Threading model.  `Server::bind` spawns one accept thread plus
+//! `handlers` worker threads.  Accepted sockets flow through a
+//! `sync_channel(backlog)`: when every handler is busy and the backlog
+//! is full, the accept thread answers `503` inline and closes — the
+//! transport sheds load instead of queueing connections invisibly,
+//! mirroring the coordinator's bounded-admission-queue philosophy.
+//!
+//! Cancellation.  A streaming handler owns the session's
+//! [`crate::coordinator::GenStream`]; when the client disconnects, the next SSE write
+//! fails with `BrokenPipe` (Rust ignores SIGPIPE), the handler returns,
+//! and dropping the stream cancels the session at the next cycle
+//! boundary — active slot and prefix-cache pins are reclaimed without
+//! any server-side bookkeeping.
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, GenEvent, GenRequest, GenResponse, SubmitError};
+use crate::net::http::{self, HttpError, Request};
+use crate::util::json::{parse_bytes, Json};
+
+/// Turns a `"prompt": "text"` string into token ids.  Optional: a
+/// server without one only accepts `"prompt": [ids...]` and answers
+/// `400` to string prompts, which is the right default for a tier that
+/// may not have the tokenizer loaded (benches, tests).
+pub type Encoder = Arc<dyn Fn(&str) -> crate::Result<Vec<u32>> + Send + Sync>;
+
+/// Knobs for [`Server::bind_with`].
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Connection-handler threads.  Each streaming request occupies one
+    /// for its whole lifetime, so this caps concurrent SSE streams;
+    /// size it at least `max_active + max_queue` to let the
+    /// coordinator, not the transport, be the admission authority.
+    pub handlers: usize,
+    /// Accepted-but-unhandled connections allowed to wait; beyond this
+    /// the accept loop sheds with an inline `503`.
+    pub backlog: usize,
+    /// Request-body cap; larger `Content-Length` is refused with `413`
+    /// before any body bytes are read.
+    pub max_body_bytes: usize,
+    /// See [`Encoder`].
+    pub encoder: Option<Encoder>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { handlers: 32, backlog: 64, max_body_bytes: 1 << 20, encoder: None }
+    }
+}
+
+/// The HTTP/SSE front-end.  Owns the accept + handler threads;
+/// dropping it (or calling [`Server::shutdown`]) stops accepting,
+/// drains in-flight handlers, and joins everything.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+}
+
+struct HandlerCtx {
+    coordinator: Arc<Coordinator>,
+    max_body: usize,
+    encoder: Option<Encoder>,
+}
+
+impl Server {
+    /// Bind with default config.  `addr` may be `"127.0.0.1:0"` for an
+    /// ephemeral port — read it back with [`Server::addr`].
+    pub fn bind(addr: impl ToSocketAddrs, coordinator: Arc<Coordinator>) -> std::io::Result<Server> {
+        Server::bind_with(addr, coordinator, ServerConfig::default())
+    }
+
+    pub fn bind_with(
+        addr: impl ToSocketAddrs,
+        coordinator: Arc<Coordinator>,
+        cfg: ServerConfig,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<TcpStream>(cfg.backlog.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let ctx = Arc::new(HandlerCtx {
+            coordinator,
+            max_body: cfg.max_body_bytes.max(1),
+            encoder: cfg.encoder.clone(),
+        });
+        let mut handlers = Vec::new();
+        for _ in 0..cfg.handlers.max(1) {
+            let rx = rx.clone();
+            let ctx = ctx.clone();
+            handlers.push(std::thread::spawn(move || handler_loop(&rx, &ctx)));
+        }
+        let stop2 = stop.clone();
+        let accept = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::Acquire) {
+                    return; // tx drops here → handlers drain and exit
+                }
+                let Ok(stream) = stream else { continue };
+                match tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(mut stream)) => {
+                        // every handler busy AND the backlog full: shed at
+                        // the transport instead of queueing invisibly
+                        let _ = http::write_error(
+                            &mut stream,
+                            &HttpError::new(503, "server connection backlog is full"),
+                        );
+                    }
+                    Err(TrySendError::Disconnected(_)) => return,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, accept: Some(accept), handlers })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, finish in-flight connections, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        let Some(accept) = self.accept.take() else { return };
+        self.stop.store(true, Ordering::Release);
+        // unblock the accept loop: it re-checks `stop` per connection
+        let _ = TcpStream::connect(self.addr);
+        let _ = accept.join();
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn handler_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, ctx: &HandlerCtx) {
+    loop {
+        // hold the lock only for the recv; streaming happens unlocked
+        let stream = match rx.lock().unwrap_or_else(PoisonError::into_inner).recv() {
+            Ok(s) => s,
+            Err(_) => return, // accept thread gone and queue drained
+        };
+        handle_connection(stream, ctx);
+    }
+}
+
+/// One connection = one request = one response (`Connection: close`).
+fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let req = match http::read_request(&mut reader, ctx.max_body) {
+        Ok(Some(req)) => req,
+        Ok(None) => return, // connected and left without a request
+        Err(e) => {
+            let _ = http::write_error(&mut writer, &e);
+            return;
+        }
+    };
+    if let Err(e) = route(&req, &mut writer, ctx) {
+        let _ = http::write_error(&mut writer, &e);
+    }
+}
+
+fn route(req: &Request, w: &mut TcpStream, ctx: &HandlerCtx) -> std::result::Result<(), HttpError> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => generate(req, w, ctx),
+        ("GET", "/metrics") => {
+            let m = ctx
+                .coordinator
+                .metrics
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .clone();
+            http::write_json(w, &m.to_json()).map_err(client_gone)
+        }
+        ("GET", "/trace") => {
+            http::write_json(w, &ctx.coordinator.export_trace_json()).map_err(client_gone)
+        }
+        (method, "/v1/generate" | "/metrics" | "/trace") => Err(HttpError::new(
+            405,
+            format!("method {method} not allowed on {}", req.path),
+        )),
+        (method, path) => Err(HttpError::new(404, format!("no route {method} {path}"))),
+    }
+}
+
+/// A write failure after routing means the client hung up; there is
+/// nobody left to answer, so swallow it (the caller's error write will
+/// fail the same way and is also ignored).
+fn client_gone(_: std::io::Error) -> HttpError {
+    HttpError::new(500, "client disconnected")
+}
+
+fn generate(req: &Request, w: &mut TcpStream, ctx: &HandlerCtx) -> std::result::Result<(), HttpError> {
+    let gen_req = parse_gen_request(&req.body, &req.headers, ctx.encoder.as_ref())?;
+    let mut stream = ctx.coordinator.submit(gen_req).map_err(submit_error)?;
+    // From here on the status line is already committed: stream until
+    // the session ends or the client disconnects.  A failed write drops
+    // `stream`, which cancels the session at the next cycle boundary.
+    if http::write_sse_headers(w).is_err() {
+        return Ok(());
+    }
+    while let Some(ev) = stream.recv() {
+        let (name, data) = event_frame(&ev);
+        if http::write_sse_event(w, name, &data).is_err() {
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+fn submit_error(e: SubmitError) -> HttpError {
+    let status = match e {
+        SubmitError::QueueFull { .. } | SubmitError::QuotaExceeded { .. } => 429,
+        SubmitError::ShutDown => 503,
+    };
+    HttpError::new(status, e.to_string())
+}
+
+/// SSE wire form of one [`GenEvent`] — names and fields documented in
+/// the coordinator module docs ("Network serving").
+fn event_frame(ev: &GenEvent) -> (&'static str, Json) {
+    let mut data = Json::obj();
+    match ev {
+        GenEvent::Started { branch, cached_prefix_tokens } => {
+            data.set("branch", *branch).set("cached_prefix_tokens", *cached_prefix_tokens);
+            ("started", data)
+        }
+        GenEvent::Token { branch, token, seq_idx } => {
+            data.set("branch", *branch)
+                .set("token", *token as u64)
+                .set("seq_idx", *seq_idx);
+            ("token", data)
+        }
+        GenEvent::Redriven { branch, attempt, replayed_from } => {
+            data.set("branch", *branch)
+                .set("attempt", *attempt as u64)
+                .set("replayed_from", *replayed_from);
+            ("redriven", data)
+        }
+        GenEvent::Finished(r) => ("finished", response_json(r)),
+        GenEvent::Error { branch, message } => {
+            data.set("branch", *branch).set("message", message.as_str());
+            ("error", data)
+        }
+    }
+}
+
+fn response_json(r: &GenResponse) -> Json {
+    let mut data = Json::obj();
+    data.set("request_id", r.request_id)
+        .set("branch", r.branch)
+        .set("tokens", Json::Arr(r.tokens.iter().map(|&t| Json::from(t as u64)).collect()))
+        .set("finish_reason", r.finish.as_str())
+        .set("prefill_seconds", r.prefill_seconds)
+        .set("decode_seconds", r.decode_seconds)
+        .set("queue_seconds", r.queue_seconds)
+        .set("ttft_seconds", r.ttft_seconds)
+        .set("cached_prefix_tokens", r.cached_prefix_tokens);
+    data
+}
+
+/// Translate a `POST /v1/generate` body + headers into a [`GenRequest`].
+///
+/// Body (JSON object): `prompt` (required: array of token ids, or a
+/// string when the server has an [`Encoder`]), `max_new_tokens`
+/// (required), and optional `temperature`, `top_k`, `seed`, `n_best`,
+/// `stop_token`, `redrive_budget`, `priority`, `deadline_ms`.
+/// `X-Priority` / `X-Deadline-Ms` headers override the body fields.
+/// Every malformed input is a `400` with a field-specific message —
+/// public so unit tests can exercise the mapping without a socket.
+pub fn parse_gen_request(
+    body: &[u8],
+    headers: &BTreeMap<String, String>,
+    encoder: Option<&Encoder>,
+) -> std::result::Result<GenRequest, HttpError> {
+    let bad = |msg: String| HttpError::new(400, msg);
+    let json = parse_bytes(body).map_err(|e| bad(format!("body is not valid JSON: {e}")))?;
+    let prompt = match json.get("prompt") {
+        Some(Json::Str(text)) => match encoder {
+            Some(enc) => {
+                enc(text).map_err(|e| bad(format!("encoding string prompt: {e}")))?
+            }
+            None => {
+                return Err(bad(
+                    "string prompts need a server-side tokenizer; send \"prompt\" as an array of token ids".into(),
+                ))
+            }
+        },
+        // strict element-wise conversion: `as_u32_vec` float-casts, which
+        // would silently saturate a negative id to 0 instead of rejecting
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|v| {
+                let n = v
+                    .as_i64()
+                    .map_err(|e| bad(format!("\"prompt\" must be an array of token ids: {e}")))?;
+                u32::try_from(n)
+                    .map_err(|_| bad(format!("\"prompt\" token id {n} is out of range")))
+            })
+            .collect::<std::result::Result<Vec<u32>, HttpError>>()?,
+        Some(_) => return Err(bad("\"prompt\" must be an array of token ids or a string".into())),
+        None => return Err(bad("missing required field \"prompt\"".into())),
+    };
+    let max_new_tokens = json
+        .get("max_new_tokens")
+        .ok_or_else(|| bad("missing required field \"max_new_tokens\"".into()))?
+        .as_usize()
+        .map_err(|e| bad(format!("\"max_new_tokens\": {e}")))?;
+    let mut b = GenRequest::builder(prompt, max_new_tokens);
+    if let Some(v) = json.get("temperature") {
+        b = b.temperature(v.as_f64().map_err(|e| bad(format!("\"temperature\": {e}")))? as f32);
+    }
+    if let Some(v) = json.get("top_k") {
+        b = b.top_k(v.as_usize().map_err(|e| bad(format!("\"top_k\": {e}")))?);
+    }
+    if let Some(v) = json.get("seed") {
+        b = b.seed(v.as_i64().map_err(|e| bad(format!("\"seed\": {e}")))? as u64);
+    }
+    if let Some(v) = json.get("n_best") {
+        b = b.n_best(v.as_usize().map_err(|e| bad(format!("\"n_best\": {e}")))?);
+    }
+    if let Some(v) = json.get("stop_token") {
+        let t = v.as_i64().map_err(|e| bad(format!("\"stop_token\": {e}")))?;
+        b = b.stop_token(u32::try_from(t).map_err(|_| bad(format!("\"stop_token\": {t} out of range")))?);
+    }
+    if let Some(v) = json.get("redrive_budget") {
+        let n = v.as_usize().map_err(|e| bad(format!("\"redrive_budget\": {e}")))?;
+        b = b.redrive_budget(n as u32);
+    }
+    if let Some(v) = json.get("priority") {
+        b = b.priority(v.as_i64().map_err(|e| bad(format!("\"priority\": {e}")))? as i32);
+    }
+    if let Some(v) = json.get("deadline_ms") {
+        let ms = v.as_i64().map_err(|e| bad(format!("\"deadline_ms\": {e}")))?;
+        let ms = u64::try_from(ms).map_err(|_| bad(format!("\"deadline_ms\": {ms} is negative")))?;
+        b = b.deadline(Duration::from_millis(ms));
+    }
+    // headers override the body — lets a proxy/admission layer reclass
+    // traffic without rewriting the JSON
+    if let Some(v) = headers.get("x-priority") {
+        let p: i32 = v
+            .parse()
+            .map_err(|_| bad(format!("X-Priority header {v:?} is not an integer")))?;
+        b = b.priority(p);
+    }
+    if let Some(v) = headers.get("x-deadline-ms") {
+        let ms: u64 = v
+            .parse()
+            .map_err(|_| bad(format!("X-Deadline-Ms header {v:?} is not a non-negative integer")))?;
+        b = b.deadline(Duration::from_millis(ms));
+    }
+    Ok(b.build())
+}

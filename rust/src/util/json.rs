@@ -101,7 +101,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; `null` keeps the
+                    // document parseable (RFC 8259) instead of emitting
+                    // `NaN`, which every strict parser rejects
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -196,7 +201,12 @@ fn write_escaped(s: &str, out: &mut String) {
 // ---- parsing ---------------------------------------------------------------
 
 pub fn parse(text: &str) -> Result<Json> {
-    let bytes = text.as_bytes();
+    parse_bytes(text.as_bytes())
+}
+
+/// Parse raw bytes (e.g. an HTTP body straight off the socket).  Invalid
+/// UTF-8 inside strings is an `Err`, never a panic.
+pub fn parse_bytes(bytes: &[u8]) -> Result<Json> {
     let mut p = Parser { b: bytes, i: 0 };
     p.skip_ws();
     let v = p.value()?;
@@ -348,11 +358,17 @@ impl<'a> Parser<'a> {
                 }
                 c if c < 0x80 => s.push(c as char),
                 c => {
-                    // multi-byte UTF-8: copy raw bytes
+                    // multi-byte UTF-8: copy raw bytes.  Bounds-checked —
+                    // untrusted network payloads can truncate a sequence
+                    // mid-character, which must be an Err, not a panic
                     let start = self.i - 1;
                     let len = if c >= 0xF0 { 4 } else if c >= 0xE0 { 3 } else { 2 };
+                    let bytes = self
+                        .b
+                        .get(start..start + len)
+                        .ok_or_else(|| anyhow!("truncated UTF-8 sequence at byte {start}"))?;
                     self.i = start + len;
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                    s.push_str(std::str::from_utf8(bytes)?);
                 }
             }
         }
@@ -453,5 +469,51 @@ mod tests {
     fn integers_serialized_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn hostile_prompt_roundtrips() {
+        // everything a network client can put in a prompt string must
+        // survive serialize → parse bit-for-bit: quotes, backslashes,
+        // raw control characters, DEL, newlines, tabs, emoji
+        let hostile = "quote:\" backslash:\\ nl:\n cr:\r tab:\t nul:\u{0} bell:\u{7} esc:\u{1b} del:\u{7f} emoji:😀 sse-breaker:\n\ndata: fake";
+        let mut o = Json::obj();
+        o.set("prompt", hostile);
+        let wire = o.to_string();
+        // the serialized form must not contain a raw control character
+        // (they would break SSE framing and strict parsers alike)
+        assert!(!wire.chars().any(|c| (c as u32) < 0x20), "raw control char in {wire:?}");
+        let back = parse(&wire).unwrap();
+        assert_eq!(back.req("prompt").unwrap().as_str().unwrap(), hostile);
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null() {
+        // f64::NAN would otherwise print as `NaN` — invalid JSON that
+        // poisons /metrics responses the load harness parses back
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(x).to_string();
+            assert_eq!(s, "null", "{x} -> {s}");
+            assert!(parse(&s).is_ok());
+        }
+        let mut o = Json::obj();
+        o.set("ok", 1.5).set("bad", f64::NAN);
+        assert!(parse(&o.to_string()).is_ok());
+    }
+
+    #[test]
+    fn truncated_utf8_is_err_not_panic() {
+        // a string whose multi-byte sequence is cut off at EOF used to
+        // slice out of bounds; network bodies make this reachable
+        for src in ["\"\u{e9}x\"", "\"abc\u{1F600}d\""] {
+            for cut in 1..src.len() {
+                let _ = parse_bytes(&src.as_bytes()[..cut]); // must not panic
+            }
+            let mut bytes = src.as_bytes().to_vec();
+            bytes.truncate(bytes.len() - 3); // chop mid-character
+            assert!(parse_bytes(&bytes).is_err(), "{src:?}");
+        }
+        // an invalid continuation byte inside a string is Err too
+        assert!(parse_bytes(b"\"a\xE2\x28\xA1b\"").is_err());
     }
 }

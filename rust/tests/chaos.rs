@@ -243,7 +243,7 @@ where
     // ground truth from a fault-free run (tokens are independent of
     // batch composition, asserted elsewhere)
     let expected: Vec<Vec<Vec<u32>>> = {
-        let c = Coordinator::spawn(make_clean(), cfg);
+        let c = Coordinator::spawn(make_clean(), cfg.clone());
         requests
             .iter()
             .map(|r| {
@@ -687,7 +687,7 @@ fn warm_cache_recovery_case<M: EngineModel + Send + 'static>(make: impl Fn() -> 
     let cfg = CoordinatorConfig { max_active: 4, prefill_chunk: 8, ..Default::default() };
 
     let clean = {
-        let c = Coordinator::spawn(make(), cfg);
+        let c = Coordinator::spawn(make(), cfg.clone());
         c.generate(req.clone()).expect("fault-free run cannot fail").tokens
     };
 

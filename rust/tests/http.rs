@@ -1,0 +1,281 @@
+//! End-to-end tests of the HTTP/SSE serving tier: request parsing,
+//! status mapping over a real socket, SSE stream parity with the
+//! in-process API, and disconnect-driven session reaping.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hfrwkv::coordinator::{Coordinator, CoordinatorConfig, GenEvent, GenRequest};
+use hfrwkv::loadgen::{get_json, post_generate, raw_request};
+use hfrwkv::model::rwkv::testing::test_model;
+use hfrwkv::net::{parse_gen_request, HttpError, Server, ServerConfig};
+use hfrwkv::util::json::Json;
+
+fn serve(cfg: CoordinatorConfig) -> (Server, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::spawn(test_model(2, 32, 64, 50), cfg));
+    let server = Server::bind("127.0.0.1:0", coord.clone()).expect("bind ephemeral port");
+    (server, coord)
+}
+
+fn body(prompt: &[u32], max_new_tokens: usize) -> Json {
+    let mut b = Json::obj();
+    b.set("prompt", Json::Arr(prompt.iter().map(|&t| Json::from(t as u64)).collect()))
+        .set("max_new_tokens", max_new_tokens);
+    b
+}
+
+// ---- request-parse unit tests (no socket) -------------------------------
+
+fn parse(body: &str) -> Result<GenRequest, HttpError> {
+    parse_gen_request(body.as_bytes(), &BTreeMap::new(), None)
+}
+
+#[test]
+fn malformed_bodies_are_400_with_field_messages() {
+    for (bad, needle) in [
+        ("{not json", "valid JSON"),
+        ("[1, 2, 3]", "prompt"),
+        ("{\"max_new_tokens\": 4}", "\"prompt\""),
+        ("{\"prompt\": [1]}", "\"max_new_tokens\""),
+        ("{\"prompt\": \"hi\", \"max_new_tokens\": 4}", "tokenizer"),
+        ("{\"prompt\": [1, -2], \"max_new_tokens\": 4}", "\"prompt\""),
+        ("{\"prompt\": true, \"max_new_tokens\": 4}", "\"prompt\""),
+        ("{\"prompt\": [1], \"max_new_tokens\": \"many\"}", "\"max_new_tokens\""),
+        ("{\"prompt\": [1], \"max_new_tokens\": 4, \"deadline_ms\": -1}", "\"deadline_ms\""),
+        ("{\"prompt\": [1], \"max_new_tokens\": 4, \"stop_token\": -7}", "\"stop_token\""),
+    ] {
+        let e = parse(bad).unwrap_err();
+        assert_eq!(e.status, 400, "{bad}");
+        assert!(e.message.contains(needle), "{bad} -> {}", e.message);
+    }
+}
+
+#[test]
+fn body_fields_and_header_overrides_map_onto_gen_request() {
+    let body = concat!(
+        "{\"prompt\": [5, 6, 7], \"max_new_tokens\": 9, \"temperature\": 0.5, ",
+        "\"top_k\": 3, \"seed\": 11, \"n_best\": 2, \"stop_token\": 1, ",
+        "\"redrive_budget\": 0, \"priority\": 1, \"deadline_ms\": 100}"
+    );
+    let req = parse(body).unwrap();
+    assert_eq!(req.prompt, vec![5, 6, 7]);
+    assert_eq!(req.max_new_tokens, 9);
+    assert_eq!(req.temperature, 0.5);
+    assert_eq!(req.top_k, 3);
+    assert_eq!(req.seed, 11);
+    assert_eq!(req.n_best, 2);
+    assert_eq!(req.stop_token, Some(1));
+    assert_eq!(req.redrive_budget, 0);
+    assert_eq!(req.priority, 1);
+    assert_eq!(req.deadline, Some(Duration::from_millis(100)));
+
+    // headers win over body fields (names arrive lowercased off the wire)
+    let mut headers = BTreeMap::new();
+    headers.insert("x-priority".to_string(), "-3".to_string());
+    headers.insert("x-deadline-ms".to_string(), "250".to_string());
+    let req = parse_gen_request(body.as_bytes(), &headers, None).unwrap();
+    assert_eq!(req.priority, -3);
+    assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+
+    let mut headers = BTreeMap::new();
+    headers.insert("x-priority".to_string(), "loud".to_string());
+    let e = parse_gen_request(body.as_bytes(), &headers, None).unwrap_err();
+    assert_eq!(e.status, 400);
+    assert!(e.message.contains("X-Priority"));
+}
+
+#[test]
+fn string_prompt_goes_through_the_encoder() {
+    let enc: hfrwkv::net::Encoder =
+        Arc::new(|text: &str| Ok(text.bytes().map(u32::from).collect()));
+    let body = "{\"prompt\": \"ab\", \"max_new_tokens\": 2}";
+    let req = parse_gen_request(body.as_bytes(), &BTreeMap::new(), Some(&enc)).unwrap();
+    assert_eq!(req.prompt, vec![97, 98]);
+}
+
+// ---- status mapping over a real socket ----------------------------------
+
+#[test]
+fn routes_and_statuses_over_the_wire() {
+    let (server, _coord) = serve(CoordinatorConfig { max_active: 2, ..Default::default() });
+    let addr = server.addr();
+
+    let (status, _, body) = raw_request(addr, b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+    assert_eq!(status, 404);
+    let err = hfrwkv::util::json::parse_bytes(&body).unwrap();
+    assert!(err.req("error").unwrap().as_str().unwrap().contains("/nope"));
+
+    let (status, _, _) = raw_request(addr, b"GET /v1/generate HTTP/1.1\r\n\r\n").unwrap();
+    assert_eq!(status, 405);
+    let (status, _, _) = raw_request(addr, b"DELETE /metrics HTTP/1.1\r\n\r\n").unwrap();
+    assert_eq!(status, 405);
+
+    let bad = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 5\r\n\r\n{oops";
+    let (status, _, body) = raw_request(addr, bad).unwrap();
+    assert_eq!(status, 400);
+    let err = hfrwkv::util::json::parse_bytes(&body).unwrap();
+    assert!(err.req("error").unwrap().as_str().unwrap().contains("JSON"));
+
+    let (status, _, _) = raw_request(addr, b"hello there\r\n\r\n").unwrap();
+    assert_eq!(status, 400);
+}
+
+#[test]
+fn oversized_body_is_413_before_reading_it() {
+    let coord = Arc::new(Coordinator::spawn(
+        test_model(2, 32, 64, 50),
+        CoordinatorConfig { max_active: 2, ..Default::default() },
+    ));
+    let cfg = ServerConfig { max_body_bytes: 64, ..ServerConfig::default() };
+    let server = Server::bind_with("127.0.0.1:0", coord, cfg).unwrap();
+    // claims a huge body but never sends it: the server must refuse on
+    // the Content-Length alone
+    let req = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 100000\r\n\r\n";
+    let (status, _, _) = raw_request(server.addr(), req).unwrap();
+    assert_eq!(status, 413);
+}
+
+#[test]
+fn quota_rejection_is_429_with_retry_after() {
+    let (server, _coord) = serve(CoordinatorConfig {
+        max_active: 2,
+        priority_quotas: vec![(-5, 0)],
+        ..Default::default()
+    });
+    let headers = [("X-Priority", "-5".to_string())];
+    let conn = post_generate(server.addr(), &body(&[1, 2], 4), &headers).unwrap();
+    assert_eq!(conn.status(), 429);
+    assert_eq!(conn.header("Retry-After"), Some("1"));
+    let err = conn.read_body_json().unwrap();
+    assert!(err.req("error").unwrap().as_str().unwrap().contains("quota"));
+}
+
+// ---- SSE stream parity with the in-process API --------------------------
+
+#[test]
+fn sse_stream_is_bit_identical_to_in_process() {
+    let (server, coord) = serve(CoordinatorConfig { max_active: 2, ..Default::default() });
+    let prompt = vec![3u32, 1, 4, 1, 5];
+    let n = 12usize;
+
+    // in-process reference run (greedy, so decode is deterministic)
+    let mut stream = coord.submit(GenRequest::greedy(prompt.clone(), n)).unwrap();
+    let mut ref_tokens = Vec::new();
+    while let Some(ev) = stream.recv() {
+        if let GenEvent::Token { token, .. } = ev {
+            ref_tokens.push(token);
+        }
+    }
+    assert_eq!(ref_tokens.len(), n);
+
+    // same request over TCP
+    let mut conn = post_generate(server.addr(), &body(&prompt, n), &[]).unwrap();
+    assert_eq!(conn.status(), 200);
+    let mut events = Vec::new();
+    while let Some(ev) = conn.next_event() {
+        events.push(ev);
+    }
+    assert_eq!(events.first().map(|e| e.event.as_str()), Some("started"));
+    assert_eq!(events.last().map(|e| e.event.as_str()), Some("finished"));
+
+    let mut wire_tokens = Vec::new();
+    for ev in events.iter().filter(|e| e.event == "token") {
+        // seq_idx must be gapless and in order
+        let seq = ev.data.req("seq_idx").unwrap().as_usize().unwrap();
+        assert_eq!(seq, wire_tokens.len(), "gapless seq_idx");
+        wire_tokens.push(ev.data.req("token").unwrap().as_usize().unwrap() as u32);
+    }
+    assert_eq!(wire_tokens, ref_tokens, "TCP stream matches in-process bit for bit");
+
+    let finished = &events.last().unwrap().data;
+    assert_eq!(finished.req("finish_reason").unwrap().as_str().unwrap(), "max_tokens");
+    let final_tokens: Vec<u32> = finished
+        .req("tokens")
+        .unwrap()
+        .as_u32_vec()
+        .unwrap();
+    assert_eq!(final_tokens, ref_tokens, "finished frame aggregates the same tokens");
+}
+
+#[test]
+fn client_disconnect_mid_stream_reaps_the_session() {
+    let (server, coord) = serve(CoordinatorConfig { max_active: 1, ..Default::default() });
+    // a generation far too long to finish on its own during this test
+    let mut conn = post_generate(server.addr(), &body(&[2, 7], 200_000), &[]).unwrap();
+    assert_eq!(conn.status(), 200);
+    let mut tokens = 0;
+    while let Some(ev) = conn.next_event() {
+        if ev.event == "token" {
+            tokens += 1;
+            if tokens == 3 {
+                break;
+            }
+        }
+    }
+    assert_eq!(tokens, 3);
+    drop(conn); // mid-stream disconnect
+
+    // the server's next SSE write fails, the GenStream drops, and the
+    // scheduler reaps the session at a cycle boundary — watch the
+    // metrics until the slot is actually free again
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = coord.metrics.lock().unwrap().clone();
+        if m.cancelled >= 1 && m.active_sessions == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "session not reaped after disconnect: cancelled={} active={}",
+            m.cancelled,
+            m.active_sessions
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // and the freed slot serves the next request normally
+    let mut conn = post_generate(server.addr(), &body(&[1], 2), &[]).unwrap();
+    assert_eq!(conn.status(), 200);
+    let mut finished = false;
+    while let Some(ev) = conn.next_event() {
+        finished |= ev.event == "finished";
+    }
+    assert!(finished);
+}
+
+// ---- observability routes -----------------------------------------------
+
+#[test]
+fn metrics_and_trace_endpoints_serve_json() {
+    let (server, _coord) = serve(CoordinatorConfig { max_active: 2, ..Default::default() });
+    let addr = server.addr();
+    let mut conn = post_generate(addr, &body(&[1, 2, 3], 4), &[]).unwrap();
+    while conn.next_event().is_some() {}
+
+    // the finished frame can race the worker's final accounting by a
+    // cycle, so poll briefly instead of asserting the very first read
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let m = loop {
+        let m = get_json(addr, "/metrics").unwrap();
+        if m.req("completed").unwrap().as_usize().unwrap() == 1 {
+            break m;
+        }
+        assert!(Instant::now() < deadline, "completed never reached 1: {m:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(m.get("per_priority").is_some(), "per-priority slices exported");
+
+    let t = get_json(addr, "/trace").unwrap();
+    assert!(t.req("traceEvents").unwrap().as_arr().unwrap().len() > 1);
+}
+
+#[test]
+fn server_shutdown_joins_cleanly_and_refuses_new_connections() {
+    let (server, _coord) = serve(CoordinatorConfig { max_active: 1, ..Default::default() });
+    let addr = server.addr();
+    let m = get_json(addr, "/metrics").unwrap();
+    assert!(m.get("enqueued").is_some());
+    server.shutdown();
+    // connections now either refuse outright or go unanswered
+    assert!(get_json(addr, "/metrics").is_err());
+}
